@@ -1,0 +1,93 @@
+//! Long-context planning study (the workload the paper's intro motivates):
+//! given a model and a cluster, how far can each context-parallelism
+//! method stretch the context window, and what does it cost?
+//!
+//!   cargo run --release --example long_context_sim [llama3-8b|qwen3-32b]
+//!
+//! Sweeps 128K → 8M, prints a per-method feasibility/throughput map plus
+//! the memory wall each method hits — a downstream user's capacity-planning
+//! view of Tables 3/4 and Figure 1.
+
+use untied_ulysses::config::presets::{llama_single_node, qwen_two_node};
+use untied_ulysses::config::CpMethod;
+use untied_ulysses::schedule::simulate;
+use untied_ulysses::util::fmt::{parse_tokens, tokens, GIB};
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "llama3-8b".into());
+    let qwen = model == "qwen3-32b";
+    let (gpus, setup) = if qwen { (16, "16xH100 (2 nodes)") } else { (8, "8xH100") };
+    println!("capacity map: {model} on {setup}\n");
+
+    let methods: Vec<(&str, CpMethod)> = if qwen {
+        vec![
+            ("Ring", CpMethod::Ring),
+            ("USP-Hybrid", CpMethod::UspHybrid { ulysses: 8, ring: 2 }),
+            ("FPDT", CpMethod::Fpdt { pi: 16 }),
+            ("UPipe", CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 }),
+        ]
+    } else {
+        vec![
+            ("Ring", CpMethod::Ring),
+            ("Ulysses", CpMethod::Ulysses),
+            ("FPDT", CpMethod::Fpdt { pi: 16 }),
+            ("UPipe", CpMethod::Upipe { u: 8, gqa_schedule: true }),
+        ]
+    };
+
+    let seqs: Vec<u64> = ["128K", "256K", "512K", "1M", "2M", "3M", "4M", "5M", "6M", "8M"]
+        .iter()
+        .map(|s| parse_tokens(s).unwrap())
+        .collect();
+
+    print!("{:<12}", "method");
+    for &s in &seqs {
+        print!("{:>8}", tokens(s));
+    }
+    println!();
+    for (name, method) in &methods {
+        print!("{name:<12}");
+        let mut wall = None;
+        for &s in &seqs {
+            let p = if qwen { qwen_two_node(*method, s) } else { llama_single_node(*method, s) };
+            let r = simulate(&p);
+            if r.oom || r.failed.is_some() {
+                print!("{:>8}", "-");
+                if wall.is_none() {
+                    wall = Some((s, r.oom));
+                }
+            } else {
+                print!("{:>8.0}", r.tokens_per_sec_per_gpu(s, gpus).unwrap());
+            }
+        }
+        match wall {
+            Some((s, true)) => println!("   wall: OOM at {}", tokens(s)),
+            Some((s, false)) => println!("   wall: fails at {}", tokens(s)),
+            None => println!("   wall: none up to 8M"),
+        }
+    }
+
+    // Where does the memory go at the longest feasible UPipe context?
+    let upipe = methods.last().unwrap().1;
+    let max_s = seqs
+        .iter()
+        .rev()
+        .find(|&&s| {
+            let p = if qwen { qwen_two_node(upipe, s) } else { llama_single_node(upipe, s) };
+            let r = simulate(&p);
+            !r.oom && r.failed.is_none()
+        })
+        .copied();
+    if let Some(s) = max_s {
+        let p = if qwen { qwen_two_node(upipe, s) } else { llama_single_node(upipe, s) };
+        let r = simulate(&p);
+        println!(
+            "\nUPipe at its wall ({}): peak {:.1} GiB — persistent {:.1} GiB + transients {:.1} GiB (peak phase: {})",
+            tokens(s),
+            r.peak_bytes / GIB,
+            r.persistent_bytes / GIB,
+            (r.peak_bytes - r.persistent_bytes) / GIB,
+            r.timeline.peak_label().unwrap_or("-")
+        );
+    }
+}

@@ -1,0 +1,63 @@
+//! Quickstart: the three things this repo does, in one minute.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! 1. Analytical model — the paper's §3.4 memory-savings headline.
+//! 2. Simulator — one Table-3/4 cell (UPipe vs Ulysses at 3M tokens).
+//! 3. Functional runtime — the real UPipe pipeline (C=4 in-process ranks,
+//!    Pallas flash-attention artifacts over PJRT) vs the monolithic model.
+
+use untied_ulysses::config::presets::llama_single_node;
+use untied_ulysses::config::CpMethod;
+use untied_ulysses::coordinator::{AttnMode, Pipeline};
+use untied_ulysses::model::attn_memory::{intermediate_bytes_ulysses, intermediate_bytes_upipe};
+use untied_ulysses::model::ModelDims;
+use untied_ulysses::runtime::{HostTensor, Runtime};
+use untied_ulysses::schedule::simulate;
+use untied_ulysses::util::fmt::GIB;
+use untied_ulysses::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the paper's headline, from the analytical model -------------
+    let qwen = ModelDims::qwen3_32b();
+    let (s, c) = (1u64 << 20, 8);
+    let ul = intermediate_bytes_ulysses(&qwen, s, c);
+    let up = intermediate_bytes_upipe(&qwen, s, c, c);
+    println!("§3.4  Qwen3-32B @1M, C=8: attention intermediates");
+    println!("      DS-Ulysses {:.1} GiB -> UPipe {:.1} GiB ({:.1}% saved)\n",
+        ul / GIB, up / GIB, 100.0 * (1.0 - up / ul));
+
+    // --- 2. one simulated Table-3/4 cell ---------------------------------
+    println!("simulated Llama3-8B @3M on 8xH100:");
+    for method in [
+        CpMethod::Ulysses,
+        CpMethod::Upipe { u: 8, gqa_schedule: true },
+    ] {
+        let r = simulate(&llama_single_node(method, 3 << 20));
+        println!(
+            "      {:<8} peak {:>5.1} GiB   {:>6.1} tokens/s/GPU",
+            method.label(),
+            r.peak_bytes / GIB,
+            r.tokens_per_sec_per_gpu(3 << 20, 8).unwrap()
+        );
+    }
+    println!();
+
+    // --- 3. the functional pipeline (requires `make artifacts`) ----------
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let mut pipe = Pipeline::new(&rt, 7)?;
+    let mut rng = Rng::new(8);
+    let toks: Vec<i32> = (0..pipe.s).map(|_| rng.below(pipe.vocab as u64) as i32).collect();
+    let mono = pipe.forward_monolithic(&toks)?;
+    let shards = pipe.forward(&toks, AttnMode::UpipeGqa)?;
+    let dist = HostTensor::concat_rows(&shards)?;
+    println!(
+        "functional UPipe (C={} ranks, U={}, {} stages): max|Δlogits| vs monolithic = {:.2e}",
+        pipe.c,
+        pipe.u,
+        pipe.stats.stages_run,
+        dist.max_abs_diff(&mono)?
+    );
+    println!("done — see `repro all` for every paper table/figure");
+    Ok(())
+}

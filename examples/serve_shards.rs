@@ -1,0 +1,41 @@
+//! Serve batched requests against the AOT-compiled model from rust —
+//! python-free request path: load HLO artifacts once, then loop.
+//!
+//!   cargo run --release --example serve_shards [n_requests]
+//!
+//! Reports per-request latency (p50/p95) and aggregate token throughput —
+//! the serving-flavoured e2e check.
+
+use untied_ulysses::coordinator::server::Server;
+use untied_ulysses::runtime::Runtime;
+use untied_ulysses::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    println!("platform {}, artifacts: {} entries", rt.platform(), rt.manifest.artifacts.len());
+    let mut server = Server::new(&rt, 3)?;
+    println!("serving {n} requests of {} tokens (TINY model, monolithic forward)...", server.seq_len);
+
+    let mut rng = Rng::new(4);
+    let mut hist = [0usize; 8];
+    for _ in 0..n {
+        let toks: Vec<i32> = (0..server.seq_len)
+            .map(|_| rng.below(server.vocab as u64) as i32)
+            .collect();
+        let resp = server.serve(&toks)?;
+        let bucket = ((resp.latency_s * 1e3) as usize / 25).min(7);
+        hist[bucket] += 1;
+    }
+    let st = server.stats();
+    println!("latency histogram (25ms buckets): {hist:?}");
+    println!(
+        "p50 {:.1} ms   p95 {:.1} ms   throughput {:.0} tokens/s   ({} reqs, {:.2}s total)",
+        st.p50_latency_s * 1e3,
+        st.p95_latency_s * 1e3,
+        st.total_tokens as f64 / st.total_time_s,
+        st.served,
+        st.total_time_s
+    );
+    Ok(())
+}

@@ -1,0 +1,317 @@
+"""AOT-lower every program the rust coordinator executes, to HLO *text*.
+
+Run once at build time (`make artifacts`); rust loads the text via
+`HloModuleProto::from_text_file` and executes over PJRT-CPU. Text — not
+`.serialize()` — because jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md).
+
+Alongside the `.hlo.txt` files we write a plain-text `manifest.txt`
+describing each artifact's I/O (names, dtypes, shapes) plus the pipeline
+constants (C, U, S, model dims), which rust parses instead of JSON (no serde
+in the offline vendor set).
+
+Artifact inventory (all fixed-shape):
+  Functional UPipe pipeline (TINY config, C=4 ranks, U=C=4, S=256):
+    rope_tables        ()                          -> cos,sin [S, D/2]
+    embed_shard        tokens[S/C], table          -> x [S/C, dm]
+    rmsnorm_shard      x [S/C, dm], w              -> [S/C, dm]
+    qkv_chunk          xn, wq_c, wk_c, wv_c, cos, sin -> q,k,v chunk (RoPE'd)
+    q_chunk            xn, wq_c, cos, sin          -> q chunk (GQA schedule
+                                                    stages > 0: KV reused)
+    attn_stage         q,k,v [1, S, D]             -> out [1, S, D]  (Pallas
+                                                    flash attention kernel)
+    out_proj_partial   a [U, S/C, D], wo_c         -> partial [S/C, dm]
+    mlp_shard          x, norm_w, wg, wu, wd       -> [S/C, dm]  (tiled MLP)
+    logits_shard       x, out_norm, w_out          -> [S/C, V]
+  Parity oracles (monolithic, same params):
+    attn_block_dense   x [S, dm] + block weights   -> [S, dm]
+    model_logits       tokens [S] + all params     -> [S, V]
+  Training (SMALL config, S=512):
+    train_step         param/m/v leaves, step, tokens, targets
+                       -> loss, updated leaves (same order)
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import TINY, SMALL
+from . import model as M
+from . import upipe as U
+from .kernels import ref
+
+# Pipeline constants (mirrored in rust via the manifest header).
+PIPE_CFG = TINY
+PIPE_C = 4          # context-parallel ranks
+PIPE_U = 4          # head-chunk size (U = C: max memory savings)
+PIPE_S = 256        # global sequence length
+TRAIN_CFG = SMALL
+TRAIN_S = 512
+
+_DTYPES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(name, arr):
+    shape = ",".join(str(d) for d in arr.shape) if arr.ndim else "scalar"
+    return f"{name} {_DTYPES[arr.dtype]} {shape}"
+
+
+class ManifestWriter:
+    def __init__(self):
+        self.lines = []
+
+    def const(self, key, value):
+        self.lines.append(f"const {key} {value}")
+
+    def artifact(self, name, in_specs, out_specs):
+        self.lines.append(f"artifact {name}")
+        self.lines.append(f"file {name}.hlo.txt")
+        for s in in_specs:
+            self.lines.append(f"in {s}")
+        for s in out_specs:
+            self.lines.append(f"out {s}")
+        self.lines.append("end")
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def lower_artifact(mw, out_dir, name, fn, example_inputs, input_names):
+    """jit-lower `fn`, write HLO text, record manifest entry."""
+    lowered = jax.jit(fn).lower(*example_inputs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *example_inputs)
+    outs = jax.tree.leaves(outs)
+    in_specs = [_spec(n, jnp.zeros(a.shape, a.dtype))
+                for n, a in zip(input_names, example_inputs)]
+    out_specs = [_spec(f"o{i}", jnp.zeros(o.shape, o.dtype))
+                 for i, o in enumerate(outs)]
+    mw.artifact(name, in_specs, out_specs)
+    print(f"  {name}: {len(text)} chars, {len(in_specs)} in / {len(out_specs)} out")
+
+
+def z(*shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def _path_name(path):
+    """'embed', 'layers.0.wq', ... from a jax key path."""
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def build_pipeline_artifacts(mw, out_dir):
+    cfg = PIPE_CFG
+    c, u, s = PIPE_C, PIPE_U, PIPE_S
+    sc = s // c
+    d, dm, v = cfg.d_head, cfg.d_model, cfg.vocab
+    ukv = u // cfg.gqa_ratio
+    f = cfg.d_ff
+
+    # rope_tables: () -> cos, sin [S, D/2]
+    lower_artifact(
+        mw, out_dir, "rope_tables",
+        lambda: ref.rope_angles(s, d, base=cfg.rope_base),
+        (), (),
+    )
+    # embed_shard
+    lower_artifact(
+        mw, out_dir, "embed_shard",
+        lambda toks, table: table[toks],
+        (z(sc, dtype=jnp.int32), z(v, dm)),
+        ("tokens", "embed"),
+    )
+    # rmsnorm_shard (tiled Pallas kernel)
+    from .kernels.tiled_rmsnorm import tiled_rmsnorm
+    lower_artifact(
+        mw, out_dir, "rmsnorm_shard",
+        lambda x, w: tiled_rmsnorm(x, w),
+        (z(sc, dm), z(dm)),
+        ("x", "w"),
+    )
+    # qkv_chunk
+    lower_artifact(
+        mw, out_dir, "qkv_chunk",
+        U.qkv_chunk_project,
+        (z(sc, dm), z(dm, u * d), z(dm, ukv * d), z(dm, ukv * d),
+         z(sc, d // 2), z(sc, d // 2)),
+        ("xn", "wq_c", "wk_c", "wv_c", "cos", "sin"),
+    )
+    # q_chunk (GQA schedule: later stages project queries only)
+    lower_artifact(
+        mw, out_dir, "q_chunk",
+        lambda xn, wq_c, cos, sin: ref.rope(
+            U._split_heads(xn @ wq_c, u, d), cos, sin),
+        (z(sc, dm), z(dm, u * d), z(sc, d // 2), z(sc, d // 2)),
+        ("xn", "wq_c", "cos", "sin"),
+    )
+    # kv_chunk (projects ukv KV heads; the GQA schedule calls it only in the
+    # stage where a group first appears)
+    def kv_chunk(xn, wk_c, wv_c, cos, sin):
+        k = ref.rope(U._split_heads(xn @ wk_c, ukv, d), cos, sin)
+        v = U._split_heads(xn @ wv_c, ukv, d)
+        return k, v
+    lower_artifact(
+        mw, out_dir, "kv_chunk",
+        kv_chunk,
+        (z(sc, dm), z(dm, ukv * d), z(dm, ukv * d), z(sc, d // 2), z(sc, d // 2)),
+        ("xn", "wk_c", "wv_c", "cos", "sin"),
+    )
+    # attn_stage: the L1 Pallas flash-attention kernel on U/C = 1 head
+    lower_artifact(
+        mw, out_dir, "attn_stage",
+        lambda q, k, v: U.attn_stage(q, k, v, use_pallas=True),
+        (z(1, s, d), z(1, s, d), z(1, s, d)),
+        ("q", "k", "v"),
+    )
+    # out_proj_partial
+    lower_artifact(
+        mw, out_dir, "out_proj_partial",
+        U.out_proj_partial,
+        (z(u, sc, d), z(u * d, dm)),
+        ("attn_out", "wo_c"),
+    )
+    # mlp_shard (tiled Pallas MLP + RMSNorm)
+    lower_artifact(
+        mw, out_dir, "mlp_shard",
+        lambda x, nw, wg, wu, wd: M.mlp_block(
+            x, {"mlp_norm": nw, "wg": wg, "wu": wu, "wd": wd}, use_pallas=True),
+        (z(sc, dm), z(dm), z(dm, f), z(dm, f), z(f, dm)),
+        ("x", "mlp_norm", "wg", "wu", "wd"),
+    )
+    # logits_shard
+    lower_artifact(
+        mw, out_dir, "logits_shard",
+        lambda x, nw, wout: ref.rmsnorm(x, nw).astype(jnp.float32)
+        @ wout.astype(jnp.float32),
+        (z(sc, dm), z(dm), z(dm, v)),
+        ("x", "out_norm", "w_out"),
+    )
+    # attn_block_dense (parity oracle for one distributed attention block)
+    hq, hkv = cfg.n_heads * d, cfg.n_kv_heads * d
+    def attn_block_dense(x, nw, wq, wk, wv, wo):
+        cos, sin = ref.rope_angles(s, d, base=cfg.rope_base)
+        lp = {"attn_norm": nw, "wq": wq, "wk": wk, "wv": wv, "wo": wo}
+        return M.attention_block(x, lp, cfg, cos, sin, use_pallas=False)
+    lower_artifact(
+        mw, out_dir, "attn_block_dense",
+        attn_block_dense,
+        (z(s, dm), z(dm), z(dm, hq), z(dm, hkv), z(dm, hkv), z(hq, dm)),
+        ("x", "attn_norm", "wq", "wk", "wv", "wo"),
+    )
+    # model_logits (monolithic forward; parity oracle + serving demo).
+    # Leaf names carry the pytree paths so rust can address parameters by
+    # name ("layers.0.wq") instead of positionally.
+    params0 = M.init_params(jax.random.PRNGKey(0), cfg)
+    leaves, treedef = jax.tree.flatten(params0)
+    leaf_names = [_path_name(p) for p, _ in
+                  jax.tree_util.tree_flatten_with_path(params0)[0]]
+    def model_logits(toks, *param_leaves):
+        params = jax.tree.unflatten(treedef, param_leaves)
+        h = M.forward_hidden(params, toks, cfg, use_pallas=False)
+        return h.astype(jnp.float32) @ params["w_out"].astype(jnp.float32)
+    lower_artifact(
+        mw, out_dir, "model_logits",
+        model_logits,
+        (z(s, dtype=jnp.int32), *[z(*l.shape) for l in leaves]),
+        ("tokens", *leaf_names),
+    )
+    mw.const("pipe_param_leaves", len(leaves))
+
+
+def build_train_artifacts(mw, out_dir):
+    cfg, s = TRAIN_CFG, TRAIN_S
+    params0 = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt0 = M.init_opt_state(params0)
+    p_leaves, p_def = jax.tree.flatten(params0)
+    m_leaves, _ = jax.tree.flatten(opt0["m"])
+    v_leaves, _ = jax.tree.flatten(opt0["v"])
+    n = len(p_leaves)
+
+    def train_step_flat(*args):
+        p = jax.tree.unflatten(p_def, args[:n])
+        m = jax.tree.unflatten(p_def, args[n:2 * n])
+        v = jax.tree.unflatten(p_def, args[2 * n:3 * n])
+        step, tokens, targets = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+        loss, p2, opt2 = M.train_step(
+            p, {"m": m, "v": v, "step": step}, tokens, targets, cfg)
+        return (loss, *jax.tree.leaves(p2), *jax.tree.leaves(opt2["m"]),
+                *jax.tree.leaves(opt2["v"]), opt2["step"])
+
+    paths = [_path_name(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(params0)[0]]
+    inputs = ([z(*l.shape) for l in p_leaves]
+              + [z(*l.shape) for l in m_leaves]
+              + [z(*l.shape) for l in v_leaves]
+              + [z(dtype=jnp.int32), z(s, dtype=jnp.int32),
+                 z(s, dtype=jnp.int32)])
+    names = ([f"p.{p}" for p in paths] + [f"m.{p}" for p in paths]
+             + [f"v.{p}" for p in paths] + ["step", "tokens", "targets"])
+    lower_artifact(mw, out_dir, "train_step", train_step_flat, tuple(inputs),
+                   names)
+    # init_params as an artifact so rust can materialize the initial state
+    # without shipping weights through files: seeds are ints, PRNG is in HLO.
+    def init_flat(seed):
+        p = M.init_params(jax.random.PRNGKey(seed), cfg)
+        return tuple(jax.tree.leaves(p))
+    lower_artifact(mw, out_dir, "train_init", init_flat,
+                   (z(dtype=jnp.int32),), ("seed",))
+    mw.const("train_param_leaves", n)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    mw = ManifestWriter()
+    cfg = PIPE_CFG
+    mw.const("pipe_model", cfg.name)
+    mw.const("pipe_c", PIPE_C)
+    mw.const("pipe_u", PIPE_U)
+    mw.const("pipe_s", PIPE_S)
+    mw.const("pipe_d_model", cfg.d_model)
+    mw.const("pipe_d_head", cfg.d_head)
+    mw.const("pipe_n_heads", cfg.n_heads)
+    mw.const("pipe_n_kv_heads", cfg.n_kv_heads)
+    mw.const("pipe_d_ff", cfg.d_ff)
+    mw.const("pipe_vocab", cfg.vocab)
+    mw.const("pipe_n_layers", cfg.n_layers)
+    mw.const("train_model", TRAIN_CFG.name)
+    mw.const("train_s", TRAIN_S)
+    mw.const("train_vocab", TRAIN_CFG.vocab)
+
+    print("lowering pipeline artifacts (TINY)...")
+    build_pipeline_artifacts(mw, args.out)
+    print("lowering training artifacts (SMALL)...")
+    build_train_artifacts(mw, args.out)
+    mw.write(os.path.join(args.out, "manifest.txt"))
+    print(f"manifest: {os.path.join(args.out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Model configurations.
+
+`LLAMA3_8B` / `QWEN3_32B` carry the paper's real dimensions — they feed the
+analytical memory/FLOPs model (mirrored in rust/src/model/dims.rs; keep in
+sync). `TINY` / `SMALL` are functional-scale configs used for the AOT
+artifacts the rust coordinator actually executes on CPU.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int
+    n_layers: int
+    n_heads: int        # query heads H
+    n_kv_heads: int     # key/value heads (H/G groups of size g = H / n_kv_heads)
+    d_ff: int
+    vocab: int
+    d_head: int = 0
+    rope_base: float = 10000.0
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        assert self.n_heads % self.n_kv_heads == 0
+
+    @property
+    def gqa_ratio(self) -> int:
+        """g = H / Hkv — queries per KV head."""
+        return self.n_heads // self.n_kv_heads
+
+    def params(self) -> int:
+        """Approximate parameter count."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hq = self.n_heads * self.d_head
+        hkv = self.n_kv_heads * self.d_head
+        per_layer = d * hq + 2 * d * hkv + hq * d + 3 * d * f + 2 * d
+        return v * d * 2 + self.n_layers * per_layer + d
+
+
+LLAMA3_8B = ModelConfig(
+    name="llama3-8b", d_model=4096, n_layers=32, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab=128256, rope_base=500000.0,
+)
+
+# Qwen3-32B sets head_dim=128 explicitly, so H*d_head = 8192 != d_model.
+QWEN3_32B = ModelConfig(
+    name="qwen3-32b", d_model=5120, n_layers=64, n_heads=64, n_kv_heads=8,
+    d_ff=25600, vocab=151936, d_head=128, rope_base=1000000.0,
+)
+
+# Functional-scale config for the rust coordinator's UPipe pipeline artifacts:
+# H=8 query heads, 4 KV heads (g=2), C=4 ranks, U=C → 2 stages of 4 heads.
+TINY = ModelConfig(
+    name="tiny", d_model=128, n_layers=2, n_heads=8, n_kv_heads=4,
+    d_ff=352, vocab=512,
+)
+
+# e2e training config (examples/train_e2e): ~25M params.
+SMALL = ModelConfig(
+    name="small", d_model=256, n_layers=4, n_heads=8, n_kv_heads=4,
+    d_ff=704, vocab=4096,
+)
+
+PRESETS = {c.name: c for c in (LLAMA3_8B, QWEN3_32B, TINY, SMALL)}

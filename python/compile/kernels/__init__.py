@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only) + pure-jnp oracles."""
+
+from . import ref  # noqa: F401
+from .flash_attention import flash_attention  # noqa: F401
+from .tiled_mlp import tiled_mlp  # noqa: F401
+from .tiled_rmsnorm import tiled_rmsnorm  # noqa: F401
+from .rope import rope  # noqa: F401
+from .cross_entropy import fused_linear_cross_entropy  # noqa: F401

@@ -1,0 +1,89 @@
+"""L1 Pallas fused linear + cross-entropy kernel (Liger-style, §2.3/§4).
+
+The paper's worst memory stage is the loss: full fp32 logits + log-softmax
+cost 240·S·d_model bytes (Table 1). Liger's FusedLinearCrossEntropyLoss fuses
+the final projection with the loss so only one [seq-tile, vocab-tile] logits
+block ever exists. This kernel reproduces that: grid = (seq_tiles,
+vocab_tiles) with an online logsumexp (the same trick flash attention uses
+along K) accumulated in VMEM scratch across vocab tiles; the target logit is
+picked with an in-tile one-hot mask. Nothing of size S·V is materialized.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ce_kernel(x_ref, w_ref, t_ref, loss_ref, m_ref, l_ref, pick_ref, *,
+               tile_v, v_tiles):
+    vj = pl.program_id(1)
+
+    @pl.when(vj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        pick_ref[...] = jnp.zeros_like(pick_ref)
+
+    x = x_ref[...].astype(jnp.float32)           # [ts, D]
+    w = w_ref[...].astype(jnp.float32)           # [D, tv]
+    logits = jnp.dot(x, w, preferred_element_type=jnp.float32)  # [ts, tv]
+
+    # Online logsumexp across vocab tiles.
+    m_prev = m_ref[...]
+    m_cur = jnp.max(logits, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(
+        jnp.exp(logits - m_new[:, None]), axis=-1
+    )
+    m_ref[...] = m_new
+
+    # Pick the target logit if it falls in this vocab tile.
+    cols = vj * tile_v + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    hit = cols == t_ref[...][:, None]
+    pick_ref[...] += jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+
+    @pl.when(vj == v_tiles - 1)
+    def _finalize():
+        loss_ref[...] = (m_ref[...] + jnp.log(l_ref[...])) - pick_ref[...]
+
+
+def fused_linear_cross_entropy(x, w_out, targets, *, tile_s=128, tile_v=512,
+                               interpret=True):
+    """Per-token CE loss of softmax(x @ w_out) vs targets, never
+    materializing full logits.
+
+    x: [S, D]; w_out: [D, V]; targets: int32 [S]. Returns fp32 [S]
+    (mean-reduce outside to match `ref.linear_cross_entropy`).
+    """
+    s, d = x.shape
+    v = w_out.shape[1]
+    tile_s = min(tile_s, s)
+    while s % tile_s != 0:
+        tile_s -= 1
+    tile_v = min(tile_v, v)
+    while v % tile_v != 0:
+        tile_v -= 1
+    v_tiles = v // tile_v
+    kernel = functools.partial(_ce_kernel, tile_v=tile_v, v_tiles=v_tiles)
+    return pl.pallas_call(
+        kernel,
+        grid=(s // tile_s, v_tiles),
+        in_specs=[
+            pl.BlockSpec((tile_s, d), lambda i, vj: (i, 0)),
+            pl.BlockSpec((d, tile_v), lambda i, vj: (0, vj)),
+            pl.BlockSpec((tile_s,), lambda i, vj: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile_s,), lambda i, vj: (i,)),
+        out_shape=jax.ShapeDtypeStruct((s,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((tile_s,), jnp.float32),  # running max
+            pltpu.VMEM((tile_s,), jnp.float32),  # running denom
+            pltpu.VMEM((tile_s,), jnp.float32),  # picked target logit
+        ],
+        interpret=interpret,
+    )(x, w_out, targets)

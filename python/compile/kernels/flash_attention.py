@@ -1,0 +1,127 @@
+"""L1 Pallas flash-attention kernel (blockwise online softmax).
+
+TPU-shaped adaptation of FlashAttention-3's threadblock structure (DESIGN.md
+§Hardware-Adaptation): the CUDA grid over (head, q-block) with a shared-memory
+K/V staging loop becomes a Pallas ``grid = (heads, q_blocks, k_blocks)`` whose
+K/V tiles are staged HBM→VMEM by ``BlockSpec``; the online-softmax running
+max/denominator/accumulator live in VMEM scratch (the role registers/smem play
+on H100). GQA is expressed in the K/V index_map (q-head → kv-head), which is
+exactly the paper's "reuse the KV tensors" observation at kernel granularity.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against ``ref.attention``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, block_q, block_k, k_blocks):
+    """One (head, q-block, k-block) grid step of online-softmax attention."""
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: skip k-blocks strictly above the diagonal band.
+    needed = (not causal) or (kj * block_k <= qi * block_q + block_q - 1)
+
+    @pl.when(needed)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [bk, d]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+            p, v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(kj == k_blocks - 1)
+    def _finalize():
+        # Fully-masked rows (can't happen for causal self-attention, where
+        # every query sees at least itself) would give l == 0; guard anyway.
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, scale=None,
+                    block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                    interpret=True):
+    """Blockwise online-softmax attention.
+
+    q: [H, S, D]; k, v: [Hkv, S, D] with H % Hkv == 0 (GQA). Returns [H, S, D].
+    """
+    h, s, d = q.shape
+    hkv = k.shape[0]
+    assert h % hkv == 0, f"q heads {h} not a multiple of kv heads {hkv}"
+    group = h // hkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0, (
+        f"sequence {s} must be divisible by block sizes ({block_q}, {block_k})"
+    )
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    q_blocks = s // block_q
+    k_blocks = s // block_k
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, k_blocks=k_blocks,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(h, q_blocks, k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda hh, qi, kj: (hh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qi, kj, g=group: (hh // g, kj, 0)),
+            pl.BlockSpec((1, block_k, d), lambda hh, qi, kj, g=group: (hh // g, kj, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda hh, qi, kj: (hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # running max m
+            pltpu.VMEM((block_q,), jnp.float32),      # running denom l
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+def vmem_footprint_bytes(d, *, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+                         dtype_bytes=2):
+    """Estimated VMEM working set of one grid step (DESIGN.md §9).
+
+    Q/K/V/O tiles in input dtype + fp32 scratch (m, l, acc).
+    """
+    tiles = (block_q * d + 2 * block_k * d + block_q * d) * dtype_bytes
+    scratch = (block_q + block_q + block_q * d) * 4
+    return tiles + scratch

@@ -1,0 +1,82 @@
+"""Pure-jnp reference oracles for every L1 Pallas kernel.
+
+These are deliberately naive (materialize the full attention matrix, full
+logits, ...) so that they are obviously correct; pytest checks each Pallas
+kernel against the oracle with `assert_allclose`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention(q, k, v, *, causal=True, scale=None):
+    """Naive multi-head (optionally grouped-query) attention.
+
+    q: [H, S, D]; k, v: [Hkv, S, D] with H % Hkv == 0.
+    Returns [H, S, D].
+    """
+    h, s, d = q.shape
+    hkv = k.shape[0]
+    assert h % hkv == 0, f"q heads {h} not a multiple of kv heads {hkv}"
+    group = h // hkv
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(d).astype(q.dtype)
+    kk = jnp.repeat(k, group, axis=0)  # [H, S, D]
+    vv = jnp.repeat(v, group, axis=0)
+    logits = jnp.einsum("hqd,hkd->hqk", q, kk) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        logits = jnp.where(mask[None, :, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", probs, vv)
+
+
+def rmsnorm(x, weight, *, eps=1e-6):
+    """RMSNorm over the last axis. x: [S, D], weight: [D]."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    normed = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (normed * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu_mlp(x, w_gate, w_up, w_down):
+    """SwiGLU feed-forward: silu(x @ w_gate) * (x @ w_up) @ w_down.
+
+    x: [S, D], w_gate/w_up: [D, F], w_down: [F, D].
+    """
+    gate = jax.nn.silu(x @ w_gate)
+    up = x @ w_up
+    return (gate * up) @ w_down
+
+
+def rope_angles(s, d, *, base=10000.0, dtype=jnp.float32):
+    """Rotary embedding cos/sin tables of shape [S, D//2]."""
+    inv_freq = 1.0 / (base ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = jnp.outer(t, inv_freq)
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def rope(x, cos, sin):
+    """Apply rotary position embedding.
+
+    x: [H, S, D] (D even); cos/sin: [S, D//2]. Rotates pairs (x1, x2) =
+    (x[..., :D/2], x[..., D/2:]) — the "half-split" (GPT-NeoX / Llama)
+    convention.
+    """
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    out1 = x1 * cos[None] - x2 * sin[None]
+    out2 = x2 * cos[None] + x1 * sin[None]
+    return jnp.concatenate([out1, out2], axis=-1)
+
+
+def linear_cross_entropy(x, w_out, targets):
+    """Fused final-projection + softmax cross-entropy (mean over tokens).
+
+    x: [S, D], w_out: [D, V], targets: int32 [S]. Computed in fp32 like the
+    paper's setup. Returns scalar mean loss.
+    """
+    logits = (x.astype(jnp.float32)) @ (w_out.astype(jnp.float32))  # [S, V]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)

@@ -1,0 +1,45 @@
+"""L1 Pallas rotary-position-embedding kernel.
+
+§2.3: naive RoPE casts the whole [S, H, D] tensor to fp32, a large transient
+spike; the paper uses Flash-Attention's fused in-place RoPE. Here each grid
+step rotates one (head, seq-tile) block, so the fp32 intermediate is only one
+tile — the Pallas analogue of the in-place fused kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rope_kernel(x_ref, cos_ref, sin_ref, o_ref):
+    x = x_ref[0].astype(jnp.float32)        # [tile, D]
+    cos = cos_ref[...].astype(jnp.float32)  # [tile, D//2]
+    sin = sin_ref[...].astype(jnp.float32)
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[:, :d2], x[:, d2:]
+    o_ref[0] = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(o_ref.dtype)
+
+
+def rope(x, cos, sin, *, tile=128, interpret=True):
+    """Apply RoPE. x: [H, S, D] (D even); cos/sin: [S, D//2]."""
+    h, s, d = x.shape
+    assert d % 2 == 0, "head dim must be even for RoPE"
+    tile = min(tile, s)
+    while s % tile != 0:
+        tile -= 1
+    return pl.pallas_call(
+        _rope_kernel,
+        grid=(h, s // tile),
+        in_specs=[
+            pl.BlockSpec((1, tile, d), lambda hh, i: (hh, i, 0)),
+            pl.BlockSpec((tile, d // 2), lambda hh, i: (i, 0)),
+            pl.BlockSpec((tile, d // 2), lambda hh, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile, d), lambda hh, i: (hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, s, d), x.dtype),
+        interpret=interpret,
+    )(x, cos, sin)

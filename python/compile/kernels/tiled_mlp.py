@@ -1,0 +1,60 @@
+"""L1 Pallas tiled SwiGLU MLP (the ALST "TiledCompute" mitigation, §2.3/§4).
+
+The paper tiles the feed-forward over the sequence axis so the four
+intermediate [tile, d_ff] tensors are materialized one tile at a time instead
+of the full [S, d_ff]. Here each Pallas grid step owns one sequence tile; the
+gate/up intermediates live only in that step's VMEM working set. Following
+ALST, the default tile is chosen so that tile*d_ff ≈ d_model², i.e. a
+"square" [d_model × d_model]-sized intermediate per step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    gate = jax.nn.silu(jnp.dot(x, wg_ref[...].astype(jnp.float32),
+                               preferred_element_type=jnp.float32))
+    up = jnp.dot(x, wu_ref[...].astype(jnp.float32),
+                 preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.dot(gate * up, wd_ref[...].astype(jnp.float32),
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+def default_tile(s, d_model, d_ff):
+    """ALST-style square tile: tile*d_ff ≈ d_model², clamped to [1, S]."""
+    tile = max(1, (d_model * d_model) // max(d_ff, 1))
+    tile = min(tile, s)
+    # largest divisor of s that is <= tile (grid needs equal tiles)
+    while s % tile != 0:
+        tile -= 1
+    return tile
+
+
+def tiled_mlp(x, w_gate, w_up, w_down, *, tile=None, interpret=True):
+    """SwiGLU MLP tiled over the sequence axis.
+
+    x: [S, D]; w_gate/w_up: [D, F]; w_down: [F, D]. Returns [S, D].
+    """
+    s, d = x.shape
+    f = w_gate.shape[1]
+    if tile is None:
+        tile = default_tile(s, d, f)
+    assert s % tile == 0, f"sequence {s} not divisible by tile {tile}"
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=(s // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=interpret,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,34 @@
+"""L1 Pallas tiled RMSNorm (§2.3: tiling RMSNorm beat torch.compile for the
+paper; fp32 accumulation happens per-tile so no full-sequence fp32 copy is
+ever materialized)."""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * w_ref[...].astype(jnp.float32)[None, :]).astype(o_ref.dtype)
+
+
+def tiled_rmsnorm(x, weight, *, eps=1e-6, tile=128, interpret=True):
+    """RMSNorm over last axis, tiled over rows. x: [S, D], weight: [D]."""
+    import functools
+    s, d = x.shape
+    tile = min(tile, s)
+    while s % tile != 0:
+        tile -= 1
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(s // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), x.dtype),
+        interpret=interpret,
+    )(x, weight)

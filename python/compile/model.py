@@ -1,0 +1,168 @@
+"""L2: Llama-style decoder-only Transformer in JAX.
+
+Two execution paths share one parameter pytree:
+
+- ``use_pallas=True``  — every hot op runs through an L1 Pallas kernel
+  (flash attention, tiled MLP/RMSNorm/RoPE, fused-linear CE). This is the
+  path AOT-lowered for the rust coordinator's forward artifacts.
+- ``use_pallas=False`` — the pure-jnp oracle ops from ``kernels.ref``. Same
+  numerics (pytest asserts both paths match), but differentiable end-to-end,
+  so the AOT ``train_step`` artifact lowers through this path.
+
+Python never runs at serve/train time: ``aot.py`` lowers the jitted
+functions here to HLO text once, and rust executes them via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .kernels.tiled_mlp import tiled_mlp
+from .kernels.tiled_rmsnorm import tiled_rmsnorm
+from .kernels.rope import rope as pallas_rope
+from .kernels.cross_entropy import fused_linear_cross_entropy
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    """Initialize a parameter pytree (dict of lists/arrays)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hq = cfg.n_heads * cfg.d_head
+    hkv = cfg.n_kv_heads * cfg.d_head
+
+    def dense(key, shape, fan_in):
+        return (jax.random.normal(key, shape, dtype) / jnp.sqrt(fan_in)).astype(dtype)
+
+    keys = jax.random.split(key, 2 + 9 * cfg.n_layers)
+    params = {
+        "embed": dense(keys[0], (v, d), d),
+        "out_norm": jnp.ones((d,), dtype),
+        "w_out": dense(keys[1], (d, v), d),
+        "layers": [],
+    }
+    for i in range(cfg.n_layers):
+        k = keys[2 + 9 * i: 2 + 9 * (i + 1)]
+        params["layers"].append({
+            "attn_norm": jnp.ones((d,), dtype),
+            "wq": dense(k[0], (d, hq), d),
+            "wk": dense(k[1], (d, hkv), d),
+            "wv": dense(k[2], (d, hkv), d),
+            "wo": dense(k[3], (hq, d), hq),
+            "mlp_norm": jnp.ones((d,), dtype),
+            "wg": dense(k[4], (d, f), d),
+            "wu": dense(k[5], (d, f), d),
+            "wd": dense(k[6], (f, d), f),
+        })
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n_heads, d_head):
+    """[S, H*D] -> [H, S, D]"""
+    s = x.shape[0]
+    return x.reshape(s, n_heads, d_head).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    """[H, S, D] -> [S, H*D]"""
+    h, s, d = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * d)
+
+
+def attention_block(x, lp, cfg: ModelConfig, cos, sin, *, use_pallas=True):
+    """Pre-norm attention block (residual added by caller). x: [S, D]."""
+    rms = tiled_rmsnorm if use_pallas else ref.rmsnorm
+    rope_fn = pallas_rope if use_pallas else ref.rope
+    attn_fn = flash_attention if use_pallas else ref.attention
+
+    h = rms(x, lp["attn_norm"])
+    q = _split_heads(h @ lp["wq"], cfg.n_heads, cfg.d_head)
+    k = _split_heads(h @ lp["wk"], cfg.n_kv_heads, cfg.d_head)
+    v = _split_heads(h @ lp["wv"], cfg.n_kv_heads, cfg.d_head)
+    q = rope_fn(q, cos, sin)
+    k = rope_fn(k, cos, sin)
+    out = attn_fn(q, k, v, causal=True)
+    return _merge_heads(out) @ lp["wo"]
+
+
+def mlp_block(x, lp, *, use_pallas=True):
+    rms = tiled_rmsnorm if use_pallas else ref.rmsnorm
+    h = rms(x, lp["mlp_norm"])
+    if use_pallas:
+        return tiled_mlp(h, lp["wg"], lp["wu"], lp["wd"])
+    return ref.swiglu_mlp(h, lp["wg"], lp["wu"], lp["wd"])
+
+
+def forward_hidden(params, tokens, cfg: ModelConfig, *, use_pallas=True):
+    """Token ids [S] -> final hidden states [S, D] (after final norm)."""
+    rms = tiled_rmsnorm if use_pallas else ref.rmsnorm
+    s = tokens.shape[0]
+    cos, sin = ref.rope_angles(s, cfg.d_head, base=cfg.rope_base)
+    x = params["embed"][tokens]
+    for lp in params["layers"]:
+        x = x + attention_block(x, lp, cfg, cos, sin, use_pallas=use_pallas)
+        x = x + mlp_block(x, lp, use_pallas=use_pallas)
+    return rms(x, params["out_norm"])
+
+
+def per_token_loss(params, tokens, targets, cfg: ModelConfig, *, use_pallas=True):
+    """Per-token cross-entropy [S] (fp32)."""
+    h = forward_hidden(params, tokens, cfg, use_pallas=use_pallas)
+    if use_pallas:
+        return fused_linear_cross_entropy(h, params["w_out"], targets)
+    logits = h.astype(jnp.float32) @ params["w_out"].astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    return lse - picked
+
+
+def loss_fn(params, tokens, targets, cfg: ModelConfig, *, use_pallas=True):
+    return jnp.mean(per_token_loss(params, tokens, targets, cfg,
+                                   use_pallas=use_pallas))
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step (lowered through the differentiable ref path)
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_step(params, opt_state, tokens, targets, cfg: ModelConfig, *,
+               lr=3e-4, betas=(0.9, 0.95), eps=1e-8, weight_decay=0.01):
+    """One AdamW step; returns (loss, params', opt_state')."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(p, tokens, targets, cfg, use_pallas=False)
+    )(params)
+    step = opt_state["step"] + 1
+    b1, b2 = betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        return p, m, v
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return loss, new_params, {"m": new_m, "v": new_v, "step": step}

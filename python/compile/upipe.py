@@ -1,0 +1,135 @@
+"""L2: UPipe — headwise-chunked ("untied") attention (paper §3.3).
+
+Two views of the same algorithm live here:
+
+1. ``upipe_attention_block`` — single-process functional form: the attention
+   block executed in ``H/U`` stages of ``U`` heads via ``lax.fori_loop``,
+   writing each stage's output into a pre-initialized buffer (the paper's
+   "initialize the buffers in the beginning and fill them during execution").
+   Numerically identical to the dense block; pytest asserts parity. The
+   fori_loop carries fixed-size [U, ...] buffers, which is exactly the
+   O(U)-not-O(H) memory structure of the paper.
+
+2. Per-stage functions (``qkv_chunk_project``, ``attn_stage``,
+   ``out_proj_partial``) — the units the rust coordinator drives. Each is
+   AOT-lowered separately so that L3 can interleave them with *real*
+   all-to-all data movement between rank buffers: project U heads on the
+   local sequence shard → (rust: inp_all_to_all) → attention on U/C
+   full-sequence heads → (rust: out_all_to_all) → accumulate the output
+   projection. Buffer reuse across stages happens in rust, which owns the
+   buffers.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.flash_attention import flash_attention
+from .model import _split_heads, _merge_heads
+
+
+# ---------------------------------------------------------------------------
+# Stage functions (AOT units for the rust coordinator)
+# ---------------------------------------------------------------------------
+
+def qkv_chunk_project(x_shard, wq_c, wk_c, wv_c, cos_shard, sin_shard):
+    """Stage projection on one rank's sequence shard, for one head chunk.
+
+    x_shard: [S/C, d_model] — this rank's (already attn-normed) shard.
+    wq_c: [d_model, U*D]; wk_c/wv_c: [d_model, Ukv*D] — the stage's columns.
+    cos/sin_shard: [S/C, D/2] — rotary tables at this shard's positions.
+    Returns (q [U, S/C, D], k [Ukv, S/C, D], v [Ukv, S/C, D]), RoPE applied.
+    """
+    sc, _ = x_shard.shape
+    d_head = 2 * cos_shard.shape[1]
+    u = wq_c.shape[1] // d_head
+    ukv = wk_c.shape[1] // d_head
+    q = _split_heads(x_shard @ wq_c, u, d_head)
+    k = _split_heads(x_shard @ wk_c, ukv, d_head)
+    v = _split_heads(x_shard @ wv_c, ukv, d_head)
+    q = ref.rope(q, cos_shard, sin_shard)
+    k = ref.rope(k, cos_shard, sin_shard)
+    return q, k, v
+
+
+def attn_stage(q, k, v, *, use_pallas=True):
+    """Full-sequence attention on this rank's post-all-to-all heads.
+
+    q: [u_local, S, D]; k, v: [u_kv_local, S, D]. Causal flash attention —
+    the same kernel non-distributed training would use (paper: UPipe "uses
+    the same kernels to compute attention as non-distributed training").
+    """
+    fn = flash_attention if use_pallas else ref.attention
+    return fn(q, k, v, causal=True)
+
+
+def out_proj_partial(attn_heads_out, wo_c):
+    """Partial output projection for one stage.
+
+    attn_heads_out: [U, S/C, D] — this rank's shard rows of the stage's U
+    attention outputs (after out_all_to_all). wo_c: [U*D, d_model] — the
+    stage's rows of W_O. Returns [S/C, d_model]; rust accumulates into the
+    pre-initialized output buffer (sum over stages == full W_O matmul).
+    """
+    return _merge_heads(attn_heads_out) @ wo_c
+
+
+# ---------------------------------------------------------------------------
+# Single-process functional UPipe attention block
+# ---------------------------------------------------------------------------
+
+def upipe_attention_block(x, lp, cfg: ModelConfig, cos, sin, *, chunk: int,
+                          use_pallas=False):
+    """Headwise-chunked attention block: H/U stages of `chunk` q-heads.
+
+    Matches ``model.attention_block`` numerically for any valid chunk size.
+    chunk must divide H and be a multiple of the GQA ratio g (so each stage
+    owns whole KV groups — the naive, in-order schedule; the out-of-order
+    GQA schedule only changes *communication*, not math, and lives in L3).
+    """
+    h_heads, g = cfg.n_heads, cfg.gqa_ratio
+    assert h_heads % chunk == 0, f"chunk {chunk} must divide H={h_heads}"
+    assert chunk % g == 0, f"chunk {chunk} must be a multiple of g={g}"
+    stages = h_heads // chunk
+    ckv = chunk // g
+    d = cfg.d_head
+    rms = ref.rmsnorm
+    s = x.shape[0]
+
+    hnorm = rms(x, lp["attn_norm"])
+    out = jnp.zeros((s, h_heads * d), dtype=x.dtype)
+
+    def stage_fn(i, out):
+        # Project only this stage's U heads — the O(U) buffers.
+        wq_c = jax.lax.dynamic_slice_in_dim(lp["wq"], i * chunk * d, chunk * d, 1)
+        wk_c = jax.lax.dynamic_slice_in_dim(lp["wk"], i * ckv * d, ckv * d, 1)
+        wv_c = jax.lax.dynamic_slice_in_dim(lp["wv"], i * ckv * d, ckv * d, 1)
+        q = _split_heads(hnorm @ wq_c, chunk, d)
+        k = _split_heads(hnorm @ wk_c, ckv, d)
+        v = _split_heads(hnorm @ wv_c, ckv, d)
+        q = ref.rope(q, cos, sin)
+        k = ref.rope(k, cos, sin)
+        o = attn_stage(q, k, v, use_pallas=use_pallas)  # [chunk, S, D]
+        return jax.lax.dynamic_update_slice_in_dim(
+            out, _merge_heads(o), i * chunk * d, axis=1
+        )
+
+    out = jax.lax.fori_loop(0, stages, stage_fn, out)
+    return out @ lp["wo"]
+
+
+def upipe_forward_hidden(params, tokens, cfg: ModelConfig, *, chunk: int,
+                         use_pallas=False):
+    """Full forward with UPipe-chunked attention (parity oracle for L3)."""
+    from .model import mlp_block
+    s = tokens.shape[0]
+    cos, sin = ref.rope_angles(s, cfg.d_head, base=cfg.rope_base)
+    x = params["embed"][tokens]
+    for lp in params["layers"]:
+        x = x + upipe_attention_block(x, lp, cfg, cos, sin, chunk=chunk,
+                                      use_pallas=use_pallas)
+        x = x + mlp_block(x, lp, use_pallas=use_pallas)
+    return ref.rmsnorm(x, params["out_norm"])

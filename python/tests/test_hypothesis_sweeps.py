@@ -1,0 +1,89 @@
+"""Property-based shape/dtype sweeps of the L1 kernels (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.tiled_rmsnorm import tiled_rmsnorm
+from compile.kernels.cross_entropy import fused_linear_cross_entropy
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(seed, *shape):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    hkv=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    s_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    block=st.sampled_from([16, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_attention_sweep(hkv, group, s_blocks, d, block, causal, seed):
+    h = hkv * group
+    s = s_blocks * block
+    q = _rand(seed, h, s, d)
+    k = _rand(seed + 1, hkv, s, d)
+    v = _rand(seed + 2, hkv, s, d)
+    out = flash_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+    exp = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=3e-5, rtol=3e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 200),
+    d=st.sampled_from([8, 16, 64]),
+    tile=st.sampled_from([1, 16, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_sweep(s, d, tile, seed):
+    x = _rand(seed, s, d)
+    w = _rand(seed + 1, d)
+    out = tiled_rmsnorm(x, w, tile=tile)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref.rmsnorm(x, w)),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.sampled_from([16, 48, 96]),
+    v=st.sampled_from([32, 96, 200]),
+    tile_v=st.sampled_from([8, 32, 512]),
+    seed=st.integers(0, 2**16),
+)
+def test_fused_ce_sweep(s, v, tile_v, seed):
+    d = 16
+    x = _rand(seed, s, d)
+    w = _rand(seed + 1, d, v) * 0.3
+    t = jax.random.randint(jax.random.PRNGKey(seed + 2), (s,), 0, v)
+    out = fused_linear_cross_entropy(x, w, t, tile_v=tile_v).mean()
+    np.testing.assert_allclose(float(out),
+                               float(ref.linear_cross_entropy(x, w, t)),
+                               atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([32, 64]),
+    d=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_rope_norm_preservation_sweep(h, s, d, seed):
+    from compile.kernels.rope import rope
+    x = _rand(seed, h, s, d)
+    cos, sin = ref.rope_angles(s, d)
+    out = rope(x, cos, sin)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(out), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), atol=1e-4, rtol=1e-4)

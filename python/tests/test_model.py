@@ -1,0 +1,92 @@
+"""L2 model correctness: Pallas path == ref path, training decreases loss."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import TINY, SMALL, LLAMA3_8B, QWEN3_32B, PRESETS
+
+
+@pytest.fixture(scope="module")
+def tiny_state():
+    params = M.init_params(jax.random.PRNGKey(0), TINY)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (64,), 0, TINY.vocab)
+    tgts = jax.random.randint(jax.random.PRNGKey(2), (64,), 0, TINY.vocab)
+    return params, toks, tgts
+
+
+def test_forward_pallas_matches_ref(tiny_state):
+    params, toks, _ = tiny_state
+    hp = M.forward_hidden(params, toks, TINY, use_pallas=True)
+    hr = M.forward_hidden(params, toks, TINY, use_pallas=False)
+    np.testing.assert_allclose(hp, hr, atol=5e-5, rtol=5e-5)
+
+
+def test_loss_pallas_matches_ref(tiny_state):
+    params, toks, tgts = tiny_state
+    lp = M.loss_fn(params, toks, tgts, TINY, use_pallas=True)
+    lr = M.loss_fn(params, toks, tgts, TINY, use_pallas=False)
+    np.testing.assert_allclose(lp, lr, atol=1e-5, rtol=1e-5)
+
+
+def test_initial_loss_near_log_vocab(tiny_state):
+    params, toks, tgts = tiny_state
+    loss = float(M.loss_fn(params, toks, tgts, TINY, use_pallas=False))
+    assert abs(loss - np.log(TINY.vocab)) < 1.5
+
+
+def test_causal_prefix_invariance(tiny_state):
+    # Changing token t must not change hidden states before t.
+    params, toks, _ = tiny_state
+    h1 = M.forward_hidden(params, toks, TINY, use_pallas=False)
+    toks2 = toks.at[40].set((toks[40] + 1) % TINY.vocab)
+    h2 = M.forward_hidden(params, toks2, TINY, use_pallas=False)
+    np.testing.assert_allclose(h1[:40], h2[:40], atol=1e-5, rtol=1e-5)
+    assert not np.allclose(h1[40:], h2[40:], atol=1e-5)
+
+
+def test_train_step_decreases_loss(tiny_state):
+    params, toks, tgts = tiny_state
+    opt = M.init_opt_state(params)
+    losses = []
+    for _ in range(5):
+        loss, params, opt = M.train_step(params, opt, toks, tgts, TINY)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+    assert int(opt["step"]) == 5
+
+
+def test_train_step_grad_matches_finite_difference():
+    cfg = TINY
+    params = M.init_params(jax.random.PRNGKey(3), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (32,), 0, cfg.vocab)
+    tgts = jax.random.randint(jax.random.PRNGKey(5), (32,), 0, cfg.vocab)
+    f = lambda p: M.loss_fn(p, toks, tgts, cfg, use_pallas=False)
+    g = jax.grad(f)(params)["out_norm"]
+    eps = 1e-3
+    e = jnp.zeros_like(params["out_norm"]).at[7].set(eps)
+    p_plus = dict(params, out_norm=params["out_norm"] + e)
+    p_minus = dict(params, out_norm=params["out_norm"] - e)
+    fd = (f(p_plus) - f(p_minus)) / (2 * eps)
+    np.testing.assert_allclose(g[7], fd, atol=1e-3, rtol=1e-2)
+
+
+@pytest.mark.parametrize("cfg,expected_b", [(LLAMA3_8B, 8.0), (QWEN3_32B, 32.8)])
+def test_preset_param_counts(cfg, expected_b):
+    assert abs(cfg.params() / 1e9 - expected_b) / expected_b < 0.05
+
+
+def test_preset_registry():
+    assert set(PRESETS) == {"llama3-8b", "qwen3-32b", "tiny", "small"}
+    assert LLAMA3_8B.gqa_ratio == 4
+    assert QWEN3_32B.gqa_ratio == 8
+    assert TINY.gqa_ratio == 2
+
+
+def test_head_split_merge_roundtrip():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+    hs = M._split_heads(x, 4, 16)
+    assert hs.shape == (4, 32, 16)
+    np.testing.assert_array_equal(M._merge_heads(hs), x)

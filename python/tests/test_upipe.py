@@ -1,0 +1,199 @@
+"""UPipe correctness.
+
+The key test here is `test_multirank_protocol_*`: it simulates — in numpy,
+with explicit per-rank buffers — the exact message protocol the rust
+coordinator implements (shard → rmsnorm → per-stage QKV chunk projection →
+inp_all_to_all → per-head flash attention → out_all_to_all → accumulated
+output projection), for both the naive in-order schedule and the
+out-of-order GQA schedule, and asserts the result equals the dense
+monolithic attention block. If this passes, the rust side only has to move
+bytes correctly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import upipe as U
+from compile.configs import TINY, ModelConfig
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = TINY
+    s = 256
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    lp = params["layers"][0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (s, cfg.d_model))
+    cos, sin = ref.rope_angles(s, cfg.d_head, base=cfg.rope_base)
+    dense = M.attention_block(x, lp, cfg, cos, sin, use_pallas=False)
+    return cfg, s, lp, x, cos, sin, dense
+
+
+@pytest.mark.parametrize("chunk", [2, 4, 8])
+def test_upipe_block_matches_dense(setup, chunk):
+    cfg, s, lp, x, cos, sin, dense = setup
+    out = U.upipe_attention_block(x, lp, cfg, cos, sin, chunk=chunk)
+    np.testing.assert_allclose(out, dense, atol=3e-5, rtol=3e-5)
+
+
+def test_upipe_block_rejects_bad_chunk(setup):
+    cfg, s, lp, x, cos, sin, _ = setup
+    with pytest.raises(AssertionError):
+        U.upipe_attention_block(x, lp, cfg, cos, sin, chunk=3)
+    with pytest.raises(AssertionError):
+        # chunk=1 < g=2 would split a KV group across stages
+        U.upipe_attention_block(x, lp, cfg, cos, sin, chunk=1)
+
+
+def test_upipe_forward_matches_dense_forward():
+    cfg = TINY
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (64,), 0, cfg.vocab)
+    hd = M.forward_hidden(params, toks, cfg, use_pallas=False)
+    hu = U.upipe_forward_hidden(params, toks, cfg, chunk=4)
+    np.testing.assert_allclose(hu, hd, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# multi-rank protocol simulation (what rust implements)
+# ---------------------------------------------------------------------------
+
+def _run_protocol(cfg, s, lp, x, cos, sin, c, u, head_order):
+    """Simulate C ranks executing UPipe with an explicit head schedule.
+
+    head_order: list of stages; each stage is a list of `u` global q-head
+    indices (rank j takes the j*u/c..-th slice of the stage's heads).
+    Returns the gathered [S, d_model] output.
+    """
+    d, g = cfg.d_head, cfg.gqa_ratio
+    sc = s // c
+    u_loc = u // c
+    shards = [x[r * sc:(r + 1) * sc] for r in range(c)]
+    # Each rank norms its own shard (token-parallel op).
+    xn = [ref.rmsnorm(sh, lp["attn_norm"]) for sh in shards]
+    out = [jnp.zeros((sc, cfg.d_model), x.dtype) for _ in range(c)]
+    # Rank-local KV cache for the GQA schedule (kv_head -> [1, S, D]).
+    kv_cache = [dict() for _ in range(c)]
+
+    for heads in head_order:
+        kv_heads = sorted({h // g for h in heads})
+        # --- per-rank chunk projection on the local shard ---
+        q_loc, k_loc, v_loc = [], [], []
+        for r in range(c):
+            wq_c = jnp.concatenate([lp["wq"][:, h * d:(h + 1) * d] for h in heads], axis=1)
+            new_kv = [kh for kh in kv_heads if kh not in kv_cache[r]]
+            q = U._split_heads(xn[r] @ wq_c, u, d)
+            q = ref.rope(q, cos[r * sc:(r + 1) * sc], sin[r * sc:(r + 1) * sc])
+            if new_kv:
+                wk_c = jnp.concatenate([lp["wk"][:, kh * d:(kh + 1) * d] for kh in new_kv], axis=1)
+                wv_c = jnp.concatenate([lp["wv"][:, kh * d:(kh + 1) * d] for kh in new_kv], axis=1)
+                k = U._split_heads(xn[r] @ wk_c, len(new_kv), d)
+                k = ref.rope(k, cos[r * sc:(r + 1) * sc], sin[r * sc:(r + 1) * sc])
+                v = U._split_heads(xn[r] @ wv_c, len(new_kv), d)
+            else:
+                k = v = None
+            q_loc.append(q)
+            k_loc.append((new_kv, k, v))
+        # --- inp_all_to_all: seq-sharded -> head-sharded ---
+        # Rank j owns stage-heads [j*u_loc, (j+1)*u_loc).
+        attn_out = []  # per rank j: [u_loc, S, D]
+        for j in range(c):
+            my = list(range(j * u_loc, (j + 1) * u_loc))
+            qj = jnp.concatenate([
+                jnp.stack([q_loc[r][i] for i in my], 0) for r in range(c)
+            ], axis=1)  # [u_loc, S, D]
+            # KV for rank j's heads: gather the new KV shards (all-to-all)
+            # and merge into the rank-local cache (GQA reuse).
+            for r in range(c):
+                new_kv, k, v = k_loc[r]
+                for idx, kh in enumerate(new_kv):
+                    if kh not in kv_cache[j]:
+                        kv_cache[j][kh] = [None] * c, [None] * c
+                    kv_cache[j][kh][0][r] = k[idx]
+                    kv_cache[j][kh][1][r] = v[idx]
+            o = []
+            for idx, i in enumerate(my):
+                kh = heads[i] // g
+                kparts, vparts = kv_cache[j][kh]
+                kj = jnp.concatenate(kparts, 0)[None]  # [1, S, D]
+                vj = jnp.concatenate(vparts, 0)[None]
+                o.append(U.attn_stage(qj[idx:idx + 1], kj, vj, use_pallas=False)[0])
+            attn_out.append(jnp.stack(o, 0))
+        # --- out_all_to_all: head-sharded -> seq-sharded ---
+        for r in range(c):
+            a_r = jnp.concatenate(
+                [attn_out[j][:, r * sc:(r + 1) * sc] for j in range(c)], axis=0
+            )  # [u, sc, D] in stage-head order
+            wo_c = jnp.concatenate(
+                [lp["wo"][h * d:(h + 1) * d, :] for h in heads], axis=0)
+            out[r] = out[r] + U.out_proj_partial(a_r, wo_c)
+    return jnp.concatenate(out, axis=0)
+
+
+def _naive_schedule(h, u):
+    return [list(range(t * u, (t + 1) * u)) for t in range(h // u)]
+
+
+def _gqa_schedule(h, u, g):
+    """Out-of-order schedule (§4.1): stage t takes the t-th query of each
+    group, so KV is communicated only when a group first appears."""
+    n_groups = h // g
+    order = []
+    for t in range(g):
+        stage = [grp * g + t for grp in range(n_groups)]
+        # n_groups == u here (U = C = number of unique KV heads per stage)
+        for i in range(0, len(stage), u):
+            order.append(stage[i:i + u])
+    return order
+
+
+def test_multirank_protocol_naive_schedule(setup):
+    cfg, s, lp, x, cos, sin, dense = setup
+    got = _run_protocol(cfg, s, lp, x, cos, sin, c=4, u=4,
+                        head_order=_naive_schedule(cfg.n_heads, 4))
+    np.testing.assert_allclose(got, dense, atol=3e-5, rtol=3e-5)
+
+
+def test_multirank_protocol_gqa_schedule(setup):
+    cfg, s, lp, x, cos, sin, dense = setup
+    sched = _gqa_schedule(cfg.n_heads, 4, cfg.gqa_ratio)
+    got = _run_protocol(cfg, s, lp, x, cos, sin, c=4, u=4, head_order=sched)
+    np.testing.assert_allclose(got, dense, atol=3e-5, rtol=3e-5)
+
+
+def test_multirank_protocol_c2(setup):
+    cfg, s, lp, x, cos, sin, dense = setup
+    got = _run_protocol(cfg, s, lp, x, cos, sin, c=2, u=2,
+                        head_order=_naive_schedule(cfg.n_heads, 2))
+    np.testing.assert_allclose(got, dense, atol=3e-5, rtol=3e-5)
+
+
+def test_gqa_schedule_covers_all_heads_once():
+    sched = _gqa_schedule(8, 4, 2)
+    flat = [h for st in sched for h in st]
+    assert sorted(flat) == list(range(8))
+    # stage 0 introduces all groups; later stages introduce none.
+    seen = set()
+    new_per_stage = []
+    for st in sched:
+        groups = {h // 2 for h in st}
+        new_per_stage.append(len(groups - seen))
+        seen |= groups
+    assert new_per_stage[0] == 4 and all(n == 0 for n in new_per_stage[1:])
+
+
+def test_stage_functions_shapes():
+    cfg = TINY
+    sc, d, dm = 64, cfg.d_head, cfg.d_model
+    u, ukv = 4, 2
+    xn = jnp.ones((sc, dm))
+    q, k, v = U.qkv_chunk_project(
+        xn, jnp.ones((dm, u * d)), jnp.ones((dm, ukv * d)),
+        jnp.ones((dm, ukv * d)), jnp.ones((sc, d // 2)), jnp.ones((sc, d // 2)))
+    assert q.shape == (u, sc, d) and k.shape == (ukv, sc, d) == v.shape
+    p = U.out_proj_partial(jnp.ones((u, sc, d)), jnp.ones((u * d, dm)))
+    assert p.shape == (sc, dm)

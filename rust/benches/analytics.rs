@@ -1,0 +1,23 @@
+//! Bench: the analytical model (Tables 1/2/6 + §3.4 savings) — both the
+//! regenerated artifacts and the per-call cost of the formulas.
+
+use untied_ulysses::model::attn_memory::{peak_units, AttnMethod};
+use untied_ulysses::model::{activation, ModelDims};
+use untied_ulysses::report::{savings, tables};
+use untied_ulysses::util::bench::Bench;
+
+fn main() {
+    tables::table1_report(&ModelDims::llama3_8b(), 1 << 20).print();
+    println!();
+    tables::table2_report(&ModelDims::qwen3_32b(), 8).print();
+    println!();
+    tables::table6_report(&ModelDims::qwen3_32b(), 8).print();
+    println!();
+    savings::savings_report(1 << 20).print();
+    println!();
+    let m = ModelDims::qwen3_32b();
+    Bench::new("analytics/table1_rows").budget_ms(200).run(|| activation::table1(&m, 1 << 20));
+    Bench::new("analytics/peak_units_upipe").budget_ms(200).run(|| {
+        peak_units(&m, AttnMethod::Upipe { nu: 8 })
+    });
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Figures 1, 2, 4, 5, 6 and time each generator.
+
+use untied_ulysses::report::figures;
+use untied_ulysses::util::bench::Bench;
+
+fn main() {
+    println!("regenerating figures:\n");
+    figures::fig1_report().print();
+    println!();
+    figures::fig2_report().print();
+    println!();
+    figures::fig4_report().print();
+    println!();
+    figures::fig5_report().print();
+    println!();
+    figures::fig6_report().print();
+    println!();
+    Bench::new("figures/fig1").budget_ms(400).run(figures::fig1_report);
+    Bench::new("figures/fig2").budget_ms(400).run(figures::fig2_report);
+    Bench::new("figures/fig4").budget_ms(200).run(figures::fig4_report);
+    Bench::new("figures/fig5").budget_ms(600).run(figures::fig5_report);
+    Bench::new("figures/fig6").budget_ms(400).run(figures::fig6_report);
+}

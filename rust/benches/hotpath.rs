@@ -1,0 +1,78 @@
+//! Hot-path micro benches (the §Perf targets in EXPERIMENTS.md):
+//! - engine op execution rate (events/s) — the simulator inner loop;
+//! - allocator alloc/free with cache reuse (the UPipe stage pattern);
+//! - functional all-to-all reshard bandwidth (the coordinator hot path);
+//! - schedule/trace generation;
+//! - GQA schedule generation.
+
+use untied_ulysses::collectives::functional::{
+    all_to_all_head_to_seq, all_to_all_seq_to_head, all_to_all_seq_to_head_into,
+};
+use untied_ulysses::config::presets::llama_single_node;
+use untied_ulysses::config::CpMethod;
+use untied_ulysses::engine::{Calibration, Engine};
+use untied_ulysses::memory::Allocator;
+use untied_ulysses::schedule::gqa::gqa_schedule;
+use untied_ulysses::schedule::{build_trace, simulate};
+use untied_ulysses::util::bench::Bench;
+
+fn main() {
+    let upipe = CpMethod::Upipe { u: 8, gqa_schedule: true };
+    let preset = llama_single_node(upipe, 3 << 20);
+
+    // trace generation
+    let s1 = Bench::new("hotpath/build_trace_upipe_3M").budget_ms(500).run(|| build_trace(&preset));
+    let trace = build_trace(&preset);
+    println!("  trace size: {} ops", trace.len());
+
+    // engine execution
+    let q = untied_ulysses::schedule::Quantities::new(&preset);
+    let cal = Calibration::default();
+    let engine = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal));
+    let s2 = Bench::new("hotpath/engine_run_upipe_3M").budget_ms(800).run(|| engine.run(&trace));
+    println!(
+        "  engine rate: {:.1} M ops/s",
+        trace.len() as f64 * s2.per_sec() / 1e6
+    );
+
+    // end-to-end simulate (trace + engine + report)
+    Bench::new("hotpath/simulate_upipe_3M").budget_ms(800).run(|| simulate(&preset));
+
+    // allocator stage-reuse pattern
+    Bench::new("hotpath/allocator_stage_cycle").budget_ms(300).run(|| {
+        let mut a = Allocator::new(1e12);
+        for _ in 0..32 {
+            let x = a.alloc(4.0 * 1024.0 * 1024.0).unwrap();
+            let y = a.alloc(2.0 * 1024.0 * 1024.0).unwrap();
+            a.free(x);
+            a.free(y);
+        }
+        a.retries()
+    });
+
+    // functional all-to-all reshard (coordinator hot path)
+    let (c, u, sc, d) = (4usize, 8usize, 4096usize, 128usize);
+    let inputs: Vec<Vec<f32>> = (0..c).map(|r| vec![r as f32; u * sc * d]).collect();
+    let bytes = (c * u * sc * d * 4) as f64;
+    let s3 = Bench::new("hotpath/a2a_seq_to_head_64MB").budget_ms(800).run(|| {
+        all_to_all_seq_to_head(&inputs, u, sc, d)
+    });
+    println!("  a2a reshard bandwidth: {:.2} GB/s", bytes * s3.per_sec() / 1e9);
+    let hs = all_to_all_seq_to_head(&inputs, u, sc, d);
+    let s4 = Bench::new("hotpath/a2a_head_to_seq_64MB").budget_ms(800).run(|| {
+        all_to_all_head_to_seq(&hs, u, sc, d)
+    });
+    println!("  inverse reshard bandwidth: {:.2} GB/s", bytes * s4.per_sec() / 1e9);
+
+    // buffer-reusing variant (the paper's stage-buffer reuse, host-side)
+    let mut reuse: Vec<Vec<f32>> = vec![Vec::new(); c];
+    let s5 = Bench::new("hotpath/a2a_seq_to_head_64MB_reused").budget_ms(800).run(|| {
+        all_to_all_seq_to_head_into(&inputs, u, sc, d, &mut reuse);
+        reuse[0][0]
+    });
+    println!("  reused-buffer reshard bandwidth: {:.2} GB/s", bytes * s5.per_sec() / 1e9);
+
+    // GQA schedule generation
+    Bench::new("hotpath/gqa_schedule_qwen").budget_ms(200).run(|| gqa_schedule(64, 8, 8));
+    let _ = s1;
+}

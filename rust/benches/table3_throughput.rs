@@ -1,0 +1,19 @@
+//! Bench: regenerate Table 3 (throughput grid, both models) and time the
+//! simulation per cell. `cargo bench --bench table3_throughput`
+
+use untied_ulysses::report::tables;
+use untied_ulysses::util::bench::Bench;
+
+fn main() {
+    println!("regenerating Table 3 (simulated | paper):\n");
+    tables::table3_report(false).print();
+    println!();
+    tables::table3_report(true).print();
+    println!();
+    Bench::new("table3/full_llama_grid").budget_ms(1500).run(|| tables::table3_report(false));
+    Bench::new("table3/full_qwen_grid").budget_ms(1500).run(|| tables::table3_report(true));
+    let (dev, n) = tables::grid_deviation(false);
+    println!("\nllama mean |sim-paper|/paper = {:.1}% over {n} cells", 100.0 * dev);
+    let (dev, n) = tables::grid_deviation(true);
+    println!("qwen  mean |sim-paper|/paper = {:.1}% over {n} cells", 100.0 * dev);
+}

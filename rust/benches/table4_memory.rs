@@ -1,0 +1,21 @@
+//! Bench: regenerate Table 4 (peak-memory grid) and time the memory
+//! simulation per method. `cargo bench --bench table4_memory`
+
+use untied_ulysses::config::presets::{llama_single_node, llama_single_node_methods};
+use untied_ulysses::report::tables;
+use untied_ulysses::schedule::simulate;
+use untied_ulysses::util::bench::Bench;
+
+fn main() {
+    println!("regenerating Table 4 (simulated | paper):\n");
+    tables::table4_report(false).print();
+    println!();
+    tables::table4_report(true).print();
+    println!();
+    for method in llama_single_node_methods() {
+        let preset = llama_single_node(method, 3 << 20);
+        Bench::new(&format!("table4/simulate_3M/{}", method.label()))
+            .budget_ms(400)
+            .run(|| simulate(&preset));
+    }
+}

@@ -1,0 +1,23 @@
+//! Bench: regenerate Table 5 (runtime component breakdown, Ulysses vs
+//! UPipe) and time the component extraction.
+
+use untied_ulysses::config::presets::llama_single_node;
+use untied_ulysses::config::CpMethod;
+use untied_ulysses::report::tables;
+use untied_ulysses::schedule::simulate;
+use untied_ulysses::util::bench::Bench;
+
+fn main() {
+    println!("regenerating Table 5 (simulated | paper):\n");
+    tables::table5_report().print();
+    println!();
+    for (label, method) in [
+        ("ulysses", CpMethod::Ulysses),
+        ("upipe", CpMethod::Upipe { u: 8, gqa_schedule: true }),
+    ] {
+        let preset = llama_single_node(method, 1 << 20);
+        Bench::new(&format!("table5/step_sim_1M/{label}"))
+            .budget_ms(400)
+            .run(|| simulate(&preset));
+    }
+}

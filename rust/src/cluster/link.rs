@@ -1,0 +1,61 @@
+//! Interconnect links with an α–β cost model (latency + bytes/bandwidth).
+
+/// Kind of interconnect a transfer crosses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkKind {
+    /// Intra-node NVLink (4th gen, 900 GB/s bidirectional).
+    NvLink,
+    /// Inter-node InfiniBand (400 Gb/s).
+    InfiniBand,
+    /// Host offload over PCIe gen5.
+    Pcie,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Link {
+    pub kind: LinkKind,
+    /// effective bandwidth, bytes/s
+    pub bandwidth: f64,
+    /// per-message launch latency, s (NCCL call overhead)
+    pub alpha: f64,
+}
+
+impl Link {
+    pub fn nvlink(bw: f64) -> Self {
+        Link { kind: LinkKind::NvLink, bandwidth: bw, alpha: 20e-6 }
+    }
+
+    pub fn infiniband(bw: f64) -> Self {
+        Link { kind: LinkKind::InfiniBand, bandwidth: bw, alpha: 60e-6 }
+    }
+
+    pub fn pcie(bw: f64) -> Self {
+        Link { kind: LinkKind::Pcie, bandwidth: bw, alpha: 10e-6 }
+    }
+
+    /// α–β transfer time for `bytes`.
+    pub fn xfer_time(&self, bytes: f64) -> f64 {
+        self.alpha + bytes / self.bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alpha_beta() {
+        let l = Link::nvlink(900e9);
+        let t = l.xfer_time(900e9);
+        assert!((t - 1.0).abs() < 1e-3);
+        // Small messages are latency-bound.
+        assert!(l.xfer_time(1.0) >= l.alpha);
+    }
+
+    #[test]
+    fn ib_slower_than_nvlink() {
+        let nv = Link::nvlink(900e9);
+        let ib = Link::infiniband(50e9);
+        assert!(ib.xfer_time(1e9) > nv.xfer_time(1e9));
+    }
+}

@@ -1,0 +1,11 @@
+//! Simulated cluster: devices with HBM allocators, links with α–β costs,
+//! and the node topology that decides whether a collective crosses NVLink
+//! or InfiniBand.
+
+pub mod device;
+pub mod link;
+pub mod topology;
+
+pub use device::Device;
+pub use link::{Link, LinkKind};
+pub use topology::Topology;

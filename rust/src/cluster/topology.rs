@@ -1,0 +1,79 @@
+//! Node topology: rank → node placement and link selection between ranks.
+
+use super::link::{Link, LinkKind};
+use crate::config::ClusterConfig;
+
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub nodes: u64,
+    pub gpus_per_node: u64,
+    nvlink: Link,
+    ib: Link,
+    pcie: Link,
+}
+
+impl Topology {
+    pub fn from_cluster(c: &ClusterConfig) -> Self {
+        Topology {
+            nodes: c.nodes,
+            gpus_per_node: c.gpus_per_node,
+            nvlink: Link::nvlink(c.nvlink_bps),
+            ib: Link::infiniband(c.ib_bps),
+            pcie: Link::pcie(c.pcie_bps),
+        }
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes * self.gpus_per_node
+    }
+
+    pub fn node_of(&self, rank: u64) -> u64 {
+        rank / self.gpus_per_node
+    }
+
+    /// Link connecting two ranks.
+    pub fn link_between(&self, a: u64, b: u64) -> Link {
+        if self.node_of(a) == self.node_of(b) {
+            self.nvlink
+        } else {
+            self.ib
+        }
+    }
+
+    pub fn link(&self, kind: LinkKind) -> Link {
+        match kind {
+            LinkKind::NvLink => self.nvlink,
+            LinkKind::InfiniBand => self.ib,
+            LinkKind::Pcie => self.pcie,
+        }
+    }
+
+    /// Are all ranks of a group on one node (⇒ collectives run on NVLink)?
+    pub fn group_intra_node(&self, ranks: &[u64]) -> bool {
+        ranks
+            .windows(2)
+            .all(|w| self.node_of(w[0]) == self.node_of(w[1]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_and_links() {
+        let t = Topology::from_cluster(&ClusterConfig::h100_2nodes());
+        assert_eq!(t.total_gpus(), 16);
+        assert_eq!(t.node_of(7), 0);
+        assert_eq!(t.node_of(8), 1);
+        assert_eq!(t.link_between(0, 7).kind, LinkKind::NvLink);
+        assert_eq!(t.link_between(7, 8).kind, LinkKind::InfiniBand);
+    }
+
+    #[test]
+    fn group_detection() {
+        let t = Topology::from_cluster(&ClusterConfig::h100_2nodes());
+        assert!(t.group_intra_node(&[0, 1, 2, 3, 4, 5, 6, 7]));
+        assert!(!t.group_intra_node(&[6, 7, 8]));
+    }
+}

@@ -1,0 +1,83 @@
+//! α–β cost models for the collectives the CP schedules issue.
+
+use crate::cluster::Link;
+
+/// All-to-all over `c` ranks: each rank exchanges `bytes_per_rank` with
+/// every peer; on a fully-connected NVLink fabric the transfers overlap, so
+/// time ≈ α + (c-1)/c · total/bandwidth.
+pub fn all_to_all(link: &Link, c: u64, bytes_per_rank: f64) -> f64 {
+    if c <= 1 {
+        return 0.0;
+    }
+    let frac = (c - 1) as f64 / c as f64;
+    link.alpha + frac * bytes_per_rank / link.bandwidth
+}
+
+/// Ring exchange: `steps` p2p rounds of `bytes_per_step` each (Ring
+/// Attention does C-1 rounds). Latency is paid per round — the O(C)
+/// communication-call cost §2.1 attributes to Ring Attention.
+pub fn ring(link: &Link, steps: u64, bytes_per_step: f64) -> f64 {
+    steps as f64 * (link.alpha + bytes_per_step / link.bandwidth)
+}
+
+/// All-gather of `bytes` total result over `c` ranks (ring algorithm).
+pub fn all_gather(link: &Link, c: u64, bytes: f64) -> f64 {
+    if c <= 1 {
+        return 0.0;
+    }
+    let steps = c - 1;
+    steps as f64 * link.alpha + (c - 1) as f64 / c as f64 * bytes / link.bandwidth
+}
+
+/// Reduce-scatter of `bytes` total input over `c` ranks (ring algorithm,
+/// same volume as all-gather).
+pub fn reduce_scatter(link: &Link, c: u64, bytes: f64) -> f64 {
+    all_gather(link, c, bytes)
+}
+
+/// Host offload (PCIe) transfer; `pinned=false` (paper's 5M setup) pays a
+/// pageable-memory penalty.
+pub fn offload(link: &Link, bytes: f64, pinned: bool) -> f64 {
+    let bw = if pinned { link.bandwidth } else { link.bandwidth * 0.35 };
+    link.alpha + bytes / bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Link;
+
+    fn nv() -> Link {
+        Link::nvlink(900e9)
+    }
+
+    #[test]
+    fn a2a_scales_with_bytes_and_saturates_with_c() {
+        let t1 = all_to_all(&nv(), 8, 1e9);
+        let t2 = all_to_all(&nv(), 8, 2e9);
+        assert!(t2 > 1.9 * t1 && t2 < 2.1 * t1);
+        // (c-1)/c factor: volume-bound limit is flat in c
+        let t8 = all_to_all(&nv(), 8, 1e9);
+        let t16 = all_to_all(&nv(), 16, 1e9);
+        assert!((t16 / t8 - (15.0 / 16.0) / (7.0 / 8.0)).abs() < 0.05);
+    }
+
+    #[test]
+    fn single_rank_is_free() {
+        assert_eq!(all_to_all(&nv(), 1, 1e9), 0.0);
+        assert_eq!(all_gather(&nv(), 1, 1e9), 0.0);
+    }
+
+    #[test]
+    fn ring_pays_latency_per_step() {
+        let l = nv();
+        let t = ring(&l, 7, 0.0);
+        assert!((t - 7.0 * l.alpha).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unpinned_offload_slower() {
+        let l = Link::pcie(55e9);
+        assert!(offload(&l, 1e9, false) > 2.0 * offload(&l, 1e9, true));
+    }
+}

@@ -1,0 +1,193 @@
+//! Functional all-to-all reshards over in-process rank buffers.
+//!
+//! Layout convention (matches the AOT artifacts): a rank's local tensor is
+//! a dense f32 `[heads, rows, d]` buffer, heads-major. Before
+//! `inp_all_to_all` each of the `C` ranks holds `[u, s/c, d]` (all `u`
+//! stage heads, its own sequence shard); after, rank `j` holds
+//! `[u/c, s, d]` (its `u/c` heads, the full sequence) — paper Fig. 3.
+
+/// inp_all_to_all: seq-sharded → head-sharded.
+///
+/// `inputs[r]` is rank r's `[u, sc, d]` buffer. Returns `out[j]` =
+/// `[u/c, u_rows = sc*c, d]` where head block `j*u/c + h` rows are ordered
+/// by source rank (i.e. global sequence order).
+pub fn all_to_all_seq_to_head(
+    inputs: &[Vec<f32>],
+    u: usize,
+    sc: usize,
+    d: usize,
+) -> Vec<Vec<f32>> {
+    let mut out = vec![Vec::new(); inputs.len()];
+    all_to_all_seq_to_head_into(inputs, u, sc, d, &mut out);
+    out
+}
+
+/// Buffer-reusing variant of [`all_to_all_seq_to_head`]: writes into `out`,
+/// growing it only on first use. Freshly allocated pages (and their faults)
+/// dominate the reshard cost, so reusing the stage buffers — exactly the
+/// paper's §3.3 buffer-reuse insight, applied host-side — is ~2× faster
+/// (see EXPERIMENTS.md §Perf).
+pub fn all_to_all_seq_to_head_into(
+    inputs: &[Vec<f32>],
+    u: usize,
+    sc: usize,
+    d: usize,
+    out: &mut [Vec<f32>],
+) {
+    let c = inputs.len();
+    assert!(u % c == 0, "U={u} must be divisible by C={c}");
+    let u_loc = u / c;
+    let s = sc * c;
+    for (r, buf) in inputs.iter().enumerate() {
+        assert_eq!(buf.len(), u * sc * d, "rank {r} buffer size");
+    }
+    assert_eq!(out.len(), c);
+    for (j, out_j) in out.iter_mut().enumerate() {
+        out_j.clear();
+        out_j.reserve(u_loc * s * d);
+        for h_loc in 0..u_loc {
+            let h = j * u_loc + h_loc; // global stage-head index
+            for input in inputs {
+                out_j.extend_from_slice(&input[(h * sc) * d..(h * sc + sc) * d]);
+            }
+        }
+    }
+}
+
+/// out_all_to_all: head-sharded → seq-sharded (inverse of the above).
+///
+/// `inputs[j]` is rank j's `[u/c, s, d]`; returns `out[r]` = `[u, sc, d]`.
+pub fn all_to_all_head_to_seq(
+    inputs: &[Vec<f32>],
+    u: usize,
+    sc: usize,
+    d: usize,
+) -> Vec<Vec<f32>> {
+    let c = inputs.len();
+    assert!(u % c == 0);
+    let u_loc = u / c;
+    let s = sc * c;
+    for (j, buf) in inputs.iter().enumerate() {
+        assert_eq!(buf.len(), u_loc * s * d, "rank {j} buffer size");
+    }
+    let mut out = vec![Vec::new(); c];
+    all_to_all_head_to_seq_into(inputs, u, sc, d, &mut out);
+    out
+}
+
+/// Buffer-reusing variant of [`all_to_all_head_to_seq`].
+pub fn all_to_all_head_to_seq_into(
+    inputs: &[Vec<f32>],
+    u: usize,
+    sc: usize,
+    d: usize,
+    out: &mut [Vec<f32>],
+) {
+    let c = inputs.len();
+    assert!(u % c == 0);
+    let u_loc = u / c;
+    let s = sc * c;
+    for (j, buf) in inputs.iter().enumerate() {
+        assert_eq!(buf.len(), u_loc * s * d, "rank {j} buffer size");
+    }
+    assert_eq!(out.len(), c);
+    for (r, out_r) in out.iter_mut().enumerate() {
+        out_r.clear();
+        out_r.reserve(u * sc * d);
+        for h in 0..u {
+            let src_off = ((h % u_loc) * s + r * sc) * d;
+            out_r.extend_from_slice(&inputs[h / u_loc][src_off..src_off + sc * d]);
+        }
+    }
+}
+
+/// Gather one full-sequence head on one destination rank from per-rank
+/// sequence shards (the KV path when a KV head serves several query ranks).
+/// `inputs[r]` is `[heads, sc, d]`; returns `[1, s, d]` for `head`.
+pub fn gather_head(inputs: &[Vec<f32>], head: usize, heads: usize, sc: usize, d: usize) -> Vec<f32> {
+    let c = inputs.len();
+    let mut out = vec![0.0f32; c * sc * d];
+    for r in 0..c {
+        assert_eq!(inputs[r].len(), heads * sc * d);
+        let src = &inputs[r][(head * sc) * d..(head * sc + sc) * d];
+        out[r * sc * d..(r + 1) * sc * d].copy_from_slice(src);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    fn mk_inputs(c: usize, u: usize, sc: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..c)
+            .map(|_| (0..u * sc * d).map(|_| rng.normal() as f32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let (c, u, sc, d) = (4, 4, 8, 16);
+        let inputs = mk_inputs(c, u, sc, d, 7);
+        let hs = all_to_all_seq_to_head(&inputs, u, sc, d);
+        let back = all_to_all_head_to_seq(&hs, u, sc, d);
+        assert_eq!(inputs, back);
+    }
+
+    #[test]
+    fn head_ownership_layout() {
+        // rank j must own heads [j*u/c, (j+1)*u/c) in global seq order.
+        let (c, u, sc, d) = (2, 4, 2, 1);
+        // rank r value for head h, row t = 100*r + 10*h + t
+        let inputs: Vec<Vec<f32>> = (0..c)
+            .map(|r| {
+                let mut v = Vec::new();
+                for h in 0..u {
+                    for t in 0..sc {
+                        v.push((100 * r + 10 * h + t) as f32);
+                    }
+                }
+                v
+            })
+            .collect();
+        let hs = all_to_all_seq_to_head(&inputs, u, sc, d);
+        // rank 0, head 0 (global head 0), full sequence = rank0 rows then rank1 rows
+        assert_eq!(&hs[0][0..4], &[0.0, 1.0, 100.0, 101.0]);
+        // rank 1, local head 0 = global head 2
+        assert_eq!(&hs[1][0..4], &[20.0, 21.0, 120.0, 121.0]);
+    }
+
+    #[test]
+    fn gather_head_assembles_sequence() {
+        let (c, heads, sc, d) = (3, 2, 2, 1);
+        let inputs: Vec<Vec<f32>> = (0..c)
+            .map(|r| (0..heads * sc).map(|i| (r * 10 + i) as f32).collect())
+            .collect();
+        let g = gather_head(&inputs, 1, heads, sc, d);
+        assert_eq!(g, vec![2.0, 3.0, 12.0, 13.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    fn prop_roundtrip_many_shapes() {
+        prop::check("a2a-roundtrip", 40, &[(1, 3), (1, 4), (1, 6), (1, 4), (0, 1000)], |a| {
+            let c = 1usize << a[0]; // 2,4,8
+            let mult = a[1] as usize;
+            let u = c * mult;
+            let sc = a[2] as usize;
+            let d = a[3] as usize;
+            let inputs = mk_inputs(c, u, sc, d, a[4] as u64);
+            let hs = all_to_all_seq_to_head(&inputs, u, sc, d);
+            let back = all_to_all_head_to_seq(&hs, u, sc, d);
+            back == inputs
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "must be divisible")]
+    fn rejects_indivisible_u() {
+        let inputs = mk_inputs(4, 6, 2, 2, 0);
+        all_to_all_seq_to_head(&inputs, 6, 2, 2);
+    }
+}

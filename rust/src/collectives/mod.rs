@@ -1,0 +1,13 @@
+//! Collectives, in two guises:
+//!
+//! - [`functional`] — real data movement between in-process rank buffers:
+//!   the seq↔head reshard all-to-alls of DS-Ulysses/UPipe (§3.1's
+//!   `inp_all_to_all` / `out_all_to_all`), used by the functional
+//!   coordinator. Correctness is proptested (reshard ∘ unreshard = id).
+//! - [`cost`] — α–β time models for all-to-all / ring / all-gather /
+//!   reduce-scatter, used by the simulation engine.
+
+pub mod cost;
+pub mod functional;
+
+pub use functional::{all_to_all_head_to_seq, all_to_all_seq_to_head};

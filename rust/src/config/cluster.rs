@@ -1,0 +1,86 @@
+//! Cluster hardware description (the paper's §5.1 testbed, simulated).
+
+/// Hardware description of the training cluster.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    pub name: &'static str,
+    pub nodes: u64,
+    pub gpus_per_node: u64,
+    /// HBM capacity per GPU in bytes (H100: 80 GiB, ~78 GiB usable after
+    /// CUDA context/driver reservations).
+    pub hbm_bytes: f64,
+    /// Usable fraction of HBM before the allocator OOMs (expandable
+    /// segments still reserve some headroom).
+    pub hbm_usable_frac: f64,
+    /// Intra-node NVLink bandwidth per GPU, bytes/s (4th-gen: 900 GB/s
+    /// bidirectional).
+    pub nvlink_bps: f64,
+    /// Inter-node InfiniBand bandwidth per GPU pair, bytes/s (400 Gb/s).
+    pub ib_bps: f64,
+    /// CPU offload (PCIe gen5 x16) bandwidth, bytes/s, pinned memory.
+    pub pcie_bps: f64,
+    /// Host RAM per node, bytes (1.9 TiB in the paper's nodes).
+    pub host_ram_bytes: f64,
+}
+
+impl ClusterConfig {
+    /// One 8×H100 NVLink node (paper's single-node testbed).
+    pub fn h100_node() -> Self {
+        ClusterConfig {
+            name: "8xH100",
+            nodes: 1,
+            gpus_per_node: 8,
+            hbm_bytes: 80.0 * 1024f64.powi(3),
+            hbm_usable_frac: 0.975,
+            nvlink_bps: 900.0e9,
+            ib_bps: 50.0e9, // 400 Gb/s
+            pcie_bps: 55.0e9,
+            host_ram_bytes: 1.9 * 1024f64.powi(4),
+        }
+    }
+
+    /// Two 8×H100 nodes over 400 Gb/s InfiniBand (paper's multi-node
+    /// testbed).
+    pub fn h100_2nodes() -> Self {
+        ClusterConfig { name: "16xH100", nodes: 2, ..Self::h100_node() }
+    }
+
+    /// `n` H100 GPUs on one node (e.g. the Fig. 6 ablation's 4×H100).
+    pub fn h100_gpus(n: u64) -> Self {
+        ClusterConfig {
+            name: "nxH100",
+            gpus_per_node: n,
+            ..Self::h100_node()
+        }
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.nodes * self.gpus_per_node
+    }
+
+    /// OOM threshold per GPU in bytes.
+    pub fn hbm_limit(&self) -> f64 {
+        self.hbm_bytes * self.hbm_usable_frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fmt::GIB;
+
+    #[test]
+    fn presets() {
+        let n1 = ClusterConfig::h100_node();
+        assert_eq!(n1.total_gpus(), 8);
+        assert!((n1.hbm_bytes / GIB - 80.0).abs() < 1e-9);
+        let n2 = ClusterConfig::h100_2nodes();
+        assert_eq!(n2.total_gpus(), 16);
+        assert!(n2.hbm_limit() < n2.hbm_bytes);
+    }
+
+    #[test]
+    fn ablation_cluster() {
+        assert_eq!(ClusterConfig::h100_gpus(4).total_gpus(), 4);
+    }
+}

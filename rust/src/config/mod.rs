@@ -1,0 +1,8 @@
+//! Configuration: cluster hardware, parallelism layout, run presets.
+
+pub mod cluster;
+pub mod parallel;
+pub mod presets;
+
+pub use cluster::ClusterConfig;
+pub use parallel::{CpMethod, ParallelConfig};

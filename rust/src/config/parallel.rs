@@ -1,0 +1,146 @@
+//! Parallelism layout: which context-parallelism method, with which degrees.
+
+/// The context-parallelism methods compared in the paper's evaluation
+/// (Table 3/4 rows, Fig. 1/2/5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CpMethod {
+    /// Native PyTorch ring CP: SDPA attention, no fused/tiled kernels.
+    NativePyTorch,
+    /// USP Ring Attention with zigzag load balancing.
+    Ring,
+    /// DeepSpeed-Ulysses (USP implementation) + offloaded AC + tiled
+    /// MLP/CE — the paper's ALST-like "Ulysses" baseline.
+    Ulysses,
+    /// Fully Pipelined Distributed Transformer: sequence chunking + CPU
+    /// offload, `pi` chunks.
+    Fpdt { pi: u32 },
+    /// Untied Ulysses with head-chunk size `u` (U heads per stage);
+    /// `gqa_schedule` selects the §4.1 out-of-order head order.
+    Upipe { u: u32, gqa_schedule: bool },
+    /// USP-Hybrid: Ulysses over `ulysses` GPUs intra-node × Ring over
+    /// `ring` groups inter-node.
+    UspHybrid { ulysses: u32, ring: u32 },
+    /// UPipe extended to the hybrid setup (paper §3.3 "extends to hybrid
+    /// schemes such as USP").
+    UpipeHybrid { u: u32, ulysses: u32, ring: u32 },
+    /// UPipe composed with FPDT's sequence chunking (paper §5.3.2's
+    /// anticipated composition: orthogonal chunking dimensions).
+    UpipeFpdt { u: u32, pi: u32 },
+}
+
+impl CpMethod {
+    pub fn label(&self) -> &'static str {
+        match self {
+            CpMethod::NativePyTorch => "Native PyTorch",
+            CpMethod::Ring => "Ring",
+            CpMethod::Ulysses => "Ulysses",
+            CpMethod::Fpdt { .. } => "FPDT",
+            CpMethod::Upipe { .. } => "UPipe",
+            CpMethod::UspHybrid { .. } => "USP-Hybrid",
+            CpMethod::UpipeHybrid { .. } => "UPipe-Hybrid",
+            CpMethod::UpipeFpdt { .. } => "UPipe+FPDT",
+        }
+    }
+
+    /// Does this method chunk attention headwise (UPipe family)?
+    pub fn is_upipe(&self) -> bool {
+        matches!(
+            self,
+            CpMethod::Upipe { .. } | CpMethod::UpipeHybrid { .. } | CpMethod::UpipeFpdt { .. }
+        )
+    }
+}
+
+/// Full parallel layout for a run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParallelConfig {
+    pub method: CpMethod,
+    /// Total context-parallel degree C (= total GPUs here; FSDP shards
+    /// params over the same group, as in the paper's setup).
+    pub cp_degree: u64,
+    /// Full activation checkpointing with CPU offload (paper default).
+    pub ac_offload: bool,
+    /// Pinned host memory for offloaded activations (paper: true below 5M).
+    pub pin_memory: bool,
+}
+
+impl ParallelConfig {
+    pub fn new(method: CpMethod, cp_degree: u64) -> Self {
+        ParallelConfig { method, cp_degree, ac_offload: true, pin_memory: true }
+    }
+
+    /// UPipe stage count ν = H / U for a model with `h` query heads.
+    pub fn upipe_nu(&self, h: u64) -> Option<u32> {
+        match self.method {
+            CpMethod::Upipe { u, .. }
+            | CpMethod::UpipeHybrid { u, .. }
+            | CpMethod::UpipeFpdt { u, .. } => Some((h as u32) / u),
+            _ => None,
+        }
+    }
+
+    /// Validate the layout against a model (paper §3.3: U must be divisible
+    /// by C so each device processes an integer number of heads; H must be
+    /// divisible by U).
+    pub fn validate(&self, h: u64) -> Result<(), String> {
+        match self.method {
+            CpMethod::Upipe { u, .. } | CpMethod::UpipeFpdt { u, .. } => {
+                let (u, c) = (u as u64, self.cp_degree);
+                if u % c != 0 {
+                    return Err(format!("U={u} must be divisible by C={c}"));
+                }
+                if h % u != 0 {
+                    return Err(format!("H={h} must be divisible by U={u}"));
+                }
+                Ok(())
+            }
+            CpMethod::UpipeHybrid { u, ulysses, .. } => {
+                let (u, cu) = (u as u64, ulysses as u64);
+                if u % cu != 0 {
+                    return Err(format!("U={u} must be divisible by ulysses degree {cu}"));
+                }
+                if h % u != 0 {
+                    return Err(format!("H={h} must be divisible by U={u}"));
+                }
+                Ok(())
+            }
+            CpMethod::UspHybrid { ulysses, ring } => {
+                if (ulysses as u64) * (ring as u64) != self.cp_degree {
+                    return Err("ulysses*ring must equal cp_degree".into());
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upipe_validation() {
+        let p = ParallelConfig::new(CpMethod::Upipe { u: 8, gqa_schedule: true }, 8);
+        assert!(p.validate(32).is_ok());
+        assert_eq!(p.upipe_nu(32), Some(4));
+        let bad = ParallelConfig::new(CpMethod::Upipe { u: 6, gqa_schedule: true }, 8);
+        assert!(bad.validate(32).is_err());
+        let bad2 = ParallelConfig::new(CpMethod::Upipe { u: 24, gqa_schedule: true }, 8);
+        assert!(bad2.validate(32).is_err());
+    }
+
+    #[test]
+    fn hybrid_validation() {
+        let p = ParallelConfig::new(CpMethod::UspHybrid { ulysses: 8, ring: 2 }, 16);
+        assert!(p.validate(32).is_ok());
+        let bad = ParallelConfig::new(CpMethod::UspHybrid { ulysses: 8, ring: 3 }, 16);
+        assert!(bad.validate(32).is_err());
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(CpMethod::Upipe { u: 8, gqa_schedule: true }.label(), "UPipe");
+        assert!(CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 }.is_upipe());
+    }
+}

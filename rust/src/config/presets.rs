@@ -1,0 +1,137 @@
+//! Run presets reproducing the paper's experimental setups (§5.1–5.2).
+
+use crate::config::{ClusterConfig, CpMethod, ParallelConfig};
+use crate::model::ModelDims;
+
+/// One experiment cell: model × cluster × parallel layout × sequence length.
+#[derive(Debug, Clone)]
+pub struct RunPreset {
+    pub model: ModelDims,
+    pub cluster: ClusterConfig,
+    pub parallel: ParallelConfig,
+    pub seq_len: u64,
+}
+
+/// Sequence lengths of Table 3/4 columns.
+pub fn table34_seq_lens() -> Vec<u64> {
+    ["128K", "256K", "512K", "1M", "2M", "3M", "4M", "5M"]
+        .iter()
+        .map(|s| crate::util::fmt::parse_tokens(s).unwrap())
+        .collect()
+}
+
+/// Fig. 5 sequence lengths (512K–8M on 16×H100).
+pub fn fig5_seq_lens() -> Vec<u64> {
+    ["512K", "1M", "2M", "3M", "4M", "5M", "6M", "7M", "8M"]
+        .iter()
+        .map(|s| crate::util::fmt::parse_tokens(s).unwrap())
+        .collect()
+}
+
+/// The five single-node Llama3-8B methods of Table 3/4 (top half), in the
+/// paper's row order. C = 8, U = C for UPipe (max memory efficiency, §5).
+pub fn llama_single_node_methods() -> Vec<CpMethod> {
+    vec![
+        CpMethod::NativePyTorch,
+        CpMethod::Ring,
+        CpMethod::Ulysses,
+        CpMethod::Fpdt { pi: 16 },
+        CpMethod::Upipe { u: 8, gqa_schedule: true },
+    ]
+}
+
+/// The Qwen3-32B 16×H100 methods of Table 3/4 (bottom half). Ulysses-family
+/// methods restrict the Ulysses degree to 8 (intra-node) and use ring
+/// across nodes (§5.1 "we always restrict Ulysses context parallelism
+/// degree to 8 and use rest for ring"); FPDT uses 16-ulysses-1-ring.
+pub fn qwen_two_node_methods() -> Vec<CpMethod> {
+    vec![
+        CpMethod::NativePyTorch,
+        CpMethod::Ring,
+        CpMethod::UspHybrid { ulysses: 8, ring: 2 },
+        CpMethod::Fpdt { pi: 16 },
+        CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 },
+    ]
+}
+
+/// Build the Llama3-8B single-node preset for a method × sequence length.
+pub fn llama_single_node(method: CpMethod, seq_len: u64) -> RunPreset {
+    RunPreset {
+        model: ModelDims::llama3_8b(),
+        cluster: ClusterConfig::h100_node(),
+        parallel: ParallelConfig::new(method, 8),
+        seq_len,
+    }
+}
+
+/// Build the Qwen3-32B two-node preset for a method × sequence length.
+pub fn qwen_two_node(method: CpMethod, seq_len: u64) -> RunPreset {
+    let mut p = ParallelConfig::new(method, 16);
+    // 5M on Llama used unpinned host memory due to RAM limits (§5.1); the
+    // same applies to any >= 5M run here.
+    p.pin_memory = seq_len < crate::util::fmt::parse_tokens("5M").unwrap();
+    RunPreset {
+        model: ModelDims::qwen3_32b(),
+        cluster: ClusterConfig::h100_2nodes(),
+        parallel: p,
+        seq_len,
+    }
+}
+
+/// Fig. 5: Llama3-8B on 16×H100, UPipe-Hybrid vs USP-Hybrid.
+pub fn llama_two_node(method: CpMethod, seq_len: u64) -> RunPreset {
+    RunPreset {
+        model: ModelDims::llama3_8b(),
+        cluster: ClusterConfig::h100_2nodes(),
+        parallel: ParallelConfig::new(method, 16),
+        seq_len,
+    }
+}
+
+/// Fig. 6 ablation: Llama3-8B on 4×H100 at 512K, sweeping U.
+pub fn llama_ablation(u: u32) -> RunPreset {
+    RunPreset {
+        model: ModelDims::llama3_8b(),
+        cluster: ClusterConfig::h100_gpus(4),
+        parallel: ParallelConfig::new(CpMethod::Upipe { u, gqa_schedule: true }, 4),
+        seq_len: crate::util::fmt::parse_tokens("512K").unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for m in llama_single_node_methods() {
+            let p = llama_single_node(m, 1 << 20);
+            assert!(p.parallel.validate(p.model.n_heads).is_ok(), "{m:?}");
+        }
+        for m in qwen_two_node_methods() {
+            let p = qwen_two_node(m, 1 << 20);
+            assert!(p.parallel.validate(p.model.n_heads).is_ok(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn seq_lens_ordered() {
+        let s = table34_seq_lens();
+        assert_eq!(s.len(), 8);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn ablation_sweeps_u() {
+        for u in [4, 8, 16, 32] {
+            let p = llama_ablation(u);
+            assert!(p.parallel.validate(p.model.n_heads).is_ok(), "u={u}");
+        }
+    }
+
+    #[test]
+    fn pin_memory_off_at_5m() {
+        let p = qwen_two_node(CpMethod::Ring, 5 * 1024 * 1024);
+        assert!(!p.parallel.pin_memory);
+    }
+}

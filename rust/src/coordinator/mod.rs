@@ -1,0 +1,18 @@
+//! The functional coordinator: a C-rank in-process UPipe execution with
+//! *real tensors* — rank-sharded buffers, genuine all-to-all data movement
+//! ([`crate::collectives::functional`]), and the paper's GQA-scheduled
+//! headwise stages — executing the AOT-compiled JAX/Pallas artifacts
+//! through PJRT. Output parity against the monolithic `model_logits`
+//! artifact is asserted in `rust/tests/coordinator_parity.rs`.
+//!
+//! Also home to the training driver (`trainer`) used by
+//! `examples/train_e2e` and the request server (`server`) used by
+//! `examples/serve_shards`.
+
+pub mod params;
+pub mod pipeline;
+pub mod server;
+pub mod trainer;
+
+pub use params::Params;
+pub use pipeline::{AttnMode, Pipeline, PipelineStats};

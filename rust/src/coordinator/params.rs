@@ -1,0 +1,121 @@
+//! Model parameters, generated rust-side and addressed by pytree path
+//! ("layers.0.wq"). The same tensors feed both the distributed pipeline and
+//! the monolithic parity artifact, so initialization only needs to be
+//! *consistent*, not identical to jax's.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Params {
+    by_name: HashMap<String, HostTensor>,
+    /// leaf order of the `model_logits` artifact (after the tokens input)
+    order: Vec<String>,
+}
+
+impl Params {
+    /// Generate scaled-normal parameters for every leaf input of the
+    /// monolithic artifact (`model_logits`): norms ≈ 1, matrices
+    /// N(0, 1/fan_in).
+    pub fn generate(spec: &ArtifactSpec, seed: u64) -> Result<Self> {
+        let mut rng = Rng::new(seed);
+        let mut by_name = HashMap::new();
+        let mut order = Vec::new();
+        for input in &spec.inputs {
+            if input.name == "tokens" {
+                continue;
+            }
+            let name = input
+                .name
+                .strip_prefix("p.")
+                .unwrap_or(&input.name)
+                .to_string();
+            let t = if input.shape.len() == 1 {
+                // norm weights: ones
+                HostTensor::f32(&input.shape, vec![1.0; input.elements()])
+            } else {
+                let fan_in = input.shape[0] as f64;
+                let scale = 1.0 / fan_in.sqrt();
+                let data: Vec<f32> = (0..input.elements())
+                    .map(|_| (rng.normal() * scale) as f32)
+                    .collect();
+                HostTensor::f32(&input.shape, data)
+            };
+            order.push(name.clone());
+            by_name.insert(name, t);
+        }
+        Ok(Params { by_name, order })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&HostTensor> {
+        self.by_name
+            .get(name)
+            .with_context(|| format!("missing param {name}"))
+    }
+
+    pub fn layer(&self, i: usize, field: &str) -> Result<&HostTensor> {
+        self.get(&format!("layers.{i}.{field}"))
+    }
+
+    /// Leaves in artifact order (for the monolithic parity call).
+    pub fn ordered(&self) -> Vec<HostTensor> {
+        self.order
+            .iter()
+            .map(|n| self.by_name[n].clone())
+            .collect()
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::{Dtype, TensorSpec};
+
+    fn spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "model_logits".into(),
+            file: "/x".into(),
+            inputs: vec![
+                TensorSpec { name: "tokens".into(), dtype: Dtype::I32, shape: vec![8] },
+                TensorSpec { name: "p.embed".into(), dtype: Dtype::F32, shape: vec![16, 4] },
+                TensorSpec {
+                    name: "p.layers.0.attn_norm".into(),
+                    dtype: Dtype::F32,
+                    shape: vec![4],
+                },
+            ],
+            outputs: vec![],
+        }
+    }
+
+    #[test]
+    fn generates_all_leaves() {
+        let p = Params::generate(&spec(), 1).unwrap();
+        assert_eq!(p.names().len(), 2);
+        assert_eq!(p.get("embed").unwrap().shape(), &[16, 4]);
+        // norm weights are ones
+        assert!(p.get("layers.0.attn_norm").unwrap().as_f32().unwrap().iter().all(|&x| x == 1.0));
+        // matrices are scaled
+        let e = p.get("embed").unwrap().as_f32().unwrap();
+        let var: f32 = e.iter().map(|x| x * x).sum::<f32>() / e.len() as f32;
+        assert!((var - 1.0 / 16.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Params::generate(&spec(), 7).unwrap();
+        let b = Params::generate(&spec(), 7).unwrap();
+        assert_eq!(a.get("embed").unwrap(), b.get("embed").unwrap());
+        let c = Params::generate(&spec(), 8).unwrap();
+        assert_ne!(a.get("embed").unwrap(), c.get("embed").unwrap());
+    }
+}

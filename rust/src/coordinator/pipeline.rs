@@ -1,0 +1,399 @@
+//! The distributed UPipe pipeline over C in-process ranks.
+//!
+//! Per attention block (paper Fig. 3b + §4.1):
+//! 1. each rank RMS-norms its sequence shard (`rmsnorm_shard` artifact);
+//! 2. for each headwise stage: project the stage's U query heads
+//!    (`q_chunk`) and — only when the GQA schedule introduces new groups —
+//!    the unique KV heads (`kv_chunk`); `inp_all_to_all` reshards
+//!    seq→head; each rank runs the Pallas flash-attention artifact
+//!    (`attn_stage`) on its single full-sequence head; `out_all_to_all`
+//!    reshards back and `out_proj_partial` accumulates into the
+//!    pre-initialized output buffer;
+//! 3. residual adds happen host-side; MLP/logits are token-parallel shards.
+//!
+//! `AttnMode::FullHead` executes the same block the DS-Ulysses way (all H
+//! heads in one stage) for the memory comparison the examples print.
+
+use anyhow::{bail, Result};
+
+use super::params::Params;
+use crate::collectives::functional::{all_to_all_head_to_seq, all_to_all_seq_to_head, gather_head};
+use crate::runtime::{HostTensor, Runtime};
+use crate::schedule::gqa::{gqa_schedule, naive_schedule, Stage};
+
+/// How the attention block is executed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AttnMode {
+    /// UPipe headwise stages with the §4.1 GQA schedule.
+    UpipeGqa,
+    /// UPipe headwise stages, naive in-order head order.
+    UpipeNaive,
+    /// DS-Ulysses-style: all H heads in a single stage (memory baseline).
+    FullHead,
+}
+
+/// Peak transient bytes observed per rank (the functional analogue of
+/// Table 2's intermediate-tensor accounting).
+#[derive(Debug, Clone, Default)]
+pub struct PipelineStats {
+    pub transient_peak_bytes: usize,
+    pub a2a_bytes: usize,
+    pub a2a_calls: usize,
+    pub stages_run: usize,
+}
+
+pub struct Pipeline<'rt> {
+    rt: &'rt Runtime,
+    pub params: Params,
+    // manifest constants
+    pub c: usize,
+    pub u: usize,
+    pub s: usize,
+    pub sc: usize,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub n_layers: usize,
+    pub vocab: usize,
+    cos: HostTensor,
+    sin: HostTensor,
+    pub stats: PipelineStats,
+    /// per-(layer, head-range, kind) weight-chunk cache — slicing W[:,h·d..]
+    /// per stage per forward re-copies the projection matrices; stages
+    /// revisit the same chunks every layer/step (§Perf).
+    chunk_cache: std::collections::HashMap<(usize, u64, usize, u8), HostTensor>,
+}
+
+impl<'rt> Pipeline<'rt> {
+    pub fn new(rt: &'rt Runtime, seed: u64) -> Result<Self> {
+        let m = &rt.manifest;
+        let spec = m.artifact("model_logits")?.clone();
+        let params = Params::generate(&spec, seed)?;
+        let tables = rt.call("rope_tables", &[])?;
+        Ok(Pipeline {
+            rt,
+            params,
+            c: m.const_u64("pipe_c")? as usize,
+            u: m.const_u64("pipe_u")? as usize,
+            s: m.const_u64("pipe_s")? as usize,
+            sc: (m.const_u64("pipe_s")? / m.const_u64("pipe_c")?) as usize,
+            d_model: m.const_u64("pipe_d_model")? as usize,
+            d_head: m.const_u64("pipe_d_head")? as usize,
+            n_heads: m.const_u64("pipe_n_heads")? as usize,
+            n_kv_heads: m.const_u64("pipe_n_kv_heads")? as usize,
+            n_layers: m.const_u64("pipe_n_layers")? as usize,
+            vocab: m.const_u64("pipe_vocab")? as usize,
+            cos: tables[0].clone(),
+            sin: tables[1].clone(),
+            stats: PipelineStats::default(),
+            chunk_cache: Default::default(),
+        })
+    }
+
+    /// Cached weight chunk: kind 0..=2 are column chunks of wq/wk/wv, 3 is
+    /// the row chunk of wo. Keyed by a hash of the exact head list so the
+    /// GQA and naive schedules (e.g. [0,2,4,6] vs [0,1,2,3]) don't collide.
+    fn cached_chunk(&mut self, layer: usize, kind: u8, heads: &[u64]) -> Result<HostTensor> {
+        let hash = heads
+            .iter()
+            .fold(0u64, |a, h| a.wrapping_mul(131).wrapping_add(*h));
+        let key = (layer, hash, heads.len(), kind);
+        if let Some(t) = self.chunk_cache.get(&key) {
+            return Ok(t.clone());
+        }
+        let d = self.d_head;
+        let t = match kind {
+            0 => Self::head_cols(self.params.layer(layer, "wq")?, heads, d)?,
+            1 => Self::head_cols(self.params.layer(layer, "wk")?, heads, d)?,
+            2 => Self::head_cols(self.params.layer(layer, "wv")?, heads, d)?,
+            _ => Self::head_rows(self.params.layer(layer, "wo")?, heads, d)?,
+        };
+        self.chunk_cache.insert(key, t.clone());
+        Ok(t)
+    }
+
+    fn head_schedule(&self, mode: AttnMode) -> Vec<Stage> {
+        let (h, hkv) = (self.n_heads as u64, self.n_kv_heads as u64);
+        match mode {
+            AttnMode::UpipeGqa => gqa_schedule(h, hkv, self.u as u64),
+            AttnMode::UpipeNaive => naive_schedule(h, hkv, self.u as u64),
+            AttnMode::FullHead => naive_schedule(h, hkv, h),
+        }
+    }
+
+    fn rope_shard(&self, rank: usize) -> Result<(HostTensor, HostTensor)> {
+        let cos = self.cos.slice_rows(rank * self.sc, (rank + 1) * self.sc)?;
+        let sin = self.sin.slice_rows(rank * self.sc, (rank + 1) * self.sc)?;
+        Ok((cos, sin))
+    }
+
+    fn track(&mut self, live_bytes: usize) {
+        self.stats.transient_peak_bytes = self.stats.transient_peak_bytes.max(live_bytes);
+    }
+
+    fn track_a2a(&mut self, bytes: usize, calls: usize) {
+        self.stats.a2a_bytes += bytes;
+        self.stats.a2a_calls += calls;
+    }
+
+    /// Weight column chunk for a head list: concat W[:, h·d..(h+1)·d].
+    fn head_cols(w: &HostTensor, heads: &[u64], d: usize) -> Result<HostTensor> {
+        let parts: Vec<HostTensor> = heads
+            .iter()
+            .map(|&h| w.slice_cols(h as usize * d, (h as usize + 1) * d))
+            .collect::<Result<_>>()?;
+        HostTensor::concat_cols(&parts)
+    }
+
+    /// W_O row chunk for a head list (rows h·d..(h+1)·d stacked).
+    fn head_rows(w: &HostTensor, heads: &[u64], d: usize) -> Result<HostTensor> {
+        let parts: Vec<HostTensor> = heads
+            .iter()
+            .map(|&h| w.slice_rows(h as usize * d, (h as usize + 1) * d))
+            .collect::<Result<_>>()?;
+        HostTensor::concat_rows(&parts)
+    }
+
+    /// Execute one attention block distributed over C ranks.
+    ///
+    /// `x_shards[r]` is rank r's [S/C, d_model] residual-stream shard;
+    /// returns the block output shards (no residual added).
+    pub fn attention_block(
+        &mut self,
+        layer: usize,
+        x_shards: &[HostTensor],
+        mode: AttnMode,
+    ) -> Result<Vec<HostTensor>> {
+        let (c, d, sc, s) = (self.c, self.d_head, self.sc, self.s);
+        let g = (self.n_heads / self.n_kv_heads) as u64;
+        let ukv_art = self.u / g as usize; // kv_chunk artifact width
+        let attn_norm = self.params.layer(layer, "attn_norm")?.clone();
+
+        // 1. token-parallel RMSNorm on each rank
+        let xn: Vec<HostTensor> = x_shards
+            .iter()
+            .map(|x| Ok(self.rt.call("rmsnorm_shard", &[x.clone(), attn_norm.clone()])?[0].clone()))
+            .collect::<Result<_>>()?;
+
+        // output accumulators, initialized upfront (§3.3)
+        let mut out: Vec<HostTensor> = (0..c)
+            .map(|_| HostTensor::f32(&[sc, self.d_model], vec![0.0; sc * self.d_model]))
+            .collect();
+        // rank-local KV cache: kv_cache[rank][kv_head] -> (k, v) full-seq
+        let mut kv_cache: Vec<std::collections::HashMap<u64, (Vec<f32>, Vec<f32>)>> =
+            vec![Default::default(); c];
+
+        let stages = self.head_schedule(mode);
+        for st in &stages {
+            self.stats.stages_run += 1;
+            let su = st.q_heads.len(); // stage width (q heads)
+            let u_loc = su / c;
+            // --- per-rank query projection (artifact-width chunks) ---
+            // weight chunks are cached across ranks/layers/steps (§Perf)
+            let wq_chunks: Vec<HostTensor> = st
+                .q_heads
+                .chunks(self.u)
+                .map(|chunk| self.cached_chunk(layer, 0, chunk))
+                .collect::<Result<_>>()?;
+            let mut q_bufs = Vec::with_capacity(c);
+            for (r, xn_r) in xn.iter().enumerate() {
+                let (cos, sin) = self.rope_shard(r)?;
+                let mut buf = Vec::with_capacity(su * sc * d);
+                for wq_c in &wq_chunks {
+                    let q = self.rt.call(
+                        "q_chunk",
+                        &[xn_r.clone(), wq_c.clone(), cos.clone(), sin.clone()],
+                    )?;
+                    buf.extend_from_slice(q[0].as_f32()?);
+                }
+                q_bufs.push(buf);
+            }
+            // --- per-rank KV projection for newly introduced groups ---
+            let mut kv_bufs: Vec<(Vec<f32>, Vec<f32>)> = Vec::new(); // per rank [nkv, sc, d]
+            if !st.new_kv_heads.is_empty() {
+                for chunk in st.new_kv_heads.chunks(ukv_art) {
+                    if chunk.len() != ukv_art {
+                        bail!("kv stage width not a multiple of kv_chunk width");
+                    }
+                }
+                let wkv_chunks: Vec<(HostTensor, HostTensor)> = st
+                    .new_kv_heads
+                    .chunks(ukv_art)
+                    .map(|chunk| {
+                        Ok((
+                            self.cached_chunk(layer, 1, chunk)?,
+                            self.cached_chunk(layer, 2, chunk)?,
+                        ))
+                    })
+                    .collect::<Result<_>>()?;
+                for (r, xn_r) in xn.iter().enumerate() {
+                    let (cos, sin) = self.rope_shard(r)?;
+                    let mut kbuf = Vec::new();
+                    let mut vbuf = Vec::new();
+                    for (wk_c, wv_c) in &wkv_chunks {
+                        let kv = self.rt.call(
+                            "kv_chunk",
+                            &[xn_r.clone(), wk_c.clone(), wv_c.clone(), cos.clone(), sin.clone()],
+                        )?;
+                        kbuf.extend_from_slice(kv[0].as_f32()?);
+                        vbuf.extend_from_slice(kv[1].as_f32()?);
+                    }
+                    kv_bufs.push((kbuf, vbuf));
+                    let _ = r;
+                }
+            }
+
+            // --- inp_all_to_all: queries seq→head ---
+            let q_heads_global = all_to_all_seq_to_head(&q_bufs, su, sc, d);
+            self.track_a2a(su * s * d * 4, 1);
+            // KV: each rank gathers the full-sequence K/V of the heads its
+            // queries need; new groups via all-to-all, old via cache.
+            for j in 0..c {
+                for i in 0..u_loc {
+                    let kvh = st.q_heads[j * u_loc + i] / g;
+                    if !kv_cache[j].contains_key(&kvh) {
+                        let Some(local_idx) =
+                            st.new_kv_heads.iter().position(|&h| h == kvh)
+                        else {
+                            bail!("kv head {kvh} neither cached nor sent this stage");
+                        };
+                        let ks: Vec<Vec<f32>> =
+                            kv_bufs.iter().map(|(k, _)| k.clone()).collect();
+                        let vs: Vec<Vec<f32>> =
+                            kv_bufs.iter().map(|(_, v)| v.clone()).collect();
+                        let nkv = st.new_kv_heads.len();
+                        let k_full = gather_head(&ks, local_idx, nkv, sc, d);
+                        let v_full = gather_head(&vs, local_idx, nkv, sc, d);
+                        self.track_a2a(2 * s * d * 4, 2);
+                        kv_cache[j].insert(kvh, (k_full, v_full));
+                    }
+                }
+            }
+
+            // transient live set this stage (per rank): q chunk (shard) +
+            // q global + kv chunks + kv cache + out a2a result
+            let live = (su * sc * d // q local
+                + u_loc * s * d // q after a2a
+                + kv_bufs.first().map(|(k, v)| k.len() + v.len()).unwrap_or(0)
+                + kv_cache[0].values().map(|(k, v)| k.len() + v.len()).sum::<usize>()
+                + su * sc * d) // out a2a result
+                * 4
+                + sc * self.d_model * 4; // out accumulator
+            self.track(live);
+
+            // --- per-rank attention (Pallas flash-attention artifact) ---
+            let mut o_bufs = Vec::with_capacity(c);
+            for (j, qj) in q_heads_global.iter().enumerate() {
+                let mut o = Vec::with_capacity(u_loc * s * d);
+                for i in 0..u_loc {
+                    let kvh = st.q_heads[j * u_loc + i] / g;
+                    let (k_full, v_full) = &kv_cache[j][&kvh];
+                    let q_t = HostTensor::f32(&[1, s, d], qj[i * s * d..(i + 1) * s * d].to_vec());
+                    let k_t = HostTensor::f32(&[1, s, d], k_full.clone());
+                    let v_t = HostTensor::f32(&[1, s, d], v_full.clone());
+                    let r = self.rt.call("attn_stage", &[q_t, k_t, v_t])?;
+                    o.extend_from_slice(r[0].as_f32()?);
+                }
+                o_bufs.push(o);
+            }
+
+            // --- out_all_to_all: head→seq ---
+            let o_shards = all_to_all_head_to_seq(&o_bufs, su, sc, d);
+            self.track_a2a(su * s * d * 4, 1);
+
+            // --- accumulate output projection (stage-head row chunk) ---
+            let wo_c = self.cached_chunk(layer, 3, &st.q_heads)?;
+            let wo_chunks: Vec<HostTensor> = st
+                .q_heads
+                .chunks(self.u)
+                .map(|chunk| self.cached_chunk(layer, 3, chunk))
+                .collect::<Result<_>>()?;
+            for (r, o_r) in o_shards.iter().enumerate() {
+                let partial = if su == self.u {
+                    let a = HostTensor::f32(&[su, sc, d], o_r.clone());
+                    self.rt.call("out_proj_partial", &[a, wo_c.clone()])?[0].clone()
+                } else {
+                    // FullHead mode: artifact is U-wide; project in chunks.
+                    let mut acc = HostTensor::f32(
+                        &[sc, self.d_model],
+                        vec![0.0; sc * self.d_model],
+                    );
+                    for (ci, wo_cc) in wo_chunks.iter().enumerate() {
+                        let a_c = HostTensor::f32(
+                            &[self.u, sc, d],
+                            o_r[ci * self.u * sc * d..(ci + 1) * self.u * sc * d].to_vec(),
+                        );
+                        let p =
+                            self.rt.call("out_proj_partial", &[a_c, wo_cc.clone()])?;
+                        acc.add_assign(&p[0])?;
+                    }
+                    acc
+                };
+                out[r].add_assign(&partial)?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Token-parallel MLP block (norm inside; no residual).
+    pub fn mlp_block(&self, layer: usize, x_shards: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let inputs = [
+            self.params.layer(layer, "mlp_norm")?.clone(),
+            self.params.layer(layer, "wg")?.clone(),
+            self.params.layer(layer, "wu")?.clone(),
+            self.params.layer(layer, "wd")?.clone(),
+        ];
+        x_shards
+            .iter()
+            .map(|x| {
+                let mut args = vec![x.clone()];
+                args.extend(inputs.iter().cloned());
+                Ok(self.rt.call("mlp_shard", &args)?[0].clone())
+            })
+            .collect()
+    }
+
+    /// Full distributed forward: tokens → per-rank logits shards.
+    pub fn forward(&mut self, tokens: &[i32], mode: AttnMode) -> Result<Vec<HostTensor>> {
+        if tokens.len() != self.s {
+            bail!("expected {} tokens, got {}", self.s, tokens.len());
+        }
+        let embed = self.params.get("embed")?.clone();
+        // embedding lookup, sharded
+        let mut x: Vec<HostTensor> = (0..self.c)
+            .map(|r| {
+                let shard =
+                    HostTensor::i32(&[self.sc], tokens[r * self.sc..(r + 1) * self.sc].to_vec());
+                Ok(self.rt.call("embed_shard", &[shard, embed.clone()])?[0].clone())
+            })
+            .collect::<Result<_>>()?;
+        for layer in 0..self.n_layers {
+            let attn = self.attention_block(layer, &x, mode)?;
+            for (xr, ar) in x.iter_mut().zip(&attn) {
+                xr.add_assign(ar)?;
+            }
+            let mlp = self.mlp_block(layer, &x)?;
+            for (xr, mr) in x.iter_mut().zip(&mlp) {
+                xr.add_assign(mr)?;
+            }
+        }
+        let out_norm = self.params.get("out_norm")?.clone();
+        let w_out = self.params.get("w_out")?.clone();
+        x.iter()
+            .map(|xr| {
+                Ok(self
+                    .rt
+                    .call("logits_shard", &[xr.clone(), out_norm.clone(), w_out.clone()])?[0]
+                    .clone())
+            })
+            .collect()
+    }
+
+    /// Monolithic forward via the parity artifact (single "device").
+    pub fn forward_monolithic(&self, tokens: &[i32]) -> Result<HostTensor> {
+        let mut args = vec![HostTensor::i32(&[self.s], tokens.to_vec())];
+        args.extend(self.params.ordered());
+        Ok(self.rt.call("model_logits", &args)?[0].clone())
+    }
+}

@@ -1,0 +1,88 @@
+//! Minimal request server over the monolithic forward artifact: accepts
+//! token-sequence "requests", runs them through `model_logits`, reports
+//! next-token predictions and latency/throughput stats. Demonstrates the
+//! serve path (rust binary, compiled artifacts, no python) for
+//! `examples/serve_shards`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::params::Params;
+use crate::runtime::{HostTensor, Runtime};
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub next_token: i32,
+    pub latency_s: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServerStats {
+    pub served: usize,
+    pub total_tokens: usize,
+    pub total_time_s: f64,
+    pub p50_latency_s: f64,
+    pub p95_latency_s: f64,
+}
+
+pub struct Server<'rt> {
+    rt: &'rt Runtime,
+    params: Params,
+    pub seq_len: usize,
+    pub vocab: usize,
+    latencies: Vec<f64>,
+}
+
+impl<'rt> Server<'rt> {
+    pub fn new(rt: &'rt Runtime, seed: u64) -> Result<Self> {
+        let spec = rt.manifest.artifact("model_logits")?.clone();
+        Ok(Server {
+            rt,
+            params: Params::generate(&spec, seed)?,
+            seq_len: rt.manifest.const_u64("pipe_s")? as usize,
+            vocab: rt.manifest.const_u64("pipe_vocab")? as usize,
+            latencies: Vec::new(),
+        })
+    }
+
+    /// Serve one request: full-sequence forward, return the argmax
+    /// prediction for the final position.
+    pub fn serve(&mut self, tokens: &[i32]) -> Result<Response> {
+        anyhow::ensure!(tokens.len() == self.seq_len, "sequence length");
+        let t0 = Instant::now();
+        let mut args = vec![HostTensor::i32(&[self.seq_len], tokens.to_vec())];
+        args.extend(self.params.ordered());
+        let logits = self.rt.call("model_logits", &args)?;
+        let data = logits[0].as_f32()?;
+        let last = &data[(self.seq_len - 1) * self.vocab..];
+        let next_token = last
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i as i32)
+            .unwrap();
+        let latency_s = t0.elapsed().as_secs_f64();
+        self.latencies.push(latency_s);
+        Ok(Response { next_token, latency_s })
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        let mut ls = self.latencies.clone();
+        ls.sort_by(f64::total_cmp);
+        let pick = |q: f64| {
+            if ls.is_empty() {
+                0.0
+            } else {
+                ls[((ls.len() as f64 - 1.0) * q) as usize]
+            }
+        };
+        ServerStats {
+            served: ls.len(),
+            total_tokens: ls.len() * self.seq_len,
+            total_time_s: ls.iter().sum(),
+            p50_latency_s: pick(0.5),
+            p95_latency_s: pick(0.95),
+        }
+    }
+}

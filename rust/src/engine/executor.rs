@@ -1,0 +1,230 @@
+//! The engine: executes an op trace against a simulated device.
+
+use std::collections::HashMap;
+
+use super::calibration::Calibration;
+use super::ops::{BufId, Category, Op};
+use super::report::{Components, StepReport};
+use crate::memory::{AllocId, Allocator, MemoryTimeline};
+
+/// Execution parameters for one simulated step.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    pub calib: Calibration,
+    /// HBM OOM threshold, bytes.
+    pub hbm_limit: f64,
+    /// Persistent bytes (FSDP shards + framework base) resident before the
+    /// step begins.
+    pub persistent: f64,
+    /// Host RAM available for offloaded activations, bytes.
+    pub host_ram: f64,
+}
+
+impl Engine {
+    pub fn new(calib: Calibration, hbm_limit: f64, persistent: f64) -> Self {
+        Engine { calib, hbm_limit, persistent, host_ram: f64::INFINITY }
+    }
+
+    /// Execute the trace; returns the step report. Serial semantics on the
+    /// main stream; `Offload { overlap: true }` ops run on a separate
+    /// offload stream and only extend the step if they outrun compute.
+    pub fn run(&self, ops: &[Op]) -> StepReport {
+        let mut alloc = Allocator::new(self.hbm_limit);
+        let mut timeline = MemoryTimeline::new();
+        let mut ids: HashMap<BufId, AllocId> = HashMap::new();
+        let mut comps = Components::default();
+        let mut clock = 0.0f64;
+        let mut offload_clock = 0.0f64;
+        let mut host_used = 0.0f64;
+
+        // Persistent set occupies HBM for the whole step.
+        let persistent_id = alloc.alloc(self.persistent);
+        if persistent_id.is_none() {
+            return StepReport::failed_oom();
+        }
+        timeline.record(0.0, alloc.allocated(), "persistent");
+
+        let mut oom = false;
+        let mut failed = None;
+        for op in ops {
+            match *op {
+                Op::Alloc { id, bytes, name } => match alloc.alloc(bytes) {
+                    Some(aid) => {
+                        ids.insert(id, aid);
+                        timeline.record(clock, alloc.allocated(), name);
+                    }
+                    None => {
+                        oom = true;
+                        break;
+                    }
+                },
+                Op::Free { id } => {
+                    let aid = ids.remove(&id).expect("free of unknown buffer");
+                    alloc.free(aid);
+                }
+                Op::Compute { cat, flops } => {
+                    let headroom = self.hbm_limit - alloc.allocated();
+                    let dur = match cat {
+                        Category::Fa3Fwd => {
+                            flops / self.calib.fa3_fwd_flops
+                                * self.calib.compute_penalty(headroom)
+                        }
+                        Category::Fa3Bwd => flops / self.calib.fa3_bwd_flops,
+                        // projections/MLP/loss are folded into the fitted
+                        // "other" rate; a Compute{Other} prices at the
+                        // forward rate as a fallback.
+                        _ => flops / self.calib.fa3_fwd_flops,
+                    };
+                    clock += dur;
+                    add(&mut comps, cat, dur);
+                }
+                Op::Fixed { cat, secs } => {
+                    clock += secs;
+                    add(&mut comps, cat, secs);
+                }
+                Op::AllToAll { bytes, intra, calls, s_tokens } => {
+                    let headroom = self.hbm_limit - alloc.allocated();
+                    let bw = self.calib.a2a_eff(s_tokens, intra);
+                    let dur = bytes / bw * self.calib.comm_penalty(headroom)
+                        + calls as f64 * self.calib.a2a_call_overhead;
+                    clock += dur;
+                    add(&mut comps, Category::AllToAll, dur);
+                }
+                Op::Ring { steps, bytes_per_step, inter } => {
+                    let bw = if inter {
+                        self.calib.ring_eff_inter_bps
+                    } else {
+                        self.calib.ring_eff_bps
+                    };
+                    let alpha = if inter { 60e-6 } else { 20e-6 };
+                    let dur = steps as f64 * (alpha + bytes_per_step / bw);
+                    clock += dur;
+                    add(&mut comps, Category::AllToAll, dur);
+                }
+                Op::Offload { bytes, overlap } => {
+                    host_used += bytes.max(0.0);
+                    if host_used > self.host_ram {
+                        failed = Some("host RAM exhausted");
+                        break;
+                    }
+                    let dur = bytes.abs() / self.calib.pcie_eff_bps;
+                    if overlap {
+                        // Runs on the offload stream; blocks the main
+                        // stream only if the stream is still busy past now.
+                        offload_clock = offload_clock.max(clock) + dur;
+                    } else {
+                        clock += dur;
+                        add(&mut comps, Category::Other, dur);
+                    }
+                }
+                Op::Snapshot { label } => {
+                    timeline.record(clock, alloc.allocated(), label);
+                }
+            }
+        }
+
+        let step_time = clock.max(offload_clock);
+        StepReport {
+            step_time,
+            components: comps,
+            peak_bytes: alloc.peak_allocated(),
+            persistent_bytes: self.persistent,
+            oom: oom || alloc.is_oom(),
+            failed,
+            alloc_retries: alloc.retries(),
+            timeline,
+        }
+    }
+}
+
+fn add(c: &mut Components, cat: Category, dur: f64) {
+    match cat {
+        Category::AllToAll => c.all_to_all += dur,
+        Category::Fa3Fwd => c.fa3_fwd += dur,
+        Category::Fa3Bwd => c.fa3_bwd += dur,
+        Category::Other => c.other += dur,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops::TraceBuilder;
+
+    fn engine(limit: f64) -> Engine {
+        Engine::new(Calibration::default(), limit, 1.0)
+    }
+
+    #[test]
+    fn component_attribution() {
+        let mut b = TraceBuilder::new();
+        b.fixed(Category::Fa3Fwd, 1.0);
+        b.fixed(Category::Fa3Bwd, 2.0);
+        b.fixed(Category::Other, 0.5);
+        b.all_to_all(49.9e9, true, 0, 0.0); // exactly 1s at eff0 (no pressure)
+        let r = engine(1e18).run(&b.finish());
+        assert!((r.components.fa3_fwd - 1.0).abs() < 1e-9);
+        assert!((r.components.fa3_bwd - 2.0).abs() < 1e-9);
+        assert!((r.components.all_to_all - 1.0).abs() < 0.01);
+        assert!((r.step_time - r.components.total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oom_detection() {
+        let mut b = TraceBuilder::new();
+        b.alloc("big", 2e12);
+        let r = engine(1e9).run(&b.finish());
+        assert!(r.oom);
+        assert!(r.tokens_per_sec_per_gpu(1, 1).is_none());
+    }
+
+    #[test]
+    fn peak_includes_persistent() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 5.0);
+        b.free(x);
+        let mut e = engine(1e9);
+        e.persistent = 100.0;
+        let r = e.run(&b.finish());
+        assert_eq!(r.peak_bytes, 105.0);
+    }
+
+    #[test]
+    fn overlap_offload_hides_behind_compute() {
+        let mut b = TraceBuilder::new();
+        b.offload(55e9, true); // 1s on offload stream
+        b.fixed(Category::Fa3Fwd, 2.0);
+        let r = engine(1e18).run(&b.finish());
+        assert!((r.step_time - 2.0).abs() < 1e-6, "hidden offload");
+        let mut b2 = TraceBuilder::new();
+        b2.offload(3.0 * 55e9, true); // 3s > compute
+        b2.fixed(Category::Fa3Fwd, 2.0);
+        let r2 = engine(1e18).run(&b2.finish());
+        assert!((r2.step_time - 3.0).abs() < 1e-6, "outruns compute");
+    }
+
+    #[test]
+    fn host_ram_limit_fails_run() {
+        let mut b = TraceBuilder::new();
+        b.offload(10.0, false);
+        let mut e = engine(1e18);
+        e.host_ram = 5.0;
+        let r = e.run(&b.finish());
+        assert_eq!(r.failed, Some("host RAM exhausted"));
+    }
+
+    #[test]
+    fn pressure_slows_attention_when_headroom_scarce() {
+        // Same flops, scarce vs ample headroom.
+        let mut lo = TraceBuilder::new();
+        lo.compute(Category::Fa3Fwd, 696e12);
+        let r_lo = engine(1e18).run(&lo.finish());
+        let mut hi = TraceBuilder::new();
+        let limit = 80.0 * 1024f64.powi(3);
+        let x = hi.alloc("fill", limit - 2.0 * 1024f64.powi(3)); // 2 GiB left
+        hi.compute(Category::Fa3Fwd, 696e12);
+        hi.free(x);
+        let r_hi = engine(limit).run(&hi.finish());
+        assert!(r_hi.components.fa3_fwd > r_lo.components.fa3_fwd * 1.05);
+    }
+}

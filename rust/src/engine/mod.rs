@@ -1,0 +1,18 @@
+//! Discrete-event execution engine: runs a schedule's op trace against a
+//! simulated device, producing step time (with Table-5-style component
+//! breakdown), the memory timeline, peak memory and OOM/retry diagnostics.
+//!
+//! The cost model is calibrated against the paper's own Table 5 (Ulysses
+//! column, Llama3-8B); every other cell of every table/figure is then a
+//! *prediction* — see [`calibration`] for the fit provenance and
+//! EXPERIMENTS.md for paper-vs-simulated deltas.
+
+pub mod calibration;
+pub mod executor;
+pub mod ops;
+pub mod report;
+
+pub use calibration::Calibration;
+pub use executor::Engine;
+pub use ops::{Category, Op, TraceBuilder};
+pub use report::{Components, StepReport};

@@ -1,0 +1,171 @@
+//! Op-trace IR: the unit of work a context-parallelism schedule emits and
+//! the engine executes. One trace describes one training step on one
+//! (representative) device — context parallelism is symmetric, so every
+//! rank executes the same trace; collective costs account for the peers.
+
+/// Time-accounting category (the columns of the paper's Table 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// All-to-all (and ring P2P) communication time.
+    AllToAll,
+    /// Flash-attention forward kernels.
+    Fa3Fwd,
+    /// Flash-attention backward kernels.
+    Fa3Bwd,
+    /// Everything else: projections, MLP, norms, loss, optimizer, offload.
+    Other,
+}
+
+/// Buffer handle within a trace (index into the builder's table).
+pub type BufId = usize;
+
+#[derive(Debug, Clone)]
+pub enum Op {
+    /// Allocate a named transient buffer on the device HBM.
+    Alloc { id: BufId, bytes: f64, name: &'static str },
+    /// Free a previously allocated buffer.
+    Free { id: BufId },
+    /// Matmul-bound compute, priced at the category's effective FLOPs rate
+    /// (+ memory-pressure penalty for forward attention).
+    Compute { cat: Category, flops: f64 },
+    /// Fixed-duration cost (kernel/collective launch overhead, stalls).
+    Fixed { cat: Category, secs: f64 },
+    /// All-to-all: `bytes` exchanged per rank; `intra` selects NVLink vs
+    /// InfiniBand effective bandwidth; `s_tokens` (global sequence length)
+    /// sets the message-size degradation. Subject to the comm pressure
+    /// penalty.
+    AllToAll { bytes: f64, intra: bool, calls: u64, s_tokens: f64 },
+    /// Ring exchange: `steps` rounds of `bytes_per_step`, `inter`-node or not.
+    Ring { steps: u64, bytes_per_step: f64, inter: bool },
+    /// Host offload / fetch over PCIe; `overlap` runs it on the offload
+    /// stream (hidden behind compute up to the stream's availability).
+    Offload { bytes: f64, overlap: bool },
+    /// Record a labelled memory-timeline sample.
+    Snapshot { label: &'static str },
+}
+
+/// Builder used by schedules: tracks buffer ids and emits ops.
+#[derive(Debug, Default)]
+pub struct TraceBuilder {
+    ops: Vec<Op>,
+    next_buf: BufId,
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&mut self, name: &'static str, bytes: f64) -> BufId {
+        let id = self.next_buf;
+        self.next_buf += 1;
+        self.ops.push(Op::Alloc { id, bytes, name });
+        id
+    }
+
+    pub fn free(&mut self, id: BufId) {
+        self.ops.push(Op::Free { id });
+    }
+
+    pub fn free_all(&mut self, ids: impl IntoIterator<Item = BufId>) {
+        for id in ids {
+            self.free(id);
+        }
+    }
+
+    pub fn compute(&mut self, cat: Category, flops: f64) {
+        self.ops.push(Op::Compute { cat, flops });
+    }
+
+    pub fn fixed(&mut self, cat: Category, secs: f64) {
+        self.ops.push(Op::Fixed { cat, secs });
+    }
+
+    pub fn all_to_all(&mut self, bytes: f64, intra: bool, calls: u64, s_tokens: f64) {
+        self.ops.push(Op::AllToAll { bytes, intra, calls, s_tokens });
+    }
+
+    pub fn ring(&mut self, steps: u64, bytes_per_step: f64, inter: bool) {
+        self.ops.push(Op::Ring { steps, bytes_per_step, inter });
+    }
+
+    pub fn offload(&mut self, bytes: f64, overlap: bool) {
+        self.ops.push(Op::Offload { bytes, overlap });
+    }
+
+    pub fn snapshot(&mut self, label: &'static str) {
+        self.ops.push(Op::Snapshot { label });
+    }
+
+    pub fn finish(self) -> Vec<Op> {
+        self.ops
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// Trace invariant checks used by tests: every alloc freed exactly once,
+/// frees refer to live buffers.
+pub fn validate_trace(ops: &[Op]) -> Result<(), String> {
+    let mut live = std::collections::HashSet::new();
+    for (i, op) in ops.iter().enumerate() {
+        match op {
+            Op::Alloc { id, bytes, name } => {
+                if *bytes < 0.0 {
+                    return Err(format!("op {i}: negative alloc {name}"));
+                }
+                if !live.insert(*id) {
+                    return Err(format!("op {i}: duplicate alloc id {id}"));
+                }
+            }
+            Op::Free { id } => {
+                if !live.remove(id) {
+                    return Err(format!("op {i}: free of dead id {id}"));
+                }
+            }
+            _ => {}
+        }
+    }
+    if !live.is_empty() {
+        return Err(format!("{} buffers leaked: {:?}", live.len(), live));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_emits_balanced_trace() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 100.0);
+        b.compute(Category::Fa3Fwd, 1e9);
+        b.free(x);
+        let ops = b.finish();
+        assert_eq!(ops.len(), 3);
+        assert!(validate_trace(&ops).is_ok());
+    }
+
+    #[test]
+    fn validate_catches_leak() {
+        let mut b = TraceBuilder::new();
+        b.alloc("leak", 1.0);
+        assert!(validate_trace(&b.finish()).unwrap_err().contains("leaked"));
+    }
+
+    #[test]
+    fn validate_catches_double_free() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 1.0);
+        b.free(x);
+        b.free(x);
+        assert!(validate_trace(&b.finish()).is_err());
+    }
+}

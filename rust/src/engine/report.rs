@@ -1,0 +1,89 @@
+//! Engine output: per-step report with Table-5 component breakdown.
+
+use crate::memory::MemoryTimeline;
+
+/// Time per Table-5 category, seconds.
+#[derive(Debug, Clone, Default)]
+pub struct Components {
+    pub all_to_all: f64,
+    pub fa3_fwd: f64,
+    pub fa3_bwd: f64,
+    pub other: f64,
+}
+
+impl Components {
+    pub fn total(&self) -> f64 {
+        self.all_to_all + self.fa3_fwd + self.fa3_bwd + self.other
+    }
+}
+
+/// Result of simulating one training step on one device.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Wall-clock step time (max over streams), seconds.
+    pub step_time: f64,
+    pub components: Components,
+    /// Peak allocated bytes (torch.cuda.max_memory_allocated analogue —
+    /// the quantity Table 4 reports).
+    pub peak_bytes: f64,
+    /// Persistent (FSDP weights/optimizer + framework) bytes included in
+    /// the peak.
+    pub persistent_bytes: f64,
+    pub oom: bool,
+    /// Whether the run failed for a non-OOM reason (FPDT > 4M, §5.2).
+    pub failed: Option<&'static str>,
+    pub alloc_retries: u64,
+    pub timeline: MemoryTimeline,
+}
+
+impl StepReport {
+    /// Tokens/second/GPU for a global sequence of `s` tokens over `c` GPUs
+    /// (the Table 3 metric).
+    pub fn tokens_per_sec_per_gpu(&self, s: u64, c: u64) -> Option<f64> {
+        if self.oom || self.failed.is_some() {
+            return None;
+        }
+        Some(s as f64 / (self.step_time * c as f64))
+    }
+
+    pub fn failed_oom() -> Self {
+        StepReport {
+            step_time: f64::INFINITY,
+            components: Components::default(),
+            peak_bytes: f64::INFINITY,
+            persistent_bytes: 0.0,
+            oom: true,
+            failed: None,
+            alloc_retries: 0,
+            timeline: MemoryTimeline::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_metric() {
+        let r = StepReport {
+            step_time: 275.76,
+            components: Components::default(),
+            peak_bytes: 0.0,
+            persistent_bytes: 0.0,
+            oom: false,
+            failed: None,
+            alloc_retries: 0,
+            timeline: MemoryTimeline::new(),
+        };
+        // Table 3 cross-check: Llama3-8B, 1M tokens, 8 GPUs, 275.76s step
+        // ⇒ 475.33 tokens/s/GPU.
+        let t = r.tokens_per_sec_per_gpu(1 << 20, 8).unwrap();
+        assert!((t - 475.33).abs() < 0.5, "t={t}");
+    }
+
+    #[test]
+    fn oom_yields_none() {
+        assert!(StepReport::failed_oom().tokens_per_sec_per_gpu(1, 1).is_none());
+    }
+}

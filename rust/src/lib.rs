@@ -1,0 +1,31 @@
+//! # untied-ulysses
+//!
+//! Reproduction of *Untied Ulysses: Memory-Efficient Context Parallelism via
+//! Headwise Chunking* (UPipe) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! Layer map (see `DESIGN.md`):
+//! - **L3 (this crate)** — the paper's coordination contribution: context-
+//!   parallel schedules ([`schedule`]), a calibrated cluster/memory/collective
+//!   simulator ([`cluster`], [`memory`], [`collectives`], [`engine`]) that
+//!   regenerates every table/figure ([`report`]), and a *functional*
+//!   multi-rank UPipe pipeline ([`coordinator`]) that moves real tensors
+//!   between rank buffers and executes AOT-compiled JAX/Pallas programs
+//!   through PJRT ([`runtime`]).
+//! - **L2/L1 (python/, build-time only)** — the JAX transformer and Pallas
+//!   kernels, lowered once to HLO text in `artifacts/` by `make artifacts`.
+//!   Python never runs on the request path.
+
+pub mod cluster;
+pub mod collectives;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod memory;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod schedule;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,288 @@
+//! `repro` — the leader CLI.
+//!
+//! Paper artifacts:
+//!   repro table1|table2|table3|table4|table5|table6   regenerate tables
+//!   repro fig1|fig2|fig4|fig5|fig6                    regenerate figures
+//!   repro savings                                     §3.4 headline
+//!   repro all                                         everything above
+//! Simulation:
+//!   repro simulate --model llama3-8b --method upipe --seq 1M
+//! Functional runtime (needs `make artifacts`):
+//!   repro parity        distributed UPipe vs monolithic logits check
+//!   repro train N       N training steps of the SMALL model (AOT step)
+//!   repro serve N       serve N random requests, report latency
+//! Meta:
+//!   repro deviation     mean |sim - paper| over Tables 3+4
+
+use untied_ulysses::config::presets::{llama_single_node, qwen_two_node};
+use untied_ulysses::config::CpMethod;
+use untied_ulysses::coordinator::trainer::{MarkovCorpus, Trainer};
+use untied_ulysses::coordinator::{AttnMode, Pipeline};
+use untied_ulysses::model::ModelDims;
+use untied_ulysses::report::{figures, savings, tables};
+use untied_ulysses::runtime::Runtime;
+use untied_ulysses::schedule::simulate;
+use untied_ulysses::util::fmt::{parse_tokens, GIB};
+use untied_ulysses::util::rng::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let code = match run(cmd, &args[1.min(args.len())..]) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
+    match cmd {
+        "table1" => {
+            tables::table1_report(&ModelDims::llama3_8b(), 1 << 20).print();
+            tables::table1_report(&ModelDims::qwen3_32b(), 1 << 20).print();
+        }
+        "table2" => {
+            tables::table2_report(&ModelDims::llama3_8b(), 8).print();
+            tables::table2_report(&ModelDims::qwen3_32b(), 8).print();
+        }
+        "table3" => {
+            tables::table3_report(false).print();
+            tables::table3_report(true).print();
+        }
+        "table4" => {
+            tables::table4_report(false).print();
+            tables::table4_report(true).print();
+        }
+        "table5" => tables::table5_report().print(),
+        "table6" => {
+            tables::table6_report(&ModelDims::llama3_8b(), 8).print();
+            tables::table6_report(&ModelDims::qwen3_32b(), 8).print();
+        }
+        "fig1" => figures::fig1_report().print(),
+        "fig2" => figures::fig2_report().print(),
+        "fig4" => figures::fig4_report().print(),
+        "fig5" => figures::fig5_report().print(),
+        "fig6" => figures::fig6_report().print(),
+        "savings" => savings::savings_report(1 << 20).print(),
+        "all" => {
+            for c in [
+                "table1", "table2", "table3", "table4", "table5", "table6", "fig1",
+                "fig2", "fig4", "fig5", "fig6", "savings", "deviation",
+            ] {
+                run(c, &[])?;
+                println!();
+            }
+        }
+        "deviation" => {
+            let (d_l, n_l) = tables::grid_deviation(false);
+            let (d_q, n_q) = tables::grid_deviation(true);
+            println!(
+                "mean |sim-paper|/paper: llama {:.1}% ({n_l} cells), qwen {:.1}% ({n_q} cells)",
+                100.0 * d_l,
+                100.0 * d_q
+            );
+        }
+        "compose" => cmd_compose()?,
+        "simulate" => cmd_simulate(rest)?,
+        "parity" => cmd_parity()?,
+        "train" => cmd_train(rest)?,
+        "serve" => cmd_serve(rest)?,
+        "help" | "--help" | "-h" => print!("{HELP}"),
+        other => anyhow::bail!("unknown command `{other}` (see `repro help`)"),
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+repro — Untied Ulysses (UPipe) reproduction
+
+  repro table1..table6 | fig1 | fig2 | fig4 | fig5 | fig6 | savings | all
+  repro deviation
+  repro simulate --model llama3-8b|qwen3-32b --method native|ring|ulysses|fpdt|upipe --seq 1M
+  repro compose       UPipe x FPDT composition study (paper §5.3.2)
+  repro parity
+  repro train [steps=100]
+  repro serve [requests=20]
+";
+
+fn flag(rest: &[String], name: &str) -> Option<String> {
+    rest.iter()
+        .position(|a| a == name)
+        .and_then(|i| rest.get(i + 1))
+        .cloned()
+}
+
+fn cmd_compose() -> anyhow::Result<()> {
+    use untied_ulysses::util::fmt::tokens;
+    use untied_ulysses::util::table::Table;
+    let mut t = Table::new(
+        "UPipe x FPDT composition (Llama3-8B, 8xH100) — paper §5.3.2",
+        &["S", "UPipe GiB", "FPDT GiB", "UPipe+FPDT GiB", "UPipe tok/s", "UPipe+FPDT tok/s"],
+    );
+    let upipe = CpMethod::Upipe { u: 8, gqa_schedule: true };
+    let fpdt = CpMethod::Fpdt { pi: 16 };
+    let comp = CpMethod::UpipeFpdt { u: 8, pi: 16 };
+    for label in ["1M", "3M", "5M", "6M", "8M", "10M"] {
+        let s = parse_tokens(label).unwrap();
+        let cell = |m: CpMethod| {
+            let r = simulate(&llama_single_node(m, s));
+            if r.oom || r.failed.is_some() {
+                ("OOM".to_string(), "-".to_string())
+            } else {
+                (
+                    format!("{:.1}", r.peak_bytes / GIB),
+                    r.tokens_per_sec_per_gpu(s, 8)
+                        .map(|v| format!("{v:.0}"))
+                        .unwrap_or_else(|| "-".into()),
+                )
+            }
+        };
+        let (mu, tu) = cell(upipe);
+        let (mf, _) = cell(fpdt);
+        let (mc, tc) = cell(comp);
+        t.row(vec![tokens(s), mu, mf, mc, tu, tc]);
+    }
+    t.note("composition keeps FPDT-level memory with UPipe's GQA comm schedule;");
+    t.note("it inherits FPDT's CPU-stall throughput cost — the paper's anticipated tradeoff");
+    t.print();
+    Ok(())
+}
+
+fn cmd_simulate(rest: &[String]) -> anyhow::Result<()> {
+    let model = flag(rest, "--model").unwrap_or_else(|| "llama3-8b".into());
+    let method = flag(rest, "--method").unwrap_or_else(|| "upipe".into());
+    let seq = flag(rest, "--seq").unwrap_or_else(|| "1M".into());
+    let s = parse_tokens(&seq).ok_or_else(|| anyhow::anyhow!("bad --seq {seq}"))?;
+    let qwen = model == "qwen3-32b";
+    let m = match method.as_str() {
+        "native" => CpMethod::NativePyTorch,
+        "ring" => CpMethod::Ring,
+        "ulysses" if qwen => CpMethod::UspHybrid { ulysses: 8, ring: 2 },
+        "ulysses" => CpMethod::Ulysses,
+        "fpdt" => CpMethod::Fpdt { pi: 16 },
+        "upipe" if qwen => CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 },
+        "upipe" => CpMethod::Upipe { u: 8, gqa_schedule: true },
+        other => anyhow::bail!("unknown method {other}"),
+    };
+    let preset = if qwen {
+        qwen_two_node(m, s)
+    } else {
+        llama_single_node(m, s)
+    };
+    let gpus = preset.parallel.cp_degree;
+    let r = simulate(&preset);
+    println!("model={model} method={method} S={seq} gpus={gpus}");
+    if r.oom {
+        println!("result: OOM (peak would exceed HBM)");
+        return Ok(());
+    }
+    if let Some(why) = r.failed {
+        println!("result: FAILED ({why})");
+        return Ok(());
+    }
+    println!("  step time    : {:.2} s", r.step_time);
+    println!(
+        "  throughput   : {:.1} tokens/s/GPU",
+        r.tokens_per_sec_per_gpu(s, gpus).unwrap()
+    );
+    println!("  peak memory  : {:.2} GiB", r.peak_bytes / GIB);
+    println!(
+        "  breakdown    : a2a {:.2}s fwd {:.2}s bwd {:.2}s other {:.2}s",
+        r.components.all_to_all, r.components.fa3_fwd, r.components.fa3_bwd, r.components.other
+    );
+    println!("  peak phase   : {}", r.timeline.peak_label().unwrap_or("-"));
+    println!("  alloc retries: {}", r.alloc_retries);
+    Ok(())
+}
+
+fn cmd_parity() -> anyhow::Result<()> {
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let p = Pipeline::new(&rt, 1)?;
+    let mut rng = Rng::new(2);
+    let toks: Vec<i32> = (0..p.s).map(|_| rng.below(p.vocab as u64) as i32).collect();
+    println!(
+        "UPipe functional pipeline: C={} ranks, U={} heads/stage, S={}, model=TINY",
+        p.c, p.u, p.s
+    );
+    let mono = p.forward_monolithic(&toks)?;
+    for mode in [AttnMode::UpipeGqa, AttnMode::UpipeNaive, AttnMode::FullHead] {
+        let mut p2 = Pipeline::new(&rt, 1)?;
+        let shards = p2.forward(&toks, mode)?;
+        let dist = untied_ulysses::runtime::HostTensor::concat_rows(&shards)?;
+        let diff = dist.max_abs_diff(&mono)?;
+        println!(
+            "  {mode:?}: max|Δlogits| = {diff:.2e}  (stages {}, transient peak {} KiB, a2a {} KiB)",
+            p2.stats.stages_run,
+            p2.stats.transient_peak_bytes / 1024,
+            p2.stats.a2a_bytes / 1024
+        );
+        anyhow::ensure!(diff < 2e-3, "parity failure in {mode:?}");
+    }
+    println!("parity OK — distributed == monolithic for all modes");
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
+    let steps: usize = rest.first().and_then(|s| s.parse().ok()).unwrap_or(100);
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let mut tr = Trainer::new(&rt, 42)?;
+    let mut corpus = MarkovCorpus::new(tr.vocab, 0.9, 7);
+    println!(
+        "training SMALL model: S={}, V={}, floor {:.2} nats, ln(V) {:.2}",
+        tr.seq_len,
+        tr.vocab,
+        corpus.entropy(),
+        (tr.vocab as f64).ln()
+    );
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let (toks, tgts) = corpus.sample(tr.seq_len);
+        let loss = tr.step(&toks, &tgts)?;
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}: loss {loss:.4}");
+        }
+    }
+    let first = tr.losses.first().copied().unwrap_or(0.0);
+    let last = tr.losses.last().copied().unwrap_or(0.0);
+    println!(
+        "done: {} steps in {:.1?} ({:.2?}/step), loss {first:.3} -> {last:.3}",
+        steps,
+        t0.elapsed(),
+        t0.elapsed() / steps as u32
+    );
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
+    let n: usize = rest.first().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let rt = Runtime::load(&Runtime::default_dir())?;
+    let mut server = untied_ulysses::coordinator::server::Server::new(&rt, 3)?;
+    let mut rng = Rng::new(4);
+    for i in 0..n {
+        let toks: Vec<i32> = (0..server.seq_len)
+            .map(|_| rng.below(server.vocab as u64) as i32)
+            .collect();
+        let resp = server.serve(&toks)?;
+        if i < 3 {
+            println!(
+                "req {i}: next_token={} latency={:.1}ms",
+                resp.next_token,
+                resp.latency_s * 1e3
+            );
+        }
+    }
+    let st = server.stats();
+    println!(
+        "served {} requests ({} tokens) in {:.2}s — p50 {:.1}ms p95 {:.1}ms, {:.0} tokens/s",
+        st.served,
+        st.total_tokens,
+        st.total_time_s,
+        st.p50_latency_s * 1e3,
+        st.p95_latency_s * 1e3,
+        st.total_tokens as f64 / st.total_time_s
+    );
+    Ok(())
+}

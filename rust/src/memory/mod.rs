@@ -1,0 +1,10 @@
+//! GPU memory accounting: a CUDA-caching-allocator-style simulator with
+//! peak/timeline tracking. UPipe's headline claim is about *peak allocated
+//! memory* and the allocation retries the caching allocator performs under
+//! pressure — this module makes both observable.
+
+pub mod allocator;
+pub mod tracker;
+
+pub use allocator::{AllocId, Allocator};
+pub use tracker::MemoryTimeline;

@@ -1,0 +1,75 @@
+//! Memory timeline: (time, allocated) samples recorded by the engine while
+//! executing a schedule, with phase labels — this is what Fig. 2's
+//! per-method breakdown and the OOM detection read.
+
+/// One labelled segment of the memory timeline.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub t: f64,
+    pub allocated: f64,
+    pub label: &'static str,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct MemoryTimeline {
+    samples: Vec<Sample>,
+}
+
+impl MemoryTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, t: f64, allocated: f64, label: &'static str) {
+        self.samples.push(Sample { t, allocated, label });
+    }
+
+    pub fn peak(&self) -> f64 {
+        self.samples.iter().map(|s| s.allocated).fold(0.0, f64::max)
+    }
+
+    /// Label active at the peak (which phase is the bottleneck).
+    pub fn peak_label(&self) -> Option<&'static str> {
+        self.samples
+            .iter()
+            .max_by(|a, b| a.allocated.total_cmp(&b.allocated))
+            .map(|s| s.label)
+    }
+
+    pub fn samples(&self) -> &[Sample] {
+        &self.samples
+    }
+
+    /// Peak within a labelled phase.
+    pub fn peak_in(&self, label: &str) -> f64 {
+        self.samples
+            .iter()
+            .filter(|s| s.label == label)
+            .map(|s| s.allocated)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_and_label() {
+        let mut t = MemoryTimeline::new();
+        t.record(0.0, 10.0, "fwd");
+        t.record(1.0, 30.0, "attn");
+        t.record(2.0, 20.0, "bwd");
+        assert_eq!(t.peak(), 30.0);
+        assert_eq!(t.peak_label(), Some("attn"));
+        assert_eq!(t.peak_in("bwd"), 20.0);
+        assert_eq!(t.peak_in("missing"), 0.0);
+    }
+
+    #[test]
+    fn empty_timeline() {
+        let t = MemoryTimeline::new();
+        assert_eq!(t.peak(), 0.0);
+        assert_eq!(t.peak_label(), None);
+    }
+}

@@ -1,0 +1,157 @@
+//! Table 1 — theoretical peak memory usage breakdown across the forward
+//! stages of a Transformer (paper §2.2).
+//!
+//! All entries are *bytes*, parameterized by sequence length S and the model
+//! dims; bf16 activations (2 bytes) except the loss stage (fp32). The
+//! "Total" column reproduces the paper's `k · S · d_model` coefficients for
+//! the canonical ratios (H·d_head = d_model, d_ff ≈ 2.67·d_model,
+//! V ≈ 30·d_model).
+
+use super::dims::ModelDims;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FwdStage {
+    Embedding,
+    Attention,
+    FeedForward,
+    CrossEntropy,
+}
+
+pub const STAGES: [FwdStage; 4] = [
+    FwdStage::Embedding,
+    FwdStage::Attention,
+    FwdStage::FeedForward,
+    FwdStage::CrossEntropy,
+];
+
+#[derive(Debug, Clone)]
+pub struct StageMemory {
+    pub stage: FwdStage,
+    /// bytes of stage inputs kept live
+    pub inputs: f64,
+    /// bytes of intermediate tensors
+    pub intermediate: f64,
+    /// bytes of stage outputs
+    pub outputs: f64,
+}
+
+impl StageMemory {
+    pub fn total(&self) -> f64 {
+        self.inputs + self.intermediate + self.outputs
+    }
+
+    /// The paper's "k·S·d_model" coefficient for this stage.
+    pub fn coeff(&self, m: &ModelDims, s: u64) -> f64 {
+        self.total() / (s as f64 * m.d_model as f64)
+    }
+}
+
+/// Table 1 row for one stage.
+pub fn stage_memory(m: &ModelDims, s: u64, stage: FwdStage) -> StageMemory {
+    let sf = s as f64;
+    let dm = m.d_model as f64;
+    let hidden = 2.0 * sf * dm; // one bf16 [S, d_model] tensor
+    match stage {
+        // ① int32 tokens in, bf16 embeddings out.
+        FwdStage::Embedding => StageMemory {
+            stage,
+            inputs: 4.0 * sf,
+            intermediate: 0.0,
+            outputs: hidden,
+        },
+        // ② QKV (6·S·H·d_head bytes: Q,K,V bf16) + equal all-to-all
+        // buffers; flash attention itself adds only Out (+LSE, folded into
+        // outputs here like the paper's 2·S·d_model).
+        FwdStage::Attention => {
+            let qkv = 6.0 * sf * (m.n_heads * m.d_head) as f64;
+            StageMemory {
+                stage,
+                inputs: hidden,
+                intermediate: qkv + qkv, // QKV + all-to-all buffers
+                outputs: hidden,
+            }
+        }
+        // ③ four SwiGLU intermediates of size [S, d_ff] (gate, up,
+        // silu(gate), product) in bf16 = 8·S·d_ff bytes.
+        FwdStage::FeedForward => StageMemory {
+            stage,
+            inputs: hidden,
+            intermediate: 8.0 * sf * m.d_ff as f64,
+            outputs: hidden,
+        },
+        // ④ fp32 logits + fp32 log-softmax: 2 · 4·S·V = 8·S·V bytes.
+        FwdStage::CrossEntropy => StageMemory {
+            stage,
+            inputs: hidden,
+            intermediate: 8.0 * sf * m.vocab as f64,
+            outputs: 4.0, // scalar fp32 loss
+        },
+    }
+}
+
+/// All four rows of Table 1.
+pub fn table1(m: &ModelDims, s: u64) -> Vec<StageMemory> {
+    STAGES.iter().map(|&st| stage_memory(m, s, st)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic model with the paper's canonical ratios:
+    /// H·d_head = d_model, d_ff = 2.67·d_model, V = 30·d_model.
+    fn canonical() -> ModelDims {
+        ModelDims {
+            name: "canonical",
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 32,
+            d_head: 128,
+            d_ff: (2.67f64 * 4096.0) as u64,
+            vocab: 30 * 4096,
+        }
+    }
+
+    #[test]
+    fn attention_total_is_16() {
+        let m = canonical();
+        let sm = stage_memory(&m, 1 << 20, FwdStage::Attention);
+        assert!((sm.coeff(&m, 1 << 20) - 16.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn ffn_total_is_25() {
+        let m = canonical();
+        let sm = stage_memory(&m, 1 << 20, FwdStage::FeedForward);
+        let c = sm.coeff(&m, 1 << 20);
+        assert!((c - 25.0).abs() < 0.5, "ffn coeff {c}");
+    }
+
+    #[test]
+    fn ce_total_is_240() {
+        let m = canonical();
+        let sm = stage_memory(&m, 1 << 20, FwdStage::CrossEntropy);
+        let c = sm.coeff(&m, 1 << 20);
+        assert!((c - 242.0).abs() < 1.0, "ce coeff {c}");
+    }
+
+    #[test]
+    fn ce_dominates_everything() {
+        // §2.2: the loss stage is the single largest consumer.
+        let m = ModelDims::llama3_8b();
+        let rows = table1(&m, 1 << 20);
+        let ce = rows[3].total();
+        for r in &rows[..3] {
+            assert!(ce > 5.0 * r.total());
+        }
+    }
+
+    #[test]
+    fn embedding_scales_linearly() {
+        let m = ModelDims::llama3_8b();
+        let a = stage_memory(&m, 1000, FwdStage::Embedding).total();
+        let b = stage_memory(&m, 2000, FwdStage::Embedding).total();
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+}

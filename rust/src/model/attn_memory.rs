@@ -1,0 +1,282 @@
+//! Tables 2 & 6 — peak activation memory inside the attention block, per
+//! context-parallelism method and execution phase, under GQA.
+//!
+//! Coefficients are in the paper's units: multiples of one bf16
+//! `[S/C, H·d_head]` tensor (the "S/C" unit with the hidden-size constant
+//! omitted). `unit_bytes` converts. γ = 1+2/g is the combined Q,K,V size,
+//! β = 4+4/g the eight backward tensors; π = FPDT sequence chunks,
+//! ν = UPipe head chunks (ν = H/U).
+
+use super::dims::ModelDims;
+
+/// Context-parallel attention execution strategy (Table 2/6 rows).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttnMethod {
+    /// DeepSpeed-Ulysses without activation checkpointing: all L layer
+    /// inputs stay resident.
+    Ulysses,
+    /// Ulysses + full activation checkpointing with CPU offloading
+    /// (the ALST-like baseline the paper's "Ulysses" experiments run).
+    UlyssesOffload,
+    /// Fully Pipelined Distributed Transformer, π sequence chunks.
+    Fpdt { pi: u32 },
+    /// Untied Ulysses, ν head chunks (ν = H/U).
+    Upipe { nu: u32 },
+}
+
+impl AttnMethod {
+    pub fn label(&self) -> String {
+        match self {
+            AttnMethod::Ulysses => "Ulysses".into(),
+            AttnMethod::UlyssesOffload => "Ulysses + offloading".into(),
+            AttnMethod::Fpdt { pi } => format!("FPDT (pi={pi})"),
+            AttnMethod::Upipe { nu } => format!("Untied Ulysses (nu={nu})"),
+        }
+    }
+}
+
+/// Forward-pass phases (Table 2 columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FwdPhase {
+    BeforeAttn,
+    InpAllToAll,
+    AttnKernel,
+    OutAllToAll,
+}
+
+pub const FWD_PHASES: [FwdPhase; 4] = [
+    FwdPhase::BeforeAttn,
+    FwdPhase::InpAllToAll,
+    FwdPhase::AttnKernel,
+    FwdPhase::OutAllToAll,
+];
+
+/// Backward-pass phases (Table 6 columns; the backward traverses the block
+/// in reverse, so out_all_to_all comes first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BwdPhase {
+    BeforeBwdAttn,
+    OutAllToAll,
+    BwdAttnKernel,
+    InpAllToAll,
+}
+
+pub const BWD_PHASES: [BwdPhase; 4] = [
+    BwdPhase::BeforeBwdAttn,
+    BwdPhase::OutAllToAll,
+    BwdPhase::BwdAttnKernel,
+    BwdPhase::InpAllToAll,
+];
+
+/// Table 2 entry: forward peak in S/C units.
+pub fn fwd_units(m: &ModelDims, method: AttnMethod, phase: FwdPhase) -> f64 {
+    let g = m.gamma();
+    let l = m.n_layers as f64;
+    match method {
+        AttnMethod::Ulysses => match phase {
+            FwdPhase::BeforeAttn => l,
+            FwdPhase::InpAllToAll | FwdPhase::AttnKernel => l + (g + 1.0),
+            FwdPhase::OutAllToAll => l + 2.0,
+        },
+        AttnMethod::UlyssesOffload => match phase {
+            FwdPhase::BeforeAttn => 1.0,
+            FwdPhase::InpAllToAll | FwdPhase::AttnKernel => 1.0 + (g + 1.0),
+            FwdPhase::OutAllToAll => 3.0,
+        },
+        AttnMethod::Fpdt { pi } => {
+            let p = pi as f64;
+            match phase {
+                FwdPhase::BeforeAttn => 1.0 / p,
+                FwdPhase::InpAllToAll => (1.0 + g + 1.0) / p,
+                FwdPhase::AttnKernel => (2.0 * g + 1.0) / p,
+                FwdPhase::OutAllToAll => 2.0 / p,
+            }
+        }
+        AttnMethod::Upipe { nu } => {
+            let n = nu as f64;
+            match phase {
+                FwdPhase::BeforeAttn => 1.0,
+                FwdPhase::InpAllToAll => 2.0 + (g + 1.0) / n,
+                FwdPhase::AttnKernel => 2.0 + g / n,
+                FwdPhase::OutAllToAll => 1.0 + 2.0 / n,
+            }
+        }
+    }
+}
+
+/// Table 6 entry: backward peak in S/C units.
+pub fn bwd_units(m: &ModelDims, method: AttnMethod, phase: BwdPhase) -> f64 {
+    let g = m.gamma();
+    let b = m.beta();
+    let l = m.n_layers as f64;
+    match method {
+        AttnMethod::Ulysses => match phase {
+            BwdPhase::BeforeBwdAttn => l + 1.0,
+            BwdPhase::OutAllToAll => l + 2.0,
+            BwdPhase::BwdAttnKernel => l + b + 1.0,
+            BwdPhase::InpAllToAll => l + g + 1.0,
+        },
+        AttnMethod::UlyssesOffload => match phase {
+            BwdPhase::BeforeBwdAttn => 2.0,
+            BwdPhase::OutAllToAll => 3.0,
+            BwdPhase::BwdAttnKernel => b + 2.0,
+            BwdPhase::InpAllToAll => g + 2.0,
+        },
+        AttnMethod::Fpdt { pi } => {
+            let p = pi as f64;
+            match phase {
+                BwdPhase::BeforeBwdAttn => 1.0 / p,
+                BwdPhase::OutAllToAll => 3.0 / p,
+                BwdPhase::BwdAttnKernel => (b + 2.0) / p,
+                BwdPhase::InpAllToAll => (g + 2.0) / p,
+            }
+        }
+        AttnMethod::Upipe { nu } => {
+            let n = nu as f64;
+            match phase {
+                BwdPhase::BeforeBwdAttn => 2.0,
+                BwdPhase::OutAllToAll => 2.0 + 2.0 / n,
+                BwdPhase::BwdAttnKernel => 2.0 + (b + 1.0) / n,
+                BwdPhase::InpAllToAll => 2.0 + 2.0 * (g + 1.0) / n,
+            }
+        }
+    }
+}
+
+/// Peak over all fwd+bwd phases, in S/C units.
+pub fn peak_units(m: &ModelDims, method: AttnMethod) -> f64 {
+    let f = FWD_PHASES
+        .iter()
+        .map(|&p| fwd_units(m, method, p))
+        .fold(0.0, f64::max);
+    let b = BWD_PHASES
+        .iter()
+        .map(|&p| bwd_units(m, method, p))
+        .fold(0.0, f64::max);
+    f.max(b)
+}
+
+/// Bytes of one "S/C unit": a bf16 [S/C, H·d_head] tensor.
+pub fn unit_bytes(m: &ModelDims, s: u64, c: u64) -> f64 {
+    2.0 * (s as f64 / c as f64) * m.q_width() as f64
+}
+
+/// §3.4 headline: intermediate (QKV + all-to-all) tensor bytes during the
+/// attention stage — `12·(S/C)·H·d_head` for Ulysses vs `12·(S/C)·U·d_head`
+/// for UPipe (= `12·S·d_head` at U=C).
+pub fn intermediate_bytes_ulysses(m: &ModelDims, s: u64, c: u64) -> f64 {
+    12.0 * (s as f64 / c as f64) * (m.n_heads * m.d_head) as f64
+}
+
+pub fn intermediate_bytes_upipe(m: &ModelDims, s: u64, c: u64, u: u64) -> f64 {
+    12.0 * (s as f64 / c as f64) * (u * m.d_head) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn upipe_reduction_is_87_5_percent_for_qwen_c8() {
+        // §3.4: Qwen3-32B, H=64, C=8, U=C ⇒ 96·S·d_head vs 12·S·d_head.
+        let m = ModelDims::qwen3_32b();
+        let (s, c) = (1 << 20, 8);
+        let ul = intermediate_bytes_ulysses(&m, s, c);
+        let up = intermediate_bytes_upipe(&m, s, c, c);
+        assert!((1.0 - up / ul - 0.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn upipe_at_u_eq_c_is_head_count_independent() {
+        let mut m = ModelDims::llama3_8b();
+        let a = intermediate_bytes_upipe(&m, 1 << 20, 8, 8);
+        m.n_heads = 128; // more heads must not change UPipe's peak
+        let b = intermediate_bytes_upipe(&m, 1 << 20, 8, 8);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn upipe_beats_ulysses_offload_peak() {
+        // The *peak* over phases always favours UPipe for ν ≥ 2 (per-phase
+        // the bwd inp_all_to_all can exceed at ν = 2: 2 + 2(γ+1)/2 > γ+2).
+        let m = ModelDims::llama3_8b();
+        for nu in [2u32, 4, 8, 16] {
+            assert!(
+                peak_units(&m, AttnMethod::Upipe { nu })
+                    <= peak_units(&m, AttnMethod::UlyssesOffload) + 1e-12,
+                "nu={nu}"
+            );
+        }
+        // ...and per-phase from ν ≥ 4 on (the paper's operating points:
+        // ν = 4 for Llama3-8B, ν = 8 for Qwen3-32B).
+        for nu in [4u32, 8, 16] {
+            for &ph in &FWD_PHASES {
+                assert!(
+                    fwd_units(&m, AttnMethod::Upipe { nu }, ph)
+                        <= fwd_units(&m, AttnMethod::UlyssesOffload, ph) + 1e-12,
+                    "fwd {ph:?} nu={nu}"
+                );
+            }
+            for &ph in &BWD_PHASES {
+                assert!(
+                    bwd_units(&m, AttnMethod::Upipe { nu }, ph)
+                        <= bwd_units(&m, AttnMethod::UlyssesOffload, ph) + 1e-12,
+                    "bwd {ph:?} nu={nu}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn peak_monotone_in_nu() {
+        // More chunks ⇒ never more memory.
+        let m = ModelDims::qwen3_32b();
+        let mut prev = f64::INFINITY;
+        for nu in [1u32, 2, 4, 8, 16, 32] {
+            let p = peak_units(&m, AttnMethod::Upipe { nu });
+            assert!(p <= prev + 1e-12);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn ulysses_no_ac_dominated_by_layer_inputs() {
+        let m = ModelDims::llama3_8b();
+        let p = peak_units(&m, AttnMethod::Ulysses);
+        assert!(p > m.n_layers as f64);
+    }
+
+    #[test]
+    fn prop_upipe_peak_bounded_by_offload_peak() {
+        // Random dims: UPipe peak ≤ Ulysses+offload peak whenever ν ≥ 2.
+        prop::check(
+            "upipe<=offload",
+            300,
+            &[(1, 16), (2, 32), (1, 64)],
+            |a| {
+                let g = a[0] as u64;
+                let nu = a[1] as u32;
+                let m = ModelDims {
+                    name: "rand",
+                    d_model: 1024,
+                    n_layers: a[2] as u64,
+                    n_heads: 8 * g,
+                    n_kv_heads: 8,
+                    d_head: 64,
+                    d_ff: 4096,
+                    vocab: 32000,
+                };
+                peak_units(&m, AttnMethod::Upipe { nu })
+                    <= peak_units(&m, AttnMethod::UlyssesOffload) + 1e-9
+            },
+        );
+    }
+
+    #[test]
+    fn fpdt_arbitrarily_small() {
+        let m = ModelDims::llama3_8b();
+        let p = peak_units(&m, AttnMethod::Fpdt { pi: 64 });
+        assert!(p < 0.2);
+    }
+}

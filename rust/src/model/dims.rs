@@ -1,0 +1,141 @@
+//! Model dimensions (kept in sync with `python/compile/configs.py`).
+
+/// Dimensions of a decoder-only Transformer, following the paper's §2.2
+/// notation: `L` layers, `H` query heads, GQA group size `g = H / Hkv`,
+/// hidden `d_model`, per-head `d_head`, FFN `d_ff`, vocab `V`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: &'static str,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub n_kv_heads: u64,
+    pub d_head: u64,
+    pub d_ff: u64,
+    pub vocab: u64,
+}
+
+impl ModelDims {
+    /// Llama3-8B: H=32 query heads, 8 KV heads (g=4), d_head=128.
+    pub fn llama3_8b() -> Self {
+        ModelDims {
+            name: "llama3-8b",
+            d_model: 4096,
+            n_layers: 32,
+            n_heads: 32,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ff: 14336,
+            vocab: 128_256,
+        }
+    }
+
+    /// Qwen3-32B: H=64 query heads, 8 KV heads (g=8). Note Qwen3 fixes
+    /// d_head=128 explicitly, so H·d_head = 8192 ≠ d_model = 5120 — this
+    /// matters for both attention FLOPs and QKV buffer sizes.
+    pub fn qwen3_32b() -> Self {
+        ModelDims {
+            name: "qwen3-32b",
+            d_model: 5120,
+            n_layers: 64,
+            n_heads: 64,
+            n_kv_heads: 8,
+            d_head: 128,
+            d_ff: 25600,
+            vocab: 151_936,
+        }
+    }
+
+    /// The functional-pipeline config the AOT artifacts are built for
+    /// (python `TINY`).
+    pub fn tiny() -> Self {
+        ModelDims {
+            name: "tiny",
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_head: 16,
+            d_ff: 352,
+            vocab: 512,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "llama3-8b" => Some(Self::llama3_8b()),
+            "qwen3-32b" => Some(Self::qwen3_32b()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// GQA group size g = H / Hkv (queries per KV head).
+    pub fn g(&self) -> u64 {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// γ = 1 + 2/g — combined Q,K,V size relative to Q (paper §2.2).
+    pub fn gamma(&self) -> f64 {
+        1.0 + 2.0 / self.g() as f64
+    }
+
+    /// β = 4 + 4/g — the eight backward-pass attention tensors
+    /// (Q, K, V, Out, dOut, dQ, dK, dV) relative to Q (paper §2.2).
+    pub fn beta(&self) -> f64 {
+        4.0 + 4.0 / self.g() as f64
+    }
+
+    /// Width of the concatenated query projection H·d_head.
+    pub fn q_width(&self) -> u64 {
+        self.n_heads * self.d_head
+    }
+
+    /// Width of the concatenated K (or V) projection Hkv·d_head.
+    pub fn kv_width(&self) -> u64 {
+        self.n_kv_heads * self.d_head
+    }
+
+    /// Approximate parameter count (embedding untied from the output head).
+    pub fn params(&self) -> u64 {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        let per_layer =
+            d * self.q_width() * 2 + 2 * d * self.kv_width() + 3 * d * f + 2 * d;
+        2 * v * d + self.n_layers * per_layer + d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama_dims() {
+        let m = ModelDims::llama3_8b();
+        assert_eq!(m.g(), 4);
+        assert!((m.gamma() - 1.5).abs() < 1e-12);
+        assert!((m.beta() - 5.0).abs() < 1e-12);
+        assert_eq!(m.q_width(), m.d_model); // H·d_head == d_model for llama
+        let b = m.params() as f64 / 1e9;
+        assert!((b - 8.0).abs() < 0.35, "llama params {b}B");
+    }
+
+    #[test]
+    fn qwen_dims() {
+        let m = ModelDims::qwen3_32b();
+        assert_eq!(m.g(), 8);
+        assert_eq!(m.q_width(), 8192); // explicit d_head=128
+        assert!((m.gamma() - 1.25).abs() < 1e-12);
+        assert!((m.beta() - 4.5).abs() < 1e-12);
+        let b = m.params() as f64 / 1e9;
+        assert!((b - 32.8).abs() < 1.7, "qwen params {b}B");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["llama3-8b", "qwen3-32b", "tiny"] {
+            assert_eq!(ModelDims::by_name(n).unwrap().name, n);
+        }
+        assert!(ModelDims::by_name("nope").is_none());
+    }
+}

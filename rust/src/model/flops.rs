@@ -1,0 +1,88 @@
+//! FLOPs model for one training step (forward unless noted), used by the
+//! engine's cost model. Counts multiply-adds as 2 FLOPs, matches the
+//! paper's causal setup (the S² terms are halved).
+
+use super::dims::ModelDims;
+
+/// Backward FLOPs of a matmul-dominated block relative to its forward
+/// (dX and dW each cost one forward-equivalent).
+pub const BWD_FACTOR: f64 = 2.0;
+
+/// Flash-attention backward relative to forward: the bwd kernel recomputes
+/// the S·Sᵀ logits and runs 5 matmuls vs 2 (FA2/FA3 analysis ⇒ ~2.5×).
+pub const ATTN_BWD_FACTOR: f64 = 2.5;
+
+/// Causal self-attention forward FLOPs for the whole model over a full
+/// sequence of `s` tokens: 2 matmuls (QKᵀ, PV) · 2 FLOPs · S²/2 (causal)
+/// · H·d_head · L. Uses q_width = H·d_head (≠ d_model for Qwen3).
+pub fn attn_fwd(m: &ModelDims, s: u64) -> f64 {
+    2.0 * (s as f64) * (s as f64) * m.q_width() as f64 * m.n_layers as f64
+}
+
+/// QKV + output projections, forward, whole model.
+pub fn proj_fwd(m: &ModelDims, s: u64) -> f64 {
+    let per_tok = 2.0
+        * (m.d_model * (2 * m.q_width() + 2 * m.kv_width())) as f64;
+    per_tok * s as f64 * m.n_layers as f64
+}
+
+/// SwiGLU FFN forward, whole model (three d_model×d_ff matmuls).
+pub fn mlp_fwd(m: &ModelDims, s: u64) -> f64 {
+    6.0 * (m.d_model * m.d_ff) as f64 * s as f64 * m.n_layers as f64
+}
+
+/// Final projection + cross-entropy forward.
+pub fn logits_fwd(m: &ModelDims, s: u64) -> f64 {
+    2.0 * (m.d_model * m.vocab) as f64 * s as f64
+}
+
+/// Total forward FLOPs for a step (no recompute).
+pub fn total_fwd(m: &ModelDims, s: u64) -> f64 {
+    attn_fwd(m, s) + proj_fwd(m, s) + mlp_fwd(m, s) + logits_fwd(m, s)
+}
+
+/// Total step FLOPs including backward and one full activation-
+/// checkpointing recompute of the forward (the paper's AC setup).
+pub fn total_step_with_ac(m: &ModelDims, s: u64) -> f64 {
+    let fwd = total_fwd(m, s);
+    let bwd = attn_fwd(m, s) * ATTN_BWD_FACTOR
+        + (proj_fwd(m, s) + mlp_fwd(m, s) + logits_fwd(m, s)) * BWD_FACTOR;
+    2.0 * fwd + bwd // fwd + recompute + bwd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attention_dominates_at_long_context() {
+        let m = ModelDims::llama3_8b();
+        let s = 1 << 20; // 1M
+        assert!(attn_fwd(&m, s) > 10.0 * mlp_fwd(&m, s));
+        assert!(attn_fwd(&m, s) > 100.0 * logits_fwd(&m, s));
+    }
+
+    #[test]
+    fn attn_flops_match_hand_calc() {
+        // 2·S²·d_model·L for llama (q_width == d_model).
+        let m = ModelDims::llama3_8b();
+        let s = 1_000_000u64;
+        let expect = 2.0 * 1e12 * 4096.0 * 32.0;
+        assert!((attn_fwd(&m, s) - expect).abs() / expect < 1e-9);
+    }
+
+    #[test]
+    fn qwen_uses_q_width_not_d_model() {
+        let m = ModelDims::qwen3_32b();
+        let s = 1 << 17;
+        let ratio = attn_fwd(&m, s) / (2.0 * (s as f64).powi(2) * 5120.0 * 64.0);
+        assert!((ratio - 8192.0 / 5120.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn step_flops_exceed_fwd() {
+        let m = ModelDims::llama3_8b();
+        let s = 1 << 17;
+        assert!(total_step_with_ac(&m, s) > 3.0 * total_fwd(&m, s));
+    }
+}

@@ -1,0 +1,17 @@
+//! Analytical transformer model: the paper's §2.2 memory taxonomy and the
+//! FLOPs model the simulator prices against.
+//!
+//! - [`dims`] — model dimension presets (Llama3-8B, Qwen3-32B) and GQA
+//!   factors γ = 1 + 2/g, β = 4 + 4/g.
+//! - [`flops`] — forward/backward FLOPs per component.
+//! - [`activation`] — Table 1: theoretical peak memory per forward stage.
+//! - [`attn_memory`] — Tables 2 & 6: peak activation memory inside the
+//!   attention block per method/phase, in units of (S/C)·hidden bytes.
+
+pub mod activation;
+pub mod attn_memory;
+pub mod dims;
+pub mod flops;
+
+pub use attn_memory::{AttnMethod, BwdPhase, FwdPhase};
+pub use dims::ModelDims;

@@ -1,0 +1,9 @@
+//! Paper table/figure regeneration: every table and figure of the
+//! evaluation, printed side-by-side with the published numbers
+//! ([`paper_data`]) so deviations are visible at a glance. Driven by the
+//! `repro` CLI (`repro table3`, `repro fig5`, ...) and by the benches.
+
+pub mod figures;
+pub mod paper_data;
+pub mod savings;
+pub mod tables;

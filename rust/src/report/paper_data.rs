@@ -1,0 +1,124 @@
+//! The published numbers (Tables 3, 4, 5 of the paper), used as reference
+//! columns in the regenerated tables and for the EXPERIMENTS.md deltas.
+//! `None` = OOM / failure / not reported.
+
+/// Table 3/4 column sequence lengths: 128K..5M (binary).
+pub const SEQ_LABELS: [&str; 8] = ["128K", "256K", "512K", "1M", "2M", "3M", "4M", "5M"];
+
+/// Method row order of Tables 3 and 4.
+pub const METHOD_LABELS: [&str; 5] = ["Native PyTorch", "Ring", "Ulysses", "FPDT", "UPipe"];
+
+/// Table 3 (top): Llama3-8B tokens/s/GPU on 8×H100.
+pub const T3_LLAMA: [[Option<f64>; 8]; 5] = [
+    [Some(1373.87), Some(845.99), Some(474.30), Some(249.85), None, None, None, None],
+    [Some(2064.90), Some(1387.67), Some(841.05), Some(458.51), Some(237.99), Some(159.96), None, None],
+    [Some(2320.47), Some(1503.80), Some(878.63), Some(475.33), Some(246.05), Some(162.41), None, None],
+    [Some(1171.68), Some(884.75), Some(621.20), Some(382.42), Some(219.53), Some(153.48), Some(119.76), None],
+    [Some(2281.05), Some(1487.29), Some(867.17), Some(472.53), Some(246.07), Some(166.32), Some(125.56), Some(98.25)],
+];
+
+/// Table 3 (bottom): Qwen3-32B tokens/s/GPU on 16×H100.
+pub const T3_QWEN: [[Option<f64>; 8]; 5] = [
+    [Some(127.03), Some(112.20), Some(91.39), None, None, None, None, None],
+    [Some(418.39), Some(308.88), Some(194.44), Some(110.27), Some(58.45), None, None, None],
+    [Some(545.29), Some(370.70), Some(217.04), Some(117.02), Some(59.98), None, None, None],
+    [Some(286.40), Some(217.85), Some(151.91), Some(95.88), Some(55.41), Some(38.86), Some(27.66), None],
+    [Some(483.29), Some(339.56), Some(204.46), Some(113.26), Some(59.56), Some(40.42), Some(29.97), None],
+];
+
+/// Table 4 (top): Llama3-8B peak GiB on 8×H100.
+pub const T4_LLAMA: [[Option<f64>; 8]; 5] = [
+    [Some(25.32), Some(31.40), Some(43.55), Some(67.86), None, None, None, None],
+    [Some(21.32), Some(23.40), Some(27.58), Some(35.86), Some(52.49), Some(69.11), None, None],
+    [Some(21.26), Some(23.02), Some(26.80), Some(34.35), Some(49.49), Some(64.55), None, None],
+    [Some(21.73), Some(22.50), Some(24.03), Some(27.09), Some(35.17), Some(43.35), Some(51.42), None],
+    [Some(21.10), Some(22.30), Some(24.70), Some(29.90), Some(40.50), Some(51.10), Some(61.70), Some(72.30)],
+];
+
+/// Table 4 (bottom): Qwen3-32B peak GiB on 16×H100.
+pub const T4_QWEN: [[Option<f64>; 8]; 5] = [
+    [Some(45.81), Some(53.69), Some(69.47), None, None, None, None, None],
+    [Some(40.14), Some(41.16), Some(44.22), Some(50.51), Some(63.11), None, None, None],
+    [Some(40.13), Some(41.16), Some(44.10), Some(50.27), Some(62.60), None, None, None],
+    [Some(38.94), Some(39.47), Some(40.54), Some(42.66), Some(46.91), Some(52.27), Some(57.77), None],
+    [Some(39.98), Some(40.84), Some(42.72), Some(46.84), Some(55.65), Some(64.47), Some(73.28), None],
+];
+
+/// Table 5 sequence lengths (128K..3M) and component rows
+/// (All-to-All, FA3-Fwd, FA3-Bwd, Other, Total) for DS-Ulysses and UPipe.
+pub const T5_SEQ_LABELS: [&str; 6] = ["128K", "256K", "512K", "1M", "2M", "3M"];
+pub const T5_COMPONENTS: [&str; 5] = ["All-to-All", "FA3-Fwd", "FA3-Bwd", "Other", "Total"];
+
+pub const T5_ULYSSES: [[f64; 6]; 5] = [
+    [0.40, 0.90, 1.68, 4.93, 16.30, 42.21],
+    [1.58, 6.35, 25.71, 103.49, 421.67, 995.92],
+    [2.40, 9.13, 36.74, 146.86, 588.73, 1324.71],
+    [3.03, 5.33, 10.08, 19.78, 41.30, 56.31],
+    [7.40, 21.72, 74.21, 275.06, 1068.00, 2419.14],
+];
+
+pub const T5_UPIPE: [[f64; 6]; 5] = [
+    [0.46, 1.10, 2.43, 5.52, 17.12, 34.34],
+    [1.51, 6.38, 25.93, 103.92, 417.55, 940.62],
+    [2.41, 9.25, 36.99, 147.37, 590.79, 1330.76],
+    [2.82, 5.23, 10.10, 19.58, 37.76, 55.52],
+    [7.20, 21.96, 75.45, 276.39, 1063.23, 2361.24],
+];
+
+/// Headline claims (Fig. 1 / abstract).
+pub const MAX_CTX_LLAMA_UPIPE: &str = "5M";
+pub const MAX_CTX_LLAMA_FPDT: &str = "4M";
+pub const MAX_CTX_2NODE_UPIPE: &str = "8M";
+pub const MAX_CTX_2NODE_USP: &str = "6M";
+pub const QWEN_INTERMEDIATE_SAVINGS: f64 = 0.875;
+
+/// Format a paper cell for table printing.
+pub fn cell(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.2}"),
+        None => "OOM/-".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_totals_are_component_sums() {
+        for col in 0..6 {
+            for t in [&T5_ULYSSES, &T5_UPIPE] {
+                let sum: f64 = (0..4).map(|r| t[r][col]).sum();
+                assert!((sum - t[4][col]).abs() / t[4][col] < 0.01, "col {col}");
+            }
+        }
+    }
+
+    #[test]
+    fn tables_have_consistent_oom_patterns() {
+        // once a method OOMs it stays OOM at longer contexts
+        for t in [&T3_LLAMA, &T3_QWEN, &T4_LLAMA, &T4_QWEN] {
+            for row in t.iter() {
+                let mut seen_none = false;
+                for c in row {
+                    if c.is_none() {
+                        seen_none = true;
+                    } else {
+                        assert!(!seen_none, "non-OOM after OOM");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn t3_t4_oom_patterns_agree() {
+        for (a, b) in [(&T3_LLAMA, &T4_LLAMA), (&T3_QWEN, &T4_QWEN)] {
+            for (ra, rb) in a.iter().zip(b.iter()) {
+                for (ca, cb) in ra.iter().zip(rb.iter()) {
+                    assert_eq!(ca.is_some(), cb.is_some());
+                }
+            }
+        }
+    }
+}

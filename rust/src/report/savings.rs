@@ -1,0 +1,51 @@
+//! §3.4 headline: intermediate-tensor memory savings of UPipe vs
+//! DS-Ulysses (87.5% for Qwen3-32B at C=8, U=C).
+
+use crate::model::attn_memory::{intermediate_bytes_ulysses, intermediate_bytes_upipe};
+use crate::model::ModelDims;
+use crate::util::fmt::{tokens, GIB};
+use crate::util::table::Table;
+
+pub fn savings_report(s: u64) -> Table {
+    let mut t = Table::new(
+        &format!("§3.4 — attention intermediate tensors @S={} (GiB/device)", tokens(s)),
+        &["Model", "C", "U", "Ulysses 12·(S/C)·H·dh", "UPipe 12·(S/C)·U·dh", "savings"],
+    );
+    for (m, c) in [
+        (ModelDims::llama3_8b(), 8u64),
+        (ModelDims::qwen3_32b(), 8),
+        (ModelDims::qwen3_32b(), 16),
+    ] {
+        let u = c;
+        let ul = intermediate_bytes_ulysses(&m, s, c);
+        let up = intermediate_bytes_upipe(&m, s, c, u);
+        t.row(vec![
+            m.name.into(),
+            c.to_string(),
+            u.to_string(),
+            format!("{:.2}", ul / GIB),
+            format!("{:.2}", up / GIB),
+            format!("{:.1}%", 100.0 * (1.0 - up / ul)),
+        ]);
+    }
+    t.note("paper: 87.5% for Qwen3-32B (H=64) at C=8, U=C");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qwen_875_headline() {
+        let r = savings_report(1 << 20).render();
+        assert!(r.contains("87.5%"), "{r}");
+    }
+
+    #[test]
+    fn llama_75_percent() {
+        // H=32, U=C=8 ⇒ 1 - 8/32 = 75%
+        let r = savings_report(1 << 20).render();
+        assert!(r.contains("75.0%"), "{r}");
+    }
+}

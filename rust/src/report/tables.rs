@@ -1,0 +1,264 @@
+//! Regenerate paper Tables 1–6.
+
+use crate::config::presets::{
+    llama_single_node, llama_single_node_methods, qwen_two_node, qwen_two_node_methods,
+    table34_seq_lens,
+};
+use crate::config::CpMethod;
+use crate::model::activation::{table1, FwdStage};
+use crate::model::attn_memory::{
+    bwd_units, fwd_units, AttnMethod, BWD_PHASES, FWD_PHASES,
+};
+use crate::model::ModelDims;
+use crate::schedule::simulate;
+use crate::util::fmt::{gib, tokens, GIB};
+use crate::util::table::Table;
+
+use super::paper_data as paper;
+
+/// Table 1: theoretical peak memory by forward stage, as `k·S·d_model`
+/// coefficients (paper's canonical ratios) for a given model.
+pub fn table1_report(m: &ModelDims, s: u64) -> Table {
+    let mut t = Table::new(
+        &format!("Table 1 — fwd-stage memory, {} @ S={}", m.name, tokens(s)),
+        &["Stage", "Inputs", "Intermediate", "Outputs", "Total", "k·S·d_model"],
+    );
+    for row in table1(m, s) {
+        let name = match row.stage {
+            FwdStage::Embedding => "Embedding",
+            FwdStage::Attention => "Attention",
+            FwdStage::FeedForward => "Feed-forward",
+            FwdStage::CrossEntropy => "Cross-Entropy",
+        };
+        t.row(vec![
+            name.into(),
+            gib(row.inputs),
+            gib(row.intermediate),
+            gib(row.outputs),
+            gib(row.total()),
+            format!("{:.1}", row.coeff(m, s)),
+        ]);
+    }
+    t.note("bytes columns in GiB; paper coefficients 2/16/25/240 hold at the canonical ratios");
+    t
+}
+
+fn attn_methods(m: &ModelDims, c: u64) -> Vec<AttnMethod> {
+    vec![
+        AttnMethod::Ulysses,
+        AttnMethod::UlyssesOffload,
+        AttnMethod::Fpdt { pi: 16 },
+        AttnMethod::Upipe { nu: (m.n_heads / c) as u32 },
+    ]
+}
+
+/// Table 2: forward attention-block peak by method/phase in S/C units.
+pub fn table2_report(m: &ModelDims, c: u64) -> Table {
+    let mut t = Table::new(
+        &format!("Table 2 — fwd attention peak (S/C units), {} C={c}", m.name),
+        &["Method", "before", "inp_a2a", "attn", "out_a2a"],
+    );
+    for meth in attn_methods(m, c) {
+        let mut row = vec![meth.label()];
+        for ph in FWD_PHASES {
+            row.push(format!("{:.2}", fwd_units(m, meth, ph)));
+        }
+        t.row(row);
+    }
+    t.note(&format!("γ = {:.2}, ν = H/U = {}, π = 16", m.gamma(), m.n_heads / c));
+    t
+}
+
+/// Table 6: backward attention-block peak by method/phase in S/C units.
+pub fn table6_report(m: &ModelDims, c: u64) -> Table {
+    let mut t = Table::new(
+        &format!("Table 6 — bwd attention peak (S/C units), {} C={c}", m.name),
+        &["Method", "before", "out_a2a", "bwd attn", "inp_a2a"],
+    );
+    for meth in attn_methods(m, c) {
+        let mut row = vec![meth.label()];
+        for ph in BWD_PHASES {
+            row.push(format!("{:.2}", bwd_units(m, meth, ph)));
+        }
+        t.row(row);
+    }
+    t.note(&format!("β = {:.2}", m.beta()));
+    t
+}
+
+fn grid_methods(qwen: bool) -> Vec<CpMethod> {
+    if qwen {
+        qwen_two_node_methods()
+    } else {
+        llama_single_node_methods()
+    }
+}
+
+fn grid_cell(qwen: bool, method: CpMethod, s: u64) -> crate::engine::StepReport {
+    if qwen {
+        simulate(&qwen_two_node(method, s))
+    } else {
+        simulate(&llama_single_node(method, s))
+    }
+}
+
+/// Table 3: throughput (tokens/s/GPU) grid, simulated vs paper.
+pub fn table3_report(qwen: bool) -> Table {
+    let (name, gpus, paper_t) = if qwen {
+        ("Qwen3-32B 16xH100", 16, &paper::T3_QWEN)
+    } else {
+        ("Llama3-8B 8xH100", 8, &paper::T3_LLAMA)
+    };
+    let mut header = vec!["Method".to_string()];
+    for l in paper::SEQ_LABELS {
+        header.push(l.to_string());
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Table 3 — tokens/s/GPU, {name} (sim | paper)"),
+        &hdr,
+    );
+    for (mi, method) in grid_methods(qwen).into_iter().enumerate() {
+        let mut row = vec![method.label().to_string()];
+        for (si, &s) in table34_seq_lens().iter().enumerate() {
+            let r = grid_cell(qwen, method, s);
+            let sim = r
+                .tokens_per_sec_per_gpu(s, gpus)
+                .map(|v| format!("{v:.0}"))
+                .unwrap_or_else(|| "OOM".into());
+            row.push(format!("{sim}|{}", paper::cell(paper_t[mi][si])));
+        }
+        t.row(row);
+    }
+    t.note("cell = simulated | paper; OOM/- = out of memory or failure");
+    t
+}
+
+/// Table 4: peak memory (GiB) grid, simulated vs paper.
+pub fn table4_report(qwen: bool) -> Table {
+    let (name, paper_t) = if qwen {
+        ("Qwen3-32B 16xH100", &paper::T4_QWEN)
+    } else {
+        ("Llama3-8B 8xH100", &paper::T4_LLAMA)
+    };
+    let mut header = vec!["Method".to_string()];
+    for l in paper::SEQ_LABELS {
+        header.push(l.to_string());
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&format!("Table 4 — peak GiB, {name} (sim | paper)"), &hdr);
+    for (mi, method) in grid_methods(qwen).into_iter().enumerate() {
+        let mut row = vec![method.label().to_string()];
+        for (si, &s) in table34_seq_lens().iter().enumerate() {
+            let r = grid_cell(qwen, method, s);
+            let sim = if r.oom || r.failed.is_some() {
+                "OOM".to_string()
+            } else {
+                format!("{:.1}", r.peak_bytes / GIB)
+            };
+            row.push(format!("{sim}|{}", paper::cell(paper_t[mi][si])));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Table 5: runtime component breakdown, Ulysses vs UPipe, Llama3-8B.
+pub fn table5_report() -> Table {
+    let mut header = vec!["Method/Component".to_string()];
+    for l in paper::T5_SEQ_LABELS {
+        header.push(l.to_string());
+    }
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table 5 — step-time breakdown (s), Llama3-8B 8xH100 (sim | paper)",
+        &hdr,
+    );
+    let seqs: Vec<u64> = paper::T5_SEQ_LABELS
+        .iter()
+        .map(|l| crate::util::fmt::parse_tokens(l).unwrap())
+        .collect();
+    for (method, paper_t, label) in [
+        (CpMethod::Ulysses, &paper::T5_ULYSSES, "DS-Ulysses"),
+        (CpMethod::Upipe { u: 8, gqa_schedule: true }, &paper::T5_UPIPE, "UPipe"),
+    ] {
+        let reports: Vec<_> = seqs
+            .iter()
+            .map(|&s| simulate(&llama_single_node(method, s)))
+            .collect();
+        for (ci, comp) in paper::T5_COMPONENTS.iter().enumerate() {
+            let mut row = vec![format!("{label} {comp}")];
+            for (si, r) in reports.iter().enumerate() {
+                let sim = match ci {
+                    0 => r.components.all_to_all,
+                    1 => r.components.fa3_fwd,
+                    2 => r.components.fa3_bwd,
+                    3 => r.components.other,
+                    _ => r.step_time,
+                };
+                row.push(format!("{sim:.2}|{:.2}", paper_t[ci][si]));
+            }
+            t.row(row);
+        }
+    }
+    t
+}
+
+/// Mean absolute relative deviation vs paper over all non-OOM cells of
+/// Tables 3+4 (quality metric for EXPERIMENTS.md).
+pub fn grid_deviation(qwen: bool) -> (f64, usize) {
+    let (gpus, t3, t4) = if qwen {
+        (16, &paper::T3_QWEN, &paper::T4_QWEN)
+    } else {
+        (8, &paper::T3_LLAMA, &paper::T4_LLAMA)
+    };
+    let mut total = 0.0;
+    let mut n = 0;
+    for (mi, method) in grid_methods(qwen).into_iter().enumerate() {
+        for (si, &s) in table34_seq_lens().iter().enumerate() {
+            let r = grid_cell(qwen, method, s);
+            if let (Some(p), Some(sim)) = (t3[mi][si], r.tokens_per_sec_per_gpu(s, gpus)) {
+                total += (sim - p).abs() / p;
+                n += 1;
+            }
+            if let Some(p) = t4[mi][si] {
+                if !r.oom && r.failed.is_none() {
+                    total += (r.peak_bytes / GIB - p).abs() / p;
+                    n += 1;
+                }
+            }
+        }
+    }
+    (total / n as f64, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders() {
+        let t = table1_report(&ModelDims::llama3_8b(), 1 << 20);
+        assert!(t.render().contains("Cross-Entropy"));
+    }
+
+    #[test]
+    fn table2_upipe_row_small() {
+        let r = table2_report(&ModelDims::qwen3_32b(), 8).render();
+        assert!(r.contains("Untied Ulysses"));
+    }
+
+    #[test]
+    fn llama_grid_deviation_under_10_percent() {
+        let (dev, n) = grid_deviation(false);
+        assert!(n > 50, "n={n}");
+        assert!(dev < 0.10, "mean deviation {dev:.3}");
+    }
+
+    #[test]
+    fn qwen_grid_deviation_under_12_percent() {
+        let (dev, n) = grid_deviation(true);
+        assert!(n > 40, "n={n}");
+        assert!(dev < 0.12, "mean deviation {dev:.3}");
+    }
+}

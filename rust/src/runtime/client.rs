@@ -1,0 +1,113 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many times.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// One compiled artifact.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes against the manifest.
+    /// Artifacts are lowered with `return_tuple=True`, so the single output
+    /// is a tuple decomposed per the manifest's output specs.
+    pub fn call(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, manifest says {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.spec.inputs) {
+            if !t.matches(spec) {
+                bail!(
+                    "{}: input `{}` expects {:?} {:?}, got {:?} {:?}",
+                    self.spec.name,
+                    spec.name,
+                    spec.dtype,
+                    spec.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.to_tuple()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| HostTensor::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+/// The artifact registry: PJRT CPU client + lazily compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    compiled: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest from `artifacts_dir` and start a PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("starting PJRT CPU client")?;
+        Ok(Runtime { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory (repo-root `artifacts/`, overridable via
+    /// `UU_ARTIFACTS`).
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var("UU_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) an executable by artifact name.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.compiled.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .with_context(|| format!("parsing HLO text {:?}", spec.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let e = std::sync::Arc::new(Executable { spec, exe });
+        self.compiled.lock().unwrap().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// Convenience: call an artifact by name.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.get(name)?.call(inputs)
+    }
+}

@@ -1,0 +1,194 @@
+//! Parser for `artifacts/manifest.txt` — the plain-text artifact index
+//! written by `aot.py` (no serde in the offline vendor set, and the format
+//! is trivial):
+//!
+//! ```text
+//! const pipe_c 4
+//! artifact qkv_chunk
+//! file qkv_chunk.hlo.txt
+//! in xn f32 64,128
+//! out o0 f32 4,64,16
+//! end
+//! ```
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub consts: HashMap<String, String>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            let err = |msg: &str| anyhow::anyhow!("manifest line {}: {msg}", lineno + 1);
+            match parts.as_slice() {
+                [] => {}
+                ["const", key, value] => {
+                    m.consts.insert(key.to_string(), value.to_string());
+                }
+                ["artifact", name] => {
+                    if cur.is_some() {
+                        bail!(err("nested artifact"));
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: name.to_string(),
+                        file: PathBuf::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                    });
+                }
+                ["file", f] => {
+                    cur.as_mut().ok_or_else(|| err("file outside artifact"))?.file =
+                        dir.join(f);
+                }
+                [io @ ("in" | "out"), name, dtype, shape] => {
+                    let spec = TensorSpec {
+                        name: name.to_string(),
+                        dtype: Dtype::parse(dtype)?,
+                        shape: if *shape == "scalar" {
+                            vec![]
+                        } else {
+                            shape
+                                .split(',')
+                                .map(|d| d.parse::<usize>().map_err(|e| err(&e.to_string())))
+                                .collect::<Result<_>>()?
+                        },
+                    };
+                    let a = cur.as_mut().ok_or_else(|| err("io outside artifact"))?;
+                    if *io == "in" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                ["end"] => {
+                    let a = cur.take().ok_or_else(|| err("end without artifact"))?;
+                    m.artifacts.insert(a.name.clone(), a);
+                }
+                _ => bail!(err(&format!("unparseable: {line}"))),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest truncated: artifact not closed");
+        }
+        Ok(m)
+    }
+
+    pub fn const_u64(&self, key: &str) -> Result<u64> {
+        self.consts
+            .get(key)
+            .with_context(|| format!("missing const {key}"))?
+            .parse()
+            .with_context(|| format!("const {key} not an integer"))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+const pipe_c 4
+const pipe_s 256
+
+artifact qkv_chunk
+file qkv_chunk.hlo.txt
+in xn f32 64,128
+in wq_c f32 128,64
+out o0 f32 4,64,16
+end
+
+artifact step
+file step.hlo.txt
+in s i32 scalar
+out o0 f32 scalar
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/a")).unwrap();
+        assert_eq!(m.const_u64("pipe_c").unwrap(), 4);
+        let a = m.artifact("qkv_chunk").unwrap();
+        assert_eq!(a.file, Path::new("/a/qkv_chunk.hlo.txt"));
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].shape, vec![128, 64]);
+        assert_eq!(a.outputs[0].elements(), 4 * 64 * 16);
+        let s = m.artifact("step").unwrap();
+        assert_eq!(s.inputs[0].dtype, Dtype::I32);
+        assert!(s.inputs[0].shape.is_empty());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("junk line", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a\nartifact b", Path::new("/")).is_err());
+        assert!(Manifest::parse("artifact a\nfile f", Path::new("/")).is_err());
+        assert!(Manifest::parse("in x f32 1", Path::new("/")).is_err());
+    }
+
+    #[test]
+    fn missing_lookups_error() {
+        let m = Manifest::parse(SAMPLE, Path::new("/")).unwrap();
+        assert!(m.const_u64("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+}

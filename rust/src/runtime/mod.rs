@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them on the PJRT
+//! CPU client via the `xla` crate. This is the only place rust touches XLA;
+//! Python never runs at serve/train time.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes `HloModuleProto` with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+pub use tensor::HostTensor;

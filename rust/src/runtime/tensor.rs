@@ -1,0 +1,225 @@
+//! Host-side tensors: the coordinator's working representation of rank
+//! buffers (dense row-major f32/i32), converted to/from XLA literals at the
+//! PJRT boundary.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{Dtype, TensorSpec};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(spec: &TensorSpec) -> Self {
+        match spec.dtype {
+            Dtype::F32 => HostTensor::F32 {
+                shape: spec.shape.clone(),
+                data: vec![0.0; spec.elements()],
+            },
+            Dtype::I32 => HostTensor::I32 {
+                shape: spec.shape.clone(),
+                data: vec![0; spec.elements()],
+            },
+        }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32 { .. } => Dtype::F32,
+            HostTensor::I32 { .. } => Dtype::I32,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.elements() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Check shape+dtype against a manifest spec.
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        Ok(match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        })
+    }
+
+    /// Convert back from an XLA literal, shaped per `spec`.
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Self> {
+        Ok(match spec.dtype {
+            Dtype::F32 => HostTensor::F32 { shape: spec.shape.clone(), data: lit.to_vec::<f32>()? },
+            Dtype::I32 => HostTensor::I32 { shape: spec.shape.clone(), data: lit.to_vec::<i32>()? },
+        })
+    }
+
+    /// Max |a - b| against another f32 tensor (parity checks).
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        if a.len() != b.len() {
+            bail!("length mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+
+    /// Elementwise in-place add (residual connections are done host-side).
+    pub fn add_assign(&mut self, other: &HostTensor) -> Result<()> {
+        let b = other.as_f32()?.to_vec();
+        let a = self.as_f32_mut()?;
+        if a.len() != b.len() {
+            bail!("length mismatch");
+        }
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+        Ok(())
+    }
+
+    /// Row-slice [rows0, rows1) of a 2-D tensor.
+    pub fn slice_rows(&self, rows0: usize, rows1: usize) -> Result<HostTensor> {
+        let shape = self.shape();
+        if shape.len() != 2 {
+            bail!("slice_rows needs 2-D, got {shape:?}");
+        }
+        let cols = shape[1];
+        let data = self.as_f32()?[rows0 * cols..rows1 * cols].to_vec();
+        Ok(HostTensor::f32(&[rows1 - rows0, cols], data))
+    }
+
+    /// Column-slice [c0, c1) of a 2-D tensor (used to cut per-stage weight
+    /// chunks W[:, c0:c1] out of full projection matrices).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Result<HostTensor> {
+        let shape = self.shape();
+        if shape.len() != 2 {
+            bail!("slice_cols needs 2-D, got {shape:?}");
+        }
+        let (rows, cols) = (shape[0], shape[1]);
+        let src = self.as_f32()?;
+        let w = c1 - c0;
+        let mut data = Vec::with_capacity(rows * w);
+        for r in 0..rows {
+            data.extend_from_slice(&src[r * cols + c0..r * cols + c1]);
+        }
+        Ok(HostTensor::f32(&[rows, w], data))
+    }
+
+    /// Concatenate 2-D tensors along columns.
+    pub fn concat_cols(parts: &[HostTensor]) -> Result<HostTensor> {
+        let rows = parts[0].shape()[0];
+        let total: usize = parts.iter().map(|p| p.shape()[1]).sum();
+        let mut data = Vec::with_capacity(rows * total);
+        for r in 0..rows {
+            for p in parts {
+                let cols = p.shape()[1];
+                data.extend_from_slice(&p.as_f32()?[r * cols..(r + 1) * cols]);
+            }
+        }
+        Ok(HostTensor::f32(&[rows, total], data))
+    }
+
+    /// Concatenate 2-D tensors along rows.
+    pub fn concat_rows(parts: &[HostTensor]) -> Result<HostTensor> {
+        let cols = parts[0].shape()[1];
+        let mut data = Vec::new();
+        for p in parts {
+            if p.shape()[1] != cols {
+                bail!("column mismatch in concat_rows");
+            }
+            data.extend_from_slice(p.as_f32()?);
+        }
+        let rows = data.len() / cols;
+        Ok(HostTensor::f32(&[rows, cols], data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_concat_roundtrip() {
+        let t = HostTensor::f32(&[2, 4], (0..8).map(|x| x as f32).collect());
+        let a = t.slice_cols(0, 2).unwrap();
+        let b = t.slice_cols(2, 4).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[0.0, 1.0, 4.0, 5.0]);
+        let back = HostTensor::concat_cols(&[a, b]).unwrap();
+        assert_eq!(back, t);
+        let r0 = t.slice_rows(0, 1).unwrap();
+        let r1 = t.slice_rows(1, 2).unwrap();
+        assert_eq!(HostTensor::concat_rows(&[r0, r1]).unwrap(), t);
+    }
+
+    #[test]
+    fn add_and_diff() {
+        let mut a = HostTensor::f32(&[3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::f32(&[3], vec![0.5, 0.5, 0.5]);
+        a.add_assign(&b).unwrap();
+        assert_eq!(a.as_f32().unwrap(), &[1.5, 2.5, 3.5]);
+        let c = HostTensor::f32(&[3], vec![1.5, 2.5, 4.0]);
+        assert_eq!(a.max_abs_diff(&c).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let spec = TensorSpec { name: "x".into(), dtype: Dtype::F32, shape: vec![2, 3] };
+        assert!(HostTensor::zeros(&spec).matches(&spec));
+        assert!(!HostTensor::scalar_i32(1).matches(&spec));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_checked() {
+        HostTensor::f32(&[2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,210 @@
+//! Quantities shared by every schedule: tensor byte sizes, persistent
+//! memory, the "misc" live set, and the bulk "other" time term.
+
+use crate::config::presets::RunPreset;
+use crate::engine::{Calibration, Category, TraceBuilder};
+use crate::model::ModelDims;
+
+/// Activation-checkpointing mode (Fig. 2 compares all three for Ulysses).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcMode {
+    /// No checkpointing: every layer's intra-layer activations stay
+    /// resident until backward.
+    NoAc,
+    /// Full AC, checkpoints (layer inputs) kept on GPU.
+    AcGpu,
+    /// Full AC with CPU offloading (paper default, "AO" in Fig. 2).
+    AcOffload,
+}
+
+/// Byte sizes and derived quantities for one run.
+#[derive(Debug, Clone)]
+pub struct Quantities {
+    pub m: ModelDims,
+    pub s: u64,
+    /// total CP degree C (== total GPUs)
+    pub c: u64,
+    /// tokens per device S/C
+    pub sc: u64,
+    /// bf16 [S/C, d_model] — the paper's "S/C" unit for the residual stream
+    pub x_bytes: f64,
+    /// bf16 [S/C, H·d_head] — the unit of Q and of Table 2/6 coefficients
+    pub q_bytes: f64,
+    /// bf16 [S/C, Hkv·d_head]
+    pub kv_bytes: f64,
+    pub hbm_limit: f64,
+    pub nodes: u64,
+    pub host_ram: f64,
+    pub pin_memory: bool,
+    pub ac_offload: bool,
+}
+
+impl Quantities {
+    pub fn new(p: &RunPreset) -> Self {
+        let m = p.model.clone();
+        let c = p.parallel.cp_degree;
+        let s = p.seq_len;
+        let sc = s / c;
+        Quantities {
+            x_bytes: 2.0 * sc as f64 * m.d_model as f64,
+            q_bytes: 2.0 * sc as f64 * m.q_width() as f64,
+            kv_bytes: 2.0 * sc as f64 * m.kv_width() as f64,
+            hbm_limit: p.cluster.hbm_bytes * 0.95,
+            nodes: p.cluster.nodes,
+            host_ram: p.cluster.host_ram_bytes,
+            pin_memory: p.parallel.pin_memory,
+            ac_offload: p.parallel.ac_offload,
+            m,
+            s,
+            c,
+            sc,
+        }
+    }
+
+    /// γ·q_bytes — combined QKV bytes for one layer's full-head tensors.
+    pub fn qkv_bytes(&self) -> f64 {
+        self.q_bytes + 2.0 * self.kv_bytes
+    }
+
+    /// FSDP-sharded persistent state + framework base (CUDA context, NCCL,
+    /// workspaces).
+    pub fn persistent_bytes(&self, cal: &Calibration) -> f64 {
+        let fsdp = cal.bytes_per_param_fsdp * self.m.params() as f64 / self.c as f64;
+        let base = if self.nodes > 1 {
+            cal.base_framework_2node
+        } else {
+            cal.base_framework_1node
+        };
+        fsdp + base
+    }
+
+    /// Host RAM available for offloaded activations: the node's RAM minus a
+    /// reserve for the OS/dataloader; non-swappable (pinned) allocations
+    /// cap out earlier (§5.1 flips PIN_MEMORY off at 5M for this reason).
+    pub fn host_ram_for_offload(&self) -> f64 {
+        let reserve = 0.15 * self.host_ram;
+        if self.pin_memory {
+            0.6 * self.host_ram
+        } else {
+            self.host_ram - reserve
+        }
+    }
+
+    /// Per-device attention FLOPs for one forward pass of one layer.
+    pub fn attn_flops_layer_fwd(&self) -> f64 {
+        crate::model::flops::attn_fwd(&self.m, self.s) / (self.m.n_layers * self.c) as f64
+    }
+
+    /// The "misc" live set: gradient stream, recompute set and offload
+    /// staging buffers that are resident while a layer is processed.
+    /// Decomposition (see calibration provenance): dx 1, d_resid 1,
+    /// checkpoint prefetch 1, normed input 1, staging 0.74 (all
+    /// d_model-wide) plus the attention block's pre-projection output and
+    /// its gradient, which are H·d_head-wide (equal for Llama, 1.6× for
+    /// Qwen3's explicit head_dim) — total 6.74 units at H·d_head = d_model.
+    pub fn emit_misc(&self, b: &mut TraceBuilder) -> Vec<crate::engine::ops::BufId> {
+        let x = self.x_bytes;
+        let q = self.q_bytes;
+        vec![
+            b.alloc("grad_dx", x),
+            b.alloc("grad_dresid", x),
+            b.alloc("ckpt_prefetch", x),
+            b.alloc("grad_dout", q),
+            b.alloc("norm_xn", x),
+            b.alloc("attn_block_out", q),
+            b.alloc("offload_staging", 0.74 * x),
+        ]
+    }
+
+    /// Bulk "other" time (projections, MLP, norms, loss, optimizer, data):
+    /// fitted rate, see calibration.
+    pub fn emit_other(&self, b: &mut TraceBuilder, cal: &Calibration, factor: f64) {
+        let secs = cal.other_fixed_per_layer * self.m.n_layers as f64
+            + cal.other_rate * self.s as f64 * self.m.d_model as f64 * self.m.n_layers as f64
+                / self.c as f64;
+        b.fixed(Category::Other, secs * factor);
+    }
+
+    /// FPDT variant of the misc set: the attention-adjacent full-head
+    /// buffers (block output + its gradient) only ever exist one sequence
+    /// chunk at a time, so they drop out; the d_model-wide residual-stream
+    /// buffers remain.
+    pub fn emit_misc_chunked(&self, b: &mut TraceBuilder) -> Vec<crate::engine::ops::BufId> {
+        let x = self.x_bytes;
+        vec![
+            b.alloc("grad_dx", x),
+            b.alloc("grad_dresid", x),
+            b.alloc("ckpt_prefetch", x),
+            b.alloc("norm_xn", x),
+            b.alloc("offload_staging", 0.74 * x),
+        ]
+    }
+
+    /// AC offload volume for the whole step (store on fwd + fetch on bwd of
+    /// every layer input).
+    pub fn ac_offload_bytes(&self) -> f64 {
+        2.0 * self.m.n_layers as f64 * self.x_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::llama_single_node;
+    use crate::config::CpMethod;
+
+    fn q() -> Quantities {
+        Quantities::new(&llama_single_node(CpMethod::Ulysses, 1 << 20))
+    }
+
+    #[test]
+    fn unit_sizes() {
+        let q = q();
+        assert_eq!(q.sc, (1 << 20) / 8);
+        // llama: q_width == d_model so x == q
+        assert_eq!(q.x_bytes, q.q_bytes);
+        assert!((q.qkv_bytes() / q.q_bytes - 1.5).abs() < 1e-12); // γ = 1.5
+    }
+
+    #[test]
+    fn qwen_q_larger_than_x() {
+        use crate::config::presets::qwen_two_node;
+        let p = qwen_two_node(CpMethod::UspHybrid { ulysses: 8, ring: 2 }, 1 << 20);
+        let q = Quantities::new(&p);
+        assert!((q.q_bytes / q.x_bytes - 1.6).abs() < 1e-12); // 8192/5120
+    }
+
+    #[test]
+    fn persistent_matches_fit() {
+        // Llama3-8B, C=8: 16·P/8 + 4.32 GiB ≈ 19.3 GiB (the Table 4 fit).
+        let q = q();
+        let cal = Calibration::default();
+        let gib = q.persistent_bytes(&cal) / (1u64 << 30) as f64;
+        assert!((gib - 19.3).abs() < 0.4, "persistent {gib} GiB");
+    }
+
+    #[test]
+    fn misc_totals_674_units() {
+        let q = q();
+        let mut b = TraceBuilder::new();
+        let ids = q.emit_misc(&mut b);
+        assert_eq!(ids.len(), 7);
+        let total: f64 = b
+            .finish()
+            .iter()
+            .map(|op| match op {
+                crate::engine::Op::Alloc { bytes, .. } => *bytes,
+                _ => 0.0,
+            })
+            .sum();
+        assert!((total / q.x_bytes - 6.74).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unpinned_host_ram_larger() {
+        use crate::config::presets::qwen_two_node;
+        let pinned = Quantities::new(&qwen_two_node(CpMethod::Ring, 1 << 20));
+        let unpinned = Quantities::new(&qwen_two_node(CpMethod::Ring, 5 << 20));
+        assert!(unpinned.host_ram_for_offload() > pinned.host_ram_for_offload());
+    }
+}

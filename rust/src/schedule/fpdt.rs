@@ -1,0 +1,145 @@
+//! Fully Pipelined Distributed Transformer (Yao et al. 2025) baseline:
+//! attention chunked along the *sequence* dimension into π chunks with
+//! online softmax, chunks offloaded to CPU and double-buffered back
+//! (§2.1/§5.2). Orthogonal to UPipe's head chunking.
+
+use super::common::Quantities;
+use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use crate::model::flops;
+
+pub fn trace(q: &Quantities, pi: u32) -> Vec<Op> {
+    let cal = Calibration::default();
+    let mut b = TraceBuilder::new();
+    let f = cal.attn_transient_factor;
+    let p = pi as f64;
+    let attn_fwd = q.attn_flops_layer_fwd();
+    let l = q.m.n_layers;
+    let a2a_frac = (q.c - 1) as f64 / q.c as f64;
+    // FPDT runs Ulysses-style a2a; its qwen setup is 16-ulysses-1-ring, so
+    // the a2a crosses nodes when the cluster does (§5.2.1).
+    let intra = q.nodes == 1;
+    let misc = q.emit_misc_chunked(&mut b);
+    // FPDT's extra persistent footprint: pinned double buffers + CPU
+    // offload engine state (fit, see calibration provenance).
+    let extra = b.alloc("fpdt_offload_engine", cal.fpdt_extra_base);
+    let staging = b.alloc("fpdt_pinned_staging", 1.3 * q.x_bytes);
+
+    for _ in 0..l {
+        b.snapshot("before_attn");
+        // double buffers for the in-flight chunk pair
+        let dbuf = b.alloc("fpdt_double_buffer", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
+        for _ in 0..pi {
+            let chunk = b.alloc("fpdt_chunk", (2.0 * q.m.gamma() + 1.0) / p * q.q_bytes * f);
+            b.all_to_all((q.qkv_bytes() + q.q_bytes) / p * a2a_frac, intra, 4, q.s as f64);
+            b.snapshot("inp_all_to_all");
+            b.compute(Category::Fa3Fwd, attn_fwd / p);
+            b.snapshot("attn_kernel");
+            // offload the processed chunk's KV to host (overlapped)
+            b.offload(2.0 * q.kv_bytes / p, true);
+            b.free(chunk);
+        }
+        b.free(dbuf);
+        b.offload(q.x_bytes, true);
+    }
+
+    let beta = q.m.beta();
+    for _ in 0..l {
+        b.offload(q.x_bytes, true);
+        b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
+        b.snapshot("before_bwd_attn");
+        let dbuf = b.alloc("fpdt_double_buffer_bwd", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
+        for _ in 0..pi {
+            // fetch the chunk's KV back from host
+            b.offload(2.0 * q.kv_bytes / p, true);
+            let chunk = b.alloc("fpdt_bwd_chunk", (beta + 2.0) / p * q.q_bytes * f);
+            b.all_to_all((q.qkv_bytes() + q.q_bytes) / p * a2a_frac, intra, 4, q.s as f64);
+            b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR / p);
+            b.snapshot("bwd_attn_kernel");
+            b.free(chunk);
+        }
+        b.free(dbuf);
+    }
+
+    // CPU-side scheduler stalls: the throughput penalty §5.3 attributes to
+    // "frequent CPU-GPU transfers"; partially amortized at long S.
+    b.fixed(Category::Other, cal.fpdt_stall(q.s as f64, q.m.n_layers));
+    q.emit_other(&mut b, &cal, 1.0);
+    b.free(staging);
+    b.free(extra);
+    b.free_all(misc);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::llama_single_node;
+    use crate::config::CpMethod;
+    use crate::engine::ops::validate_trace;
+    use crate::engine::Engine;
+
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+    fn run(s: u64) -> crate::engine::StepReport {
+        let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, s);
+        let q = Quantities::new(&p);
+        let cal = Calibration::default();
+        let t = trace(&q, 16);
+        validate_trace(&t).unwrap();
+        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+    }
+
+    #[test]
+    fn table4_fpdt_memory_anchors() {
+        // Paper: 21.73 @128K, 27.09 @1M, 43.35 @3M, 51.42 @4M.
+        for (s, expect) in [
+            (1u64 << 17, 21.73),
+            (1 << 20, 27.09),
+            (3 << 20, 43.35),
+            (4 << 20, 51.42),
+        ] {
+            let got = run(s).peak_bytes / GIB;
+            assert!(
+                (got - expect).abs() / expect < 0.12,
+                "S={s}: got {got:.2} want {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn fpdt_lowest_memory_but_slowest_of_modern() {
+        use super::super::common::AcMode;
+        use super::super::ulysses;
+        let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        let q = Quantities::new(&p);
+        let cal = Calibration::default();
+        let ul = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal))
+            .run(&ulysses::trace(&q, AcMode::AcOffload));
+        let fp = run(1 << 20);
+        assert!(fp.peak_bytes < ul.peak_bytes, "FPDT uses least memory");
+        assert!(fp.step_time > ul.step_time, "FPDT pays throughput");
+    }
+
+    #[test]
+    fn table3_fpdt_throughput_1m() {
+        // Paper @1M: 382.42 tokens/s/GPU.
+        let t = run(1 << 20).tokens_per_sec_per_gpu(1 << 20, 8).unwrap();
+        assert!((t - 382.42).abs() / 382.42 < 0.15, "tput {t}");
+    }
+
+    #[test]
+    fn chunk_buffers_shrink_with_pi() {
+        let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, 1 << 20);
+        let q = Quantities::new(&p);
+        let max_chunk = |pi: u32| -> f64 {
+            trace(&q, pi)
+                .iter()
+                .filter_map(|op| match op {
+                    Op::Alloc { bytes, name, .. } if name.contains("chunk") => Some(*bytes),
+                    _ => None,
+                })
+                .fold(0.0, f64::max)
+        };
+        assert!(max_chunk(32) < max_chunk(8));
+    }
+}

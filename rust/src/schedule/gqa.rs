@@ -1,0 +1,169 @@
+//! UPipe's GQA scheduling (paper §4.1, Fig. 4): process query heads
+//! out-of-order so that each KV group's K/V heads are communicated exactly
+//! once, in the first stage where the group appears; subsequent stages
+//! reuse the rank-local KV and communicate queries only.
+
+/// One UPipe stage: which query heads are processed and which KV heads
+/// must be communicated (empty ⇒ reuse).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Stage {
+    pub q_heads: Vec<u64>,
+    pub new_kv_heads: Vec<u64>,
+}
+
+/// Naive in-order schedule: stage t takes q-heads [tU, (t+1)U). A KV head
+/// is re-communicated every time a stage touches its group without owning
+/// its K/V from before — with U < g·Hkv this replicates KV sends across
+/// devices (the Fig. 4 "K0, K0, K0, K0" pathology).
+pub fn naive_schedule(h: u64, hkv: u64, u: u64) -> Vec<Stage> {
+    assert!(h % u == 0);
+    let g = h / hkv;
+    (0..h / u)
+        .map(|t| {
+            let q_heads: Vec<u64> = (t * u..(t + 1) * u).collect();
+            // Naive processing re-sends the KV head for every query head in
+            // the stage (each device needs its own copy of its query's
+            // group KV): one KV send per query head.
+            let new_kv_heads = q_heads.iter().map(|&q| q / g).collect();
+            Stage { q_heads, new_kv_heads }
+        })
+        .collect()
+}
+
+/// Out-of-order GQA schedule: stage t of each g-cycle takes the t-th query
+/// of each group; all groups' unique KV heads are sent in the cycle's first
+/// stage (one per device), none afterwards.
+pub fn gqa_schedule(h: u64, hkv: u64, u: u64) -> Vec<Stage> {
+    assert!(h % u == 0);
+    let g = h / hkv;
+    let n_groups = hkv;
+    let mut stages = Vec::new();
+    // Walk query-index-within-group (t), then split the groups into
+    // U-head stages. Groups cycle in blocks of `u` so the KV sent in a
+    // block's first stage covers exactly the groups revisited for g stages.
+    let groups_per_stage = u.min(n_groups);
+    let group_blocks = n_groups.div_ceil(groups_per_stage);
+    for blk in 0..group_blocks {
+        let groups: Vec<u64> = (blk * groups_per_stage
+            ..((blk + 1) * groups_per_stage).min(n_groups))
+            .collect();
+        // q-indices within the group, `u / groups_per_stage` of them per
+        // stage (u divides g·groups when u <= hkv; general case walks t).
+        let per_group_per_stage = (u / groups.len() as u64).max(1);
+        let mut t = 0;
+        while t < g {
+            let mut q_heads = Vec::new();
+            for &grp in &groups {
+                for dt in 0..per_group_per_stage.min(g - t) {
+                    q_heads.push(grp * g + t + dt);
+                }
+            }
+            let new_kv_heads = if t == 0 { groups.clone() } else { Vec::new() };
+            stages.push(Stage { q_heads, new_kv_heads });
+            t += per_group_per_stage;
+        }
+    }
+    stages
+}
+
+/// Communication volume of a schedule in "head-sends" (full-sequence heads
+/// communicated per device across all stages): queries + K and V sends.
+/// The §4.1 comparison: naive O(3·H), GQA O((3 + g − 1)·H/g).
+pub fn comm_volume_heads(stages: &[Stage]) -> u64 {
+    stages
+        .iter()
+        .map(|s| s.q_heads.len() as u64 + 2 * s.new_kv_heads.len() as u64)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn covers_all_heads(stages: &[Stage], h: u64) -> bool {
+        let mut seen: Vec<u64> = stages.iter().flat_map(|s| s.q_heads.clone()).collect();
+        seen.sort();
+        seen == (0..h).collect::<Vec<_>>()
+    }
+
+    #[test]
+    fn paper_fig4_example() {
+        // C=4, G=4, H=16, Hkv=4, U=4: stage 0 sends Q0,Q4,Q8,Q12 + K0..K3;
+        // stages 1..3 send only queries.
+        let stages = gqa_schedule(16, 4, 4);
+        assert_eq!(stages.len(), 4);
+        assert_eq!(stages[0].q_heads, vec![0, 4, 8, 12]);
+        assert_eq!(stages[0].new_kv_heads, vec![0, 1, 2, 3]);
+        assert_eq!(stages[1].q_heads, vec![1, 5, 9, 13]);
+        assert!(stages[1].new_kv_heads.is_empty());
+        assert!(covers_all_heads(&stages, 16));
+    }
+
+    #[test]
+    fn volume_reduction_matches_section_41() {
+        // naive: 3 sends per head = 3H; GQA: (3+g-1)·H/g.
+        let (h, hkv, u) = (16u64, 4u64, 4u64);
+        let g = h / hkv;
+        let naive = comm_volume_heads(&naive_schedule(h, hkv, u));
+        let gqa = comm_volume_heads(&gqa_schedule(h, hkv, u));
+        assert_eq!(naive, 3 * h);
+        assert_eq!(gqa, (3 + g - 1) * h / g);
+        assert!(gqa < naive);
+    }
+
+    #[test]
+    fn llama_schedule() {
+        // Llama3-8B: H=32, Hkv=8, U=C=8 ⇒ 4 stages of 8 heads; 8 groups
+        // split into blocks of 8 ⇒ KV sent once in stage 0 of each g-cycle.
+        let stages = gqa_schedule(32, 8, 8);
+        assert_eq!(stages.len(), 4);
+        assert!(covers_all_heads(&stages, 32));
+        let kv_sends: u64 = stages.iter().map(|s| s.new_kv_heads.len() as u64).sum();
+        assert_eq!(kv_sends, 8); // each unique KV head exactly once
+    }
+
+    #[test]
+    fn qwen_schedule() {
+        // Qwen3-32B: H=64, Hkv=8, U=8 ⇒ 8 stages; g=8, one group-block.
+        let stages = gqa_schedule(64, 8, 8);
+        assert_eq!(stages.len(), 8);
+        assert!(covers_all_heads(&stages, 64));
+        assert_eq!(stages[0].new_kv_heads.len(), 8);
+        assert!(stages[1..].iter().all(|s| s.new_kv_heads.is_empty()));
+    }
+
+    #[test]
+    fn prop_gqa_covers_heads_and_never_resends_kv() {
+        prop::check("gqa-cover", 200, &[(0, 3), (0, 4), (0, 3)], |a| {
+            let hkv = 1u64 << a[0]; // 1..8
+            let g = 1u64 << a[1]; // 1..16
+            let h = hkv * g;
+            let u = (1u64 << a[2]).min(h); // 1..8
+            if h % u != 0 {
+                return true; // invalid combo, skip
+            }
+            let stages = gqa_schedule(h, hkv, u);
+            if !covers_all_heads(&stages, h) {
+                return false;
+            }
+            let kv_sends: u64 = stages.iter().map(|s| s.new_kv_heads.len() as u64).sum();
+            kv_sends == hkv
+        });
+    }
+
+    #[test]
+    fn prop_gqa_volume_le_naive() {
+        prop::check("gqa<=naive", 200, &[(0, 3), (0, 4), (0, 3)], |a| {
+            let hkv = 1u64 << a[0];
+            let g = 1u64 << a[1];
+            let h = hkv * g;
+            let u = (1u64 << a[2]).min(h);
+            if h % u != 0 {
+                return true;
+            }
+            comm_volume_heads(&gqa_schedule(h, hkv, u))
+                <= comm_volume_heads(&naive_schedule(h, hkv, u))
+        });
+    }
+}

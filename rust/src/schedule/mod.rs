@@ -1,0 +1,62 @@
+//! Context-parallelism schedules: one module per method in the paper's
+//! evaluation. Each schedule turns (model, cluster, parallel layout, S)
+//! into an op trace ([`crate::engine::ops::Op`]) describing one training
+//! step on a representative device; the engine prices it.
+//!
+//! Schedules encode the *structural* behaviour — which buffers exist when
+//! (Tables 2 & 6), what is communicated (Fig. 4), what overlaps — while
+//! the engine's calibration holds the fitted hardware rates.
+
+pub mod common;
+pub mod compose;
+pub mod fpdt;
+pub mod gqa;
+pub mod native;
+pub mod ring_attn;
+pub mod ulysses;
+pub mod upipe;
+pub mod usp;
+
+use crate::config::presets::RunPreset;
+use crate::config::CpMethod;
+use crate::engine::{Calibration, Engine, Op, StepReport};
+
+pub use common::{AcMode, Quantities};
+
+/// Build the op trace for a preset.
+pub fn build_trace(p: &RunPreset) -> Vec<Op> {
+    let q = Quantities::new(p);
+    match p.parallel.method {
+        CpMethod::NativePyTorch => native::trace(&q),
+        CpMethod::Ring => ring_attn::trace(&q),
+        CpMethod::Ulysses => ulysses::trace(&q, AcMode::AcOffload),
+        CpMethod::Fpdt { pi } => fpdt::trace(&q, pi),
+        CpMethod::Upipe { u, gqa_schedule } => upipe::trace(&q, u, gqa_schedule, false),
+        CpMethod::UspHybrid { ulysses: cu, ring: cr } => usp::trace(&q, cu, cr),
+        CpMethod::UpipeHybrid { u, ulysses: cu, ring: cr } => {
+            usp::upipe_hybrid_trace(&q, u, cu, cr)
+        }
+        CpMethod::UpipeFpdt { u, pi } => compose::trace(&q, u, pi),
+    }
+}
+
+/// Simulate one training step for a preset.
+pub fn simulate(p: &RunPreset) -> StepReport {
+    simulate_with(p, &Calibration::default())
+}
+
+pub fn simulate_with(p: &RunPreset, calib: &Calibration) -> StepReport {
+    let q = Quantities::new(p);
+    let trace = build_trace(p);
+    let mut engine = Engine::new(calib.clone(), q.hbm_limit, q.persistent_bytes(calib));
+    engine.host_ram = q.host_ram_for_offload();
+    let mut report = engine.run(&trace);
+    // FPDT's published implementation fails beyond 4M tokens (§5.2 note);
+    // reproduce the failure rather than extrapolating.
+    if let CpMethod::Fpdt { .. } = p.parallel.method {
+        if p.seq_len > 4 * 1024 * 1024 {
+            report.failed = Some("FPDT execution fails at lengths > 4M (paper §5.2)");
+        }
+    }
+    report
+}

@@ -1,0 +1,132 @@
+//! Ring Attention schedule (Liu et al. 2023; USP zigzag-load-balanced
+//! implementation). KV shards circulate the ring in C−1 P2P rounds per
+//! attention; no all-to-all, but O(C) communication calls (§2.1).
+
+use super::common::Quantities;
+use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use crate::model::flops;
+
+pub fn trace(q: &Quantities) -> Vec<Op> {
+    trace_with(q, q.c, q.nodes > 1)
+}
+
+/// `ring_c` ranks participate in the ring; `inter` if it crosses nodes.
+/// (USP-Hybrid reuses this for its ring dimension.)
+pub fn trace_with(q: &Quantities, ring_c: u64, inter: bool) -> Vec<Op> {
+    let cal = Calibration::default();
+    let mut b = TraceBuilder::new();
+    let f = cal.attn_transient_factor;
+    let attn_fwd = q.attn_flops_layer_fwd();
+    let l = q.m.n_layers;
+    let steps = ring_c - 1;
+    let misc = q.emit_misc(&mut b);
+    // Inter-node rings keep per-peer IB-transport staging buffers pinned
+    // for the whole step (fit to the Qwen Ring column, see calibration).
+    let staging = inter.then(|| {
+        let peers = (ring_c.min(8) - 1) as f64;
+        b.alloc("ring_ib_staging", peers * 2.0 * q.kv_bytes * f)
+    });
+
+    for _ in 0..l {
+        b.snapshot("before_attn");
+        // local QKV + two in-flight KV blocks (send/recv double buffer)
+        let qkv = b.alloc("ring_qkv_local", q.qkv_bytes() * f);
+        let inflight = b.alloc("ring_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
+        // online-softmax rescale state (out accumulator + lse)
+        let lse = b.alloc("ring_lse_out", 0.2 * q.q_bytes);
+        b.ring(steps, 2.0 * q.kv_bytes, inter);
+        b.snapshot("ring_exchange");
+        b.compute(Category::Fa3Fwd, attn_fwd);
+        b.snapshot("attn_kernel");
+        b.free(lse);
+        b.free(inflight);
+        b.free(qkv);
+        b.offload(q.x_bytes, true);
+    }
+
+    let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
+    for _ in 0..l {
+        b.offload(q.x_bytes, true);
+        b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
+        b.snapshot("before_bwd_attn");
+        let qkv = b.alloc("ring_qkv_local_bwd", q.qkv_bytes() * f);
+        let grads = b.alloc("ring_bwd_set", beta_extra * f);
+        // dKV accumulators travel the ring in fp32 (2× bf16 size)
+        let dkv = b.alloc("ring_dkv_fp32", 2.0 * 2.0 * q.kv_bytes * f);
+        let inflight = b.alloc("ring_kv_inflight_bwd", 2.0 * 2.0 * q.kv_bytes * f);
+        // bwd ring: KV forward again + dKV backward
+        b.ring(steps, 2.0 * 2.0 * q.kv_bytes, inter);
+        b.snapshot("bwd_ring_exchange");
+        b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
+        b.snapshot("bwd_attn_kernel");
+        b.free(inflight);
+        b.free(dkv);
+        b.free(grads);
+        b.free(qkv);
+    }
+
+    q.emit_other(&mut b, &cal, 1.0);
+    if let Some(st) = staging {
+        b.free(st);
+    }
+    b.free_all(misc);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::llama_single_node;
+    use crate::config::CpMethod;
+    use crate::engine::ops::validate_trace;
+    use crate::engine::Engine;
+
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+    fn run(s: u64) -> crate::engine::StepReport {
+        let p = llama_single_node(CpMethod::Ring, s);
+        let q = Quantities::new(&p);
+        let cal = Calibration::default();
+        let t = trace(&q);
+        validate_trace(&t).unwrap();
+        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+    }
+
+    #[test]
+    fn table4_ring_memory_anchors() {
+        // Paper Table 4 Ring row: 21.32 @128K, 35.86 @1M, 69.11 @3M.
+        for (s, expect) in [(1u64 << 17, 21.32), (1 << 20, 35.86), (3 << 20, 69.11)] {
+            let got = run(s).peak_bytes / GIB;
+            assert!(
+                (got - expect).abs() / expect < 0.08,
+                "S={s}: got {got:.2} want {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_ooms_at_4m() {
+        assert!(!run(3 << 20).oom);
+        assert!(run(4 << 20).oom);
+    }
+
+    #[test]
+    fn table3_ring_throughput_1m() {
+        // Paper: 458.51 tokens/s/GPU @1M.
+        let t = run(1 << 20).tokens_per_sec_per_gpu(1 << 20, 8).unwrap();
+        assert!((t - 458.51).abs() / 458.51 < 0.08, "tput {t}");
+    }
+
+    #[test]
+    fn ring_slower_than_ulysses() {
+        // §2.1/§5.3: O(C) p2p rounds cost more than one all-to-all.
+        use super::super::common::AcMode;
+        use super::super::ulysses;
+        let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        let q = Quantities::new(&p);
+        let cal = Calibration::default();
+        let ul = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal))
+            .run(&ulysses::trace(&q, AcMode::AcOffload));
+        assert!(run(1 << 20).step_time > ul.step_time);
+    }
+}

@@ -1,0 +1,89 @@
+//! Tiny criterion-style bench harness (criterion is not in the offline
+//! vendor set). Used by everything under `rust/benches/`: warms up, runs
+//! timed iterations until a wall-clock budget, reports mean / p50 / p95 and
+//! throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    budget: Duration,
+    warmup: Duration,
+}
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Stats {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            budget: Duration::from_millis(800),
+            warmup: Duration::from_millis(100),
+        }
+    }
+
+    pub fn budget_ms(mut self, ms: u64) -> Self {
+        self.budget = Duration::from_millis(ms);
+        self
+    }
+
+    /// Run `f` repeatedly; `black_box` its result to keep the optimizer
+    /// honest. Prints and returns the stats.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Timed.
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples.len() < 10 {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+            if samples.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples.sort();
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        let stats = Stats {
+            name: self.name.clone(),
+            iters: samples.len(),
+            mean,
+            p50: samples[samples.len() / 2],
+            p95: samples[samples.len() * 95 / 100],
+        };
+        println!(
+            "bench {:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            stats.name, stats.mean, stats.p50, stats.p95, stats.iters
+        );
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = Bench::new("noop").budget_ms(20).run(|| 1 + 1);
+        assert!(s.iters >= 10);
+        assert!(s.mean <= s.p95.max(Duration::from_nanos(1)) * 2);
+    }
+}

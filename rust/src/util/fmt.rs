@@ -1,0 +1,74 @@
+//! Human-friendly formatting of bytes / token counts / durations.
+
+/// GiB as used throughout the paper's tables.
+pub const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+
+/// Format a byte count as GiB with two decimals (paper Table 4 style).
+pub fn gib(bytes: f64) -> String {
+    format!("{:.2}", bytes / GIB)
+}
+
+/// Format a token count the way the paper labels columns (128K, 1M, 5M).
+pub fn tokens(n: u64) -> String {
+    const K: u64 = 1024;
+    const M: u64 = 1024 * 1024;
+    if n % M == 0 {
+        format!("{}M", n / M)
+    } else if n % K == 0 {
+        format!("{}K", n / K)
+    } else {
+        n.to_string()
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn secs(s: f64) -> String {
+    if s < 0.01 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 100.0 {
+        format!("{s:.2}s")
+    } else {
+        format!("{s:.1}s")
+    }
+}
+
+/// Parse a token-count label ("128K", "1M", "512k") to a count.
+pub fn parse_tokens(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1024),
+        'm' | 'M' => (&s[..s.len() - 1], 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.parse::<u64>().ok().map(|n| n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_labels_roundtrip() {
+        for label in ["128K", "256K", "512K", "1M", "2M", "3M", "4M", "5M", "8M"] {
+            assert_eq!(tokens(parse_tokens(label).unwrap()), label);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert_eq!(parse_tokens("x1M"), None);
+        assert_eq!(parse_tokens(""), None);
+    }
+
+    #[test]
+    fn gib_formats() {
+        assert_eq!(gib(GIB * 21.26), "21.26");
+    }
+
+    #[test]
+    fn secs_formats() {
+        assert_eq!(secs(0.001), "1.00ms");
+        assert_eq!(secs(7.4), "7.40s");
+        assert_eq!(secs(275.06), "275.1s");
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained utilities (the offline vendor set has no serde /
+//! criterion / proptest, so formatting, RNG, property testing and the bench
+//! harness live here).
+
+pub mod bench;
+pub mod fmt;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,92 @@
+//! Minimal property-testing harness (proptest is not in the offline vendor
+//! set). `check` runs a property over `n` random cases and, on failure,
+//! retries with a simple halving shrink over the integer parameters so the
+//! reported counterexample is small.
+
+use super::rng::Rng;
+
+/// Run `prop` over `n` random integer vectors drawn from `ranges`
+/// (inclusive). Panics with the (shrunk) counterexample on failure.
+pub fn check(name: &str, n: usize, ranges: &[(i64, i64)], prop: impl Fn(&[i64]) -> bool) {
+    let mut rng = Rng::new(0xC0FFEE ^ name.len() as u64);
+    for case in 0..n {
+        let args: Vec<i64> = ranges.iter().map(|&(lo, hi)| rng.range(lo, hi)).collect();
+        if !prop(&args) {
+            let shrunk = shrink(&args, ranges, &prop);
+            panic!("property `{name}` failed on case {case}: args={shrunk:?} (orig {args:?})");
+        }
+    }
+}
+
+/// Per-argument bisection shrink: for each argument find the smallest value
+/// (others fixed) for which the property still fails; repeat until a fixed
+/// point.
+fn shrink(args: &[i64], ranges: &[(i64, i64)], prop: &impl Fn(&[i64]) -> bool) -> Vec<i64> {
+    let mut cur = args.to_vec();
+    loop {
+        let mut improved = false;
+        for i in 0..cur.len() {
+            let range_lo = ranges[i].0;
+            let mut cand = cur.clone();
+            cand[i] = range_lo;
+            if !prop(&cand) {
+                // fails at the lower bound already
+                if cur[i] != range_lo {
+                    cur = cand;
+                    improved = true;
+                }
+                continue;
+            }
+            // invariant: prop passes at `lo`, fails at `hi`
+            let (mut lo, mut hi) = (range_lo, cur[i]);
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                cand[i] = mid;
+                if prop(&cand) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            if hi != cur[i] {
+                cur[i] = hi;
+                improved = true;
+            }
+        }
+        if !improved {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true() {
+        check("true", 50, &[(0, 100), (0, 100)], |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `gt` failed")]
+    fn fails_and_shrinks() {
+        check("gt", 200, &[(0, 1000)], |a| a[0] < 500);
+    }
+
+    #[test]
+    fn shrink_reaches_minimal() {
+        // Failing iff x >= 500 must shrink to exactly 500.
+        let s = shrink(&[987], &[(0, 1000)], &|a: &[i64]| a[0] < 500);
+        assert_eq!(s, vec![500]);
+    }
+
+    #[test]
+    fn shrink_multiarg() {
+        // fails iff a+b >= 100; shrink should land on a minimal boundary.
+        let s = shrink(&[90, 80], &[(0, 100), (0, 100)], &|a: &[i64]| {
+            a[0] + a[1] < 100
+        });
+        assert_eq!(s[0] + s[1], 100);
+    }
+}

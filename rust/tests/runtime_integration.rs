@@ -1,0 +1,173 @@
+//! Integration: PJRT runtime loads and executes the AOT artifacts with
+//! correct numerics (requires `make artifacts`).
+
+use untied_ulysses::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Runtime {
+    Runtime::load(&Runtime::default_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn loads_manifest_and_platform() {
+    let rt = runtime();
+    assert_eq!(rt.platform().to_lowercase(), "cpu");
+    assert!(rt.manifest.artifacts.len() >= 13);
+    assert_eq!(rt.manifest.const_u64("pipe_c").unwrap(), 4);
+}
+
+#[test]
+fn rope_tables_match_closed_form() {
+    let rt = runtime();
+    let out = rt.call("rope_tables", &[]).unwrap();
+    let (s, d2) = (256usize, 8usize);
+    assert_eq!(out[0].shape(), &[s, d2]);
+    let cos = out[0].as_f32().unwrap();
+    let sin = out[1].as_f32().unwrap();
+    // spot-check: angle(t, i) = t / base^(2i/d), d = 16, base = 10000
+    for (t, i) in [(0usize, 0usize), (5, 3), (255, 7)] {
+        let ang = t as f64 / 10000f64.powf(2.0 * i as f64 / 16.0);
+        assert!((cos[t * d2 + i] as f64 - ang.cos()).abs() < 1e-4, "cos({t},{i})");
+        assert!((sin[t * d2 + i] as f64 - ang.sin()).abs() < 1e-4, "sin({t},{i})");
+    }
+}
+
+#[test]
+fn rmsnorm_shard_matches_host_math() {
+    let rt = runtime();
+    let (sc, dm) = (64usize, 128usize);
+    let x: Vec<f32> = (0..sc * dm).map(|i| ((i % 37) as f32 - 18.0) / 7.0).collect();
+    let w = vec![2.0f32; dm];
+    let out = rt
+        .call(
+            "rmsnorm_shard",
+            &[HostTensor::f32(&[sc, dm], x.clone()), HostTensor::f32(&[dm], w)],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for r in [0usize, 13, 63] {
+        let row = &x[r * dm..(r + 1) * dm];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / dm as f32;
+        let scale = 2.0 / (ms + 1e-6).sqrt();
+        for c in [0usize, 64, 127] {
+            let want = row[c] * scale;
+            assert!((got[r * dm + c] - want).abs() < 1e-4, "({r},{c})");
+        }
+    }
+}
+
+#[test]
+fn embed_shard_gathers_rows() {
+    let rt = runtime();
+    let (v, dm, sc) = (512usize, 128usize, 64usize);
+    let table: Vec<f32> = (0..v * dm).map(|i| (i / dm) as f32).collect();
+    let toks: Vec<i32> = (0..sc as i32).map(|i| (i * 7) % v as i32).collect();
+    let out = rt
+        .call(
+            "embed_shard",
+            &[HostTensor::i32(&[sc], toks.clone()), HostTensor::f32(&[v, dm], table)],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    for (r, t) in toks.iter().enumerate() {
+        assert_eq!(got[r * dm], *t as f32, "row {r}");
+    }
+}
+
+#[test]
+fn attn_stage_is_causal_softmax_attention() {
+    // Against a tiny host-side reference for S=256, D=16 (single head).
+    let rt = runtime();
+    let (s, d) = (256usize, 16usize);
+    let mut rng = untied_ulysses::util::rng::Rng::new(9);
+    let mk = |rng: &mut untied_ulysses::util::rng::Rng| -> Vec<f32> {
+        (0..s * d).map(|_| rng.normal() as f32 * 0.5).collect()
+    };
+    let (q, k, v) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let out = rt
+        .call(
+            "attn_stage",
+            &[
+                HostTensor::f32(&[1, s, d], q.clone()),
+                HostTensor::f32(&[1, s, d], k.clone()),
+                HostTensor::f32(&[1, s, d], v.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap();
+    // host reference at a few query positions
+    let scale = 1.0 / (d as f32).sqrt();
+    for qi in [0usize, 17, 128, 255] {
+        let mut logits = vec![f32::NEG_INFINITY; s];
+        for (ki, l) in logits.iter_mut().enumerate().take(qi + 1) {
+            let mut dot = 0.0;
+            for x in 0..d {
+                dot += q[qi * d + x] * k[ki * d + x];
+            }
+            *l = dot * scale;
+        }
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = logits.iter().map(|l| (l - m).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        for x in [0usize, d - 1] {
+            let want: f32 =
+                (0..s).map(|ki| exps[ki] / z * v[ki * d + x]).sum();
+            let gotv = got[qi * d + x];
+            assert!((gotv - want).abs() < 2e-4, "q={qi} x={x}: {gotv} vs {want}");
+        }
+    }
+}
+
+#[test]
+fn out_proj_partial_sums_over_stages() {
+    // Sum of two half-projections == one full projection.
+    let rt = runtime();
+    let (u, sc, d, dm) = (4usize, 64usize, 16usize, 128usize);
+    let mut rng = untied_ulysses::util::rng::Rng::new(4);
+    let a: Vec<f32> = (0..u * sc * d).map(|_| rng.normal() as f32).collect();
+    let w: Vec<f32> = (0..u * d * dm).map(|_| rng.normal() as f32 * 0.1).collect();
+    let full = rt
+        .call(
+            "out_proj_partial",
+            &[HostTensor::f32(&[u, sc, d], a.clone()), HostTensor::f32(&[u * d, dm], w.clone())],
+        )
+        .unwrap()[0]
+        .clone();
+    // zero out the second half of heads / rows ⇒ partial 1, and vice versa
+    let mut a1 = a.clone();
+    a1[2 * sc * d..].iter_mut().for_each(|x| *x = 0.0);
+    let mut a2 = a.clone();
+    a2[..2 * sc * d].iter_mut().for_each(|x| *x = 0.0);
+    let p1 = rt
+        .call(
+            "out_proj_partial",
+            &[HostTensor::f32(&[u, sc, d], a1), HostTensor::f32(&[u * d, dm], w.clone())],
+        )
+        .unwrap()[0]
+        .clone();
+    let mut sum = p1;
+    let p2 = rt
+        .call(
+            "out_proj_partial",
+            &[HostTensor::f32(&[u, sc, d], a2), HostTensor::f32(&[u * d, dm], w)],
+        )
+        .unwrap()[0]
+        .clone();
+    sum.add_assign(&p2).unwrap();
+    assert!(sum.max_abs_diff(&full).unwrap() < 1e-3);
+}
+
+#[test]
+fn call_rejects_wrong_shapes() {
+    let rt = runtime();
+    let bad = rt.call("rmsnorm_shard", &[HostTensor::f32(&[2, 2], vec![0.0; 4])]);
+    assert!(bad.is_err());
+    let bad2 = rt.call(
+        "rmsnorm_shard",
+        &[
+            HostTensor::f32(&[64, 128], vec![0.0; 64 * 128]),
+            HostTensor::f32(&[64], vec![0.0; 64]), // wrong width
+        ],
+    );
+    assert!(bad2.is_err());
+    assert!(rt.call("no_such_artifact", &[]).is_err());
+}
