@@ -1,0 +1,54 @@
+//! Bench: the configuration planner — full-sweep wall time and throughput
+//! (configs/sec, sims/sec), emitted to `BENCH_planner.json` so future PRs
+//! have a perf trajectory to compare against.
+
+use untied_ulysses::config::ClusterConfig;
+use untied_ulysses::model::ModelDims;
+use untied_ulysses::planner::{enumerate_space, plan, PlanRequest};
+use untied_ulysses::util::bench::Bench;
+use untied_ulysses::util::fmt::tokens;
+use untied_ulysses::util::json::Json;
+
+fn main() {
+    // Bench-sized request: coarser quantum than the CLI default so one
+    // iteration stays sub-second, same space.
+    let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+    req.quantum = 512 * 1024;
+    req.cap_s = 16 << 20;
+
+    let out = plan(&req);
+    let top = out.best().expect("plan produced no configs");
+    let top_ctx = top.max_context.map(tokens).unwrap_or_else(|| "-".into());
+    println!(
+        "plan: {} configs, {} sims, trace cache {}/{} hits, top = {} {} @ {}",
+        out.configs.len(),
+        out.simulations,
+        out.cache_hits,
+        out.cache_hits + out.cache_misses,
+        top.parallel.method.label(),
+        top.parallel.method.params(),
+        top_ctx
+    );
+
+    let sweep = Bench::new("planner/plan_llama3-8b_8xH100").budget_ms(2500).run(|| plan(&req));
+    let bench_enum = Bench::new("planner/enumerate_space").budget_ms(200);
+    let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, true));
+
+    let json = Json::obj(vec![
+        ("bench", Json::string("planner")),
+        ("model", Json::string(req.model.name)),
+        ("gpus", Json::int(req.cluster.total_gpus())),
+        ("configs", Json::int(out.configs.len() as u64)),
+        ("simulations_per_plan", Json::int(out.simulations)),
+        ("plan_wall_s_mean", Json::Num(sweep.mean.as_secs_f64())),
+        ("plan_wall_s_p50", Json::Num(sweep.p50.as_secs_f64())),
+        ("plan_wall_s_p95", Json::Num(sweep.p95.as_secs_f64())),
+        ("plan_iters", Json::int(sweep.iters as u64)),
+        ("configs_per_sec", Json::Num(out.configs.len() as f64 / sweep.mean.as_secs_f64())),
+        ("sims_per_sec", Json::Num(out.simulations as f64 / sweep.mean.as_secs_f64())),
+        ("enumerate_per_sec", Json::Num(enumerate.per_sec())),
+    ]);
+    let rendered = json.pretty() + "\n";
+    std::fs::write("BENCH_planner.json", &rendered).expect("writing BENCH_planner.json");
+    println!("wrote BENCH_planner.json");
+}

@@ -54,6 +54,26 @@ impl ClusterConfig {
         }
     }
 
+    /// A cluster of `total` H100s: up to 8 on one NVLink node, beyond that
+    /// whole 8-GPU nodes over InfiniBand — the planner's generalization of
+    /// the fixed paper testbeds.
+    pub fn h100_cluster(total: u64) -> Result<Self, String> {
+        if total == 0 {
+            return Err("cluster needs at least one GPU".into());
+        }
+        if total <= 8 {
+            return Ok(if total == 8 { Self::h100_node() } else { Self::h100_gpus(total) });
+        }
+        if total % 8 != 0 {
+            return Err(format!("multi-node clusters are whole 8-GPU nodes (got {total} GPUs)"));
+        }
+        // &'static str names can't be formatted per-size; 16 keeps its
+        // paper-testbed label, larger clusters share the generic one (the
+        // planner reports always print total_gpus() alongside).
+        let name = if total == 16 { "16xH100" } else { "NxH100" };
+        Ok(ClusterConfig { name, nodes: total / 8, ..Self::h100_node() })
+    }
+
     pub fn total_gpus(&self) -> u64 {
         self.nodes * self.gpus_per_node
     }
@@ -82,5 +102,17 @@ mod tests {
     #[test]
     fn ablation_cluster() {
         assert_eq!(ClusterConfig::h100_gpus(4).total_gpus(), 4);
+    }
+
+    #[test]
+    fn cluster_by_total_gpus() {
+        assert_eq!(ClusterConfig::h100_cluster(8).unwrap(), ClusterConfig::h100_node());
+        assert_eq!(ClusterConfig::h100_cluster(16).unwrap(), ClusterConfig::h100_2nodes());
+        let c4 = ClusterConfig::h100_cluster(4).unwrap();
+        assert_eq!((c4.nodes, c4.gpus_per_node), (1, 4));
+        let c32 = ClusterConfig::h100_cluster(32).unwrap();
+        assert_eq!((c32.nodes, c32.total_gpus()), (4, 32));
+        assert!(ClusterConfig::h100_cluster(0).is_err());
+        assert!(ClusterConfig::h100_cluster(12).is_err());
     }
 }

@@ -49,6 +49,35 @@ impl CpMethod {
             CpMethod::Upipe { .. } | CpMethod::UpipeHybrid { .. } | CpMethod::UpipeFpdt { .. }
         )
     }
+
+    /// Compact parameter string for tables / JSON (empty for the
+    /// parameter-free methods).
+    pub fn params(&self) -> String {
+        match *self {
+            CpMethod::NativePyTorch | CpMethod::Ring | CpMethod::Ulysses => String::new(),
+            CpMethod::Fpdt { pi } => format!("pi={pi}"),
+            CpMethod::Upipe { u, gqa_schedule } => {
+                format!("U={u},{}", if gqa_schedule { "gqa" } else { "naive" })
+            }
+            CpMethod::UspHybrid { ulysses, ring } => format!("uly={ulysses},ring={ring}"),
+            CpMethod::UpipeHybrid { u, ulysses, ring } => {
+                format!("U={u},uly={ulysses},ring={ring}")
+            }
+            CpMethod::UpipeFpdt { u, pi } => format!("U={u},pi={pi}"),
+        }
+    }
+}
+
+/// Divisors of `n` in ascending order (sweep-space enumeration helper:
+/// head-chunk sizes U are the divisors of H).
+pub fn divisors(n: u64) -> Vec<u64> {
+    (1..=n).filter(|d| n % d == 0).collect()
+}
+
+/// All ordered factorizations `(a, b)` with `a * b == n`, `a` ascending
+/// (sweep-space enumeration helper: ulysses×ring splits of the CP degree).
+pub fn factor_pairs(n: u64) -> Vec<(u64, u64)> {
+    divisors(n).into_iter().map(|a| (a, n / a)).collect()
 }
 
 /// Full parallel layout for a run.
@@ -142,5 +171,25 @@ mod tests {
     fn labels() {
         assert_eq!(CpMethod::Upipe { u: 8, gqa_schedule: true }.label(), "UPipe");
         assert!(CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 }.is_upipe());
+    }
+
+    #[test]
+    fn param_strings() {
+        assert_eq!(CpMethod::Ulysses.params(), "");
+        assert_eq!(CpMethod::Fpdt { pi: 16 }.params(), "pi=16");
+        assert_eq!(CpMethod::Upipe { u: 8, gqa_schedule: true }.params(), "U=8,gqa");
+        assert_eq!(CpMethod::Upipe { u: 8, gqa_schedule: false }.params(), "U=8,naive");
+        assert_eq!(CpMethod::UspHybrid { ulysses: 8, ring: 2 }.params(), "uly=8,ring=2");
+        assert_eq!(CpMethod::UpipeFpdt { u: 8, pi: 4 }.params(), "U=8,pi=4");
+    }
+
+    #[test]
+    fn divisor_enumeration() {
+        assert_eq!(divisors(32), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(factor_pairs(8), vec![(1, 8), (2, 4), (4, 2), (8, 1)]);
+        for (a, b) in factor_pairs(64) {
+            assert_eq!(a * b, 64);
+        }
     }
 }

@@ -22,6 +22,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod memory;
 pub mod model;
+pub mod planner;
 pub mod report;
 pub mod runtime;
 pub mod schedule;

@@ -7,6 +7,10 @@
 //!   repro all                                         everything above
 //! Simulation:
 //!   repro simulate --model llama3-8b --method upipe --seq 1M
+//! Planning:
+//!   repro plan --model llama3-8b --gpus 8 [--json]    sweep every valid
+//!       config, bisect max trainable context, rank (the "5M" search)
+//!   repro frontier --model ... [--json]               Pareto frontier only
 //! Functional runtime (needs `make artifacts`):
 //!   repro parity        distributed UPipe vs monolithic logits check
 //!   repro train N       N training steps of the SMALL model (AOT step)
@@ -86,6 +90,8 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
             );
         }
         "compose" => cmd_compose()?,
+        "plan" => cmd_plan(rest, false)?,
+        "frontier" => cmd_plan(rest, true)?,
         "simulate" => cmd_simulate(rest)?,
         "parity" => cmd_parity()?,
         "train" => cmd_train(rest)?,
@@ -102,6 +108,11 @@ repro — Untied Ulysses (UPipe) reproduction
   repro table1..table6 | fig1 | fig2 | fig4 | fig5 | fig6 | savings | all
   repro deviation
   repro simulate --model llama3-8b|qwen3-32b --method native|ring|ulysses|fpdt|upipe --seq 1M
+  repro plan --model llama3-8b --gpus 8 [--seq 1M] [--quantum 128K] [--cap 32M]
+             [--compose] [--threads N] [--json]
+      sweep every valid parallel config for the model/cluster, bisect each
+      one's max trainable context, rank, and mark the Pareto frontier
+  repro frontier ...  same flags; print only the Pareto frontier
   repro compose       UPipe x FPDT composition study (paper §5.3.2)
   repro parity
   repro train [steps=100]
@@ -148,6 +159,46 @@ fn cmd_compose() -> anyhow::Result<()> {
     t.note("composition keeps FPDT-level memory with UPipe's GQA comm schedule;");
     t.note("it inherits FPDT's CPU-stall throughput cost — the paper's anticipated tradeoff");
     t.print();
+    Ok(())
+}
+
+fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
+    use untied_ulysses::config::ClusterConfig;
+    use untied_ulysses::planner::{plan, PlanRequest};
+    use untied_ulysses::report::planner as planner_report;
+
+    let model_name = flag(rest, "--model").unwrap_or_else(|| "llama3-8b".into());
+    let model = ModelDims::by_name(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --model {model_name}"))?;
+    let gpus: u64 = match flag(rest, "--gpus") {
+        Some(g) => g.parse().map_err(|_| anyhow::anyhow!("bad --gpus {g}"))?,
+        None => 8,
+    };
+    let cluster = ClusterConfig::h100_cluster(gpus).map_err(anyhow::Error::msg)?;
+    let mut req = PlanRequest::new(model, cluster);
+    if let Some(s) = flag(rest, "--seq") {
+        req.reference_s = parse_tokens(&s).ok_or_else(|| anyhow::anyhow!("bad --seq {s}"))?;
+    }
+    if let Some(q) = flag(rest, "--quantum") {
+        req.quantum = parse_tokens(&q).ok_or_else(|| anyhow::anyhow!("bad --quantum {q}"))?;
+    }
+    if let Some(c) = flag(rest, "--cap") {
+        req.cap_s = parse_tokens(&c).ok_or_else(|| anyhow::anyhow!("bad --cap {c}"))?;
+    }
+    if let Some(t) = flag(rest, "--threads") {
+        req.threads = t.parse().map_err(|_| anyhow::anyhow!("bad --threads {t}"))?;
+    }
+    req.compositions = rest.iter().any(|a| a == "--compose");
+    anyhow::ensure!(req.cap_s >= req.quantum, "--cap must be at least --quantum");
+
+    let out = plan(&req);
+    let json = rest.iter().any(|a| a == "--json");
+    match (json, frontier_only) {
+        (true, true) => println!("{}", planner_report::frontier_json(&out).pretty()),
+        (true, false) => println!("{}", planner_report::plan_json(&out).pretty()),
+        (false, true) => planner_report::frontier_table(&out).print(),
+        (false, false) => planner_report::plan_table(&out).print(),
+    }
     Ok(())
 }
 

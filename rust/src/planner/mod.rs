@@ -1,0 +1,24 @@
+//! Configuration planner: turn the calibrated simulator into a capacity-
+//! planning tool. The paper's headline — UPipe unlocks 5M-token context on
+//! one 8×H100 node — is one point in a large configuration space
+//! (method × U × ulysses/ring × π × pinning × model × cluster × S); this
+//! subsystem searches the whole space:
+//!
+//! - [`space`] enumerates every valid [`crate::config::ParallelConfig`]
+//!   for a (model, cluster) pair, generalizing the hand-picked §5.1
+//!   presets;
+//! - [`search`] holds the bisection that finds each configuration's
+//!   maximum trainable context and the Pareto-frontier extractor;
+//! - [`eval`] runs the sweep on a worker pool with memoized traces and
+//!   reports, producing a ranked [`PlanOutcome`].
+//!
+//! Driven by `repro plan` / `repro frontier` (`--json` for machine-readable
+//! output) and rendered by [`crate::report::planner`].
+
+pub mod eval;
+pub mod search;
+pub mod space;
+
+pub use eval::{plan, ConfigPlan, PlanOutcome, PlanRequest};
+pub use search::{bisect_max, pareto_front};
+pub use space::enumerate_space;

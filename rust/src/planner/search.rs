@@ -1,0 +1,137 @@
+//! Search primitives: bisection for the maximum trainable context of one
+//! configuration, and Pareto-frontier extraction over the evaluated space.
+
+/// Largest multiple of `quantum` in `[quantum, cap]` for which `feasible`
+/// holds, assuming monotone feasibility (peak memory grows with S).
+/// Returns `None` when even one quantum of context is infeasible.
+///
+/// Probes O(log(cap/quantum)) points: a doubling ascent brackets the
+/// memory wall, then bisection pins it to quantum granularity. `cap` must
+/// be a multiple of `quantum`.
+pub fn bisect_max(quantum: u64, cap: u64, mut feasible: impl FnMut(u64) -> bool) -> Option<u64> {
+    assert!(quantum > 0 && cap >= quantum, "bad search bounds");
+    assert!(cap % quantum == 0, "cap must be a multiple of quantum");
+    if !feasible(quantum) {
+        return None;
+    }
+    let mut lo = quantum; // feasible
+    let mut hi = quantum;
+    loop {
+        if hi >= cap {
+            return Some(lo);
+        }
+        hi = (hi * 2).min(cap);
+        if feasible(hi) {
+            lo = hi;
+            if hi == cap {
+                return Some(cap);
+            }
+        } else {
+            break;
+        }
+    }
+    // Invariant: feasible(lo), !feasible(hi), both multiples of quantum.
+    while hi - lo > quantum {
+        let mut mid = (lo + hi) / 2 / quantum * quantum;
+        if mid <= lo {
+            mid = lo + quantum;
+        }
+        if feasible(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Some(lo)
+}
+
+/// Indices of the non-dominated points among `(cost, benefit)` pairs —
+/// cost minimized (peak GiB), benefit maximized (tokens/s/GPU). A point is
+/// dominated when another is no worse on both axes and strictly better on
+/// at least one.
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut front = Vec::new();
+    'outer: for (i, &(ci, bi)) in points.iter().enumerate() {
+        for (j, &(cj, bj)) in points.iter().enumerate() {
+            if j != i && cj <= ci && bj >= bi && (cj < ci || bj > bi) {
+                continue 'outer;
+            }
+        }
+        front.push(i);
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bisection_finds_exact_wall() {
+        let q = 1u64 << 17; // 128K
+        for wall_steps in [1u64, 2, 3, 37, 40, 255, 256] {
+            let wall = wall_steps * q;
+            let mut probes = 0;
+            let got = bisect_max(q, 256 * q, |s| {
+                probes += 1;
+                s <= wall
+            });
+            assert_eq!(got, Some(wall), "wall_steps={wall_steps}");
+            assert!(probes <= 20, "{probes} probes for wall_steps={wall_steps}");
+        }
+    }
+
+    #[test]
+    fn bisection_edge_cases() {
+        let q = 1024u64;
+        assert_eq!(bisect_max(q, 64 * q, |_| false), None);
+        assert_eq!(bisect_max(q, 64 * q, |_| true), Some(64 * q));
+        assert_eq!(bisect_max(q, q, |_| true), Some(q));
+        assert_eq!(bisect_max(q, 64 * q, |s| s < 2 * q), Some(q));
+    }
+
+    #[test]
+    fn prop_bisection_matches_linear_scan() {
+        prop::check("bisect-vs-scan", 200, &[(0, 65), (1, 64)], |a| {
+            let q = 512u64;
+            let wall = a[0] as u64 * q; // 0 => infeasible everywhere
+            let cap = a[1] as u64 * q;
+            let got = bisect_max(q, cap, |s| s <= wall);
+            let want = (1..=cap / q).map(|k| k * q).filter(|&s| s <= wall).max();
+            got == want
+        });
+    }
+
+    #[test]
+    fn frontier_on_known_points() {
+        // (cost, benefit): b dominates d; a, b, c are the frontier.
+        let pts = [(1.0, 1.0), (2.0, 5.0), (4.0, 9.0), (3.0, 4.0)];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+        // Duplicates survive together (neither strictly better).
+        let dup = [(1.0, 1.0), (1.0, 1.0)];
+        assert_eq!(pareto_front(&dup), vec![0, 1]);
+        assert!(pareto_front(&[]).is_empty());
+    }
+
+    #[test]
+    fn prop_frontier_is_sound_and_complete() {
+        prop::check("pareto-sound", 50, &[(1, 30), (0, 10_000)], |a| {
+            let mut rng = Rng::new(a[1] as u64);
+            let pts: Vec<(f64, f64)> = (0..a[0])
+                .map(|_| (rng.f64() * 10.0, rng.f64() * 10.0))
+                .collect();
+            let front = pareto_front(&pts);
+            let dominated = |i: usize| {
+                pts.iter().enumerate().any(|(j, &(cj, bj))| {
+                    let (ci, bi) = pts[i];
+                    j != i && cj <= ci && bj >= bi && (cj < ci || bj > bi)
+                })
+            };
+            // Sound: no frontier point is dominated. Complete: every
+            // non-frontier point is dominated by someone.
+            (0..pts.len()).all(|i| front.contains(&i) != dominated(i))
+        });
+    }
+}

@@ -1,0 +1,169 @@
+//! Sweep-space enumerator: expand (model, cluster) into every valid
+//! context-parallel configuration — all U divisors of H, all ulysses×ring
+//! factorizations of the CP degree, the FPDT π sweep, host-memory pinning
+//! — generalizing the paper's hand-picked presets (§5.1). Everything
+//! emitted passes [`ParallelConfig::validate`]; hybrid families are only
+//! emitted where they are physically meaningful (Ulysses inside a node,
+//! ring across the rest).
+
+use crate::config::parallel::{divisors, factor_pairs};
+use crate::config::{ClusterConfig, CpMethod, ParallelConfig};
+use crate::model::ModelDims;
+
+/// FPDT sequence-chunk counts swept (the paper evaluates π = 16).
+pub const FPDT_PI: [u32; 5] = [4, 8, 16, 32, 64];
+
+/// Enumerate every valid configuration for `model` on `cluster`.
+///
+/// `compositions` adds the §5.3.2 UPipe×FPDT composition — anticipated
+/// future work in the paper, so it is excluded from the default
+/// paper-faithful space (where the evaluated method families compete).
+pub fn enumerate_space(
+    model: &ModelDims,
+    cluster: &ClusterConfig,
+    compositions: bool,
+) -> Vec<ParallelConfig> {
+    let c = cluster.total_gpus();
+    let h = model.n_heads;
+    let mut methods = vec![CpMethod::NativePyTorch, CpMethod::Ring];
+    if cluster.nodes == 1 {
+        methods.push(CpMethod::Ulysses);
+        // UPipe: U must be a multiple of C and a divisor of H (§3.3).
+        for u in divisors(h) {
+            if u % c == 0 {
+                for gqa in [true, false] {
+                    methods.push(CpMethod::Upipe { u: u as u32, gqa_schedule: gqa });
+                }
+            }
+        }
+    } else {
+        // USP-Hybrid: Ulysses over a divisor of the node, ring across the
+        // rest; 1-way factors degenerate into the pure methods and are
+        // skipped.
+        let per_node = cluster.gpus_per_node;
+        for (cu, cr) in factor_pairs(c) {
+            if cu >= 2 && cr >= 2 && cu <= per_node && per_node % cu == 0 {
+                methods.push(CpMethod::UspHybrid { ulysses: cu as u32, ring: cr as u32 });
+            }
+        }
+        // UPipe-Hybrid: stages all-to-all over the whole node (the §5.1
+        // "restrict Ulysses degree to 8" setup), so U must cover a node's
+        // ranks; ring spans the nodes.
+        for u in divisors(h) {
+            if u % cluster.gpus_per_node == 0 {
+                methods.push(CpMethod::UpipeHybrid {
+                    u: u as u32,
+                    ulysses: cluster.gpus_per_node as u32,
+                    ring: cluster.nodes as u32,
+                });
+            }
+        }
+    }
+    for pi in FPDT_PI {
+        methods.push(CpMethod::Fpdt { pi });
+    }
+    if compositions {
+        for u in divisors(h) {
+            if u % c != 0 {
+                continue;
+            }
+            for pi in FPDT_PI {
+                methods.push(CpMethod::UpipeFpdt { u: u as u32, pi });
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for m in methods {
+        // §5.1: PIN_MEMORY is a real capacity knob — the paper flips it
+        // off at 5M so offloaded activations still fit in host RAM.
+        for pin in [true, false] {
+            let mut p = ParallelConfig::new(m, c);
+            p.pin_memory = pin;
+            if p.validate(h).is_ok() {
+                out.push(p);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::collections::HashSet;
+
+    fn llama8() -> Vec<ParallelConfig> {
+        enumerate_space(&ModelDims::llama3_8b(), &ClusterConfig::h100_node(), false)
+    }
+
+    #[test]
+    fn llama_single_node_space_is_broad_and_valid() {
+        let space = llama8();
+        assert!(space.len() >= 20, "only {} configs", space.len());
+        for p in &space {
+            assert!(p.validate(32).is_ok(), "{p:?}");
+            assert_eq!(p.cp_degree, 8);
+        }
+        let has = |m: CpMethod| space.iter().any(|p| p.method == m);
+        assert!(has(CpMethod::Upipe { u: 8, gqa_schedule: true }));
+        // No hybrids on a single node.
+        for p in &space {
+            assert!(!p.method.label().contains("Hybrid"), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn no_duplicate_configs() {
+        for compose in [false, true] {
+            let space = enumerate_space(
+                &ModelDims::qwen3_32b(),
+                &ClusterConfig::h100_2nodes(),
+                compose,
+            );
+            let keys: HashSet<String> = space
+                .iter()
+                .map(|p| format!("{:?}|{}", p.method, p.pin_memory))
+                .collect();
+            assert_eq!(keys.len(), space.len());
+        }
+    }
+
+    #[test]
+    fn multi_node_space_uses_hybrids() {
+        let space = enumerate_space(&ModelDims::qwen3_32b(), &ClusterConfig::h100_2nodes(), false);
+        assert!(space.len() >= 20, "only {} configs", space.len());
+        let has = |m: CpMethod| space.iter().any(|p| p.method == m);
+        assert!(has(CpMethod::UspHybrid { ulysses: 8, ring: 2 }));
+        assert!(has(CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 }));
+        // The single-node methods are replaced by their hybrid forms.
+        for p in &space {
+            let single = matches!(p.method, CpMethod::Ulysses | CpMethod::Upipe { .. });
+            assert!(!single, "{p:?}");
+        }
+    }
+
+    #[test]
+    fn compositions_are_opt_in() {
+        let base = llama8().len();
+        let with = enumerate_space(&ModelDims::llama3_8b(), &ClusterConfig::h100_node(), true);
+        assert!(with.len() > base);
+    }
+
+    #[test]
+    fn prop_every_enumerated_config_validates() {
+        let gpu_choices = [1u64, 2, 4, 8, 16, 24, 32];
+        prop::check("space-validates", 40, &[(0, 6), (0, 1)], |a| {
+            let cluster = ClusterConfig::h100_cluster(gpu_choices[a[0] as usize]).unwrap();
+            let model = if a[1] == 0 {
+                ModelDims::llama3_8b()
+            } else {
+                ModelDims::qwen3_32b()
+            };
+            enumerate_space(&model, &cluster, true)
+                .iter()
+                .all(|p| p.validate(model.n_heads).is_ok() && p.cp_degree == cluster.total_gpus())
+        });
+    }
+}

@@ -5,5 +5,6 @@
 
 pub mod figures;
 pub mod paper_data;
+pub mod planner;
 pub mod savings;
 pub mod tables;

@@ -1,0 +1,196 @@
+//! Planner output rendering: the ranked plan table, the Pareto-frontier
+//! table, and machine-readable JSON for CI artifacts / downstream tooling.
+
+use crate::planner::{ConfigPlan, PlanOutcome};
+use crate::util::fmt::tokens;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+const PLAN_HEADER: [&str; 9] = [
+    "#", "Method", "Params", "Host", "MaxCtx", "tok/s@max", "GiB@ref", "tok/s@ref", "Pareto",
+];
+
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(x) => format!("{x:.prec$}"),
+        None => "-".into(),
+    }
+}
+
+fn max_ctx_label(c: &ConfigPlan) -> String {
+    match c.max_context {
+        // hit_cap: the search ceiling was still feasible, so this is a
+        // lower bound, not a measured memory wall.
+        Some(s) if c.hit_cap => format!(">={}", tokens(s)),
+        Some(s) => tokens(s),
+        None => "-".into(),
+    }
+}
+
+fn config_cells(rank: usize, c: &ConfigPlan) -> Vec<String> {
+    vec![
+        rank.to_string(),
+        c.parallel.method.label().to_string(),
+        c.parallel.method.params(),
+        if c.parallel.pin_memory { "pin" } else { "nopin" }.to_string(),
+        max_ctx_label(c),
+        fmt_opt(c.max_ctx_tok_s_gpu, 0),
+        fmt_opt(c.ref_peak_gib, 1),
+        fmt_opt(c.ref_tok_s_gpu, 0),
+        if c.pareto { "*".into() } else { String::new() },
+    ]
+}
+
+fn add_notes(t: &mut Table, out: &PlanOutcome) {
+    t.note(&format!(
+        "ref = {}; search granularity {}; {} sims, trace cache {}/{} hits",
+        tokens(out.reference_s),
+        tokens(out.quantum),
+        out.simulations,
+        out.cache_hits,
+        out.cache_hits + out.cache_misses
+    ));
+    t.note("Pareto * = non-dominated on (GiB@ref, tok/s@ref); Host = offload pinning");
+}
+
+/// Full ranked plan (the `repro plan` output).
+pub fn plan_table(out: &PlanOutcome) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Plan — {} on {} ({} GPUs), ranked by max trainable context",
+            out.model.name,
+            out.cluster.name,
+            out.cluster.total_gpus()
+        ),
+        &PLAN_HEADER,
+    );
+    for (i, c) in out.configs.iter().enumerate() {
+        t.row(config_cells(i + 1, c));
+    }
+    add_notes(&mut t, out);
+    t
+}
+
+/// Frontier-only view (the `repro frontier` output), cheapest peak first.
+pub fn frontier_table(out: &PlanOutcome) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Pareto frontier — {} on {} ({} GPUs) at S = {}",
+            out.model.name,
+            out.cluster.name,
+            out.cluster.total_gpus(),
+            tokens(out.reference_s)
+        ),
+        &PLAN_HEADER,
+    );
+    for (i, c) in out.frontier().into_iter().enumerate() {
+        t.row(config_cells(i + 1, c));
+    }
+    add_notes(&mut t, out);
+    t
+}
+
+fn num_or_null(v: Option<f64>) -> Json {
+    v.map(Json::Num).unwrap_or(Json::Null)
+}
+
+fn config_json(c: &ConfigPlan) -> Json {
+    let ctx_label = match c.max_context {
+        Some(s) => Json::string(&tokens(s)),
+        None => Json::Null,
+    };
+    Json::obj(vec![
+        ("method", Json::string(c.parallel.method.label())),
+        ("params", Json::string(&c.parallel.method.params())),
+        ("pin_memory", Json::Bool(c.parallel.pin_memory)),
+        ("cp_degree", Json::int(c.parallel.cp_degree)),
+        ("max_context", c.max_context.map(Json::int).unwrap_or(Json::Null)),
+        ("max_context_label", ctx_label),
+        ("max_context_capped", Json::Bool(c.hit_cap)),
+        ("max_ctx_peak_gib", num_or_null(c.max_ctx_peak_gib)),
+        ("max_ctx_tok_s_per_gpu", num_or_null(c.max_ctx_tok_s_gpu)),
+        ("ref_peak_gib", num_or_null(c.ref_peak_gib)),
+        ("ref_tok_s_per_gpu", num_or_null(c.ref_tok_s_gpu)),
+        ("pareto", Json::Bool(c.pareto)),
+    ])
+}
+
+fn outcome_json(out: &PlanOutcome, configs: Vec<Json>) -> Json {
+    let cache = Json::obj(vec![
+        ("hits", Json::int(out.cache_hits)),
+        ("misses", Json::int(out.cache_misses)),
+    ]);
+    Json::obj(vec![
+        ("model", Json::string(out.model.name)),
+        ("cluster", Json::string(out.cluster.name)),
+        ("gpus", Json::int(out.cluster.total_gpus())),
+        ("reference_s", Json::int(out.reference_s)),
+        ("quantum", Json::int(out.quantum)),
+        ("configs", Json::Arr(configs)),
+        ("simulations", Json::int(out.simulations)),
+        ("trace_cache", cache),
+        ("wall_s", Json::Num(out.wall_s)),
+    ])
+}
+
+/// Machine-readable plan (`repro plan --json`).
+pub fn plan_json(out: &PlanOutcome) -> Json {
+    outcome_json(out, out.configs.iter().map(config_json).collect())
+}
+
+/// Machine-readable frontier (`repro frontier --json`).
+pub fn frontier_json(out: &PlanOutcome) -> Json {
+    outcome_json(out, out.frontier().into_iter().map(config_json).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::model::ModelDims;
+    use crate::planner::{plan, PlanRequest};
+
+    fn small_plan() -> PlanOutcome {
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 2;
+        plan(&req)
+    }
+
+    #[test]
+    fn tables_render() {
+        let out = small_plan();
+        let t = plan_table(&out).render();
+        assert!(t.contains("UPipe"));
+        assert!(t.contains("llama3-8b"));
+        let f = frontier_table(&out).render();
+        assert!(f.contains("Pareto frontier"));
+    }
+
+    #[test]
+    fn capped_max_context_is_marked_as_lower_bound() {
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 4 << 20; // below UPipe's 5M wall: the cap binds
+        req.threads = 2;
+        let out = plan(&req);
+        let top = out.configs.first().unwrap();
+        assert!(top.hit_cap);
+        assert_eq!(max_ctx_label(top), ">=4M");
+        let j = plan_json(&out).render();
+        assert!(j.contains("\"max_context_capped\":true"));
+    }
+
+    #[test]
+    fn json_has_ranking_and_cells() {
+        let out = small_plan();
+        let j = plan_json(&out).pretty();
+        assert!(j.contains("\"model\": \"llama3-8b\""));
+        assert!(j.contains("\"method\": \"UPipe\""));
+        assert!(j.contains("\"max_context_label\": \"5M\""));
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        let fj = frontier_json(&out).render();
+        assert!(fj.contains("\"pareto\":true"));
+    }
+}

@@ -6,6 +6,11 @@
 //! Schedules encode the *structural* behaviour — which buffers exist when
 //! (Tables 2 & 6), what is communicated (Fig. 4), what overlaps — while
 //! the engine's calibration holds the fitted hardware rates.
+//!
+//! The planner sweeps thousands of (config, S) cells, many of them
+//! repeatedly (bisection re-probes, frontier + report passes, pin-memory
+//! variants that share a trace); [`TraceCache`] memoizes built traces so
+//! those replays skip straight to pricing.
 
 pub mod common;
 pub mod compose;
@@ -16,6 +21,10 @@ pub mod ring_attn;
 pub mod ulysses;
 pub mod upipe;
 pub mod usp;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::config::presets::RunPreset;
 use crate::config::CpMethod;
@@ -46,11 +55,24 @@ pub fn simulate(p: &RunPreset) -> StepReport {
 }
 
 pub fn simulate_with(p: &RunPreset, calib: &Calibration) -> StepReport {
-    let q = Quantities::new(p);
     let trace = build_trace(p);
+    run_trace(p, calib, &trace)
+}
+
+/// `simulate_with`, but fetching the op trace from (or inserting it into)
+/// `cache` — the planner's hot path.
+pub fn simulate_cached(p: &RunPreset, calib: &Calibration, cache: &TraceCache) -> StepReport {
+    let trace = cache.trace(p);
+    run_trace(p, calib, trace.as_slice())
+}
+
+/// Price an already-built trace for a preset (shared by the cached and
+/// uncached simulation paths).
+fn run_trace(p: &RunPreset, calib: &Calibration, trace: &[Op]) -> StepReport {
+    let q = Quantities::new(p);
     let mut engine = Engine::new(calib.clone(), q.hbm_limit, q.persistent_bytes(calib));
     engine.host_ram = q.host_ram_for_offload();
-    let mut report = engine.run(&trace);
+    let mut report = engine.run(trace);
     // FPDT's published implementation fails beyond 4M tokens (§5.2 note);
     // reproduce the failure rather than extrapolating.
     if let CpMethod::Fpdt { .. } = p.parallel.method {
@@ -59,4 +81,118 @@ pub fn simulate_with(p: &RunPreset, calib: &Calibration) -> StepReport {
         }
     }
     report
+}
+
+/// Thread-safe memo of built op traces, keyed by every input `build_trace`
+/// reads. Traces are immutable once built, so they are shared as `Arc`s;
+/// concurrent builders may race on a cold key, in which case one build is
+/// discarded and the canonical entry wins.
+#[derive(Default)]
+pub struct TraceCache {
+    traces: Mutex<HashMap<String, Arc<Vec<Op>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl TraceCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cache key: everything the trace depends on — the full model dims
+    /// (not just the name: refit experiments build modified variants that
+    /// keep it), cluster shape, layout and S. Note `pin_memory` is
+    /// deliberately absent — pinning changes pricing (host-RAM budget),
+    /// not trace structure, so pin variants share one trace.
+    pub fn key(p: &RunPreset) -> String {
+        format!(
+            "{:?}|{:?}|{}n{}g|c{}|s{}|ac{}",
+            p.parallel.method,
+            p.model,
+            p.cluster.nodes,
+            p.cluster.gpus_per_node,
+            p.parallel.cp_degree,
+            p.seq_len,
+            p.parallel.ac_offload
+        )
+    }
+
+    /// Fetch (or build and insert) the trace for `p`.
+    pub fn trace(&self, p: &RunPreset) -> Arc<Vec<Op>> {
+        let key = Self::key(p);
+        if let Some(t) = self.traces.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return t.clone();
+        }
+        // Build outside the lock: traces can be long and the planner's
+        // workers build neighbouring cells concurrently.
+        let built = Arc::new(build_trace(p));
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.traces.lock().unwrap();
+        map.entry(key).or_insert(built).clone()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.traces.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::llama_single_node;
+
+    #[test]
+    fn cached_simulation_matches_uncached() {
+        let cache = TraceCache::new();
+        let cal = Calibration::default();
+        for m in [CpMethod::Ulysses, CpMethod::Upipe { u: 8, gqa_schedule: true }] {
+            for s in [1u64 << 20, 2 << 20] {
+                let p = llama_single_node(m, s);
+                let a = simulate_with(&p, &cal);
+                let b = simulate_cached(&p, &cal, &cache);
+                assert_eq!(a.step_time, b.step_time, "{m:?} S={s}");
+                assert_eq!(a.peak_bytes, b.peak_bytes, "{m:?} S={s}");
+                assert_eq!(a.oom, b.oom, "{m:?} S={s}");
+            }
+        }
+        assert_eq!((cache.hits(), cache.misses()), (0, 4));
+        // Replaying a cell hits.
+        let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        simulate_cached(&p, &cal, &cache);
+        assert_eq!((cache.hits(), cache.len()), (1, 4));
+    }
+
+    #[test]
+    fn pin_variants_share_a_trace() {
+        let cache = TraceCache::new();
+        let cal = Calibration::default();
+        let mut a = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        a.parallel.pin_memory = true;
+        let mut b = a.clone();
+        b.parallel.pin_memory = false;
+        simulate_cached(&a, &cal, &cache);
+        simulate_cached(&b, &cal, &cache);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn fpdt_failure_rule_applies_on_cached_path() {
+        let cache = TraceCache::new();
+        let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, 5 << 20);
+        let r = simulate_cached(&p, &Calibration::default(), &cache);
+        assert!(r.failed.is_some() || r.oom, "FPDT must not extrapolate past 4M");
+    }
 }

@@ -1,9 +1,11 @@
 //! Small self-contained utilities (the offline vendor set has no serde /
-//! criterion / proptest, so formatting, RNG, property testing and the bench
-//! harness live here).
+//! criterion / proptest / rayon, so formatting, RNG, property testing, JSON
+//! emission, the bench harness and the worker pool live here).
 
 pub mod bench;
 pub mod fmt;
+pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,80 @@
+//! Minimal scoped worker pool (rayon is not in the offline vendor set):
+//! an order-preserving parallel map over a slice. Workers claim items from
+//! a shared counter, so uneven per-item cost (a cheap Native bisection vs
+//! an expensive FPDT π=64 one) balances automatically.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Default worker count: the machine's parallelism, capped — planner items
+/// are short and share memoization locks, so more threads only contend.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Map `f` over `items` on `threads` workers (0 = auto), preserving input
+/// order in the returned vector. `f` receives `(index, &item)`.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = if threads == 0 { default_threads() } else { threads }.min(n);
+    if threads <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                slots.lock().unwrap()[i] = Some(r);
+            });
+        }
+    });
+    slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|r| r.expect("pool worker dropped an item"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let items: Vec<u64> = (0..100).collect();
+        let out = parallel_map(&items, 4, |i, &x| x * 2 + i as u64);
+        assert_eq!(out.len(), 100);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, items[i] * 3);
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        let empty: [u64; 0] = [];
+        assert!(parallel_map(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7u64], 8, |_, &x| x + 1), vec![8]);
+        assert_eq!(parallel_map(&[1u64, 2, 3], 1, |_, &x| x * x), vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn auto_thread_count_is_sane() {
+        let t = default_threads();
+        assert!((1..=16).contains(&t));
+    }
+}

@@ -1,0 +1,135 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real dependency (PJRT CPU client + HLO-text compilation) is a native
+//! library that is not part of the offline vendor set. This stub mirrors the
+//! exact API subset `untied_ulysses::runtime` uses so the whole crate —
+//! simulator, planner, report generators, CLI — builds and tests without it.
+//! Every entry point that would touch PJRT returns an error at *runtime*;
+//! nothing panics. See README.md in this directory for how to swap in the
+//! real bindings.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error: carries the message shown to users who hit the PJRT paths.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: xla PJRT bindings are not available in this build \
+         (offline stub; see rust/vendor/xla/README.md)"
+    )))
+}
+
+/// Element types moved across the PJRT boundary.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side literal (stub: shapeless placeholder).
+#[derive(Debug, Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Parsed HLO module (stub: opaque).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation handle (stub: opaque).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer returned by an execution (stub: opaque).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable (stub: opaque).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// PJRT client (stub: construction always fails, so no other stub method is
+/// reachable through the runtime layer).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pjrt_paths_error_instead_of_panicking() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+
+    #[test]
+    fn error_message_names_the_stub() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("offline stub"));
+    }
+}
