@@ -28,7 +28,12 @@ fn main() {
     // engine execution
     let q = untied_ulysses::schedule::Quantities::new(&preset);
     let cal = Calibration::default();
-    let engine = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal));
+    let engine = Engine::new(
+        cal.clone(),
+        q.hbm_limit,
+        q.persistent_bytes(&cal),
+        q.host_ram_for_offload(),
+    );
     let s2 = Bench::new("hotpath/engine_run_upipe_3M").budget_ms(800).run(|| engine.run(&trace));
     println!(
         "  engine rate: {:.1} M ops/s",

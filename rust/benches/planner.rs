@@ -4,7 +4,7 @@
 
 use untied_ulysses::config::ClusterConfig;
 use untied_ulysses::model::ModelDims;
-use untied_ulysses::planner::{enumerate_space, plan, PlanRequest};
+use untied_ulysses::planner::{enumerate_space, plan, PlanRequest, SweepDims};
 use untied_ulysses::util::bench::Bench;
 use untied_ulysses::util::fmt::tokens;
 use untied_ulysses::util::json::Json;
@@ -32,7 +32,8 @@ fn main() {
 
     let sweep = Bench::new("planner/plan_llama3-8b_8xH100").budget_ms(2500).run(|| plan(&req));
     let bench_enum = Bench::new("planner/enumerate_space").budget_ms(200);
-    let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, true));
+    let enum_dims = SweepDims { compositions: true, ..SweepDims::default() };
+    let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, &enum_dims));
 
     let json = Json::obj(vec![
         ("bench", Json::string("planner")),

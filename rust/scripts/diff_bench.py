@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Diff two BENCH_planner.json files (previous CI artifact vs current run)
+and fail on a large planner-throughput regression.
+
+Usage: diff_bench.py <previous.json> <current.json> [max_regression]
+
+`max_regression` is the allowed slowdown factor on configs/sec (default 3.0:
+CI runners are noisy and the sweep space legitimately grows; the gate is for
+order-of-magnitude engine regressions, not percent-level noise).
+"""
+
+import json
+import sys
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    try:
+        prev = json.load(open(sys.argv[1]))
+    except (OSError, ValueError) as e:
+        # A corrupt/truncated previous artifact is a baseline problem, not a
+        # regression: treat it like a missing baseline and reset.
+        print(f"previous artifact unreadable ({e}); baseline resets")
+        prev = {}
+    cur = json.load(open(sys.argv[2]))  # current must be readable — fail loudly
+    max_regression = float(sys.argv[3]) if len(sys.argv) > 3 else 3.0
+
+    for key in ("configs_per_sec", "sims_per_sec", "plan_wall_s_mean", "configs"):
+        p, c = prev.get(key), cur.get(key)
+        print(f"{key}: prev {p} -> cur {c}")
+
+    c = float(cur.get("configs_per_sec") or 0.0)
+    if c <= 0.0:
+        # A missing/zero current value means the bench emitter broke — that
+        # must fail the gate, not silently disable it.
+        print("FAIL: current BENCH_planner.json has no usable configs_per_sec")
+        return 1
+    p = float(prev.get("configs_per_sec") or 0.0)
+    if p <= 0.0:
+        print("previous artifact has no usable configs_per_sec; baseline resets")
+        return 0
+    if c < p / max_regression:
+        print(
+            f"FAIL: planner throughput regressed more than {max_regression}x "
+            f"({p:.1f} -> {c:.1f} configs/sec)"
+        )
+        return 1
+    print("planner perf trajectory OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

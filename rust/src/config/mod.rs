@@ -5,4 +5,4 @@ pub mod parallel;
 pub mod presets;
 
 pub use cluster::ClusterConfig;
-pub use parallel::{CpMethod, ParallelConfig};
+pub use parallel::{AcMode, CpMethod, ParallelConfig};

@@ -1,4 +1,41 @@
-//! Parallelism layout: which context-parallelism method, with which degrees.
+//! Parallelism layout: which context-parallelism method, with which degrees,
+//! plus the run-shape knobs every schedule consumes through
+//! [`crate::schedule::ScheduleCtx`]: activation-checkpointing mode,
+//! micro-batching and the tensor-parallel degree.
+
+/// Activation-checkpointing mode (Fig. 2 compares all three for Ulysses;
+/// the planner sweeps them per method).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcMode {
+    /// No checkpointing: every layer's intra-layer activations stay
+    /// resident until backward.
+    NoAc,
+    /// Full AC, checkpoints (layer inputs) kept on GPU.
+    AcGpu,
+    /// Full AC with CPU offloading (paper default, "AO" in Fig. 2).
+    AcOffload,
+}
+
+impl AcMode {
+    /// Compact label for tables / JSON.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AcMode::NoAc => "noac",
+            AcMode::AcGpu => "ac",
+            AcMode::AcOffload => "ao",
+        }
+    }
+
+    /// Parse a CLI spelling (`ao`/`offload`, `ac`/`gpu`, `noac`/`none`).
+    pub fn parse(s: &str) -> Option<AcMode> {
+        match s {
+            "ao" | "offload" => Some(AcMode::AcOffload),
+            "ac" | "gpu" => Some(AcMode::AcGpu),
+            "noac" | "none" => Some(AcMode::NoAc),
+            _ => None,
+        }
+    }
+}
 
 /// The context-parallelism methods compared in the paper's evaluation
 /// (Table 3/4 rows, Fig. 1/2/5).
@@ -50,6 +87,17 @@ impl CpMethod {
         )
     }
 
+    /// AC modes a method's schedule can execute. The FPDT family
+    /// hard-requires offloaded checkpoints (its sequence chunks round-trip
+    /// through host memory); every other method supports all three Fig. 2
+    /// variants.
+    pub fn supported_ac_modes(&self) -> &'static [AcMode] {
+        match self {
+            CpMethod::Fpdt { .. } | CpMethod::UpipeFpdt { .. } => &[AcMode::AcOffload],
+            _ => &[AcMode::AcOffload, AcMode::AcGpu, AcMode::NoAc],
+        }
+    }
+
     /// Compact parameter string for tables / JSON (empty for the
     /// parameter-free methods).
     pub fn params(&self) -> String {
@@ -84,18 +132,37 @@ pub fn factor_pairs(n: u64) -> Vec<(u64, u64)> {
 #[derive(Debug, Clone, PartialEq)]
 pub struct ParallelConfig {
     pub method: CpMethod,
-    /// Total context-parallel degree C (= total GPUs here; FSDP shards
-    /// params over the same group, as in the paper's setup).
+    /// Context-parallel degree C (sequence sharding; with tp == 1 this is
+    /// the total GPU count, as in the paper's setup — FSDP shards params
+    /// over the whole world either way).
     pub cp_degree: u64,
-    /// Full activation checkpointing with CPU offload (paper default).
-    pub ac_offload: bool,
+    /// Activation-checkpointing mode (paper default: full AC + offload).
+    pub ac_mode: AcMode,
     /// Pinned host memory for offloaded activations (paper: true below 5M).
     pub pin_memory: bool,
+    /// Micro-batches per optimizer step (sequential gradient accumulation;
+    /// the paper runs 1).
+    pub micro_batch: u64,
+    /// Tensor-parallel degree sharing the mesh with CP (USP-style TP×CP
+    /// mix). Heads are sharded TP-wise, so `tp` must divide H and Hkv.
+    pub tp: u64,
 }
 
 impl ParallelConfig {
     pub fn new(method: CpMethod, cp_degree: u64) -> Self {
-        ParallelConfig { method, cp_degree, ac_offload: true, pin_memory: true }
+        ParallelConfig {
+            method,
+            cp_degree,
+            ac_mode: AcMode::AcOffload,
+            pin_memory: true,
+            micro_batch: 1,
+            tp: 1,
+        }
+    }
+
+    /// Total GPUs the layout occupies (CP ranks × TP ranks).
+    pub fn world(&self) -> u64 {
+        self.cp_degree * self.tp.max(1)
     }
 
     /// UPipe stage count ν = H / U for a model with `h` query heads.
@@ -108,10 +175,41 @@ impl ParallelConfig {
         }
     }
 
+    /// `validate` plus the constraints that need the full model: TP shards
+    /// KV heads too, so `tp` must divide `Hkv` as well as `H`.
+    pub fn validate_model(&self, m: &crate::model::ModelDims) -> Result<(), String> {
+        if self.tp > 0 && m.n_kv_heads % self.tp != 0 {
+            return Err(format!(
+                "tp={} must divide Hkv={} (KV heads are sharded TP-wise)",
+                self.tp, m.n_kv_heads
+            ));
+        }
+        self.validate(m.n_heads)
+    }
+
     /// Validate the layout against a model (paper §3.3: U must be divisible
     /// by C so each device processes an integer number of heads; H must be
-    /// divisible by U).
+    /// divisible by U), plus the run-shape dims: micro_batch/tp positive,
+    /// tp dividing the head count, and an AC mode the method supports.
+    /// Prefer [`Self::validate_model`] when the full model is at hand (it
+    /// additionally checks the KV-head sharding).
     pub fn validate(&self, h: u64) -> Result<(), String> {
+        if self.micro_batch == 0 {
+            return Err("micro_batch must be >= 1".into());
+        }
+        if self.tp == 0 {
+            return Err("tp must be >= 1".into());
+        }
+        if h % self.tp != 0 {
+            return Err(format!("tp={} must divide H={h}", self.tp));
+        }
+        if !self.method.supported_ac_modes().contains(&self.ac_mode) {
+            return Err(format!(
+                "{} does not support AC mode `{}`",
+                self.method.label(),
+                self.ac_mode.label()
+            ));
+        }
         match self.method {
             CpMethod::Upipe { u, .. } | CpMethod::UpipeFpdt { u, .. } => {
                 let (u, c) = (u as u64, self.cp_degree);
@@ -165,6 +263,50 @@ mod tests {
         assert!(p.validate(32).is_ok());
         let bad = ParallelConfig::new(CpMethod::UspHybrid { ulysses: 8, ring: 3 }, 16);
         assert!(bad.validate(32).is_err());
+    }
+
+    #[test]
+    fn dims_validation() {
+        let mut p = ParallelConfig::new(CpMethod::Ulysses, 8);
+        assert!(p.validate(32).is_ok());
+        p.micro_batch = 0;
+        assert!(p.validate(32).is_err());
+        p.micro_batch = 2;
+        p.tp = 0;
+        assert!(p.validate(32).is_err());
+        p.tp = 2;
+        assert!(p.validate(32).is_ok());
+        assert_eq!(p.world(), 16);
+        p.tp = 3; // does not divide H=32
+        assert!(p.validate(32).is_err());
+    }
+
+    #[test]
+    fn model_validation_checks_kv_head_sharding() {
+        // llama3-8b: H=32, Hkv=8 — tp=16 divides H but not Hkv.
+        let m = crate::model::ModelDims::llama3_8b();
+        let mut p = ParallelConfig::new(CpMethod::Ulysses, 2);
+        p.tp = 16;
+        assert!(p.validate(m.n_heads).is_ok(), "H-only check passes");
+        assert!(p.validate_model(&m).is_err(), "Hkv check must reject");
+        p.tp = 8;
+        assert!(p.validate_model(&m).is_ok());
+    }
+
+    #[test]
+    fn ac_mode_support() {
+        let mut p = ParallelConfig::new(CpMethod::Fpdt { pi: 16 }, 8);
+        assert!(p.validate(32).is_ok()); // default AcOffload
+        p.ac_mode = AcMode::AcGpu;
+        assert!(p.validate(32).is_err(), "FPDT requires offloaded AC");
+        let mut u = ParallelConfig::new(CpMethod::Ulysses, 8);
+        u.ac_mode = AcMode::NoAc;
+        assert!(u.validate(32).is_ok());
+        assert_eq!(AcMode::parse("ao"), Some(AcMode::AcOffload));
+        assert_eq!(AcMode::parse("gpu"), Some(AcMode::AcGpu));
+        assert_eq!(AcMode::parse("noac"), Some(AcMode::NoAc));
+        assert_eq!(AcMode::parse("bogus"), None);
+        assert_eq!(AcMode::AcOffload.label(), "ao");
     }
 
     #[test]

@@ -12,6 +12,13 @@ pub struct RunPreset {
     pub seq_len: u64,
 }
 
+impl RunPreset {
+    /// Tokens processed per optimizer step (micro-batches × sequence).
+    pub fn step_tokens(&self) -> u64 {
+        self.parallel.micro_batch.max(1) * self.seq_len
+    }
+}
+
 /// Sequence lengths of Table 3/4 columns.
 pub fn table34_seq_lens() -> Vec<u64> {
     ["128K", "256K", "512K", "1M", "2M", "3M", "4M", "5M"]
@@ -133,5 +140,13 @@ mod tests {
     fn pin_memory_off_at_5m() {
         let p = qwen_two_node(CpMethod::Ring, 5 * 1024 * 1024);
         assert!(!p.parallel.pin_memory);
+    }
+
+    #[test]
+    fn step_tokens_scale_with_microbatch() {
+        let mut p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        assert_eq!(p.step_tokens(), 1 << 20);
+        p.parallel.micro_batch = 4;
+        assert_eq!(p.step_tokens(), 4 << 20);
     }
 }

@@ -132,6 +132,80 @@ impl Default for Calibration {
 }
 
 impl Calibration {
+    /// Stable fingerprint over every calibrated constant, used to key the
+    /// trace cache: traces built under a refit calibration must not alias
+    /// the default fit's traces (op durations and byte factors differ).
+    /// Exhaustive destructuring makes adding a `Calibration` field without
+    /// extending this hash a compile error — silent aliasing is the bug
+    /// this fingerprint exists to prevent.
+    pub fn fingerprint(&self) -> u64 {
+        let Calibration {
+            fa3_fwd_flops,
+            fa3_bwd_flops,
+            compute_pressure_k,
+            pressure_h0_gib,
+            a2a_eff0_bps,
+            a2a_msg_slope,
+            a2a_eff_inter_bps,
+            comm_pressure_k,
+            a2a_call_overhead,
+            ring_eff_bps,
+            ring_eff_inter_bps,
+            other_fixed_per_layer,
+            other_rate,
+            pcie_eff_bps,
+            fpdt_stall_per_token,
+            fpdt_stall_amortization,
+            native_attn_eff_factor,
+            native_other_factor,
+            native_unmodeled_units,
+            native_slowpath_per_token,
+            native_slowpath_attn_factor,
+            hybrid_layer_fixed,
+            bytes_per_param_fsdp,
+            base_framework_1node,
+            base_framework_2node,
+            fpdt_extra_base,
+            attn_transient_factor,
+        } = self;
+        let fields = [
+            *fa3_fwd_flops,
+            *fa3_bwd_flops,
+            *compute_pressure_k,
+            *pressure_h0_gib,
+            *a2a_eff0_bps,
+            *a2a_msg_slope,
+            *a2a_eff_inter_bps,
+            *comm_pressure_k,
+            *a2a_call_overhead,
+            *ring_eff_bps,
+            *ring_eff_inter_bps,
+            *other_fixed_per_layer,
+            *other_rate,
+            *pcie_eff_bps,
+            *fpdt_stall_per_token,
+            *fpdt_stall_amortization,
+            *native_attn_eff_factor,
+            *native_other_factor,
+            *native_unmodeled_units,
+            *native_slowpath_per_token,
+            *native_slowpath_attn_factor,
+            *hybrid_layer_fixed,
+            *bytes_per_param_fsdp,
+            *base_framework_1node,
+            *base_framework_2node,
+            *fpdt_extra_base,
+            *attn_transient_factor,
+        ];
+        // FNV-1a over the bit patterns (bit-exact: 0.1 != 0.1000001).
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for f in fields {
+            h ^= f.to_bits();
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
     fn pressure_x(&self, headroom_bytes: f64) -> f64 {
         let h = headroom_bytes / GIB;
         ((self.pressure_h0_gib - h) / self.pressure_h0_gib).clamp(0.0, 1.0)
@@ -171,6 +245,15 @@ impl Calibration {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn fingerprint_distinguishes_calibrations() {
+        let a = Calibration::default();
+        let mut b = Calibration::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.other_rate *= 1.0 + 1e-12;
+        assert_ne!(a.fingerprint(), b.fingerprint(), "bit-exact sensitivity");
+    }
 
     #[test]
     fn penalties_zero_above_threshold() {

@@ -16,13 +16,15 @@ pub struct Engine {
     /// Persistent bytes (FSDP shards + framework base) resident before the
     /// step begins.
     pub persistent: f64,
-    /// Host RAM available for offloaded activations, bytes.
+    /// Host RAM available for offloaded activations, bytes. Plumbed from
+    /// the cluster config (`Quantities::host_ram_for_offload`), not
+    /// defaulted to infinity, so offload-heavy schedules can fail host-side.
     pub host_ram: f64,
 }
 
 impl Engine {
-    pub fn new(calib: Calibration, hbm_limit: f64, persistent: f64) -> Self {
-        Engine { calib, hbm_limit, persistent, host_ram: f64::INFINITY }
+    pub fn new(calib: Calibration, hbm_limit: f64, persistent: f64, host_ram: f64) -> Self {
+        Engine { calib, hbm_limit, persistent, host_ram }
     }
 
     /// Execute the trace; returns the step report. Serial semantics on the
@@ -102,7 +104,12 @@ impl Engine {
                     add(&mut comps, Category::AllToAll, dur);
                 }
                 Op::Offload { bytes, overlap } => {
-                    host_used += bytes.max(0.0);
+                    // Stores occupy host RAM, fetches (negative) release it
+                    // — so sequential micro-batches reuse the same budget
+                    // instead of accumulating phantom occupancy. Floored at
+                    // zero: an over-drawn fetch must not bank credit that
+                    // would mask a later over-budget store.
+                    host_used = (host_used + bytes).max(0.0);
                     if host_used > self.host_ram {
                         failed = Some("host RAM exhausted");
                         break;
@@ -152,7 +159,7 @@ mod tests {
     use crate::engine::ops::TraceBuilder;
 
     fn engine(limit: f64) -> Engine {
-        Engine::new(Calibration::default(), limit, 1.0)
+        Engine::new(Calibration::default(), limit, 1.0, f64::INFINITY)
     }
 
     #[test]
@@ -207,6 +214,36 @@ mod tests {
     fn host_ram_limit_fails_run() {
         let mut b = TraceBuilder::new();
         b.offload(10.0, false);
+        let mut e = engine(1e18);
+        e.host_ram = 5.0;
+        let r = e.run(&b.finish());
+        assert_eq!(r.failed, Some("host RAM exhausted"));
+    }
+
+    #[test]
+    fn host_fetches_release_host_ram() {
+        // store → fetch → store cycles (micro-batched AC offload) must not
+        // accumulate: occupancy peaks at one cycle's worth.
+        let mut b = TraceBuilder::new();
+        for _ in 0..4 {
+            b.offload(8.0, false);
+            b.offload(-8.0, false);
+        }
+        let mut e = engine(1e18);
+        e.host_ram = 10.0;
+        let r = e.run(&b.finish());
+        assert!(r.failed.is_none(), "{:?}", r.failed);
+        // ...but time is still paid for every transfer (magnitude).
+        let secs_per = 8.0 / e.calib.pcie_eff_bps;
+        assert!((r.components.other - 8.0 * secs_per).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_overdrawn_fetch_banks_no_credit() {
+        // Fetch-before-store must not let a later store exceed the budget.
+        let mut b = TraceBuilder::new();
+        b.offload(-100.0, false);
+        b.offload(8.0, false);
         let mut e = engine(1e18);
         e.host_ram = 5.0;
         let r = e.run(&b.finish());

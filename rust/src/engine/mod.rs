@@ -10,9 +10,11 @@
 pub mod calibration;
 pub mod executor;
 pub mod ops;
+pub mod refit;
 pub mod report;
 
 pub use calibration::Calibration;
 pub use executor::Engine;
 pub use ops::{Category, Op, TraceBuilder};
+pub use refit::{refit, MeasuredCell, Measurements, RefitField, RefitInfo};
 pub use report::{Components, StepReport};

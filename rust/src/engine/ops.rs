@@ -39,6 +39,9 @@ pub enum Op {
     Ring { steps: u64, bytes_per_step: f64, inter: bool },
     /// Host offload / fetch over PCIe; `overlap` runs it on the offload
     /// stream (hidden behind compute up to the stream's availability).
+    /// Positive `bytes` stores to host (occupying host RAM), negative
+    /// `bytes` fetches back to device (releasing it); transfer time uses
+    /// the magnitude either way.
     Offload { bytes: f64, overlap: bool },
     /// Record a labelled memory-timeline sample.
     Snapshot { label: &'static str },

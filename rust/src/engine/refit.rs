@@ -1,0 +1,446 @@
+//! Calibration refits from user-supplied measurements.
+//!
+//! `repro plan --refit <measurements.json>` takes a Table-5-style file of
+//! measured per-step component times (All-to-All / FA3-Fwd / FA3-Bwd /
+//! Other, seconds) for the DS-Ulysses anchor method on the user's own
+//! hardware, re-derives the fitted rates the same way the default
+//! calibration was fit from the paper's Table 5 (see the provenance notes
+//! in [`super::calibration`]), and replans the whole configuration space
+//! under the refit calibration.
+//!
+//! The rates are anchored on the **longest measured context**, where
+//! attention dominates the FA3 timers — exactly how the default fit picks
+//! its 1M anchor; shorter cells are kept as provenance but not averaged in
+//! (their FA3 numbers are polluted by launch overheads the simulator
+//! attributes elsewhere).
+
+use crate::model::{flops, ModelDims};
+use crate::util::fmt::parse_tokens;
+use crate::util::json::Json;
+
+use super::calibration::Calibration;
+
+/// One measured sequence-length cell (Table-5 column): per-step component
+/// times in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MeasuredCell {
+    pub seq: u64,
+    pub all_to_all: f64,
+    pub fa3_fwd: f64,
+    pub fa3_bwd: f64,
+    pub other: f64,
+}
+
+/// A parsed measurements file.
+#[derive(Debug, Clone)]
+pub struct Measurements {
+    /// Where the measurements came from (file path; echoed as provenance).
+    pub source: String,
+    /// Model the cells were measured on (must match the planned model).
+    pub model: String,
+    /// GPUs in the measured run (the Ulysses/CP degree of the anchor).
+    pub gpus: u64,
+    pub cells: Vec<MeasuredCell>,
+}
+
+impl Measurements {
+    /// Parse a measurements JSON document:
+    /// `{"model": "llama3-8b", "gpus": 8, "cells": [{"seq": "1M",
+    /// "all_to_all": 4.93, "fa3_fwd": 103.49, "fa3_bwd": 146.86,
+    /// "other": 19.78}, ...]}`. `seq` accepts token labels or raw counts.
+    pub fn parse(text: &str, source: &str) -> Result<Measurements, String> {
+        let j = Json::parse(text).map_err(|e| format!("{source}: {e}"))?;
+        let model = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{source}: missing \"model\""))?
+            .to_string();
+        let gpus_raw = j
+            .get("gpus")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{source}: missing \"gpus\""))?;
+        if gpus_raw.fract() != 0.0 || gpus_raw < 0.0 {
+            return Err(format!("{source}: \"gpus\" must be a whole number, got {gpus_raw}"));
+        }
+        let gpus = gpus_raw as u64;
+        let arr = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("{source}: missing \"cells\" array"))?;
+        let mut cells = Vec::new();
+        for (i, c) in arr.iter().enumerate() {
+            let seq = match c.get("seq") {
+                Some(Json::Str(s)) => {
+                    parse_tokens(s).ok_or_else(|| format!("{source}: cell {i}: bad seq `{s}`"))?
+                }
+                Some(Json::Num(n)) if *n >= 1.0 && n.fract() == 0.0 => *n as u64,
+                Some(Json::Num(n)) => {
+                    return Err(format!(
+                        "{source}: cell {i}: seq must be a whole token count, got {n}"
+                    ))
+                }
+                _ => return Err(format!("{source}: cell {i}: missing seq")),
+            };
+            let num = |k: &str| -> Result<f64, String> {
+                c.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("{source}: cell {i}: missing \"{k}\""))
+            };
+            cells.push(MeasuredCell {
+                seq,
+                all_to_all: num("all_to_all")?,
+                fa3_fwd: num("fa3_fwd")?,
+                fa3_bwd: num("fa3_bwd")?,
+                other: num("other")?,
+            });
+        }
+        if cells.is_empty() {
+            return Err(format!("{source}: no measurement cells"));
+        }
+        if gpus == 0 {
+            return Err(format!("{source}: gpus must be >= 1"));
+        }
+        Ok(Measurements { source: source.to_string(), model, gpus, cells })
+    }
+}
+
+/// One refit constant: name and old → new values (provenance for the plan
+/// output).
+#[derive(Debug, Clone)]
+pub struct RefitField {
+    pub name: &'static str,
+    pub old: f64,
+    pub new: f64,
+}
+
+/// Provenance of a refit calibration, echoed into `repro plan --json`.
+#[derive(Debug, Clone)]
+pub struct RefitInfo {
+    pub source: String,
+    pub model: String,
+    /// Number of measured cells in the file.
+    pub cells: usize,
+    /// Sequence length of the anchor cell the rates were derived from.
+    pub anchor_seq: u64,
+    pub fields: Vec<RefitField>,
+    /// Rates whose inversion was unusable (component time at or below the
+    /// modelled overhead floor) and therefore kept at their default values
+    /// — surfaced so a partial refit is never mistaken for a full one.
+    pub skipped: Vec<&'static str>,
+    /// True when the anchor cell runs with HBM headroom below the pressure
+    /// threshold (set by the caller, which can simulate the anchor): its
+    /// measured times then already include the allocator-pressure
+    /// penalties the engine re-applies, so the fitted rates absorb them
+    /// and pressured cells of the replanned sweep are priced pessimistic.
+    pub pressured_anchor: bool,
+}
+
+/// Re-derive the fitted rates (`fa3_fwd_flops`, `fa3_bwd_flops`,
+/// `a2a_eff0_bps`, `other_rate`) from measured Ulysses component times,
+/// keeping every other constant from `base`. Inverts the same formulas the
+/// trace builder emits: FA3-Fwd covers forward + AC recompute (2 kernel
+/// passes per layer), FA3-Bwd is 2.5× forward FLOPs, the all-to-all moves
+/// `2L(γ+1)·q_bytes·(C−1)/C` per step over `8L` calls, and "other" is
+/// `fixed·L + rate·S·d_model·L/C`.
+pub fn refit(
+    base: &Calibration,
+    m: &Measurements,
+    dims: &ModelDims,
+) -> Result<(Calibration, RefitInfo), String> {
+    // The inversion assumes the single-node DS-Ulysses anchor: one intra-
+    // node all-to-all group of C ranks. Multi-node measurements mix in
+    // inter-node ring transfers and hybrid barrier costs this formula
+    // would silently misattribute to intra-node bandwidth.
+    if m.gpus > 8 {
+        return Err(format!(
+            "refit: measurements span {} GPUs, but the rate inversion assumes the \
+             single-node (<= 8 GPU) Ulysses anchor — measure the anchor on one node",
+            m.gpus
+        ));
+    }
+    if m.gpus == 0 || dims.n_heads % m.gpus != 0 {
+        return Err(format!(
+            "refit: gpus={} must divide H={} (the Ulysses anchor shards heads evenly)",
+            m.gpus, dims.n_heads
+        ));
+    }
+    let anchor = m
+        .cells
+        .iter()
+        .max_by_key(|c| c.seq)
+        .ok_or_else(|| "refit: no measurement cells".to_string())?;
+    let c = m.gpus as f64;
+    let l = dims.n_layers as f64;
+    let s = anchor.seq as f64;
+
+    let mut cal = base.clone();
+    let mut fields = Vec::new();
+    let mut skipped = Vec::new();
+    {
+        let mut apply = |name: &'static str, slot: &mut f64, value: Option<f64>| {
+            match value {
+                Some(v) if v.is_finite() && v > 0.0 => {
+                    fields.push(RefitField { name, old: *slot, new: v });
+                    *slot = v;
+                }
+                _ => skipped.push(name),
+            }
+        };
+
+        // Per-device per-layer forward attention FLOPs.
+        let f_layer = flops::attn_fwd(dims, anchor.seq) / (l * c);
+        // FA3-Fwd wraps fwd + AC recompute: 2 kernel passes per layer.
+        apply(
+            "fa3_fwd_flops",
+            &mut cal.fa3_fwd_flops,
+            (anchor.fa3_fwd > 0.0).then(|| 2.0 * l * f_layer / anchor.fa3_fwd),
+        );
+        apply(
+            "fa3_bwd_flops",
+            &mut cal.fa3_bwd_flops,
+            (anchor.fa3_bwd > 0.0).then(|| l * f_layer * flops::ATTN_BWD_FACTOR / anchor.fa3_bwd),
+        );
+
+        // All-to-all: Ulysses moves (qkv + q)·(C−1)/C per layer in each of
+        // forward and backward, over 8 calls per layer; back out the
+        // effective bandwidth, then undo the message-size degradation to
+        // recover eff0.
+        let sc = s / c;
+        let q_b = 2.0 * sc * dims.q_width() as f64;
+        let kv_b = 2.0 * sc * dims.kv_width() as f64;
+        let vol = 2.0 * l * (q_b + 2.0 * kv_b + q_b) * (c - 1.0) / c;
+        let t_net = anchor.all_to_all - 8.0 * l * base.a2a_call_overhead;
+        let s_m = s / (1024.0 * 1024.0);
+        apply(
+            "a2a_eff0_bps",
+            &mut cal.a2a_eff0_bps,
+            (t_net > 0.0).then(|| vol / t_net * (1.0 + base.a2a_msg_slope * s_m)),
+        );
+
+        // Other: fixed-per-layer + rate·S·d_model·L/C.
+        let t_var = anchor.other - base.other_fixed_per_layer * l;
+        apply(
+            "other_rate",
+            &mut cal.other_rate,
+            (t_var > 0.0).then(|| t_var / (s * dims.d_model as f64 * l / c)),
+        );
+    }
+
+    if fields.is_empty() {
+        return Err(format!(
+            "refit: no usable rates in {} (all components non-positive)",
+            m.source
+        ));
+    }
+    Ok((
+        cal,
+        RefitInfo {
+            source: m.source.clone(),
+            model: m.model.clone(),
+            cells: m.cells.len(),
+            anchor_seq: anchor.seq,
+            fields,
+            skipped,
+            pressured_anchor: false,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::paper_data::{T5_SEQ_LABELS, T5_ULYSSES};
+
+    /// The paper's own Table 5 (DS-Ulysses) cells up to 1M — the exact
+    /// data the default calibration was fit on.
+    fn table5_measurements() -> Measurements {
+        let cells = (0..4)
+            .map(|i| MeasuredCell {
+                seq: parse_tokens(T5_SEQ_LABELS[i]).unwrap(),
+                all_to_all: T5_ULYSSES[0][i],
+                fa3_fwd: T5_ULYSSES[1][i],
+                fa3_bwd: T5_ULYSSES[2][i],
+                other: T5_ULYSSES[3][i],
+            })
+            .collect();
+        Measurements {
+            source: "paper-table5".into(),
+            model: "llama3-8b".into(),
+            gpus: 8,
+            cells,
+        }
+    }
+
+    #[test]
+    fn refit_on_paper_table5_recovers_default_fit() {
+        let base = Calibration::default();
+        let dims = ModelDims::llama3_8b();
+        let (cal, info) = refit(&base, &table5_measurements(), &dims).unwrap();
+        assert_eq!(info.anchor_seq, 1 << 20);
+        assert_eq!(info.cells, 4);
+        assert_eq!(info.fields.len(), 4);
+        assert!(info.skipped.is_empty(), "full refit: {:?}", info.skipped);
+        // The default constants were fit on exactly these numbers: the
+        // FA3 rates and other_rate must come back within a few percent
+        // (the 1M anchor), the a2a bandwidth within its documented ±25%.
+        assert!((cal.fa3_fwd_flops - base.fa3_fwd_flops).abs() / base.fa3_fwd_flops < 0.03);
+        assert!((cal.fa3_bwd_flops - base.fa3_bwd_flops).abs() / base.fa3_bwd_flops < 0.03);
+        assert!((cal.other_rate - base.other_rate).abs() / base.other_rate < 0.05);
+        assert!((cal.a2a_eff0_bps - base.a2a_eff0_bps).abs() / base.a2a_eff0_bps < 0.25);
+        // Non-refit constants are untouched.
+        assert_eq!(cal.attn_transient_factor, base.attn_transient_factor);
+        assert_eq!(cal.bytes_per_param_fsdp, base.bytes_per_param_fsdp);
+        // And the fingerprint changes, so the trace cache will not alias.
+        assert_ne!(cal.fingerprint(), base.fingerprint());
+    }
+
+    #[test]
+    fn refit_scales_with_faster_hardware() {
+        // Halve every measured time: every refit rate must double.
+        let base = Calibration::default();
+        let dims = ModelDims::llama3_8b();
+        let mut fast = table5_measurements();
+        for c in &mut fast.cells {
+            c.fa3_fwd /= 2.0;
+            c.fa3_bwd /= 2.0;
+        }
+        let (slow_cal, _) = refit(&base, &table5_measurements(), &dims).unwrap();
+        let (fast_cal, _) = refit(&base, &fast, &dims).unwrap();
+        assert!((fast_cal.fa3_fwd_flops / slow_cal.fa3_fwd_flops - 2.0).abs() < 1e-9);
+        assert!((fast_cal.fa3_bwd_flops / slow_cal.fa3_bwd_flops - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parse_measurements_file() {
+        let text = r#"{
+            "model": "llama3-8b",
+            "gpus": 8,
+            "cells": [
+                {"seq": "1M", "all_to_all": 4.93, "fa3_fwd": 103.49,
+                 "fa3_bwd": 146.86, "other": 19.78},
+                {"seq": 131072, "all_to_all": 0.40, "fa3_fwd": 1.58,
+                 "fa3_bwd": 2.40, "other": 3.03}
+            ]
+        }"#;
+        let m = Measurements::parse(text, "test.json").unwrap();
+        assert_eq!(m.model, "llama3-8b");
+        assert_eq!(m.gpus, 8);
+        assert_eq!(m.cells.len(), 2);
+        assert_eq!(m.cells[0].seq, 1 << 20);
+        assert_eq!(m.cells[1].seq, 1 << 17);
+        assert!((m.cells[0].all_to_all - 4.93).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parse_rejects_bad_files() {
+        assert!(Measurements::parse("{}", "x").is_err());
+        // Fractional counts are typos, not truncation fodder.
+        assert!(Measurements::parse(
+            r#"{"model":"m","gpus":8.5,"cells":[{"seq":"1M",
+                "all_to_all":1,"fa3_fwd":1,"fa3_bwd":1,"other":1}]}"#,
+            "x"
+        )
+        .is_err());
+        assert!(Measurements::parse(
+            r#"{"model":"m","gpus":8,"cells":[{"seq":1048576.7,
+                "all_to_all":1,"fa3_fwd":1,"fa3_bwd":1,"other":1}]}"#,
+            "x"
+        )
+        .is_err());
+        assert!(Measurements::parse(r#"{"model":"m","gpus":8,"cells":[]}"#, "x").is_err());
+        assert!(Measurements::parse(r#"{"model":"m","gpus":0,"cells":[{"seq":"1M",
+            "all_to_all":1,"fa3_fwd":1,"fa3_bwd":1,"other":1}]}"#, "x")
+            .is_err());
+        assert!(
+            Measurements::parse(r#"{"model":"m","gpus":8,"cells":[{"seq":"1M"}]}"#, "x").is_err()
+        );
+        assert!(Measurements::parse("not json", "x").is_err());
+    }
+
+    #[test]
+    fn partial_refit_reports_skipped_components() {
+        // All-to-all measured below the 8L·overhead floor: that rate is
+        // kept at default and the skip is surfaced, not silent.
+        let mut m = table5_measurements();
+        for c in &mut m.cells {
+            c.all_to_all = 0.01;
+        }
+        let base = Calibration::default();
+        let (cal, info) = refit(&base, &m, &ModelDims::llama3_8b()).unwrap();
+        assert_eq!(cal.a2a_eff0_bps, base.a2a_eff0_bps, "kept default");
+        assert!(info.skipped.contains(&"a2a_eff0_bps"), "{:?}", info.skipped);
+        assert_eq!(info.fields.len(), 3);
+    }
+
+    #[test]
+    fn inversion_constants_match_the_ulysses_trace() {
+        // refit() hand-inverts the Ulysses trace's comm volume, call count
+        // and kernel-pass count; this pins those constants to the trace
+        // builder so a schedule change breaks here instead of silently
+        // mis-deriving rates.
+        use crate::config::presets::llama_single_node;
+        use crate::config::CpMethod;
+        use crate::engine::{Category, Op};
+        use crate::schedule::build_trace;
+
+        let s = 1u64 << 20;
+        let trace = build_trace(&llama_single_node(CpMethod::Ulysses, s));
+        let dims = ModelDims::llama3_8b();
+        let (l, c) = (dims.n_layers as f64, 8.0);
+        let (mut vol, mut calls, mut fwd_flops) = (0.0f64, 0u64, 0.0f64);
+        for op in &trace {
+            match op {
+                Op::AllToAll { bytes, calls: k, .. } => {
+                    vol += bytes;
+                    calls += k;
+                }
+                Op::Compute { cat: Category::Fa3Fwd, flops } => fwd_flops += flops,
+                _ => {}
+            }
+        }
+        // The formulas refit inverts:
+        let sc = s as f64 / c;
+        let q_b = 2.0 * sc * dims.q_width() as f64;
+        let kv_b = 2.0 * sc * dims.kv_width() as f64;
+        let expect_vol = 2.0 * l * (q_b + 2.0 * kv_b + q_b) * (c - 1.0) / c;
+        assert!((vol - expect_vol).abs() / expect_vol < 1e-9, "a2a volume drifted");
+        assert_eq!(calls, 8 * dims.n_layers, "a2a call count drifted");
+        let f_layer = flops::attn_fwd(&dims, s) / (l * c);
+        let expect_fwd = 2.0 * l * f_layer; // forward + AC recompute
+        assert!((fwd_flops - expect_fwd).abs() / expect_fwd < 1e-9, "fwd passes drifted");
+    }
+
+    #[test]
+    fn refit_rejects_multi_node_measurements() {
+        let mut m = table5_measurements();
+        m.gpus = 16;
+        let err = refit(&Calibration::default(), &m, &ModelDims::llama3_8b()).unwrap_err();
+        assert!(err.contains("single-node"), "{err}");
+    }
+
+    #[test]
+    fn refit_rejects_unshardable_anchor_layout() {
+        // gpus=5 divides neither llama's H=32 heads nor its sequence shards.
+        let mut m = table5_measurements();
+        m.gpus = 5;
+        let err = refit(&Calibration::default(), &m, &ModelDims::llama3_8b()).unwrap_err();
+        assert!(err.contains("must divide H"), "{err}");
+    }
+
+    #[test]
+    fn refit_rejects_useless_measurements() {
+        let m = Measurements {
+            source: "zeros".into(),
+            model: "llama3-8b".into(),
+            gpus: 8,
+            cells: vec![MeasuredCell {
+                seq: 1 << 20,
+                all_to_all: 0.0,
+                fa3_fwd: 0.0,
+                fa3_bwd: 0.0,
+                other: 0.0,
+            }],
+        };
+        assert!(refit(&Calibration::default(), &m, &ModelDims::llama3_8b()).is_err());
+    }
+}

@@ -19,7 +19,7 @@
 //!   repro deviation     mean |sim - paper| over Tables 3+4
 
 use untied_ulysses::config::presets::{llama_single_node, qwen_two_node};
-use untied_ulysses::config::CpMethod;
+use untied_ulysses::config::{AcMode, CpMethod};
 use untied_ulysses::coordinator::trainer::{MarkovCorpus, Trainer};
 use untied_ulysses::coordinator::{AttnMode, Pipeline};
 use untied_ulysses::model::ModelDims;
@@ -108,10 +108,17 @@ repro — Untied Ulysses (UPipe) reproduction
   repro table1..table6 | fig1 | fig2 | fig4 | fig5 | fig6 | savings | all
   repro deviation
   repro simulate --model llama3-8b|qwen3-32b --method native|ring|ulysses|fpdt|upipe --seq 1M
+                 [--ac ao|gpu|noac] [--mb N]
   repro plan --model llama3-8b --gpus 8 [--seq 1M] [--quantum 128K] [--cap 32M]
-             [--compose] [--threads N] [--json]
-      sweep every valid parallel config for the model/cluster, bisect each
-      one's max trainable context, rank, and mark the Pareto frontier
+             [--ac ao,gpu,noac] [--mb 1,2,4] [--tp 1,2] [--paper] [--compose]
+             [--refit measurements.json] [--threads N] [--json]
+      sweep every valid parallel config for the model/cluster — method
+      families x AC modes x micro-batches x TP mixes x pinning — bisect
+      each one's max trainable context, rank, and mark the Pareto frontier.
+      --paper restricts to the paper's §5.1 dims (offloaded AC, batch 1,
+      no TP); --refit re-derives the fitted calibration rates from a
+      Table-5-style measurements file and replans with them (provenance is
+      echoed into the table notes / JSON `refit` field)
   repro frontier ...  same flags; print only the Pareto frontier
   repro compose       UPipe x FPDT composition study (paper §5.3.2)
   repro parity
@@ -162,9 +169,20 @@ fn cmd_compose() -> anyhow::Result<()> {
     Ok(())
 }
 
+fn parse_u64_list(s: &str, what: &str) -> anyhow::Result<Vec<u64>> {
+    s.split(',')
+        .map(|x| {
+            x.trim()
+                .parse::<u64>()
+                .map_err(|_| anyhow::anyhow!("bad {what} entry `{x}`"))
+        })
+        .collect()
+}
+
 fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
     use untied_ulysses::config::ClusterConfig;
-    use untied_ulysses::planner::{plan, PlanRequest};
+    use untied_ulysses::engine::{refit, Calibration, Measurements};
+    use untied_ulysses::planner::{plan, PlanRequest, SweepDims};
     use untied_ulysses::report::planner as planner_report;
 
     let model_name = flag(rest, "--model").unwrap_or_else(|| "llama3-8b".into());
@@ -188,10 +206,113 @@ fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
     if let Some(t) = flag(rest, "--threads") {
         req.threads = t.parse().map_err(|_| anyhow::anyhow!("bad --threads {t}"))?;
     }
-    req.compositions = rest.iter().any(|a| a == "--compose");
+    if rest.iter().any(|a| a == "--paper") {
+        req.dims = SweepDims::paper();
+    }
+    if let Some(ac) = flag(rest, "--ac") {
+        let modes = ac
+            .split(',')
+            .map(|m| {
+                AcMode::parse(m.trim())
+                    .ok_or_else(|| anyhow::anyhow!("bad --ac entry `{m}` (ao|gpu|noac)"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        // Dedup (order-preserving): repeated entries would enumerate
+        // duplicate configs.
+        let mut deduped: Vec<AcMode> = Vec::new();
+        for m in modes {
+            if !deduped.contains(&m) {
+                deduped.push(m);
+            }
+        }
+        req.dims.ac_modes = deduped;
+    }
+    if let Some(mb) = flag(rest, "--mb") {
+        let mut v = parse_u64_list(&mb, "--mb")?;
+        v.sort_unstable();
+        v.dedup();
+        req.dims.micro_batches = v;
+    }
+    if let Some(tp) = flag(rest, "--tp") {
+        let mut v = parse_u64_list(&tp, "--tp")?;
+        v.sort_unstable();
+        v.dedup();
+        req.dims.tp_degrees = v;
+    }
+    req.dims.compositions = req.dims.compositions || rest.iter().any(|a| a == "--compose");
+    if let Some(path) = flag(rest, "--refit") {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading --refit {path}: {e}"))?;
+        let m = Measurements::parse(&text, &path).map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            m.model == req.model.name,
+            "--refit file measures `{}` but --model is `{}`",
+            m.model,
+            req.model.name
+        );
+        let (cal, mut info) = refit(&Calibration::default(), &m, &req.model)
+            .map_err(anyhow::Error::msg)?;
+        eprintln!(
+            "refit from {path}: {} cells, anchored at {} tokens;{}",
+            info.cells,
+            untied_ulysses::util::fmt::tokens(info.anchor_seq),
+            info.fields.iter().fold(String::new(), |mut s, f| {
+                s.push_str(&format!(" {} {:.3e} -> {:.3e};", f.name, f.old, f.new));
+                s
+            })
+        );
+        if !info.skipped.is_empty() {
+            eprintln!(
+                "WARNING: refit kept defaults for {} (measurements at or below the \
+                 modelled overhead floor)",
+                info.skipped.join(", ")
+            );
+        }
+        // Pressure sanity: simulate the measured anchor cell. If it runs
+        // with headroom below the pressure threshold, its measured times
+        // already include the allocator-pressure penalties the engine
+        // re-applies during the sweep — the refit rates absorb them.
+        // refit guarantees a single-node (<= 8 GPU) Ulysses anchor.
+        let anchor_cluster = ClusterConfig::h100_cluster(m.gpus).map_err(anyhow::Error::msg)?;
+        let anchor_preset = untied_ulysses::config::presets::RunPreset {
+            model: req.model.clone(),
+            parallel: untied_ulysses::config::ParallelConfig::new(
+                CpMethod::Ulysses,
+                anchor_cluster.total_gpus(),
+            ),
+            cluster: anchor_cluster,
+            seq_len: info.anchor_seq,
+        };
+        let q = untied_ulysses::schedule::Quantities::new(&anchor_preset);
+        let anchor_report = simulate(&anchor_preset);
+        let headroom = q.hbm_limit - anchor_report.peak_bytes;
+        if headroom < cal.pressure_h0_gib * GIB {
+            info.pressured_anchor = true;
+            eprintln!(
+                "WARNING: anchor cell ({} tokens) runs with only {:.1} GiB of predicted \
+                 headroom — its measured times include memory-pressure penalties, so the \
+                 refit rates are pessimistic near the memory walls; prefer an anchor at \
+                 shorter context",
+                untied_ulysses::util::fmt::tokens(info.anchor_seq),
+                headroom.max(0.0) / GIB
+            );
+        }
+        req.calibration = cal;
+        req.refit = Some(info);
+    }
     anyhow::ensure!(req.cap_s >= req.quantum, "--cap must be at least --quantum");
 
     let out = plan(&req);
+    anyhow::ensure!(
+        !out.configs.is_empty(),
+        "no valid configurations: the requested sweep dims (--tp {:?}, --mb {:?}, --ac {:?}) \
+         fit neither {} nor the {}-GPU cluster",
+        req.dims.tp_degrees,
+        req.dims.micro_batches,
+        req.dims.ac_modes.iter().map(|a| a.label()).collect::<Vec<_>>(),
+        req.model.name,
+        req.cluster.total_gpus()
+    );
     let json = rest.iter().any(|a| a == "--json");
     match (json, frontier_only) {
         (true, true) => println!("{}", planner_report::frontier_json(&out).pretty()),
@@ -218,14 +339,30 @@ fn cmd_simulate(rest: &[String]) -> anyhow::Result<()> {
         "upipe" => CpMethod::Upipe { u: 8, gqa_schedule: true },
         other => anyhow::bail!("unknown method {other}"),
     };
-    let preset = if qwen {
+    let mut preset = if qwen {
         qwen_two_node(m, s)
     } else {
         llama_single_node(m, s)
     };
-    let gpus = preset.parallel.cp_degree;
+    if let Some(ac) = flag(rest, "--ac") {
+        preset.parallel.ac_mode =
+            AcMode::parse(&ac).ok_or_else(|| anyhow::anyhow!("bad --ac {ac} (ao|gpu|noac)"))?;
+    }
+    if let Some(mb) = flag(rest, "--mb") {
+        preset.parallel.micro_batch =
+            mb.parse().map_err(|_| anyhow::anyhow!("bad --mb {mb}"))?;
+    }
+    preset
+        .parallel
+        .validate_model(&preset.model)
+        .map_err(anyhow::Error::msg)?;
+    let gpus = preset.parallel.world();
     let r = simulate(&preset);
-    println!("model={model} method={method} S={seq} gpus={gpus}");
+    println!(
+        "model={model} method={method} S={seq} gpus={gpus} ac={} mb={}",
+        preset.parallel.ac_mode.label(),
+        preset.parallel.micro_batch
+    );
     if r.oom {
         println!("result: OOM (peak would exceed HBM)");
         return Ok(());
@@ -237,7 +374,7 @@ fn cmd_simulate(rest: &[String]) -> anyhow::Result<()> {
     println!("  step time    : {:.2} s", r.step_time);
     println!(
         "  throughput   : {:.1} tokens/s/GPU",
-        r.tokens_per_sec_per_gpu(s, gpus).unwrap()
+        r.tokens_per_sec_per_gpu(preset.step_tokens(), gpus).unwrap()
     );
     println!("  peak memory  : {:.2} GiB", r.peak_bytes / GIB);
     println!(

@@ -3,7 +3,9 @@
 //! trainable context, and extract the Pareto frontier at a reference
 //! sequence length. Traces are memoized in a [`TraceCache`] (pin variants
 //! and re-probed cells share them) and priced reports in a per-plan memo,
-//! so replayed cells cost a hash lookup.
+//! so replayed cells cost a hash lookup. The whole sweep prices against
+//! the request's [`Calibration`] — default or `--refit`-fitted — whose
+//! provenance rides along into the outcome.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -12,14 +14,14 @@ use std::time::Instant;
 
 use crate::config::presets::RunPreset;
 use crate::config::{ClusterConfig, ParallelConfig};
-use crate::engine::{Calibration, StepReport};
+use crate::engine::{Calibration, RefitInfo, StepReport};
 use crate::model::ModelDims;
 use crate::schedule::{simulate_cached, TraceCache};
 use crate::util::fmt::GIB;
 use crate::util::pool::parallel_map;
 
 use super::search::{bisect_max, pareto_front};
-use super::space::enumerate_space;
+use super::space::{enumerate_space, SweepDims};
 
 /// What to sweep and how hard to search.
 #[derive(Debug, Clone)]
@@ -32,8 +34,14 @@ pub struct PlanRequest {
     pub quantum: u64,
     /// Context-search ceiling, tokens.
     pub cap_s: u64,
-    /// Include the §5.3.2 UPipe×FPDT composition space.
-    pub compositions: bool,
+    /// Which optional dimensions to sweep (AC modes, micro-batches, TP,
+    /// the §5.3.2 compositions).
+    pub dims: SweepDims,
+    /// Calibration every cell is priced with (default, or refit from a
+    /// measurements file).
+    pub calibration: Calibration,
+    /// Provenance when `calibration` came from `--refit`.
+    pub refit: Option<RefitInfo>,
     /// Worker threads (0 = auto).
     pub threads: usize,
 }
@@ -46,7 +54,9 @@ impl PlanRequest {
             reference_s: 1 << 20,
             quantum: 128 * 1024,
             cap_s: 32 << 20,
-            compositions: false,
+            dims: SweepDims::default(),
+            calibration: Calibration::default(),
+            refit: None,
             threads: 0,
         }
     }
@@ -83,6 +93,8 @@ pub struct PlanOutcome {
     pub quantum: u64,
     /// Ranked by max trainable context, then reference throughput.
     pub configs: Vec<ConfigPlan>,
+    /// Provenance when the sweep priced against a refit calibration.
+    pub refit: Option<RefitInfo>,
     pub simulations: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -109,9 +121,10 @@ impl PlanOutcome {
 /// Sweep the whole configuration space for the request.
 pub fn plan(req: &PlanRequest) -> PlanOutcome {
     let t0 = Instant::now();
-    let space = enumerate_space(&req.model, &req.cluster, req.compositions);
+    let space = enumerate_space(&req.model, &req.cluster, &req.dims);
     let cache = TraceCache::new();
-    let calib = Calibration::default();
+    let calib = req.calibration.clone();
+    let gpus = req.cluster.total_gpus();
     let sims = AtomicU64::new(0);
     let reports: Mutex<HashMap<String, StepReport>> = Mutex::new(HashMap::new());
     let quantum = req.quantum.max(1);
@@ -126,7 +139,7 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
             parallel: parallel.clone(),
             seq_len: s,
         };
-        let key = format!("{}|pin{}", TraceCache::key(&preset), parallel.pin_memory);
+        let key = format!("{}|pin{}", TraceCache::key(&preset, &calib), parallel.pin_memory);
         if let Some(r) = reports.lock().unwrap().get(&key) {
             return r.clone();
         }
@@ -143,14 +156,16 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
         if let Some(s) = max {
             let r = probe(p, s);
             max_peak = Some(r.peak_bytes / GIB);
-            max_tput = r.tokens_per_sec_per_gpu(s, p.cp_degree);
+            // Throughput counts every micro-batch's tokens over the whole
+            // (CP × TP) world.
+            max_tput = r.tokens_per_sec_per_gpu(p.micro_batch * s, gpus);
         }
         let rref = probe(p, req.reference_s);
         let mut ref_peak = None;
         let mut ref_tput = None;
         if feasible(&rref) {
             ref_peak = Some(rref.peak_bytes / GIB);
-            ref_tput = rref.tokens_per_sec_per_gpu(req.reference_s, p.cp_degree);
+            ref_tput = rref.tokens_per_sec_per_gpu(p.micro_batch * req.reference_s, gpus);
         }
         ConfigPlan {
             parallel: p.clone(),
@@ -166,7 +181,8 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
 
     // Rank: longest max context first, then reference throughput, then
     // lowest reference peak; the sort is stable, so exact ties keep the
-    // enumeration's paper-preset order (pinned before unpinned).
+    // enumeration's paper-preset order (pinned before unpinned, smaller
+    // micro-batch and TP first).
     evaluated.sort_by(|a, b| {
         let by_ctx = b.max_context.unwrap_or(0).cmp(&a.max_context.unwrap_or(0));
         let (ta, tb) = (a.ref_tok_s_gpu.unwrap_or(0.0), b.ref_tok_s_gpu.unwrap_or(0.0));
@@ -195,6 +211,7 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
         reference_s: req.reference_s,
         quantum,
         configs: evaluated,
+        refit: req.refit.clone(),
         simulations: sims.load(Ordering::Relaxed),
         cache_hits: cache.hits(),
         cache_misses: cache.misses(),
@@ -205,7 +222,7 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::CpMethod;
+    use crate::config::{AcMode, CpMethod};
 
     fn llama_plan() -> PlanOutcome {
         let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
@@ -218,7 +235,7 @@ mod tests {
     #[test]
     fn golden_llama_single_node_ranking() {
         let out = llama_plan();
-        assert!(out.configs.len() >= 20, "space too small: {}", out.configs.len());
+        assert!(out.configs.len() >= 100, "space too small: {}", out.configs.len());
 
         // Paper Fig. 1 / Table 4: UPipe (U = C = 8) is the only method that
         // reaches 5M on one 8×H100 node, and 5M is the single-node max.
@@ -236,11 +253,18 @@ mod tests {
         assert!(!top.hit_cap, "5M is a real memory wall, not the search cap");
 
         // Paper ordering below the winner: FPDT's 4M wall beats Ulysses'
-        // 3M-ish OOM wall, which beats Ring/Native.
+        // 3M-ish OOM wall, which beats Ring/Native. Compare the paper's
+        // own settings (pinned, batch 1, no TP, offloaded AC).
         let max_of = |m: CpMethod| {
             out.configs
                 .iter()
-                .find(|c| c.parallel.method == m && c.parallel.pin_memory)
+                .find(|c| {
+                    c.parallel.method == m
+                        && c.parallel.pin_memory
+                        && c.parallel.micro_batch == 1
+                        && c.parallel.tp == 1
+                        && c.parallel.ac_mode == AcMode::AcOffload
+                })
                 .and_then(|c| c.max_context)
                 .unwrap_or(0)
         };
@@ -248,6 +272,21 @@ mod tests {
         assert!(max_of(CpMethod::Ulysses) < five_m, "Ulysses beyond paper wall");
         assert!(max_of(CpMethod::Ulysses) >= 3 << 20, "Ulysses under paper wall");
         assert!(max_of(CpMethod::NativePyTorch) < max_of(CpMethod::Ring));
+
+        // The expanded dims actually ranked: AC-GPU variants exist but
+        // never beat offloaded AC on max context for the same method.
+        let best_by_ac = |m: CpMethod, ac: AcMode| {
+            out.configs
+                .iter()
+                .filter(|c| c.parallel.method == m && c.parallel.ac_mode == ac)
+                .filter_map(|c| c.max_context)
+                .max()
+                .unwrap_or(0)
+        };
+        let uly_gpu = best_by_ac(CpMethod::Ulysses, AcMode::AcGpu);
+        let uly_off = best_by_ac(CpMethod::Ulysses, AcMode::AcOffload);
+        assert!(uly_gpu > 0, "AC-GPU slice was swept");
+        assert!(uly_gpu < uly_off, "GPU-resident checkpoints cost context");
     }
 
     #[test]
@@ -287,5 +326,31 @@ mod tests {
         assert!(out.cache_hits > 0, "no trace-cache hits");
         assert!(out.simulations > 0);
         assert!(out.simulations >= out.cache_misses);
+        assert!(out.refit.is_none(), "no refit requested");
+    }
+
+    #[test]
+    fn refit_calibration_flows_through_the_plan() {
+        // A uniformly faster machine keeps the ranking but raises absolute
+        // throughput at the reference length.
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 2;
+        req.dims = SweepDims::paper();
+        let base = plan(&req);
+        req.calibration.fa3_fwd_flops *= 2.0;
+        req.calibration.fa3_bwd_flops *= 2.0;
+        let fast = plan(&req);
+        let tput = |o: &PlanOutcome| {
+            o.configs
+                .iter()
+                .find(|c| c.parallel.method == CpMethod::Upipe { u: 8, gqa_schedule: true })
+                .and_then(|c| c.ref_tok_s_gpu)
+                .unwrap()
+        };
+        assert!(tput(&fast) > 1.3 * tput(&base), "faster rates -> more tokens/s");
+        // Memory walls are rate-independent: the top max context agrees.
+        assert_eq!(base.best().unwrap().max_context, fast.best().unwrap().max_context);
     }
 }

@@ -5,8 +5,9 @@
 //! subsystem searches the whole space:
 //!
 //! - [`space`] enumerates every valid [`crate::config::ParallelConfig`]
-//!   for a (model, cluster) pair, generalizing the hand-picked §5.1
-//!   presets;
+//!   for a (model, cluster) pair — including per-method AC modes,
+//!   micro-batch counts and TP×CP mixes ([`SweepDims`]) — generalizing
+//!   the hand-picked §5.1 presets;
 //! - [`search`] holds the bisection that finds each configuration's
 //!   maximum trainable context and the Pareto-frontier extractor;
 //! - [`eval`] runs the sweep on a worker pool with memoized traces and
@@ -21,4 +22,4 @@ pub mod space;
 
 pub use eval::{plan, ConfigPlan, PlanOutcome, PlanRequest};
 pub use search::{bisect_max, pareto_front};
-pub use space::enumerate_space;
+pub use space::{enumerate_space, SweepDims};

@@ -1,87 +1,153 @@
 //! Sweep-space enumerator: expand (model, cluster) into every valid
 //! context-parallel configuration — all U divisors of H, all ulysses×ring
-//! factorizations of the CP degree, the FPDT π sweep, host-memory pinning
-//! — generalizing the paper's hand-picked presets (§5.1). Everything
-//! emitted passes [`ParallelConfig::validate`]; hybrid families are only
-//! emitted where they are physically meaningful (Ulysses inside a node,
-//! ring across the rest).
+//! factorizations of the CP degree, the FPDT π sweep, host-memory pinning,
+//! and (via [`SweepDims`]) per-method AC modes, micro-batch counts and
+//! TP×CP mixes — generalizing the paper's hand-picked presets (§5.1).
+//! Everything emitted passes [`ParallelConfig::validate`]; hybrid families
+//! are only emitted where they are physically meaningful (Ulysses inside a
+//! node, ring across the rest; TP subdividing the node).
 
 use crate::config::parallel::{divisors, factor_pairs};
-use crate::config::{ClusterConfig, CpMethod, ParallelConfig};
+use crate::config::{AcMode, ClusterConfig, CpMethod, ParallelConfig};
 use crate::model::ModelDims;
 
 /// FPDT sequence-chunk counts swept (the paper evaluates π = 16).
 pub const FPDT_PI: [u32; 5] = [4, 8, 16, 32, 64];
 
-/// Enumerate every valid configuration for `model` on `cluster`.
-///
-/// `compositions` adds the §5.3.2 UPipe×FPDT composition — anticipated
-/// future work in the paper, so it is excluded from the default
-/// paper-faithful space (where the evaluated method families compete).
+/// Which optional sweep dimensions to enumerate beyond the method space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepDims {
+    /// Include the §5.3.2 UPipe×FPDT composition family.
+    pub compositions: bool,
+    /// AC modes to sweep; intersected with each method's supported set.
+    pub ac_modes: Vec<AcMode>,
+    /// Micro-batch counts to sweep (gradient accumulation).
+    pub micro_batches: Vec<u64>,
+    /// TP degrees to sweep (1 = pure CP, the paper's setup). Each TP rank
+    /// group subdivides a node, so tp must divide gpus_per_node, H and Hkv.
+    pub tp_degrees: Vec<u64>,
+}
+
+impl Default for SweepDims {
+    /// The expanded default space: two AC modes per applicable method
+    /// (offload + GPU-resident; NoAc is opt-in — it loses by construction),
+    /// batch sizes {1, 2, 4}, and TP ∈ {1, 2}.
+    fn default() -> Self {
+        SweepDims {
+            compositions: false,
+            ac_modes: vec![AcMode::AcOffload, AcMode::AcGpu],
+            micro_batches: vec![1, 2, 4],
+            tp_degrees: vec![1, 2],
+        }
+    }
+}
+
+impl SweepDims {
+    /// The paper-faithful space: offloaded AC only, batch 1, no TP — the
+    /// §5.1 setup the published tables were measured in.
+    pub fn paper() -> Self {
+        SweepDims {
+            compositions: false,
+            ac_modes: vec![AcMode::AcOffload],
+            micro_batches: vec![1],
+            tp_degrees: vec![1],
+        }
+    }
+}
+
+/// Enumerate every valid configuration for `model` on `cluster` across the
+/// requested sweep dimensions.
 pub fn enumerate_space(
     model: &ModelDims,
     cluster: &ClusterConfig,
-    compositions: bool,
+    dims: &SweepDims,
 ) -> Vec<ParallelConfig> {
-    let c = cluster.total_gpus();
+    let total = cluster.total_gpus();
     let h = model.n_heads;
-    let mut methods = vec![CpMethod::NativePyTorch, CpMethod::Ring];
-    if cluster.nodes == 1 {
-        methods.push(CpMethod::Ulysses);
-        // UPipe: U must be a multiple of C and a divisor of H (§3.3).
-        for u in divisors(h) {
-            if u % c == 0 {
-                for gqa in [true, false] {
-                    methods.push(CpMethod::Upipe { u: u as u32, gqa_schedule: gqa });
+    let mut out = Vec::new();
+
+    for &tp in &dims.tp_degrees {
+        // TP subdivides a node and shards heads: skip degrees that do not.
+        if tp == 0
+            || cluster.gpus_per_node % tp != 0
+            || h % tp != 0
+            || model.n_kv_heads % tp != 0
+        {
+            continue;
+        }
+        let c = total / tp;
+        let per_node = cluster.gpus_per_node / tp;
+
+        let mut methods = vec![CpMethod::NativePyTorch, CpMethod::Ring];
+        if cluster.nodes == 1 {
+            methods.push(CpMethod::Ulysses);
+            // UPipe: U must be a multiple of C and a divisor of H (§3.3).
+            for u in divisors(h) {
+                if u % c == 0 {
+                    for gqa in [true, false] {
+                        methods.push(CpMethod::Upipe { u: u as u32, gqa_schedule: gqa });
+                    }
+                }
+            }
+        } else {
+            // USP-Hybrid: Ulysses over a divisor of the node's CP ranks,
+            // ring across the rest; 1-way factors degenerate into the pure
+            // methods and are skipped.
+            for (cu, cr) in factor_pairs(c) {
+                if cu >= 2 && cr >= 2 && cu <= per_node && per_node % cu == 0 {
+                    methods.push(CpMethod::UspHybrid { ulysses: cu as u32, ring: cr as u32 });
+                }
+            }
+            // UPipe-Hybrid: stages all-to-all over the node's CP ranks (the
+            // §5.1 "restrict Ulysses degree to 8" setup), so U must cover
+            // them; ring spans the nodes.
+            for u in divisors(h) {
+                if per_node > 0 && u % per_node == 0 {
+                    methods.push(CpMethod::UpipeHybrid {
+                        u: u as u32,
+                        ulysses: per_node as u32,
+                        ring: cluster.nodes as u32,
+                    });
                 }
             }
         }
-    } else {
-        // USP-Hybrid: Ulysses over a divisor of the node, ring across the
-        // rest; 1-way factors degenerate into the pure methods and are
-        // skipped.
-        let per_node = cluster.gpus_per_node;
-        for (cu, cr) in factor_pairs(c) {
-            if cu >= 2 && cr >= 2 && cu <= per_node && per_node % cu == 0 {
-                methods.push(CpMethod::UspHybrid { ulysses: cu as u32, ring: cr as u32 });
+        for pi in FPDT_PI {
+            methods.push(CpMethod::Fpdt { pi });
+        }
+        if dims.compositions {
+            for u in divisors(h) {
+                if u % c != 0 {
+                    continue;
+                }
+                for pi in FPDT_PI {
+                    methods.push(CpMethod::UpipeFpdt { u: u as u32, pi });
+                }
             }
         }
-        // UPipe-Hybrid: stages all-to-all over the whole node (the §5.1
-        // "restrict Ulysses degree to 8" setup), so U must cover a node's
-        // ranks; ring spans the nodes.
-        for u in divisors(h) {
-            if u % cluster.gpus_per_node == 0 {
-                methods.push(CpMethod::UpipeHybrid {
-                    u: u as u32,
-                    ulysses: cluster.gpus_per_node as u32,
-                    ring: cluster.nodes as u32,
-                });
-            }
-        }
-    }
-    for pi in FPDT_PI {
-        methods.push(CpMethod::Fpdt { pi });
-    }
-    if compositions {
-        for u in divisors(h) {
-            if u % c != 0 {
-                continue;
-            }
-            for pi in FPDT_PI {
-                methods.push(CpMethod::UpipeFpdt { u: u as u32, pi });
-            }
-        }
-    }
 
-    let mut out = Vec::new();
-    for m in methods {
-        // §5.1: PIN_MEMORY is a real capacity knob — the paper flips it
-        // off at 5M so offloaded activations still fit in host RAM.
-        for pin in [true, false] {
-            let mut p = ParallelConfig::new(m, c);
-            p.pin_memory = pin;
-            if p.validate(h).is_ok() {
-                out.push(p);
+        for m in methods {
+            for &ac in &dims.ac_modes {
+                if !m.supported_ac_modes().contains(&ac) {
+                    continue;
+                }
+                for &mb in &dims.micro_batches {
+                    if mb == 0 {
+                        continue;
+                    }
+                    // §5.1: PIN_MEMORY is a real capacity knob — the paper
+                    // flips it off at 5M so offloaded activations still
+                    // fit in host RAM.
+                    for pin in [true, false] {
+                        let mut p = ParallelConfig::new(m, c);
+                        p.ac_mode = ac;
+                        p.micro_batch = mb;
+                        p.tp = tp;
+                        p.pin_memory = pin;
+                        if p.validate_model(model).is_ok() {
+                            out.push(p);
+                        }
+                    }
+                }
             }
         }
     }
@@ -94,17 +160,17 @@ mod tests {
     use crate::util::prop;
     use std::collections::HashSet;
 
-    fn llama8() -> Vec<ParallelConfig> {
-        enumerate_space(&ModelDims::llama3_8b(), &ClusterConfig::h100_node(), false)
+    fn llama8(dims: &SweepDims) -> Vec<ParallelConfig> {
+        enumerate_space(&ModelDims::llama3_8b(), &ClusterConfig::h100_node(), dims)
     }
 
     #[test]
     fn llama_single_node_space_is_broad_and_valid() {
-        let space = llama8();
-        assert!(space.len() >= 20, "only {} configs", space.len());
+        let space = llama8(&SweepDims::default());
+        assert!(space.len() >= 100, "only {} configs", space.len());
         for p in &space {
             assert!(p.validate(32).is_ok(), "{p:?}");
-            assert_eq!(p.cp_degree, 8);
+            assert_eq!(p.world(), 8, "CP×TP must cover the node: {p:?}");
         }
         let has = |m: CpMethod| space.iter().any(|p| p.method == m);
         assert!(has(CpMethod::Upipe { u: 8, gqa_schedule: true }));
@@ -112,19 +178,54 @@ mod tests {
         for p in &space {
             assert!(!p.method.label().contains("Hybrid"), "{p:?}");
         }
+        // The expanded dims are actually present: >=2 AC modes for the
+        // AC-capable methods, batch sizes {1,2,4}, and a TP=2 slice.
+        let ulysses_acs: HashSet<&str> = space
+            .iter()
+            .filter(|p| p.method == CpMethod::Ulysses)
+            .map(|p| p.ac_mode.label())
+            .collect();
+        assert!(ulysses_acs.len() >= 2, "AC sweep missing: {ulysses_acs:?}");
+        let mbs: HashSet<u64> = space.iter().map(|p| p.micro_batch).collect();
+        assert_eq!(mbs, HashSet::from([1, 2, 4]));
+        assert!(space.iter().any(|p| p.tp == 2 && p.cp_degree == 4), "TP slice");
+        // FPDT only ever appears with offloaded AC.
+        for p in &space {
+            if matches!(p.method, CpMethod::Fpdt { .. }) {
+                assert_eq!(p.ac_mode, AcMode::AcOffload, "{p:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_dims_reproduce_the_original_space() {
+        let space = llama8(&SweepDims::paper());
+        assert!(space.len() >= 20, "only {} configs", space.len());
+        for p in &space {
+            assert_eq!(p.ac_mode, AcMode::AcOffload);
+            assert_eq!(p.micro_batch, 1);
+            assert_eq!(p.tp, 1);
+            assert_eq!(p.cp_degree, 8);
+        }
     }
 
     #[test]
     fn no_duplicate_configs() {
         for compose in [false, true] {
+            let dims = SweepDims { compositions: compose, ..SweepDims::default() };
             let space = enumerate_space(
                 &ModelDims::qwen3_32b(),
                 &ClusterConfig::h100_2nodes(),
-                compose,
+                &dims,
             );
             let keys: HashSet<String> = space
                 .iter()
-                .map(|p| format!("{:?}|{}", p.method, p.pin_memory))
+                .map(|p| {
+                    format!(
+                        "{:?}|{:?}|{}|{}|{}|{}",
+                        p.method, p.ac_mode, p.pin_memory, p.micro_batch, p.tp, p.cp_degree
+                    )
+                })
                 .collect();
             assert_eq!(keys.len(), space.len());
         }
@@ -132,11 +233,17 @@ mod tests {
 
     #[test]
     fn multi_node_space_uses_hybrids() {
-        let space = enumerate_space(&ModelDims::qwen3_32b(), &ClusterConfig::h100_2nodes(), false);
-        assert!(space.len() >= 20, "only {} configs", space.len());
+        let space = enumerate_space(
+            &ModelDims::qwen3_32b(),
+            &ClusterConfig::h100_2nodes(),
+            &SweepDims::default(),
+        );
+        assert!(space.len() >= 100, "only {} configs", space.len());
         let has = |m: CpMethod| space.iter().any(|p| p.method == m);
         assert!(has(CpMethod::UspHybrid { ulysses: 8, ring: 2 }));
         assert!(has(CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 }));
+        // With TP=2, the per-node CP group shrinks to 4 ranks.
+        assert!(has(CpMethod::UpipeHybrid { u: 8, ulysses: 4, ring: 2 }));
         // The single-node methods are replaced by their hybrid forms.
         for p in &space {
             let single = matches!(p.method, CpMethod::Ulysses | CpMethod::Upipe { .. });
@@ -146,9 +253,15 @@ mod tests {
 
     #[test]
     fn compositions_are_opt_in() {
-        let base = llama8().len();
-        let with = enumerate_space(&ModelDims::llama3_8b(), &ClusterConfig::h100_node(), true);
+        let base = llama8(&SweepDims::default()).len();
+        let dims = SweepDims { compositions: true, ..SweepDims::default() };
+        let with = llama8(&dims);
         assert!(with.len() > base);
+        for p in &with {
+            if matches!(p.method, CpMethod::UpipeFpdt { .. }) {
+                assert_eq!(p.ac_mode, AcMode::AcOffload, "{p:?}");
+            }
+        }
     }
 
     #[test]
@@ -161,9 +274,10 @@ mod tests {
             } else {
                 ModelDims::qwen3_32b()
             };
-            enumerate_space(&model, &cluster, true)
-                .iter()
-                .all(|p| p.validate(model.n_heads).is_ok() && p.cp_degree == cluster.total_gpus())
+            let dims = SweepDims { compositions: true, ..SweepDims::default() };
+            enumerate_space(&model, &cluster, &dims).iter().all(|p| {
+                p.validate_model(&model).is_ok() && p.world() == cluster.total_gpus()
+            })
         });
     }
 }

@@ -6,7 +6,7 @@ use crate::config::presets::{
 };
 use crate::config::CpMethod;
 use crate::schedule::gqa::{comm_volume_heads, gqa_schedule, naive_schedule};
-use crate::schedule::{build_trace, simulate, AcMode, Quantities};
+use crate::schedule::{build_trace, simulate, AcMode};
 use crate::util::fmt::{tokens, GIB};
 use crate::util::table::Table;
 
@@ -54,21 +54,11 @@ pub fn fig2_report() -> Table {
         ("UPipe", CpMethod::Upipe { u: 8, gqa_schedule: true }, None),
     ];
     for (label, method, ac) in cases {
-        let preset = llama_single_node(method, s);
-        let report = match ac {
-            Some(mode) => {
-                let q = Quantities::new(&preset);
-                let cal = crate::engine::Calibration::default();
-                let mut e = crate::engine::Engine::new(
-                    cal.clone(),
-                    q.hbm_limit,
-                    q.persistent_bytes(&cal),
-                );
-                e.host_ram = q.host_ram_for_offload();
-                e.run(&crate::schedule::ulysses::trace(&q, mode))
-            }
-            None => simulate(&preset),
-        };
+        let mut preset = llama_single_node(method, s);
+        if let Some(mode) = ac {
+            preset.parallel.ac_mode = mode;
+        }
+        let report = simulate(&preset);
         let status = if report.oom { "OOM" } else { "fits" };
         let transient = report.peak_bytes - report.persistent_bytes;
         t.row(vec![

@@ -1,13 +1,17 @@
 //! Planner output rendering: the ranked plan table, the Pareto-frontier
 //! table, and machine-readable JSON for CI artifacts / downstream tooling.
+//! Surfaces every sweep dimension (AC mode, micro-batch, TP) and, for
+//! `--refit` runs, the calibration provenance.
 
+use crate::engine::RefitInfo;
 use crate::planner::{ConfigPlan, PlanOutcome};
 use crate::util::fmt::tokens;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
-const PLAN_HEADER: [&str; 9] = [
-    "#", "Method", "Params", "Host", "MaxCtx", "tok/s@max", "GiB@ref", "tok/s@ref", "Pareto",
+const PLAN_HEADER: [&str; 12] = [
+    "#", "Method", "Params", "AC", "b", "TP", "Host", "MaxCtx", "tok/s@max", "GiB@ref",
+    "tok/s@ref", "Pareto",
 ];
 
 fn fmt_opt(v: Option<f64>, prec: usize) -> String {
@@ -32,6 +36,9 @@ fn config_cells(rank: usize, c: &ConfigPlan) -> Vec<String> {
         rank.to_string(),
         c.parallel.method.label().to_string(),
         c.parallel.method.params(),
+        c.parallel.ac_mode.label().to_string(),
+        c.parallel.micro_batch.to_string(),
+        c.parallel.tp.to_string(),
         if c.parallel.pin_memory { "pin" } else { "nopin" }.to_string(),
         max_ctx_label(c),
         fmt_opt(c.max_ctx_tok_s_gpu, 0),
@@ -51,6 +58,27 @@ fn add_notes(t: &mut Table, out: &PlanOutcome) {
         out.cache_hits + out.cache_misses
     ));
     t.note("Pareto * = non-dominated on (GiB@ref, tok/s@ref); Host = offload pinning");
+    t.note("AC = activation ckpt (ao=offload, ac=gpu, noac); b = micro-batches; TP = tensor-par.");
+    if let Some(r) = &out.refit {
+        t.note(&format!(
+            "calibration refit from {} ({} cells, anchored at {})",
+            r.source,
+            r.cells,
+            tokens(r.anchor_seq)
+        ));
+        if !r.skipped.is_empty() {
+            t.note(&format!(
+                "WARNING: refit kept defaults for {} (unusable measurements)",
+                r.skipped.join(", ")
+            ));
+        }
+        if r.pressured_anchor {
+            t.note(
+                "WARNING: refit anchor ran under memory pressure; fitted rates absorb \
+                 the penalty",
+            );
+        }
+    }
 }
 
 /// Full ranked plan (the `repro plan` output).
@@ -102,6 +130,9 @@ fn config_json(c: &ConfigPlan) -> Json {
     Json::obj(vec![
         ("method", Json::string(c.parallel.method.label())),
         ("params", Json::string(&c.parallel.method.params())),
+        ("ac_mode", Json::string(c.parallel.ac_mode.label())),
+        ("micro_batch", Json::int(c.parallel.micro_batch)),
+        ("tp", Json::int(c.parallel.tp)),
         ("pin_memory", Json::Bool(c.parallel.pin_memory)),
         ("cp_degree", Json::int(c.parallel.cp_degree)),
         ("max_context", c.max_context.map(Json::int).unwrap_or(Json::Null)),
@@ -112,6 +143,35 @@ fn config_json(c: &ConfigPlan) -> Json {
         ("ref_peak_gib", num_or_null(c.ref_peak_gib)),
         ("ref_tok_s_per_gpu", num_or_null(c.ref_tok_s_gpu)),
         ("pareto", Json::Bool(c.pareto)),
+    ])
+}
+
+fn refit_json(r: &RefitInfo) -> Json {
+    Json::obj(vec![
+        ("source", Json::string(&r.source)),
+        ("model", Json::string(&r.model)),
+        ("cells", Json::int(r.cells as u64)),
+        ("anchor_seq", Json::int(r.anchor_seq)),
+        (
+            "skipped",
+            Json::Arr(r.skipped.iter().map(|s| Json::string(s)).collect()),
+        ),
+        ("pressured_anchor", Json::Bool(r.pressured_anchor)),
+        (
+            "fields",
+            Json::Arr(
+                r.fields
+                    .iter()
+                    .map(|f| {
+                        Json::obj(vec![
+                            ("name", Json::string(f.name)),
+                            ("old", Json::Num(f.old)),
+                            ("new", Json::Num(f.new)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
     ])
 }
 
@@ -126,6 +186,10 @@ fn outcome_json(out: &PlanOutcome, configs: Vec<Json>) -> Json {
         ("gpus", Json::int(out.cluster.total_gpus())),
         ("reference_s", Json::int(out.reference_s)),
         ("quantum", Json::int(out.quantum)),
+        (
+            "refit",
+            out.refit.as_ref().map(refit_json).unwrap_or(Json::Null),
+        ),
         ("configs", Json::Arr(configs)),
         ("simulations", Json::int(out.simulations)),
         ("trace_cache", cache),
@@ -147,15 +211,20 @@ pub fn frontier_json(out: &PlanOutcome) -> Json {
 mod tests {
     use super::*;
     use crate::config::ClusterConfig;
+    use crate::engine::RefitField;
     use crate::model::ModelDims;
-    use crate::planner::{plan, PlanRequest};
+    use crate::planner::{plan, PlanRequest, SweepDims};
 
-    fn small_plan() -> PlanOutcome {
+    fn small_req() -> PlanRequest {
         let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
         req.quantum = 1 << 20;
         req.cap_s = 8 << 20;
         req.threads = 2;
-        plan(&req)
+        req
+    }
+
+    fn small_plan() -> PlanOutcome {
+        plan(&small_req())
     }
 
     #[test]
@@ -164,16 +233,16 @@ mod tests {
         let t = plan_table(&out).render();
         assert!(t.contains("UPipe"));
         assert!(t.contains("llama3-8b"));
+        assert!(t.contains("AC"), "new dim column present");
         let f = frontier_table(&out).render();
         assert!(f.contains("Pareto frontier"));
     }
 
     #[test]
     fn capped_max_context_is_marked_as_lower_bound() {
-        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
-        req.quantum = 1 << 20;
+        let mut req = small_req();
         req.cap_s = 4 << 20; // below UPipe's 5M wall: the cap binds
-        req.threads = 2;
+        req.dims = SweepDims::paper();
         let out = plan(&req);
         let top = out.configs.first().unwrap();
         assert!(top.hit_cap);
@@ -189,8 +258,38 @@ mod tests {
         assert!(j.contains("\"model\": \"llama3-8b\""));
         assert!(j.contains("\"method\": \"UPipe\""));
         assert!(j.contains("\"max_context_label\": \"5M\""));
+        assert!(j.contains("\"ac_mode\": \"ao\""));
+        assert!(j.contains("\"micro_batch\": 1"));
+        assert!(j.contains("\"tp\": 2"), "TP slice swept and reported");
+        assert!(j.contains("\"refit\": null"));
         assert!(j.starts_with('{') && j.ends_with('}'));
         let fj = frontier_json(&out).render();
         assert!(fj.contains("\"pareto\":true"));
+    }
+
+    #[test]
+    fn refit_provenance_lands_in_output() {
+        let mut req = small_req();
+        req.dims = SweepDims::paper();
+        req.refit = Some(crate::engine::RefitInfo {
+            source: "bench.json".into(),
+            model: "llama3-8b".into(),
+            cells: 4,
+            anchor_seq: 1 << 20,
+            fields: vec![RefitField { name: "fa3_fwd_flops", old: 696e12, new: 700e12 }],
+            skipped: vec!["a2a_eff0_bps"],
+            pressured_anchor: true,
+        });
+        let out = plan(&req);
+        let j = plan_json(&out).render();
+        assert!(j.contains("\"refit\":{"), "{j}");
+        assert!(j.contains("bench.json"));
+        assert!(j.contains("fa3_fwd_flops"));
+        assert!(j.contains("\"skipped\":[\"a2a_eff0_bps\"]"));
+        assert!(j.contains("\"pressured_anchor\":true"));
+        let t = plan_table(&out).render();
+        assert!(t.contains("calibration refit from bench.json"));
+        assert!(t.contains("WARNING: refit kept defaults for a2a_eff0_bps"));
+        assert!(t.contains("refit anchor ran under memory pressure"));
     }
 }

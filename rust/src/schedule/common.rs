@@ -1,64 +1,66 @@
-//! Quantities shared by every schedule: tensor byte sizes, persistent
-//! memory, the "misc" live set, and the bulk "other" time term.
+//! Quantities shared by every schedule — tensor byte sizes, persistent
+//! memory, the "misc" live set, the bulk "other" time term — and the
+//! [`ScheduleCtx`] builder contract that threads calibration, AC mode,
+//! micro-batching and TP uniformly through every trace builder.
 
 use crate::config::presets::RunPreset;
+use crate::engine::ops::BufId;
 use crate::engine::{Calibration, Category, TraceBuilder};
 use crate::model::ModelDims;
 
-/// Activation-checkpointing mode (Fig. 2 compares all three for Ulysses).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum AcMode {
-    /// No checkpointing: every layer's intra-layer activations stay
-    /// resident until backward.
-    NoAc,
-    /// Full AC, checkpoints (layer inputs) kept on GPU.
-    AcGpu,
-    /// Full AC with CPU offloading (paper default, "AO" in Fig. 2).
-    AcOffload,
-}
+pub use crate::config::parallel::AcMode;
 
 /// Byte sizes and derived quantities for one run.
 #[derive(Debug, Clone)]
 pub struct Quantities {
     pub m: ModelDims,
     pub s: u64,
-    /// total CP degree C (== total GPUs)
+    /// context-parallel degree C (sequence sharding; == total GPUs at tp=1)
     pub c: u64,
-    /// tokens per device S/C
+    /// tensor-parallel degree sharing the mesh with CP (head sharding)
+    pub tp: u64,
+    /// tokens per CP rank S/C
     pub sc: u64,
     /// bf16 [S/C, d_model] — the paper's "S/C" unit for the residual stream
+    /// (replicated across TP ranks)
     pub x_bytes: f64,
-    /// bf16 [S/C, H·d_head] — the unit of Q and of Table 2/6 coefficients
+    /// bf16 [S/C, H·d_head / tp] — the unit of Q and of Table 2/6
+    /// coefficients (heads sharded TP-wise)
     pub q_bytes: f64,
-    /// bf16 [S/C, Hkv·d_head]
+    /// bf16 [S/C, Hkv·d_head / tp]
     pub kv_bytes: f64,
     pub hbm_limit: f64,
     pub nodes: u64,
     pub host_ram: f64,
     pub pin_memory: bool,
-    pub ac_offload: bool,
 }
 
 impl Quantities {
     pub fn new(p: &RunPreset) -> Self {
         let m = p.model.clone();
         let c = p.parallel.cp_degree;
+        let tp = p.parallel.tp.max(1);
         let s = p.seq_len;
         let sc = s / c;
         Quantities {
             x_bytes: 2.0 * sc as f64 * m.d_model as f64,
-            q_bytes: 2.0 * sc as f64 * m.q_width() as f64,
-            kv_bytes: 2.0 * sc as f64 * m.kv_width() as f64,
+            q_bytes: 2.0 * sc as f64 * m.q_width() as f64 / tp as f64,
+            kv_bytes: 2.0 * sc as f64 * m.kv_width() as f64 / tp as f64,
             hbm_limit: p.cluster.hbm_bytes * 0.95,
             nodes: p.cluster.nodes,
             host_ram: p.cluster.host_ram_bytes,
             pin_memory: p.parallel.pin_memory,
-            ac_offload: p.parallel.ac_offload,
             m,
             s,
             c,
+            tp,
             sc,
         }
+    }
+
+    /// Total ranks (CP × TP) sharing the FSDP parameter shard.
+    pub fn world(&self) -> u64 {
+        self.c * self.tp
     }
 
     /// γ·q_bytes — combined QKV bytes for one layer's full-head tensors.
@@ -69,7 +71,7 @@ impl Quantities {
     /// FSDP-sharded persistent state + framework base (CUDA context, NCCL,
     /// workspaces).
     pub fn persistent_bytes(&self, cal: &Calibration) -> f64 {
-        let fsdp = cal.bytes_per_param_fsdp * self.m.params() as f64 / self.c as f64;
+        let fsdp = cal.bytes_per_param_fsdp * self.m.params() as f64 / self.world() as f64;
         let base = if self.nodes > 1 {
             cal.base_framework_2node
         } else {
@@ -92,7 +94,7 @@ impl Quantities {
 
     /// Per-device attention FLOPs for one forward pass of one layer.
     pub fn attn_flops_layer_fwd(&self) -> f64 {
-        crate::model::flops::attn_fwd(&self.m, self.s) / (self.m.n_layers * self.c) as f64
+        crate::model::flops::attn_fwd(&self.m, self.s) / (self.m.n_layers * self.world()) as f64
     }
 
     /// The "misc" live set: gradient stream, recompute set and offload
@@ -102,7 +104,7 @@ impl Quantities {
     /// d_model-wide) plus the attention block's pre-projection output and
     /// its gradient, which are H·d_head-wide (equal for Llama, 1.6× for
     /// Qwen3's explicit head_dim) — total 6.74 units at H·d_head = d_model.
-    pub fn emit_misc(&self, b: &mut TraceBuilder) -> Vec<crate::engine::ops::BufId> {
+    pub fn emit_misc(&self, b: &mut TraceBuilder) -> Vec<BufId> {
         let x = self.x_bytes;
         let q = self.q_bytes;
         vec![
@@ -116,12 +118,18 @@ impl Quantities {
         ]
     }
 
+    /// Per-token share of the bulk "other" work (projections, MLP, loss):
+    /// TP shards these matmuls, so the rate term divides by the whole
+    /// CP×TP world, not just the CP degree.
+    pub fn other_rate_secs(&self, cal: &Calibration) -> f64 {
+        cal.other_rate * self.s as f64 * self.m.d_model as f64 * self.m.n_layers as f64
+            / self.world() as f64
+    }
+
     /// Bulk "other" time (projections, MLP, norms, loss, optimizer, data):
     /// fitted rate, see calibration.
     pub fn emit_other(&self, b: &mut TraceBuilder, cal: &Calibration, factor: f64) {
-        let secs = cal.other_fixed_per_layer * self.m.n_layers as f64
-            + cal.other_rate * self.s as f64 * self.m.d_model as f64 * self.m.n_layers as f64
-                / self.c as f64;
+        let secs = cal.other_fixed_per_layer * self.m.n_layers as f64 + self.other_rate_secs(cal);
         b.fixed(Category::Other, secs * factor);
     }
 
@@ -129,7 +137,7 @@ impl Quantities {
     /// buffers (block output + its gradient) only ever exist one sequence
     /// chunk at a time, so they drop out; the d_model-wide residual-stream
     /// buffers remain.
-    pub fn emit_misc_chunked(&self, b: &mut TraceBuilder) -> Vec<crate::engine::ops::BufId> {
+    pub fn emit_misc_chunked(&self, b: &mut TraceBuilder) -> Vec<BufId> {
         let x = self.x_bytes;
         vec![
             b.alloc("grad_dx", x),
@@ -140,10 +148,119 @@ impl Quantities {
         ]
     }
 
-    /// AC offload volume for the whole step (store on fwd + fetch on bwd of
-    /// every layer input).
-    pub fn ac_offload_bytes(&self) -> f64 {
-        2.0 * self.m.n_layers as f64 * self.x_bytes
+}
+
+/// Everything a schedule needs to build its trace: the derived byte/FLOP
+/// quantities, the calibrated rates, and the run-shape configuration
+/// (AC mode, micro-batch count, TP degree). One `ScheduleCtx` is the
+/// uniform builder contract for all eight method modules — no schedule
+/// reaches for `Calibration::default()` on its own.
+#[derive(Debug, Clone)]
+pub struct ScheduleCtx {
+    /// Derived byte/FLOP quantities — including the TP degree, which lives
+    /// here only (`q.tp`) so byte sharding can never disagree with it.
+    pub q: Quantities,
+    pub cal: Calibration,
+    /// Activation-checkpointing mode for every layer.
+    pub ac: AcMode,
+    /// Micro-batches per optimizer step (sequential, gradient-accumulated).
+    pub mb: u64,
+}
+
+impl ScheduleCtx {
+    pub fn new(p: &RunPreset, cal: &Calibration) -> Self {
+        ScheduleCtx {
+            q: Quantities::new(p),
+            cal: cal.clone(),
+            ac: p.parallel.ac_mode,
+            mb: p.parallel.micro_batch.max(1),
+        }
+    }
+
+    /// Per-micro-batch activation-checkpoint emitter (one per micro-batch:
+    /// retained checkpoints are released when its backward completes).
+    pub fn ac_emitter(&self) -> AcEmitter {
+        let q = &self.q;
+        AcEmitter {
+            mode: self.ac,
+            x_bytes: q.x_bytes,
+            // NoAc keeps the full intra-layer live set: input, normed
+            // input, QKV, attention out, MLP intermediates (4·[S/C, d_ff],
+            // d_ff sharded TP-wise like the head buffers).
+            noac_bytes: 2.0 * q.x_bytes
+                + q.qkv_bytes()
+                + 8.0 * q.sc as f64 * q.m.d_ff as f64 / q.tp as f64,
+            resident: Vec::new(),
+        }
+    }
+
+    /// Bulk "other" time for the whole step: the first micro-batch carries
+    /// the per-step fixed share (optimizer, data loader, launch floors),
+    /// later micro-batches amortize it and add only the per-token work —
+    /// the throughput benefit gradient accumulation actually buys.
+    pub fn emit_other(&self, b: &mut TraceBuilder, factor: f64) {
+        self.q.emit_other(b, &self.cal, factor);
+        if self.mb > 1 {
+            let per_token = self.q.other_rate_secs(&self.cal);
+            b.fixed(Category::Other, per_token * factor * (self.mb - 1) as f64);
+        }
+    }
+
+    /// Megatron-style TP all-reduces for one layer direction: 2 calls of
+    /// the [S/C, d_model] residual activation, ring cost 2·(tp-1)/tp per
+    /// participant. No-op at tp == 1. Schedules call this *inside* their
+    /// layer loops so the engine's comm-pressure penalty prices it against
+    /// the allocations actually live when it runs — an end-of-trace
+    /// aggregate would always see ample headroom.
+    pub fn emit_tp_allreduce(&self, b: &mut TraceBuilder) {
+        let tp = self.q.tp;
+        if tp > 1 {
+            let per_ar = 2.0 * (tp - 1) as f64 / tp as f64 * self.q.x_bytes;
+            b.all_to_all(2.0 * per_ar, true, 2, self.q.s as f64);
+        }
+    }
+}
+
+/// Emits the activation-checkpoint ops for one micro-batch, uniformly for
+/// every schedule: offloaded checkpoints (paper default), GPU-resident
+/// checkpoints, or no checkpointing at all.
+#[derive(Debug)]
+pub struct AcEmitter {
+    mode: AcMode,
+    x_bytes: f64,
+    noac_bytes: f64,
+    resident: Vec<BufId>,
+}
+
+impl AcEmitter {
+    /// End of one layer's forward: checkpoint the layer input (offload /
+    /// keep on GPU / keep the whole intra-layer live set).
+    pub fn store(&mut self, b: &mut TraceBuilder) {
+        match self.mode {
+            AcMode::AcOffload => b.offload(self.x_bytes, true),
+            AcMode::AcGpu => self.resident.push(b.alloc("ckpt_gpu", self.x_bytes)),
+            AcMode::NoAc => self.resident.push(b.alloc("noac_layer_acts", self.noac_bytes)),
+        }
+    }
+
+    /// Start of one layer's backward: fetch the checkpoint if offloaded
+    /// (negative bytes: the transfer is paid, the host RAM is released).
+    pub fn fetch(&mut self, b: &mut TraceBuilder) {
+        if self.mode == AcMode::AcOffload {
+            b.offload(-self.x_bytes, true);
+        }
+    }
+
+    /// Does backward need the forward recompute pass?
+    pub fn recompute(&self) -> bool {
+        self.mode != AcMode::NoAc
+    }
+
+    /// End of the micro-batch's backward: release retained checkpoints.
+    pub fn finish(&mut self, b: &mut TraceBuilder) {
+        for id in self.resident.drain(..) {
+            b.free(id);
+        }
     }
 }
 
@@ -206,5 +323,118 @@ mod tests {
         let pinned = Quantities::new(&qwen_two_node(CpMethod::Ring, 1 << 20));
         let unpinned = Quantities::new(&qwen_two_node(CpMethod::Ring, 5 << 20));
         assert!(unpinned.host_ram_for_offload() > pinned.host_ram_for_offload());
+    }
+
+    #[test]
+    fn tp_shards_heads_but_not_residual() {
+        let mut p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        let base = Quantities::new(&p);
+        p.parallel.tp = 2;
+        p.parallel.cp_degree = 4; // same 8-GPU world
+        let tp = Quantities::new(&p);
+        assert_eq!(tp.world(), base.world());
+        // S/C doubles (CP shrank), head buffers are halved per token.
+        assert_eq!(tp.sc, 2 * base.sc);
+        assert!((tp.q_bytes - base.q_bytes).abs() < 1e-6, "2x tokens / 2 tp");
+        assert!((tp.x_bytes - 2.0 * base.x_bytes).abs() < 1e-6, "residual replicated");
+        // FSDP persistent is sharded over the world, so it is unchanged.
+        let cal = Calibration::default();
+        assert!((tp.persistent_bytes(&cal) - base.persistent_bytes(&cal)).abs() < 1.0);
+        // Per-device attention FLOPs are world-sharded, so unchanged too.
+        assert!((tp.attn_flops_layer_fwd() - base.attn_flops_layer_fwd()).abs() < 1.0);
+    }
+
+    #[test]
+    fn ac_emitter_modes() {
+        use crate::engine::ops::validate_trace;
+        let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        let cal = Calibration::default();
+        let bytes_of = |mode: AcMode| -> (f64, usize) {
+            let mut p2 = p.clone();
+            p2.parallel.ac_mode = mode;
+            let ctx = ScheduleCtx::new(&p2, &cal);
+            let mut b = TraceBuilder::new();
+            let mut ac = ctx.ac_emitter();
+            for _ in 0..4 {
+                ac.store(&mut b);
+            }
+            for _ in 0..4 {
+                ac.fetch(&mut b);
+            }
+            ac.finish(&mut b);
+            let ops = b.finish();
+            validate_trace(&ops).unwrap();
+            let total: f64 = ops
+                .iter()
+                .map(|op| match op {
+                    crate::engine::Op::Alloc { bytes, .. } => *bytes,
+                    _ => 0.0,
+                })
+                .sum();
+            (total, ops.len())
+        };
+        let (off, off_ops) = bytes_of(AcMode::AcOffload);
+        let (gpu, _) = bytes_of(AcMode::AcGpu);
+        let (noac, _) = bytes_of(AcMode::NoAc);
+        assert_eq!(off, 0.0, "offload mode allocates nothing on GPU");
+        assert_eq!(off_ops, 8, "4 stores + 4 fetches");
+        assert!(noac > 2.0 * gpu, "NoAc holds far more than checkpoints");
+    }
+
+    #[test]
+    fn emit_other_scales_with_microbatch_and_tp() {
+        let mut p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        let cal = Calibration::default();
+        let other_secs = |p: &RunPreset| -> (f64, f64) {
+            let ctx = ScheduleCtx::new(p, &cal);
+            let mut b = TraceBuilder::new();
+            ctx.emit_other(&mut b, 1.0);
+            let mut fixed = 0.0;
+            let mut comm = 0.0;
+            for op in b.finish() {
+                match op {
+                    crate::engine::Op::Fixed { secs, .. } => fixed += secs,
+                    crate::engine::Op::AllToAll { bytes, .. } => comm += bytes,
+                    _ => {}
+                }
+            }
+            (fixed, comm)
+        };
+        let (base, base_comm) = other_secs(&p);
+        assert_eq!(base_comm, 0.0, "emit_other never carries comm");
+        p.parallel.micro_batch = 4;
+        let (mb4, _) = other_secs(&p);
+        // 4 micro-batches: 4x the per-token work, but the per-step fixed
+        // share is paid once — strictly less than a naive 4x.
+        assert!(mb4 > 3.0 * base, "mb4 {mb4} vs base {base}");
+        assert!(mb4 < 4.0 * base, "fixed share amortizes: {mb4} vs {base}");
+        p.parallel.micro_batch = 1;
+        p.parallel.tp = 2;
+        p.parallel.cp_degree = 4;
+        let (tp_other, _) = other_secs(&p);
+        // Same 8-GPU world: the TP-sharded rate term matches tp=1's.
+        assert!((tp_other - base).abs() < 1e-9, "tp {tp_other} vs base {base}");
+        // The per-layer TP all-reduce emitter carries the comm instead,
+        // and is a no-op at tp=1.
+        let cal2 = Calibration::default();
+        let tp_comm = |p: &RunPreset| -> (f64, usize) {
+            let ctx = ScheduleCtx::new(p, &cal2);
+            let mut b = TraceBuilder::new();
+            ctx.emit_tp_allreduce(&mut b);
+            let ops = b.finish();
+            let bytes = ops
+                .iter()
+                .map(|op| match op {
+                    crate::engine::Op::AllToAll { bytes, .. } => *bytes,
+                    _ => 0.0,
+                })
+                .sum();
+            (bytes, ops.len())
+        };
+        let (b2, n2) = tp_comm(&p);
+        assert!(b2 > 0.0 && n2 == 1, "tp=2 emits one all-reduce op per call");
+        p.parallel.tp = 1;
+        p.parallel.cp_degree = 8;
+        assert_eq!(tp_comm(&p), (0.0, 0), "tp=1 is a no-op");
     }
 }

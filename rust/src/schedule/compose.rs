@@ -9,13 +9,14 @@
 //! FPDT's stall behaviour. This is the paper's future-work point, built as
 //! a first-class schedule (`CpMethod::UpipeFpdt`, `repro compose`).
 
-use super::common::Quantities;
+use super::common::ScheduleCtx;
 use super::gqa::gqa_schedule;
-use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, TraceBuilder};
 use crate::model::flops;
 
-pub fn trace(q: &Quantities, u: u32, pi: u32) -> Vec<Op> {
-    let cal = Calibration::default();
+pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
+    let q = &ctx.q;
+    let cal = &ctx.cal;
     let mut b = TraceBuilder::new();
     let m = &q.m;
     let stages = gqa_schedule(m.n_heads, m.n_kv_heads, u as u64);
@@ -24,7 +25,8 @@ pub fn trace(q: &Quantities, u: u32, pi: u32) -> Vec<Op> {
     let f = cal.attn_transient_factor;
     let attn_fwd = q.attn_flops_layer_fwd();
     let a2a_frac = (q.c - 1) as f64 / q.c as f64;
-    let head_bytes = 2.0 * q.sc as f64 * m.d_head as f64;
+    // TP ranks each own 1/tp of every stage's heads (see upipe.rs).
+    let head_bytes = 2.0 * q.sc as f64 * m.d_head as f64 / q.tp as f64;
     let l = m.n_layers;
     // FPDT-style residual-stream chunking: the misc set shrinks to the
     // chunked variant, plus FPDT's offload engine + staging.
@@ -32,58 +34,70 @@ pub fn trace(q: &Quantities, u: u32, pi: u32) -> Vec<Op> {
     let engine = b.alloc("fpdt_offload_engine", cal.fpdt_extra_base);
     let staging = b.alloc("fpdt_pinned_staging", 1.3 * q.x_bytes / p);
 
-    for _ in 0..l {
-        b.snapshot("before_attn");
-        // out buffer also sequence-chunked and offloaded per piece
-        let out_buf = b.alloc("compose_out_chunk", q.q_bytes / p);
-        for st in &stages {
-            let qb = st.q_heads.len() as f64 * head_bytes;
-            let kvb = 2.0 * st.new_kv_heads.len() as f64 * head_bytes;
-            let calls = if st.new_kv_heads.is_empty() { 1 } else { 3 };
-            for _ in 0..pi {
-                let chunk = b.alloc("compose_qkv_chunk", (qb + kvb) / p * f);
-                b.all_to_all((qb + kvb) / p * a2a_frac, q.nodes == 1, calls, q.s as f64);
-                b.snapshot("inp_all_to_all");
-                b.compute(Category::Fa3Fwd, attn_fwd / nu / p);
-                b.all_to_all(qb / p * a2a_frac, q.nodes == 1, 1, q.s as f64);
-                b.offload(2.0 * kvb / p, true); // KV chunk to host
-                b.free(chunk);
-            }
-        }
-        b.free(out_buf);
-        b.offload(q.x_bytes, true); // AC checkpoint
-    }
+    for _ in 0..ctx.mb {
+        let mut ac = ctx.ac_emitter();
 
-    let beta_extra = m.beta() - m.gamma();
-    for _ in 0..l {
-        b.offload(q.x_bytes, true);
-        b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
-        b.snapshot("before_bwd_attn");
-        let dout_buf = b.alloc("compose_recomputed_out_chunk", q.q_bytes / p * f);
-        for st in &stages {
-            let qb = st.q_heads.len() as f64 * head_bytes;
-            let kvb = 2.0 * st.new_kv_heads.len() as f64 * head_bytes;
-            let calls = if st.new_kv_heads.is_empty() { 1 } else { 3 };
-            for _ in 0..pi {
-                b.offload(2.0 * kvb / p, true); // fetch KV chunk
-                let chunk = b.alloc(
-                    "compose_bwd_chunk",
-                    ((qb + kvb) + beta_extra / nu * q.q_bytes) / p * f,
-                );
-                b.all_to_all(qb / p * a2a_frac, q.nodes == 1, 1, q.s as f64);
-                b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR / nu / p);
-                b.snapshot("bwd_attn_kernel");
-                b.all_to_all((qb + kvb) / p * a2a_frac, q.nodes == 1, calls, q.s as f64);
-                b.free(chunk);
+        for _ in 0..l {
+            b.snapshot("before_attn");
+            // out buffer also sequence-chunked and offloaded per piece
+            let out_buf = b.alloc("compose_out_chunk", q.q_bytes / p);
+            for st in &stages {
+                let qb = st.q_heads.len() as f64 * head_bytes;
+                let kvb = 2.0 * st.new_kv_heads.len() as f64 * head_bytes;
+                let calls = if st.new_kv_heads.is_empty() { 1 } else { 3 };
+                for _ in 0..pi {
+                    let chunk = b.alloc("compose_qkv_chunk", (qb + kvb) / p * f);
+                    b.all_to_all((qb + kvb) / p * a2a_frac, q.nodes == 1, calls, q.s as f64);
+                    b.snapshot("inp_all_to_all");
+                    b.compute(Category::Fa3Fwd, attn_fwd / nu / p);
+                    b.all_to_all(qb / p * a2a_frac, q.nodes == 1, 1, q.s as f64);
+                    b.offload(2.0 * kvb / p, true); // KV chunk to host
+                    b.free(chunk);
+                }
             }
+            b.free(out_buf);
+            ctx.emit_tp_allreduce(&mut b);
+            ac.store(&mut b);
         }
-        b.free(dout_buf);
+
+        let beta_extra = m.beta() - m.gamma();
+        for _ in 0..l {
+            ac.fetch(&mut b);
+            if ac.recompute() {
+                b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
+            }
+            b.snapshot("before_bwd_attn");
+            let dout_buf = b.alloc("compose_recomputed_out_chunk", q.q_bytes / p * f);
+            for st in &stages {
+                let qb = st.q_heads.len() as f64 * head_bytes;
+                let kvb = 2.0 * st.new_kv_heads.len() as f64 * head_bytes;
+                let calls = if st.new_kv_heads.is_empty() { 1 } else { 3 };
+                for _ in 0..pi {
+                    b.offload(-(2.0 * kvb) / p, true); // fetch KV chunk
+                    let chunk = b.alloc(
+                        "compose_bwd_chunk",
+                        ((qb + kvb) + beta_extra / nu * q.q_bytes) / p * f,
+                    );
+                    b.all_to_all(qb / p * a2a_frac, q.nodes == 1, 1, q.s as f64);
+                    b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR / nu / p);
+                    b.snapshot("bwd_attn_kernel");
+                    b.all_to_all((qb + kvb) / p * a2a_frac, q.nodes == 1, calls, q.s as f64);
+                    b.free(chunk);
+                }
+            }
+            b.free(dout_buf);
+            ctx.emit_tp_allreduce(&mut b);
+        }
+        ac.finish(&mut b);
     }
 
     // both overheads: UPipe's extra launches are inside the a2a calls;
     // FPDT's CPU stall applies to the sequence chunking.
-    b.fixed(Category::Other, cal.fpdt_stall(q.s as f64, m.n_layers));
-    q.emit_other(&mut b, &cal, 1.0);
+    b.fixed(
+        Category::Other,
+        cal.fpdt_stall(q.s as f64, m.n_layers) * ctx.mb as f64,
+    );
+    ctx.emit_other(&mut b, 1.0);
     b.free(staging);
     b.free(engine);
     b.free_all(misc);
@@ -92,22 +106,15 @@ pub fn trace(q: &Quantities, u: u32, pi: u32) -> Vec<Op> {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::config::presets::llama_single_node;
     use crate::config::CpMethod;
     use crate::engine::ops::validate_trace;
-    use crate::engine::Engine;
-    use crate::schedule::simulate;
+    use crate::schedule::{build_trace, simulate};
 
     fn run(s: u64) -> crate::engine::StepReport {
-        let p = llama_single_node(CpMethod::Upipe { u: 8, gqa_schedule: true }, s);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let t = trace(&q, 8, 16);
-        validate_trace(&t).unwrap();
-        let mut e = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal));
-        e.host_ram = q.host_ram_for_offload();
-        e.run(&t)
+        let p = llama_single_node(CpMethod::UpipeFpdt { u: 8, pi: 16 }, s);
+        validate_trace(&build_trace(&p)).unwrap();
+        simulate(&p)
     }
 
     #[test]

@@ -1,14 +1,16 @@
 //! Fully Pipelined Distributed Transformer (Yao et al. 2025) baseline:
 //! attention chunked along the *sequence* dimension into π chunks with
 //! online softmax, chunks offloaded to CPU and double-buffered back
-//! (§2.1/§5.2). Orthogonal to UPipe's head chunking.
+//! (§2.1/§5.2). Orthogonal to UPipe's head chunking. The FPDT family
+//! hard-requires offloaded AC ([`crate::config::CpMethod::supported_ac_modes`]).
 
-use super::common::Quantities;
-use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use super::common::ScheduleCtx;
+use crate::engine::{Category, Op, TraceBuilder};
 use crate::model::flops;
 
-pub fn trace(q: &Quantities, pi: u32) -> Vec<Op> {
-    let cal = Calibration::default();
+pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
+    let q = &ctx.q;
+    let cal = &ctx.cal;
     let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let p = pi as f64;
@@ -24,46 +26,59 @@ pub fn trace(q: &Quantities, pi: u32) -> Vec<Op> {
     let extra = b.alloc("fpdt_offload_engine", cal.fpdt_extra_base);
     let staging = b.alloc("fpdt_pinned_staging", 1.3 * q.x_bytes);
 
-    for _ in 0..l {
-        b.snapshot("before_attn");
-        // double buffers for the in-flight chunk pair
-        let dbuf = b.alloc("fpdt_double_buffer", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
-        for _ in 0..pi {
-            let chunk = b.alloc("fpdt_chunk", (2.0 * q.m.gamma() + 1.0) / p * q.q_bytes * f);
-            b.all_to_all((q.qkv_bytes() + q.q_bytes) / p * a2a_frac, intra, 4, q.s as f64);
-            b.snapshot("inp_all_to_all");
-            b.compute(Category::Fa3Fwd, attn_fwd / p);
-            b.snapshot("attn_kernel");
-            // offload the processed chunk's KV to host (overlapped)
-            b.offload(2.0 * q.kv_bytes / p, true);
-            b.free(chunk);
-        }
-        b.free(dbuf);
-        b.offload(q.x_bytes, true);
-    }
+    for _ in 0..ctx.mb {
+        let mut ac = ctx.ac_emitter();
 
-    let beta = q.m.beta();
-    for _ in 0..l {
-        b.offload(q.x_bytes, true);
-        b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
-        b.snapshot("before_bwd_attn");
-        let dbuf = b.alloc("fpdt_double_buffer_bwd", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
-        for _ in 0..pi {
-            // fetch the chunk's KV back from host
-            b.offload(2.0 * q.kv_bytes / p, true);
-            let chunk = b.alloc("fpdt_bwd_chunk", (beta + 2.0) / p * q.q_bytes * f);
-            b.all_to_all((q.qkv_bytes() + q.q_bytes) / p * a2a_frac, intra, 4, q.s as f64);
-            b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR / p);
-            b.snapshot("bwd_attn_kernel");
-            b.free(chunk);
+        for _ in 0..l {
+            b.snapshot("before_attn");
+            // double buffers for the in-flight chunk pair
+            let dbuf = b.alloc("fpdt_double_buffer", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
+            for _ in 0..pi {
+                let chunk = b.alloc("fpdt_chunk", (2.0 * q.m.gamma() + 1.0) / p * q.q_bytes * f);
+                b.all_to_all((q.qkv_bytes() + q.q_bytes) / p * a2a_frac, intra, 4, q.s as f64);
+                b.snapshot("inp_all_to_all");
+                b.compute(Category::Fa3Fwd, attn_fwd / p);
+                b.snapshot("attn_kernel");
+                // offload the processed chunk's KV to host (overlapped)
+                b.offload(2.0 * q.kv_bytes / p, true);
+                b.free(chunk);
+            }
+            b.free(dbuf);
+            ctx.emit_tp_allreduce(&mut b);
+            ac.store(&mut b);
         }
-        b.free(dbuf);
+
+        let beta = q.m.beta();
+        for _ in 0..l {
+            ac.fetch(&mut b);
+            if ac.recompute() {
+                b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
+            }
+            b.snapshot("before_bwd_attn");
+            let dbuf =
+                b.alloc("fpdt_double_buffer_bwd", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
+            for _ in 0..pi {
+                // fetch the chunk's KV back from host (releases host RAM)
+                b.offload(-(2.0 * q.kv_bytes) / p, true);
+                let chunk = b.alloc("fpdt_bwd_chunk", (beta + 2.0) / p * q.q_bytes * f);
+                b.all_to_all((q.qkv_bytes() + q.q_bytes) / p * a2a_frac, intra, 4, q.s as f64);
+                b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR / p);
+                b.snapshot("bwd_attn_kernel");
+                b.free(chunk);
+            }
+            b.free(dbuf);
+            ctx.emit_tp_allreduce(&mut b);
+        }
+        ac.finish(&mut b);
     }
 
     // CPU-side scheduler stalls: the throughput penalty §5.3 attributes to
     // "frequent CPU-GPU transfers"; partially amortized at long S.
-    b.fixed(Category::Other, cal.fpdt_stall(q.s as f64, q.m.n_layers));
-    q.emit_other(&mut b, &cal, 1.0);
+    b.fixed(
+        Category::Other,
+        cal.fpdt_stall(q.s as f64, q.m.n_layers) * ctx.mb as f64,
+    );
+    ctx.emit_other(&mut b, 1.0);
     b.free(staging);
     b.free(extra);
     b.free_all(misc);
@@ -72,21 +87,18 @@ pub fn trace(q: &Quantities, pi: u32) -> Vec<Op> {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::config::presets::llama_single_node;
     use crate::config::CpMethod;
     use crate::engine::ops::validate_trace;
-    use crate::engine::Engine;
+    use crate::engine::{Calibration, Op};
+    use crate::schedule::{build_trace, simulate, ScheduleCtx};
 
     const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 
     fn run(s: u64) -> crate::engine::StepReport {
         let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, s);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let t = trace(&q, 16);
-        validate_trace(&t).unwrap();
-        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+        validate_trace(&build_trace(&p)).unwrap();
+        simulate(&p)
     }
 
     #[test]
@@ -108,13 +120,7 @@ mod tests {
 
     #[test]
     fn fpdt_lowest_memory_but_slowest_of_modern() {
-        use super::super::common::AcMode;
-        use super::super::ulysses;
-        let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let ul = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal))
-            .run(&ulysses::trace(&q, AcMode::AcOffload));
+        let ul = simulate(&llama_single_node(CpMethod::Ulysses, 1 << 20));
         let fp = run(1 << 20);
         assert!(fp.peak_bytes < ul.peak_bytes, "FPDT uses least memory");
         assert!(fp.step_time > ul.step_time, "FPDT pays throughput");
@@ -130,9 +136,9 @@ mod tests {
     #[test]
     fn chunk_buffers_shrink_with_pi() {
         let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, 1 << 20);
-        let q = Quantities::new(&p);
+        let ctx = ScheduleCtx::new(&p, &Calibration::default());
         let max_chunk = |pi: u32| -> f64 {
-            trace(&q, pi)
+            super::trace(&ctx, pi)
                 .iter()
                 .filter_map(|op| match op {
                     Op::Alloc { bytes, name, .. } if name.contains("chunk") => Some(*bytes),

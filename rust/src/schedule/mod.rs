@@ -1,11 +1,16 @@
 //! Context-parallelism schedules: one module per method in the paper's
-//! evaluation. Each schedule turns (model, cluster, parallel layout, S)
-//! into an op trace ([`crate::engine::ops::Op`]) describing one training
-//! step on a representative device; the engine prices it.
+//! evaluation. Each schedule turns a [`ScheduleCtx`] — derived quantities
+//! plus calibration, AC mode, micro-batching and TP, built from a
+//! (model, cluster, parallel layout, S) preset — into an op trace
+//! ([`crate::engine::ops::Op`]) describing one training step on a
+//! representative device; the engine prices it.
 //!
 //! Schedules encode the *structural* behaviour — which buffers exist when
 //! (Tables 2 & 6), what is communicated (Fig. 4), what overlaps — while
-//! the engine's calibration holds the fitted hardware rates.
+//! the engine's calibration holds the fitted hardware rates. No schedule
+//! reads `Calibration::default()` on its own: the calibration always
+//! arrives through the `ScheduleCtx`, so planner-driven refits flow into
+//! every trace uniformly.
 //!
 //! The planner sweeps thousands of (config, S) cells, many of them
 //! repeatedly (bisection re-probes, frontier + report passes, pin-memory
@@ -30,22 +35,29 @@ use crate::config::presets::RunPreset;
 use crate::config::CpMethod;
 use crate::engine::{Calibration, Engine, Op, StepReport};
 
-pub use common::{AcMode, Quantities};
+pub use common::{AcEmitter, AcMode, Quantities, ScheduleCtx};
 
-/// Build the op trace for a preset.
+/// Build the op trace for a preset at the default calibration.
 pub fn build_trace(p: &RunPreset) -> Vec<Op> {
-    let q = Quantities::new(p);
+    build_trace_with(p, &Calibration::default())
+}
+
+/// Build the op trace for a preset under a specific calibration — the
+/// uniform builder contract: every schedule consumes calibration, AC mode,
+/// micro-batch count and TP degree through one [`ScheduleCtx`].
+pub fn build_trace_with(p: &RunPreset, calib: &Calibration) -> Vec<Op> {
+    let ctx = ScheduleCtx::new(p, calib);
     match p.parallel.method {
-        CpMethod::NativePyTorch => native::trace(&q),
-        CpMethod::Ring => ring_attn::trace(&q),
-        CpMethod::Ulysses => ulysses::trace(&q, AcMode::AcOffload),
-        CpMethod::Fpdt { pi } => fpdt::trace(&q, pi),
-        CpMethod::Upipe { u, gqa_schedule } => upipe::trace(&q, u, gqa_schedule, false),
-        CpMethod::UspHybrid { ulysses: cu, ring: cr } => usp::trace(&q, cu, cr),
+        CpMethod::NativePyTorch => native::trace(&ctx),
+        CpMethod::Ring => ring_attn::trace(&ctx),
+        CpMethod::Ulysses => ulysses::trace(&ctx),
+        CpMethod::Fpdt { pi } => fpdt::trace(&ctx, pi),
+        CpMethod::Upipe { u, gqa_schedule } => upipe::trace(&ctx, u, gqa_schedule, false),
+        CpMethod::UspHybrid { ulysses: cu, ring: cr } => usp::trace(&ctx, cu, cr),
         CpMethod::UpipeHybrid { u, ulysses: cu, ring: cr } => {
-            usp::upipe_hybrid_trace(&q, u, cu, cr)
+            usp::upipe_hybrid_trace(&ctx, u, cu, cr)
         }
-        CpMethod::UpipeFpdt { u, pi } => compose::trace(&q, u, pi),
+        CpMethod::UpipeFpdt { u, pi } => compose::trace(&ctx, u, pi),
     }
 }
 
@@ -55,23 +67,29 @@ pub fn simulate(p: &RunPreset) -> StepReport {
 }
 
 pub fn simulate_with(p: &RunPreset, calib: &Calibration) -> StepReport {
-    let trace = build_trace(p);
+    let trace = build_trace_with(p, calib);
     run_trace(p, calib, &trace)
 }
 
 /// `simulate_with`, but fetching the op trace from (or inserting it into)
 /// `cache` — the planner's hot path.
 pub fn simulate_cached(p: &RunPreset, calib: &Calibration, cache: &TraceCache) -> StepReport {
-    let trace = cache.trace(p);
+    let trace = cache.trace(p, calib);
     run_trace(p, calib, trace.as_slice())
 }
 
 /// Price an already-built trace for a preset (shared by the cached and
-/// uncached simulation paths).
+/// uncached simulation paths). Host RAM comes from the cluster config so
+/// offload-heavy schedules (FPDT, AC-offload, micro-batched runs) can OOM
+/// on the host side too.
 fn run_trace(p: &RunPreset, calib: &Calibration, trace: &[Op]) -> StepReport {
     let q = Quantities::new(p);
-    let mut engine = Engine::new(calib.clone(), q.hbm_limit, q.persistent_bytes(calib));
-    engine.host_ram = q.host_ram_for_offload();
+    let engine = Engine::new(
+        calib.clone(),
+        q.hbm_limit,
+        q.persistent_bytes(calib),
+        q.host_ram_for_offload(),
+    );
     let mut report = engine.run(trace);
     // FPDT's published implementation fails beyond 4M tokens (§5.2 note);
     // reproduce the failure rather than extrapolating.
@@ -83,10 +101,10 @@ fn run_trace(p: &RunPreset, calib: &Calibration, trace: &[Op]) -> StepReport {
     report
 }
 
-/// Thread-safe memo of built op traces, keyed by every input `build_trace`
-/// reads. Traces are immutable once built, so they are shared as `Arc`s;
-/// concurrent builders may race on a cold key, in which case one build is
-/// discarded and the canonical entry wins.
+/// Thread-safe memo of built op traces, keyed by every input the trace
+/// builder reads. Traces are immutable once built, so they are shared as
+/// `Arc`s; concurrent builders may race on a cold key, in which case one
+/// build is discarded and the canonical entry wins.
 #[derive(Default)]
 pub struct TraceCache {
     traces: Mutex<HashMap<String, Arc<Vec<Op>>>>,
@@ -101,32 +119,38 @@ impl TraceCache {
 
     /// Cache key: everything the trace depends on — the full model dims
     /// (not just the name: refit experiments build modified variants that
-    /// keep it), cluster shape, layout and S. Note `pin_memory` is
-    /// deliberately absent — pinning changes pricing (host-RAM budget),
-    /// not trace structure, so pin variants share one trace.
-    pub fn key(p: &RunPreset) -> String {
+    /// keep it), cluster shape, layout and S, the AC/micro-batch/TP dims,
+    /// and the calibration fingerprint (refit calibrations change emitted
+    /// op durations and byte sizes, so they must not alias the default
+    /// fit's traces). Note `pin_memory` is deliberately absent — pinning
+    /// changes pricing (host-RAM budget), not trace structure, so pin
+    /// variants share one trace.
+    pub fn key(p: &RunPreset, calib: &Calibration) -> String {
         format!(
-            "{:?}|{:?}|{}n{}g|c{}|s{}|ac{}",
+            "{:?}|{:?}|{}n{}g|c{}|s{}|{:?}|b{}|tp{}|cal{:016x}",
             p.parallel.method,
             p.model,
             p.cluster.nodes,
             p.cluster.gpus_per_node,
             p.parallel.cp_degree,
             p.seq_len,
-            p.parallel.ac_offload
+            p.parallel.ac_mode,
+            p.parallel.micro_batch,
+            p.parallel.tp,
+            calib.fingerprint()
         )
     }
 
-    /// Fetch (or build and insert) the trace for `p`.
-    pub fn trace(&self, p: &RunPreset) -> Arc<Vec<Op>> {
-        let key = Self::key(p);
+    /// Fetch (or build and insert) the trace for `p` under `calib`.
+    pub fn trace(&self, p: &RunPreset, calib: &Calibration) -> Arc<Vec<Op>> {
+        let key = Self::key(p, calib);
         if let Some(t) = self.traces.lock().unwrap().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return t.clone();
         }
         // Build outside the lock: traces can be long and the planner's
         // workers build neighbouring cells concurrently.
-        let built = Arc::new(build_trace(p));
+        let built = Arc::new(build_trace_with(p, calib));
         self.misses.fetch_add(1, Ordering::Relaxed);
         let mut map = self.traces.lock().unwrap();
         map.entry(key).or_insert(built).clone()
@@ -153,6 +177,8 @@ impl TraceCache {
 mod tests {
     use super::*;
     use crate::config::presets::llama_single_node;
+    use crate::engine::ops::validate_trace;
+    use crate::util::prop;
 
     #[test]
     fn cached_simulation_matches_uncached() {
@@ -189,10 +215,88 @@ mod tests {
     }
 
     #[test]
+    fn distinct_dims_and_calibrations_get_distinct_traces() {
+        let cache = TraceCache::new();
+        let cal = Calibration::default();
+        let base = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        simulate_cached(&base, &cal, &cache);
+
+        // A different AC mode must not alias the default trace.
+        let mut ac = base.clone();
+        ac.parallel.ac_mode = AcMode::AcGpu;
+        simulate_cached(&ac, &cal, &cache);
+        // Nor a different micro-batch count...
+        let mut mb = base.clone();
+        mb.parallel.micro_batch = 2;
+        simulate_cached(&mb, &cal, &cache);
+        // ...nor a refit-style calibration with different rates.
+        let mut cal2 = cal.clone();
+        cal2.fa3_fwd_flops *= 1.1;
+        assert_ne!(cal.fingerprint(), cal2.fingerprint());
+        simulate_cached(&base, &cal2, &cache);
+
+        assert_eq!((cache.hits(), cache.misses()), (0, 4), "4 distinct keys");
+    }
+
+    #[test]
     fn fpdt_failure_rule_applies_on_cached_path() {
         let cache = TraceCache::new();
         let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, 5 << 20);
         let r = simulate_cached(&p, &Calibration::default(), &cache);
         assert!(r.failed.is_some() || r.oom, "FPDT must not extrapolate past 4M");
+    }
+
+    #[test]
+    fn prop_traces_balanced_nonnegative_and_peak_stable_under_replay() {
+        // Every method × S × AC mode × micro-batch: the trace must have
+        // balanced Alloc/Free pairs and non-negative bytes, and its peak
+        // must be invariant when replayed through the trace cache.
+        let methods = [
+            CpMethod::NativePyTorch,
+            CpMethod::Ring,
+            CpMethod::Ulysses,
+            CpMethod::Fpdt { pi: 16 },
+            CpMethod::Upipe { u: 8, gqa_schedule: true },
+            CpMethod::UpipeFpdt { u: 8, pi: 8 },
+        ];
+        let modes = [AcMode::AcOffload, AcMode::AcGpu, AcMode::NoAc];
+        let cal = Calibration::default();
+        let cache = TraceCache::new();
+        prop::check("trace-invariants", 40, &[(0, 5), (1, 8), (0, 2), (0, 2)], |a| {
+            let mut p = llama_single_node(methods[a[0] as usize], (a[1] as u64) << 18);
+            p.parallel.ac_mode = modes[a[2] as usize];
+            p.parallel.micro_batch = 1 << a[3];
+            if p.parallel.validate_model(&p.model).is_err() {
+                return true; // e.g. FPDT × non-offload AC: not a valid cell
+            }
+            let trace = build_trace_with(&p, &cal);
+            if validate_trace(&trace).is_err() {
+                return false;
+            }
+            // Allocs and comm volumes must be non-negative; offloads may be
+            // negative (fetches release host RAM) but must net out >= 0 —
+            // a trace can never fetch more than it stored.
+            let mut host_net = 0.0f64;
+            for op in &trace {
+                match op {
+                    Op::Alloc { bytes, .. } | Op::AllToAll { bytes, .. } => {
+                        if *bytes < 0.0 {
+                            return false;
+                        }
+                    }
+                    Op::Offload { bytes, .. } => host_net += bytes,
+                    _ => {}
+                }
+            }
+            if host_net < -1e-6 {
+                return false;
+            }
+            let direct = simulate_with(&p, &cal);
+            let replay1 = simulate_cached(&p, &cal, &cache);
+            let replay2 = simulate_cached(&p, &cal, &cache);
+            direct.peak_bytes == replay1.peak_bytes
+                && replay1.peak_bytes == replay2.peak_bytes
+                && direct.oom == replay2.oom
+        });
     }
 }

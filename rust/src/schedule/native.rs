@@ -3,12 +3,13 @@
 //! [S/C, d_ff] SwiGLU intermediates), no fused loss (chunked fp32 CE), and
 //! fp32 RoPE / norm casts (§2.3 calls out both overheads).
 
-use super::common::Quantities;
-use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use super::common::ScheduleCtx;
+use crate::engine::{Category, Op, TraceBuilder};
 use crate::model::flops;
 
-pub fn trace(q: &Quantities) -> Vec<Op> {
-    let cal = Calibration::default();
+pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
+    let q = &ctx.q;
+    let cal = &ctx.cal;
     let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let slow_path = q.m.q_width() != q.m.d_model;
@@ -29,7 +30,7 @@ pub fn trace(q: &Quantities) -> Vec<Op> {
     // casts (4 x-units).
     let untiled = b.alloc(
         "native_untiled_set",
-        8.0 * q.sc as f64 * q.m.d_ff as f64 + 8.0 * q.x_bytes
+        8.0 * q.sc as f64 * q.m.d_ff as f64 / q.tp as f64 + 8.0 * q.x_bytes
             + 2.0 * 2.0 * (q.q_bytes + q.kv_bytes)
             + 4.0 * q.x_bytes,
     );
@@ -44,41 +45,53 @@ pub fn trace(q: &Quantities) -> Vec<Op> {
         b.alloc("ring_ib_staging", peers * 2.0 * q.kv_bytes * f)
     });
 
-    for _ in 0..l {
-        b.snapshot("before_attn");
-        let qkv = b.alloc("native_qkv_local", q.qkv_bytes() * f);
-        let inflight = b.alloc("native_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
-        b.ring(steps, 2.0 * q.kv_bytes, q.nodes > 1);
-        b.compute(Category::Fa3Fwd, attn_fwd);
-        b.snapshot("attn_kernel");
-        b.free(inflight);
-        b.free(qkv);
-        b.offload(q.x_bytes, true);
-    }
+    for _ in 0..ctx.mb {
+        let mut ac = ctx.ac_emitter();
 
-    let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
-    for _ in 0..l {
-        b.offload(q.x_bytes, true);
-        b.compute(Category::Fa3Fwd, attn_fwd);
-        b.snapshot("before_bwd_attn");
-        let qkv = b.alloc("native_qkv_bwd", q.qkv_bytes() * f);
-        let grads = b.alloc("native_bwd_set", beta_extra * f);
-        let dkv = b.alloc("native_dkv_fp32", 2.0 * 2.0 * q.kv_bytes * f);
-        let inflight = b.alloc("native_kv_inflight_bwd", 2.0 * 2.0 * q.kv_bytes * f);
-        b.ring(steps, 2.0 * 2.0 * q.kv_bytes, q.nodes > 1);
-        b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
-        b.snapshot("bwd_attn_kernel");
-        b.free(inflight);
-        b.free(dkv);
-        b.free(grads);
-        b.free(qkv);
+        for _ in 0..l {
+            b.snapshot("before_attn");
+            let qkv = b.alloc("native_qkv_local", q.qkv_bytes() * f);
+            let inflight = b.alloc("native_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
+            b.ring(steps, 2.0 * q.kv_bytes, q.nodes > 1);
+            b.compute(Category::Fa3Fwd, attn_fwd);
+            b.snapshot("attn_kernel");
+            b.free(inflight);
+            b.free(qkv);
+            ctx.emit_tp_allreduce(&mut b);
+            ac.store(&mut b);
+        }
+
+        let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
+        for _ in 0..l {
+            ac.fetch(&mut b);
+            if ac.recompute() {
+                b.compute(Category::Fa3Fwd, attn_fwd);
+            }
+            b.snapshot("before_bwd_attn");
+            let qkv = b.alloc("native_qkv_bwd", q.qkv_bytes() * f);
+            let grads = b.alloc("native_bwd_set", beta_extra * f);
+            let dkv = b.alloc("native_dkv_fp32", 2.0 * 2.0 * q.kv_bytes * f);
+            let inflight = b.alloc("native_kv_inflight_bwd", 2.0 * 2.0 * q.kv_bytes * f);
+            b.ring(steps, 2.0 * 2.0 * q.kv_bytes, q.nodes > 1);
+            b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
+            b.snapshot("bwd_attn_kernel");
+            b.free(inflight);
+            b.free(dkv);
+            b.free(grads);
+            b.free(qkv);
+            ctx.emit_tp_allreduce(&mut b);
+        }
+        ac.finish(&mut b);
     }
 
     if slow_path {
         // fp32 full-head materialization is memory-bound: linear in S
-        b.fixed(Category::Other, cal.native_slowpath_per_token * q.s as f64);
+        b.fixed(
+            Category::Other,
+            cal.native_slowpath_per_token * q.s as f64 * ctx.mb as f64,
+        );
     }
-    q.emit_other(&mut b, &cal, cal.native_other_factor);
+    ctx.emit_other(&mut b, cal.native_other_factor);
     if let Some(st) = staging {
         b.free(st);
     }
@@ -92,21 +105,17 @@ pub fn trace(q: &Quantities) -> Vec<Op> {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::config::presets::llama_single_node;
     use crate::config::CpMethod;
     use crate::engine::ops::validate_trace;
-    use crate::engine::Engine;
+    use crate::schedule::{build_trace, simulate};
 
     const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 
     fn run(s: u64) -> crate::engine::StepReport {
         let p = llama_single_node(CpMethod::NativePyTorch, s);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let t = trace(&q);
-        validate_trace(&t).unwrap();
-        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+        validate_trace(&build_trace(&p)).unwrap();
+        simulate(&p)
     }
 
     #[test]
@@ -125,12 +134,7 @@ mod tests {
     #[test]
     fn native_slowest_method() {
         // Table 3: native is the slowest row everywhere it runs.
-        use super::super::ring_attn;
-        let p = llama_single_node(CpMethod::Ring, 1 << 20);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let ring = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal))
-            .run(&ring_attn::trace(&q));
+        let ring = simulate(&llama_single_node(CpMethod::Ring, 1 << 20));
         assert!(run(1 << 20).step_time > ring.step_time);
     }
 

@@ -2,18 +2,19 @@
 //! implementation). KV shards circulate the ring in C−1 P2P rounds per
 //! attention; no all-to-all, but O(C) communication calls (§2.1).
 
-use super::common::Quantities;
-use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use super::common::ScheduleCtx;
+use crate::engine::{Category, Op, TraceBuilder};
 use crate::model::flops;
 
-pub fn trace(q: &Quantities) -> Vec<Op> {
-    trace_with(q, q.c, q.nodes > 1)
+pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
+    trace_with(ctx, ctx.q.c, ctx.q.nodes > 1)
 }
 
 /// `ring_c` ranks participate in the ring; `inter` if it crosses nodes.
 /// (USP-Hybrid reuses this for its ring dimension.)
-pub fn trace_with(q: &Quantities, ring_c: u64, inter: bool) -> Vec<Op> {
-    let cal = Calibration::default();
+pub fn trace_with(ctx: &ScheduleCtx, ring_c: u64, inter: bool) -> Vec<Op> {
+    let q = &ctx.q;
+    let cal = &ctx.cal;
     let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let attn_fwd = q.attn_flops_layer_fwd();
@@ -27,45 +28,54 @@ pub fn trace_with(q: &Quantities, ring_c: u64, inter: bool) -> Vec<Op> {
         b.alloc("ring_ib_staging", peers * 2.0 * q.kv_bytes * f)
     });
 
-    for _ in 0..l {
-        b.snapshot("before_attn");
-        // local QKV + two in-flight KV blocks (send/recv double buffer)
-        let qkv = b.alloc("ring_qkv_local", q.qkv_bytes() * f);
-        let inflight = b.alloc("ring_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
-        // online-softmax rescale state (out accumulator + lse)
-        let lse = b.alloc("ring_lse_out", 0.2 * q.q_bytes);
-        b.ring(steps, 2.0 * q.kv_bytes, inter);
-        b.snapshot("ring_exchange");
-        b.compute(Category::Fa3Fwd, attn_fwd);
-        b.snapshot("attn_kernel");
-        b.free(lse);
-        b.free(inflight);
-        b.free(qkv);
-        b.offload(q.x_bytes, true);
+    for _ in 0..ctx.mb {
+        let mut ac = ctx.ac_emitter();
+
+        for _ in 0..l {
+            b.snapshot("before_attn");
+            // local QKV + two in-flight KV blocks (send/recv double buffer)
+            let qkv = b.alloc("ring_qkv_local", q.qkv_bytes() * f);
+            let inflight = b.alloc("ring_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
+            // online-softmax rescale state (out accumulator + lse)
+            let lse = b.alloc("ring_lse_out", 0.2 * q.q_bytes);
+            b.ring(steps, 2.0 * q.kv_bytes, inter);
+            b.snapshot("ring_exchange");
+            b.compute(Category::Fa3Fwd, attn_fwd);
+            b.snapshot("attn_kernel");
+            b.free(lse);
+            b.free(inflight);
+            b.free(qkv);
+            ctx.emit_tp_allreduce(&mut b);
+            ac.store(&mut b);
+        }
+
+        let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
+        for _ in 0..l {
+            ac.fetch(&mut b);
+            if ac.recompute() {
+                b.compute(Category::Fa3Fwd, attn_fwd);
+            }
+            b.snapshot("before_bwd_attn");
+            let qkv = b.alloc("ring_qkv_local_bwd", q.qkv_bytes() * f);
+            let grads = b.alloc("ring_bwd_set", beta_extra * f);
+            // dKV accumulators travel the ring in fp32 (2× bf16 size)
+            let dkv = b.alloc("ring_dkv_fp32", 2.0 * 2.0 * q.kv_bytes * f);
+            let inflight = b.alloc("ring_kv_inflight_bwd", 2.0 * 2.0 * q.kv_bytes * f);
+            // bwd ring: KV forward again + dKV backward
+            b.ring(steps, 2.0 * 2.0 * q.kv_bytes, inter);
+            b.snapshot("bwd_ring_exchange");
+            b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
+            b.snapshot("bwd_attn_kernel");
+            b.free(inflight);
+            b.free(dkv);
+            b.free(grads);
+            b.free(qkv);
+            ctx.emit_tp_allreduce(&mut b);
+        }
+        ac.finish(&mut b);
     }
 
-    let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
-    for _ in 0..l {
-        b.offload(q.x_bytes, true);
-        b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
-        b.snapshot("before_bwd_attn");
-        let qkv = b.alloc("ring_qkv_local_bwd", q.qkv_bytes() * f);
-        let grads = b.alloc("ring_bwd_set", beta_extra * f);
-        // dKV accumulators travel the ring in fp32 (2× bf16 size)
-        let dkv = b.alloc("ring_dkv_fp32", 2.0 * 2.0 * q.kv_bytes * f);
-        let inflight = b.alloc("ring_kv_inflight_bwd", 2.0 * 2.0 * q.kv_bytes * f);
-        // bwd ring: KV forward again + dKV backward
-        b.ring(steps, 2.0 * 2.0 * q.kv_bytes, inter);
-        b.snapshot("bwd_ring_exchange");
-        b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
-        b.snapshot("bwd_attn_kernel");
-        b.free(inflight);
-        b.free(dkv);
-        b.free(grads);
-        b.free(qkv);
-    }
-
-    q.emit_other(&mut b, &cal, 1.0);
+    ctx.emit_other(&mut b, 1.0);
     if let Some(st) = staging {
         b.free(st);
     }
@@ -75,21 +85,17 @@ pub fn trace_with(q: &Quantities, ring_c: u64, inter: bool) -> Vec<Op> {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::config::presets::llama_single_node;
     use crate::config::CpMethod;
     use crate::engine::ops::validate_trace;
-    use crate::engine::Engine;
+    use crate::schedule::{build_trace, simulate};
 
     const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 
     fn run(s: u64) -> crate::engine::StepReport {
         let p = llama_single_node(CpMethod::Ring, s);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let t = trace(&q);
-        validate_trace(&t).unwrap();
-        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+        validate_trace(&build_trace(&p)).unwrap();
+        simulate(&p)
     }
 
     #[test]
@@ -120,13 +126,7 @@ mod tests {
     #[test]
     fn ring_slower_than_ulysses() {
         // §2.1/§5.3: O(C) p2p rounds cost more than one all-to-all.
-        use super::super::common::AcMode;
-        use super::super::ulysses;
-        let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let ul = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal))
-            .run(&ulysses::trace(&q, AcMode::AcOffload));
+        let ul = simulate(&llama_single_node(CpMethod::Ulysses, 1 << 20));
         assert!(run(1 << 20).step_time > ul.step_time);
     }
 }

@@ -3,15 +3,17 @@
 //! transients here), full AC with CPU offload, and the *sequential*
 //! (non-QKVPacked) all-to-all variant — one Q-sized comm buffer at a time.
 
-use super::common::{AcMode, Quantities};
-use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use super::common::ScheduleCtx;
+use crate::engine::{Category, Op, TraceBuilder};
 use crate::model::flops;
 
 /// Emit one training step. Peak behaviour reproduces Table 2/6 rows 1–2:
 /// full-head QKV (γ·q_bytes) plus a comm buffer live through the attention
-/// phase; backward adds the β-set.
-pub fn trace(q: &Quantities, ac: AcMode) -> Vec<Op> {
-    let cal = Calibration::default();
+/// phase; backward adds the β-set. The AC mode, micro-batch count and
+/// calibration all come from the [`ScheduleCtx`].
+pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
+    let q = &ctx.q;
+    let cal = &ctx.cal;
     let mut b = TraceBuilder::new();
     let l = q.m.n_layers;
     let f = cal.attn_transient_factor;
@@ -19,93 +21,81 @@ pub fn trace(q: &Quantities, ac: AcMode) -> Vec<Op> {
     let a2a_frac = (q.c - 1) as f64 / q.c as f64;
     let misc = q.emit_misc(&mut b);
 
-    // ---------------- forward ----------------
-    let mut resident = Vec::new(); // NoAc/AcGpu: checkpoints kept on GPU
-    for _ in 0..l {
-        b.snapshot("before_attn");
-        // project into full-head QKV (+ FA3 workspace factor)
-        let qkv = b.alloc("qkv_fullhead", q.qkv_bytes() * f);
-        let comm = b.alloc("a2a_buffer", q.q_bytes * f);
-        // sequential Q, K, V all-to-alls (3 calls)
-        b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
-        b.snapshot("inp_all_to_all");
-        b.compute(Category::Fa3Fwd, attn_fwd);
-        b.snapshot("attn_kernel");
-        // out all-to-all (1 call)
-        b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
-        b.snapshot("out_all_to_all");
-        b.free(comm);
-        b.free(qkv);
-        match ac {
-            AcMode::AcOffload => b.offload(q.x_bytes, true),
-            AcMode::AcGpu => resident.push(b.alloc("ckpt_gpu", q.x_bytes)),
-            AcMode::NoAc => {
-                // keep the full intra-layer live set: input, normed input,
-                // QKV, attention out, MLP intermediates (4·[S/C, d_ff]).
-                let intra = 2.0 * q.x_bytes
-                    + q.qkv_bytes()
-                    + 8.0 * q.sc as f64 * q.m.d_ff as f64;
-                resident.push(b.alloc("noac_layer_acts", intra));
-            }
-        }
-    }
+    for _ in 0..ctx.mb {
+        let mut ac = ctx.ac_emitter();
 
-    // ---------------- backward (reverse layer order) ----------------
-    for _ in 0..l {
-        if ac == AcMode::AcOffload {
-            b.offload(q.x_bytes, true); // fetch checkpoint
-        }
-        if ac != AcMode::NoAc {
-            // recompute forward (same kernels; shows up in FA3-Fwd timing)
+        // ---------------- forward ----------------
+        for _ in 0..l {
+            b.snapshot("before_attn");
+            // project into full-head QKV (+ FA3 workspace factor)
+            let qkv = b.alloc("qkv_fullhead", q.qkv_bytes() * f);
+            let comm = b.alloc("a2a_buffer", q.q_bytes * f);
+            // sequential Q, K, V all-to-alls (3 calls)
+            b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
+            b.snapshot("inp_all_to_all");
             b.compute(Category::Fa3Fwd, attn_fwd);
+            b.snapshot("attn_kernel");
+            // out all-to-all (1 call)
+            b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
+            b.snapshot("out_all_to_all");
+            b.free(comm);
+            b.free(qkv);
+            ctx.emit_tp_allreduce(&mut b);
+            ac.store(&mut b);
         }
-        b.snapshot("before_bwd_attn");
-        // dOut arrives via out_all_to_all
-        let comm = b.alloc("a2a_buffer_bwd", q.q_bytes * f);
-        b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
-        b.snapshot("bwd_out_all_to_all");
-        // the β-set: Q,K,V,Out,dOut,dQ,dK,dV live during the bwd kernel,
-        // plus the received full-head dOut in head layout.
-        let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes; // beyond QKV
-        let qkv = b.alloc("qkv_fullhead_bwd", q.qkv_bytes() * f);
-        let dout = b.alloc("dout_heads", q.q_bytes * f);
-        let grads = b.alloc("attn_bwd_set", beta_extra * f);
-        b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
-        b.snapshot("bwd_attn_kernel");
-        // dQKV go back through the inp all-to-all (3 calls)
-        b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
-        b.snapshot("bwd_inp_all_to_all");
-        b.free(grads);
-        b.free(dout);
-        b.free(qkv);
-        b.free(comm);
-    }
-    if let AcMode::NoAc | AcMode::AcGpu = ac {
-        b.free_all(resident);
+
+        // ---------------- backward (reverse layer order) ----------------
+        for _ in 0..l {
+            ac.fetch(&mut b);
+            if ac.recompute() {
+                // recompute forward (same kernels; shows up in FA3-Fwd timing)
+                b.compute(Category::Fa3Fwd, attn_fwd);
+            }
+            b.snapshot("before_bwd_attn");
+            // dOut arrives via out_all_to_all
+            let comm = b.alloc("a2a_buffer_bwd", q.q_bytes * f);
+            b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
+            b.snapshot("bwd_out_all_to_all");
+            // the β-set: Q,K,V,Out,dOut,dQ,dK,dV live during the bwd kernel,
+            // plus the received full-head dOut in head layout.
+            let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes; // beyond QKV
+            let qkv = b.alloc("qkv_fullhead_bwd", q.qkv_bytes() * f);
+            let dout = b.alloc("dout_heads", q.q_bytes * f);
+            let grads = b.alloc("attn_bwd_set", beta_extra * f);
+            b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
+            b.snapshot("bwd_attn_kernel");
+            // dQKV go back through the inp all-to-all (3 calls)
+            b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
+            b.snapshot("bwd_inp_all_to_all");
+            b.free(grads);
+            b.free(dout);
+            b.free(qkv);
+            b.free(comm);
+            ctx.emit_tp_allreduce(&mut b);
+        }
+        ac.finish(&mut b);
     }
 
     // bulk "other": projections, tiled MLP/CE, norms, optimizer, offload
     // engine overhead.
-    q.emit_other(&mut b, &cal, 1.0);
+    ctx.emit_other(&mut b, 1.0);
     b.free_all(misc);
     b.finish()
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
+    use super::super::common::AcMode;
     use crate::config::presets::llama_single_node;
     use crate::config::CpMethod;
     use crate::engine::ops::validate_trace;
-    use crate::engine::Engine;
+    use crate::schedule::{build_trace, simulate};
 
     fn run(s: u64, ac: AcMode) -> crate::engine::StepReport {
-        let p = llama_single_node(CpMethod::Ulysses, s);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let trace = trace(&q, ac);
-        validate_trace(&trace).unwrap();
-        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&trace)
+        let mut p = llama_single_node(CpMethod::Ulysses, s);
+        p.parallel.ac_mode = ac;
+        validate_trace(&build_trace(&p)).unwrap();
+        simulate(&p)
     }
 
     #[test]
@@ -159,5 +149,16 @@ mod tests {
         let r = run(1 << 20, AcMode::AcOffload);
         let t = r.tokens_per_sec_per_gpu(1 << 20, 8).unwrap();
         assert!((t - 475.33).abs() / 475.33 < 0.06, "tput {t}");
+    }
+
+    #[test]
+    fn microbatches_accumulate_time_not_memory() {
+        let base = run(1 << 20, AcMode::AcOffload);
+        let mut p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        p.parallel.micro_batch = 2;
+        validate_trace(&build_trace(&p)).unwrap();
+        let mb2 = simulate(&p);
+        assert!((mb2.step_time / base.step_time - 2.0).abs() < 0.01, "2x work");
+        assert!((mb2.peak_bytes - base.peak_bytes).abs() < 1.0, "same peak");
     }
 }

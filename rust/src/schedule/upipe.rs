@@ -12,15 +12,16 @@
 //! are all-to-all'd only in the first stage of each group cycle; the other
 //! stages communicate queries only.
 
-use super::common::Quantities;
+use super::common::ScheduleCtx;
 use super::gqa::{gqa_schedule, naive_schedule, Stage};
-use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, TraceBuilder};
 use crate::model::flops;
 
 /// Emit one training step. `hybrid_ring` adds the inter-node ring KV
 /// exchange of the UPipe-Hybrid setup (ulysses intra-node × ring across).
-pub fn trace(q: &Quantities, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op> {
-    let cal = Calibration::default();
+pub fn trace(ctx: &ScheduleCtx, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op> {
+    let q = &ctx.q;
+    let cal = &ctx.cal;
     let mut b = TraceBuilder::new();
     let m = &q.m;
     let stages = if gqa {
@@ -35,7 +36,9 @@ pub fn trace(q: &Quantities, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op> {
     // only; the ring dimension is handled separately.
     let a2a_c = if hybrid_ring { q.c / q.nodes } else { q.c };
     let a2a_frac = (a2a_c - 1) as f64 / a2a_c as f64;
-    let head_bytes = 2.0 * q.sc as f64 * m.d_head as f64; // one head, shard rows
+    // One head's shard rows; under TP each rank owns 1/tp of every stage's
+    // heads, so stage chunk/comm bytes shard like q_bytes/kv_bytes do.
+    let head_bytes = 2.0 * q.sc as f64 * m.d_head as f64 / q.tp as f64;
     let misc = q.emit_misc(&mut b);
     // IB-transport staging for the hybrid's inter-node ring (NCCL keeps
     // per-peer send/recv buffers pinned for the whole step).
@@ -53,88 +56,97 @@ pub fn trace(q: &Quantities, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op> {
         (qb, kvb, calls)
     };
 
-    // ---------------- forward ----------------
-    for _ in 0..l {
-        b.snapshot("before_attn");
-        // full-head output buffer, initialized upfront, filled per stage
-        let out_buf = b.alloc("upipe_out_fullhead", q.q_bytes);
-        // KV kept across a group cycle for the GQA schedule: at most the
-        // stage's unique KV heads (U/g per stage ≥ the resident set).
-        let mut kv_resident: Option<usize> = None;
-        for st in &stages {
-            let (qb, kvb, calls) = stage_bytes(st);
-            let chunk = b.alloc("upipe_qkv_chunk", (qb + kvb) * f);
-            let comm = b.alloc("upipe_a2a_buffer", qb.max(kvb / 2.0).max(head_bytes) * f);
-            b.all_to_all((qb + kvb) * a2a_frac, true, calls, q.s as f64);
-            if !st.new_kv_heads.is_empty() {
-                // retain the received KV for the rest of the group cycle
-                if let Some(old) = kv_resident.take() {
-                    b.free(old);
-                }
-                kv_resident = Some(b.alloc("upipe_kv_resident", kvb * f));
-            }
-            b.snapshot("inp_all_to_all");
-            b.compute(Category::Fa3Fwd, attn_fwd / nu);
-            b.snapshot("attn_kernel");
-            b.all_to_all(qb * a2a_frac, true, 1, q.s as f64);
-            b.snapshot("out_all_to_all");
-            b.free(comm);
-            b.free(chunk);
-        }
-        if let Some(kv) = kv_resident {
-            b.free(kv);
-        }
-        if hybrid_ring {
-            // inter-node ring exchange of the node's KV shards
-            b.ring(q.nodes - 1, 2.0 * q.kv_bytes, true);
-        }
-        b.free(out_buf);
-        b.offload(q.x_bytes, true); // AC checkpoint offload
-    }
+    for _ in 0..ctx.mb {
+        let mut ac = ctx.ac_emitter();
 
-    // ---------------- backward ----------------
-    let beta_extra = m.beta() - m.gamma(); // dQ,dK,dV,Out,dOut beyond QKV
-    for _ in 0..l {
-        b.offload(q.x_bytes, true); // fetch checkpoint
-        b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
-        b.snapshot("before_bwd_attn");
-        // The recomputed full-head block output ("Out" input of FA3-bwd,
-        // regenerated by the AC recompute) stays live across the stages.
-        let dout_buf = b.alloc("upipe_recomputed_out", q.q_bytes * f);
-        let mut kv_resident: Option<usize> = None;
-        for st in &stages {
-            let (qb, kvb, calls) = stage_bytes(st);
-            b.all_to_all(qb * a2a_frac, true, 1, q.s as f64); // dOut chunk in
-            let chunk = b.alloc("upipe_bwd_chunk", (qb + kvb) * f);
-            if !st.new_kv_heads.is_empty() {
-                if let Some(old) = kv_resident.take() {
-                    b.free(old);
+        // ---------------- forward ----------------
+        for _ in 0..l {
+            b.snapshot("before_attn");
+            // full-head output buffer, initialized upfront, filled per stage
+            let out_buf = b.alloc("upipe_out_fullhead", q.q_bytes);
+            // KV kept across a group cycle for the GQA schedule: at most the
+            // stage's unique KV heads (U/g per stage ≥ the resident set).
+            let mut kv_resident: Option<usize> = None;
+            for st in &stages {
+                let (qb, kvb, calls) = stage_bytes(st);
+                let chunk = b.alloc("upipe_qkv_chunk", (qb + kvb) * f);
+                let comm = b.alloc("upipe_a2a_buffer", qb.max(kvb / 2.0).max(head_bytes) * f);
+                b.all_to_all((qb + kvb) * a2a_frac, true, calls, q.s as f64);
+                if !st.new_kv_heads.is_empty() {
+                    // retain the received KV for the rest of the group cycle
+                    if let Some(old) = kv_resident.take() {
+                        b.free(old);
+                    }
+                    kv_resident = Some(b.alloc("upipe_kv_resident", kvb * f));
                 }
-                kv_resident = Some(b.alloc("upipe_kv_resident_bwd", kvb * f));
+                b.snapshot("inp_all_to_all");
+                b.compute(Category::Fa3Fwd, attn_fwd / nu);
+                b.snapshot("attn_kernel");
+                b.all_to_all(qb * a2a_frac, true, 1, q.s as f64);
+                b.snapshot("out_all_to_all");
+                b.free(comm);
+                b.free(chunk);
             }
-            let grads = b.alloc("upipe_bwd_set", beta_extra / nu * q.q_bytes * f);
-            b.snapshot("bwd_out_all_to_all");
-            b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR / nu);
-            b.snapshot("bwd_attn_kernel");
-            // dQ (+dK,dV when the group cycle closes) back out
-            b.all_to_all((qb + kvb) * a2a_frac, true, calls, q.s as f64);
-            b.snapshot("bwd_inp_all_to_all");
-            b.free(grads);
-            b.free(chunk);
+            if let Some(kv) = kv_resident {
+                b.free(kv);
+            }
+            if hybrid_ring {
+                // inter-node ring exchange of the node's KV shards
+                b.ring(q.nodes - 1, 2.0 * q.kv_bytes, true);
+            }
+            b.free(out_buf);
+            ctx.emit_tp_allreduce(&mut b);
+            ac.store(&mut b);
         }
-        if let Some(kv) = kv_resident {
-            b.free(kv);
+
+        // ---------------- backward ----------------
+        let beta_extra = m.beta() - m.gamma(); // dQ,dK,dV,Out,dOut beyond QKV
+        for _ in 0..l {
+            ac.fetch(&mut b);
+            if ac.recompute() {
+                b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
+            }
+            b.snapshot("before_bwd_attn");
+            // The recomputed full-head block output ("Out" input of FA3-bwd,
+            // regenerated by the AC recompute) stays live across the stages.
+            let dout_buf = b.alloc("upipe_recomputed_out", q.q_bytes * f);
+            let mut kv_resident: Option<usize> = None;
+            for st in &stages {
+                let (qb, kvb, calls) = stage_bytes(st);
+                b.all_to_all(qb * a2a_frac, true, 1, q.s as f64); // dOut chunk in
+                let chunk = b.alloc("upipe_bwd_chunk", (qb + kvb) * f);
+                if !st.new_kv_heads.is_empty() {
+                    if let Some(old) = kv_resident.take() {
+                        b.free(old);
+                    }
+                    kv_resident = Some(b.alloc("upipe_kv_resident_bwd", kvb * f));
+                }
+                let grads = b.alloc("upipe_bwd_set", beta_extra / nu * q.q_bytes * f);
+                b.snapshot("bwd_out_all_to_all");
+                b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR / nu);
+                b.snapshot("bwd_attn_kernel");
+                // dQ (+dK,dV when the group cycle closes) back out
+                b.all_to_all((qb + kvb) * a2a_frac, true, calls, q.s as f64);
+                b.snapshot("bwd_inp_all_to_all");
+                b.free(grads);
+                b.free(chunk);
+            }
+            if let Some(kv) = kv_resident {
+                b.free(kv);
+            }
+            if hybrid_ring {
+                b.ring(q.nodes - 1, 2.0 * 2.0 * q.kv_bytes, true);
+            }
+            b.free(dout_buf);
+            ctx.emit_tp_allreduce(&mut b);
         }
-        if hybrid_ring {
-            b.ring(q.nodes - 1, 2.0 * 2.0 * q.kv_bytes, true);
-        }
-        b.free(dout_buf);
+        ac.finish(&mut b);
     }
 
     if hybrid_ring {
-        b.fixed(Category::Other, cal.hybrid_layer_fixed * l as f64);
+        b.fixed(Category::Other, cal.hybrid_layer_fixed * l as f64 * ctx.mb as f64);
     }
-    q.emit_other(&mut b, &cal, 1.0);
+    ctx.emit_other(&mut b, 1.0);
     if let Some(rs) = ring_staging {
         b.free(rs);
     }
@@ -144,21 +156,18 @@ pub fn trace(q: &Quantities, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op> {
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::config::presets::llama_single_node;
     use crate::config::CpMethod;
     use crate::engine::ops::validate_trace;
-    use crate::engine::Engine;
+    use crate::engine::{Calibration, Op};
+    use crate::schedule::{build_trace, simulate, ScheduleCtx};
 
     const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 
     fn run(s: u64) -> crate::engine::StepReport {
         let p = llama_single_node(CpMethod::Upipe { u: 8, gqa_schedule: true }, s);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let t = trace(&q, 8, true, false);
-        validate_trace(&t).unwrap();
-        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+        validate_trace(&build_trace(&p)).unwrap();
+        simulate(&p)
     }
 
     #[test]
@@ -202,13 +211,7 @@ mod tests {
     fn upipe_a2a_beats_ulysses_at_3m() {
         // Table 5 @3M: UPipe a2a 34.34 < Ulysses 42.21 (lower memory
         // pressure ⇒ fewer allocation retries), and total is lower.
-        use super::super::common::AcMode;
-        use super::super::ulysses;
-        let p = llama_single_node(CpMethod::Ulysses, 3 << 20);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let ul = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal))
-            .run(&ulysses::trace(&q, AcMode::AcOffload));
+        let ul = simulate(&llama_single_node(CpMethod::Ulysses, 3 << 20));
         let up = run(3 << 20);
         assert!(up.components.all_to_all < ul.components.all_to_all);
         assert!(up.step_time < ul.step_time);
@@ -219,13 +222,7 @@ mod tests {
     fn upipe_slightly_slower_at_short_context() {
         // Table 3 @128K: UPipe 2281.05 < Ulysses 2320.47 tokens/s/GPU
         // (stage launch overhead, amortized later).
-        use super::super::common::AcMode;
-        use super::super::ulysses;
-        let p = llama_single_node(CpMethod::Ulysses, 1 << 17);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let ul = Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal))
-            .run(&ulysses::trace(&q, AcMode::AcOffload));
+        let ul = simulate(&llama_single_node(CpMethod::Ulysses, 1 << 17));
         let up = run(1 << 17);
         assert!(up.step_time > ul.step_time);
         // ...but by less than 5%.
@@ -238,8 +235,8 @@ mod tests {
         // independent; trace peak grows with ν only through the fixed
         // full-head out buffer, so the *transient* chunk sizes must match.
         let p4 = llama_single_node(CpMethod::Upipe { u: 8, gqa_schedule: true }, 1 << 20);
-        let q4 = Quantities::new(&p4);
-        let tr = trace(&q4, 8, true, false);
+        let ctx = ScheduleCtx::new(&p4, &Calibration::default());
+        let tr = super::trace(&ctx, 8, true, false);
         let max_chunk = tr
             .iter()
             .filter_map(|op| match op {
@@ -249,16 +246,40 @@ mod tests {
             .fold(0.0, f64::max);
         // one stage's chunk ≤ (q + 2·kv) heads = 3·U·head_bytes·1.3 (the
         // GQA schedule's stage 0 sends all U kv heads once)
-        let head_bytes = 2.0 * q4.sc as f64 * q4.m.d_head as f64;
+        let head_bytes = 2.0 * ctx.q.sc as f64 * ctx.q.m.d_head as f64;
         assert!(max_chunk <= 3.0 * 8.0 * head_bytes * 1.3 + 1.0, "chunk {max_chunk}");
+    }
+
+    #[test]
+    fn tp_shards_stage_buffers_like_quantities() {
+        // tp=2 on the same 8-GPU world: C halves (2x tokens per rank) but
+        // each rank owns half of every stage's heads — stage chunks must
+        // stay the same size as tp=1, not double.
+        let cal = Calibration::default();
+        let max_chunk = |p: &crate::config::presets::RunPreset| -> f64 {
+            let ctx = ScheduleCtx::new(p, &cal);
+            super::trace(&ctx, 8, true, false)
+                .iter()
+                .filter_map(|op| match op {
+                    Op::Alloc { bytes, name, .. } if name.contains("chunk") => Some(*bytes),
+                    _ => None,
+                })
+                .fold(0.0, f64::max)
+        };
+        let p1 = llama_single_node(CpMethod::Upipe { u: 8, gqa_schedule: true }, 1 << 20);
+        let mut p2 = p1.clone();
+        p2.parallel.tp = 2;
+        p2.parallel.cp_degree = 4;
+        let (a, b) = (max_chunk(&p1), max_chunk(&p2));
+        assert!((b / a - 1.0).abs() < 1e-9, "tp=2 chunk {b} vs tp=1 {a}");
     }
 
     #[test]
     fn gqa_schedule_reduces_comm_volume_vs_naive() {
         let p = llama_single_node(CpMethod::Upipe { u: 8, gqa_schedule: true }, 1 << 20);
-        let q = Quantities::new(&p);
+        let ctx = ScheduleCtx::new(&p, &Calibration::default());
         let vol = |gqa: bool| -> f64 {
-            trace(&q, 8, gqa, false)
+            super::trace(&ctx, 8, gqa, false)
                 .iter()
                 .map(|op| match op {
                     Op::AllToAll { bytes, .. } => *bytes,

@@ -3,14 +3,15 @@
 //! the paper's multi-node baseline (§5.2.1) — and the UPipe-Hybrid
 //! extension that replaces the intra-node Ulysses with UPipe stages.
 
-use super::common::Quantities;
+use super::common::ScheduleCtx;
 use super::upipe;
-use crate::engine::{Calibration, Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, TraceBuilder};
 use crate::model::flops;
 
 /// USP-Hybrid trace: `cu`-way Ulysses intra-node, `cr`-way ring across.
-pub fn trace(q: &Quantities, cu: u32, cr: u32) -> Vec<Op> {
-    let cal = Calibration::default();
+pub fn trace(ctx: &ScheduleCtx, cu: u32, cr: u32) -> Vec<Op> {
+    let q = &ctx.q;
+    let cal = &ctx.cal;
     let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let attn_fwd = q.attn_flops_layer_fwd();
@@ -19,78 +20,83 @@ pub fn trace(q: &Quantities, cu: u32, cr: u32) -> Vec<Op> {
     let ring_steps = (cr - 1) as u64;
     let misc = q.emit_misc(&mut b);
 
-    for _ in 0..l {
-        b.snapshot("before_attn");
-        let qkv = b.alloc("usp_qkv_fullhead", q.qkv_bytes() * f);
-        let comm = b.alloc("usp_a2a_buffer", q.q_bytes * f);
-        b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
-        b.snapshot("inp_all_to_all");
-        // ring dimension: the node-group's KV circulates over IB while
-        // local attention proceeds (zigzag-balanced)
-        let inflight = b.alloc("usp_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
-        b.ring(ring_steps, 2.0 * q.kv_bytes, true);
-        b.compute(Category::Fa3Fwd, attn_fwd);
-        b.snapshot("attn_kernel");
-        b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
-        b.snapshot("out_all_to_all");
-        b.free(inflight);
-        b.free(comm);
-        b.free(qkv);
-        b.offload(q.x_bytes, true);
-    }
+    for _ in 0..ctx.mb {
+        let mut ac = ctx.ac_emitter();
 
-    let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
-    for _ in 0..l {
-        b.offload(q.x_bytes, true);
-        b.compute(Category::Fa3Fwd, attn_fwd);
-        b.snapshot("before_bwd_attn");
-        let comm = b.alloc("usp_a2a_buffer_bwd", q.q_bytes * f);
-        b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
-        let qkv = b.alloc("usp_qkv_bwd", q.qkv_bytes() * f);
-        let dout = b.alloc("usp_dout_heads", q.q_bytes * f);
-        let grads = b.alloc("usp_bwd_set", beta_extra * f);
-        let inflight = b.alloc("usp_kv_inflight_bwd", 2.0 * 2.0 * q.kv_bytes * f);
-        b.ring(ring_steps, 2.0 * 2.0 * q.kv_bytes, true);
-        b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
-        b.snapshot("bwd_attn_kernel");
-        b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
-        b.snapshot("bwd_inp_all_to_all");
-        b.free(inflight);
-        b.free(grads);
-        b.free(dout);
-        b.free(qkv);
-        b.free(comm);
+        for _ in 0..l {
+            b.snapshot("before_attn");
+            let qkv = b.alloc("usp_qkv_fullhead", q.qkv_bytes() * f);
+            let comm = b.alloc("usp_a2a_buffer", q.q_bytes * f);
+            b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
+            b.snapshot("inp_all_to_all");
+            // ring dimension: the node-group's KV circulates over IB while
+            // local attention proceeds (zigzag-balanced)
+            let inflight = b.alloc("usp_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
+            b.ring(ring_steps, 2.0 * q.kv_bytes, true);
+            b.compute(Category::Fa3Fwd, attn_fwd);
+            b.snapshot("attn_kernel");
+            b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
+            b.snapshot("out_all_to_all");
+            b.free(inflight);
+            b.free(comm);
+            b.free(qkv);
+            ctx.emit_tp_allreduce(&mut b);
+            ac.store(&mut b);
+        }
+
+        let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
+        for _ in 0..l {
+            ac.fetch(&mut b);
+            if ac.recompute() {
+                b.compute(Category::Fa3Fwd, attn_fwd);
+            }
+            b.snapshot("before_bwd_attn");
+            let comm = b.alloc("usp_a2a_buffer_bwd", q.q_bytes * f);
+            b.all_to_all(q.q_bytes * a2a_frac, true, 1, q.s as f64);
+            let qkv = b.alloc("usp_qkv_bwd", q.qkv_bytes() * f);
+            let dout = b.alloc("usp_dout_heads", q.q_bytes * f);
+            let grads = b.alloc("usp_bwd_set", beta_extra * f);
+            let inflight = b.alloc("usp_kv_inflight_bwd", 2.0 * 2.0 * q.kv_bytes * f);
+            b.ring(ring_steps, 2.0 * 2.0 * q.kv_bytes, true);
+            b.compute(Category::Fa3Bwd, attn_fwd * flops::ATTN_BWD_FACTOR);
+            b.snapshot("bwd_attn_kernel");
+            b.all_to_all(q.qkv_bytes() * a2a_frac, true, 3, q.s as f64);
+            b.snapshot("bwd_inp_all_to_all");
+            b.free(inflight);
+            b.free(grads);
+            b.free(dout);
+            b.free(qkv);
+            b.free(comm);
+            ctx.emit_tp_allreduce(&mut b);
+        }
+        ac.finish(&mut b);
     }
 
     // inter-node barriers + dual-fabric PG launches, once per layer
-    b.fixed(Category::Other, cal.hybrid_layer_fixed * l as f64);
-    q.emit_other(&mut b, &cal, 1.0);
+    b.fixed(Category::Other, cal.hybrid_layer_fixed * l as f64 * ctx.mb as f64);
+    ctx.emit_other(&mut b, 1.0);
     b.free_all(misc);
     b.finish()
 }
 
 /// UPipe-Hybrid: UPipe headwise stages intra-node + ring across nodes.
-pub fn upipe_hybrid_trace(q: &Quantities, u: u32, _cu: u32, _cr: u32) -> Vec<Op> {
-    upipe::trace(q, u, true, true)
+pub fn upipe_hybrid_trace(ctx: &ScheduleCtx, u: u32, _cu: u32, _cr: u32) -> Vec<Op> {
+    upipe::trace(ctx, u, true, true)
 }
 
 #[cfg(test)]
 mod tests {
-    use super::*;
     use crate::config::presets::{llama_two_node, qwen_two_node};
     use crate::config::CpMethod;
     use crate::engine::ops::validate_trace;
-    use crate::engine::Engine;
+    use crate::schedule::{build_trace, simulate};
 
     const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
 
     fn run_qwen(s: u64) -> crate::engine::StepReport {
         let p = qwen_two_node(CpMethod::UspHybrid { ulysses: 8, ring: 2 }, s);
-        let q = Quantities::new(&p);
-        let cal = Calibration::default();
-        let t = trace(&q, 8, 2);
-        validate_trace(&t).unwrap();
-        Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+        validate_trace(&build_trace(&p)).unwrap();
+        simulate(&p)
     }
 
     #[test]
@@ -118,13 +124,10 @@ mod tests {
     fn fig5_usp_vs_upipe_hybrid() {
         // Fig. 5: UPipe-Hybrid is more memory-efficient than USP-Hybrid at
         // every length, max context 8M vs 6M, comparable throughput.
-        let cal = Calibration::default();
         let run = |m: CpMethod, s: u64| {
             let p = llama_two_node(m, s);
-            let q = Quantities::new(&p);
-            let t = super::super::build_trace(&p);
-            validate_trace(&t).unwrap();
-            Engine::new(cal.clone(), q.hbm_limit, q.persistent_bytes(&cal)).run(&t)
+            validate_trace(&build_trace(&p)).unwrap();
+            simulate(&p)
         };
         let usp = CpMethod::UspHybrid { ulysses: 8, ring: 2 };
         let upi = CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 };

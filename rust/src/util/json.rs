@@ -1,7 +1,8 @@
-//! Minimal JSON value + serializer (serde is not in the offline vendor
-//! set). Covers what the planner's `--json` output and the bench emitters
-//! need: order-preserving objects, arrays, strings, finite numbers, bools
-//! and null. Non-finite numbers serialize as `null`.
+//! Minimal JSON value + serializer + parser (serde is not in the offline
+//! vendor set). Covers what the planner's `--json` output, the bench
+//! emitters and the `--refit` measurement files need: order-preserving
+//! objects, arrays, strings, finite numbers, bools and null. Non-finite
+//! numbers serialize as `null`.
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,6 +29,48 @@ impl Json {
     /// counters all fit).
     pub fn int(n: u64) -> Json {
         Json::Num(n as f64)
+    }
+
+    /// Parse a JSON document (strict enough for measurement files and our
+    /// own output: no comments, no trailing commas).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0, depth: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing content at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (first match; our objects never duplicate keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
     }
 
     /// Compact one-line rendering.
@@ -88,6 +131,206 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Parser recursion ceiling: `value` recurses per nesting level, so a
+/// hostile `[[[[…` input must become a parse error, not a stack overflow.
+const MAX_DEPTH: usize = 128;
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+    depth: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected `{}` at byte {}", c as char, self.i))
+        }
+    }
+
+    fn eat_lit(&mut self, lit: &str, v: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        if self.depth >= MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+        }
+        self.depth += 1;
+        let v = match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.eat_lit("true", Json::Bool(true)),
+            Some(b'f') => self.eat_lit("false", Json::Bool(false)),
+            Some(b'n') => self.eat_lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("unexpected input at byte {}", self.i)),
+        };
+        self.depth -= 1;
+        v
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(pairs));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            pairs.push((k, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(pairs));
+                }
+                _ => return Err(format!("expected `,` or `}}` at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected `,` or `]` at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| "unterminated string".to_string())?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = self.peek().ok_or_else(|| "unterminated escape".to_string())?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..=0xDBFF).contains(&hi) {
+                                // UTF-16 surrogate pair: a low surrogate
+                                // escape must follow immediately.
+                                if self.peek() != Some(b'\\')
+                                    || self.b.get(self.i + 1) != Some(&b'u')
+                                {
+                                    return Err("unpaired surrogate in \\u escape".into());
+                                }
+                                self.i += 2;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..=0xDFFF).contains(&lo) {
+                                    return Err("unpaired surrogate in \\u escape".into());
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else {
+                                hi
+                            };
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| "bad \\u codepoint".to_string())?,
+                            );
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                }
+                _ => {
+                    // Multi-byte UTF-8: copy the whole sequence through.
+                    let start = self.i - 1;
+                    let mut end = self.i;
+                    while end < self.b.len() && self.b[end] & 0xC0 == 0x80 {
+                        end += 1;
+                    }
+                    let s = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| "invalid UTF-8 in string".to_string())?;
+                    out.push_str(s);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        if self.i + 4 > self.b.len() {
+            return Err("truncated \\u escape".into());
+        }
+        let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+            .map_err(|_| "bad \\u escape".to_string())?;
+        let code =
+            u32::from_str_radix(hex, 16).map_err(|_| "bad \\u escape".to_string())?;
+        self.i += 4;
+        Ok(code)
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number");
+        s.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("bad number `{s}` at byte {start}"))
     }
 }
 
@@ -163,5 +406,60 @@ mod tests {
     fn pretty_indents() {
         let j = Json::obj(vec![("a", Json::Arr(vec![Json::int(1)]))]);
         assert_eq!(j.pretty(), "{\n  \"a\": [\n    1\n  ]\n}");
+    }
+
+    #[test]
+    fn parse_roundtrips_own_output() {
+        let j = Json::obj(vec![
+            ("model", Json::string("llama3-8b")),
+            ("gpus", Json::int(8)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("cells", Json::Arr(vec![Json::Num(4.93), Json::Num(-1.5e-3)])),
+            ("esc", Json::string("a\"b\\c\nd")),
+        ]);
+        for text in [j.render(), j.pretty()] {
+            assert_eq!(Json::parse(&text).unwrap(), j, "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let j = Json::parse(r#"{"seq": "1M", "t": 4.93, "cells": [1, 2]}"#).unwrap();
+        assert_eq!(j.get("seq").and_then(Json::as_str), Some("1M"));
+        assert_eq!(j.get("t").and_then(Json::as_f64), Some(4.93));
+        assert_eq!(j.get("cells").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "{", "[1,]", "{\"a\":}", "{\"a\":1} x", "nul", "\"unterminated"] {
+            assert!(Json::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn parse_depth_limited_not_stack_overflow() {
+        // Hostile nesting must be a parse error, not a crash.
+        let deep = "[".repeat(100_000);
+        let err = Json::parse(&deep).unwrap_err();
+        assert!(err.contains("nesting deeper"), "{err}");
+        // Reasonable nesting still parses.
+        let ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn parse_unicode_escape() {
+        let j = Json::parse(r#"{"s": "café — ünïcode"}"#).unwrap();
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("café — ünïcode"));
+        // \u escapes, including a UTF-16 surrogate pair (emoji).
+        let j = Json::parse(r#"{"s": "a\u00e9\ud83d\ude00b"}"#).unwrap();
+        assert_eq!(j.get("s").and_then(Json::as_str), Some("a\u{e9}\u{1F600}b"));
+        // Unpaired surrogates are rejected.
+        assert!(Json::parse(r#""\ud83d""#).is_err());
+        assert!(Json::parse(r#""\ud83dxy""#).is_err());
+        assert!(Json::parse(r#""\ud83dA""#).is_err());
     }
 }
