@@ -1,5 +1,7 @@
 //! Hot-path micro benches (the §Perf targets in EXPERIMENTS.md):
 //! - engine op execution rate (events/s) — the simulator inner loop;
+//! - streamed feasibility probes vs fully priced simulations (the
+//!   planner's two evaluation phases);
 //! - allocator alloc/free with cache reuse (the UPipe stage pattern);
 //! - functional all-to-all reshard bandwidth (the coordinator hot path);
 //! - schedule/trace generation;
@@ -13,7 +15,7 @@ use untied_ulysses::config::CpMethod;
 use untied_ulysses::engine::{Calibration, Engine};
 use untied_ulysses::memory::Allocator;
 use untied_ulysses::schedule::gqa::gqa_schedule;
-use untied_ulysses::schedule::{build_trace, simulate};
+use untied_ulysses::schedule::{build_trace, feasibility_with, simulate};
 use untied_ulysses::util::bench::Bench;
 
 fn main() {
@@ -41,7 +43,19 @@ fn main() {
     );
 
     // end-to-end simulate (trace + engine + report)
-    Bench::new("hotpath/simulate_upipe_3M").budget_ms(800).run(|| simulate(&preset));
+    let priced = Bench::new("hotpath/simulate_upipe_3M").budget_ms(800).run(|| simulate(&preset));
+
+    // streamed feasibility probe (phase 1): same op stream, peak-only —
+    // the planner's bisection probes run this instead of full pricing
+    let feas = Bench::new("hotpath/feasibility_probe_upipe_3M")
+        .budget_ms(500)
+        .run(|| feasibility_with(&preset, &cal));
+    println!(
+        "  feasibility {:.0} probes/s vs {:.0} priced sims/s ({:.1}x)",
+        feas.per_sec(),
+        priced.per_sec(),
+        feas.per_sec() / priced.per_sec()
+    );
 
     // allocator stage-reuse pattern
     Bench::new("hotpath/allocator_stage_cycle").budget_ms(300).run(|| {

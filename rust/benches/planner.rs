@@ -1,10 +1,15 @@
 //! Bench: the configuration planner — full-sweep wall time and throughput
-//! (configs/sec, sims/sec), emitted to `BENCH_planner.json` so future PRs
-//! have a perf trajectory to compare against.
+//! (configs/sec, sims/sec), plus the two evaluation phases in isolation
+//! (streamed feasibility probes/sec vs fully priced sims/sec), emitted to
+//! `BENCH_planner.json` so future PRs have a perf trajectory to compare
+//! against and CI can gate each phase independently.
 
-use untied_ulysses::config::ClusterConfig;
+use untied_ulysses::config::presets::llama_single_node;
+use untied_ulysses::config::{ClusterConfig, CpMethod};
+use untied_ulysses::engine::Calibration;
 use untied_ulysses::model::ModelDims;
 use untied_ulysses::planner::{enumerate_space, plan, PlanRequest, SweepDims};
+use untied_ulysses::schedule::{feasibility_with, simulate_with};
 use untied_ulysses::util::bench::Bench;
 use untied_ulysses::util::fmt::tokens;
 use untied_ulysses::util::json::Json;
@@ -35,6 +40,25 @@ fn main() {
     let enum_dims = SweepDims { compositions: true, ..SweepDims::default() };
     let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, &enum_dims));
 
+    // The two evaluation phases on one representative hard cell (UPipe,
+    // 3M tokens): phase 1 streams the schedule through the peak-only
+    // kernel, phase 2 builds + fully prices the trace. Gated separately
+    // by scripts/diff_bench.py.
+    let cal = Calibration::default();
+    let probe_preset = llama_single_node(CpMethod::Upipe { u: 8, gqa_schedule: true }, 3 << 20);
+    let feas = Bench::new("planner/feasibility_probe_upipe_3M")
+        .budget_ms(600)
+        .run(|| feasibility_with(&probe_preset, &cal));
+    let priced = Bench::new("planner/priced_sim_upipe_3M")
+        .budget_ms(600)
+        .run(|| simulate_with(&probe_preset, &cal));
+    println!(
+        "  phase split: {:.0} feasibility probes/s vs {:.0} priced sims/s ({:.1}x)",
+        feas.per_sec(),
+        priced.per_sec(),
+        feas.per_sec() / priced.per_sec()
+    );
+
     let json = Json::obj(vec![
         ("bench", Json::string("planner")),
         ("model", Json::string(req.model.name)),
@@ -47,6 +71,8 @@ fn main() {
         ("plan_iters", Json::int(sweep.iters as u64)),
         ("configs_per_sec", Json::Num(out.configs.len() as f64 / sweep.mean.as_secs_f64())),
         ("sims_per_sec", Json::Num(out.simulations as f64 / sweep.mean.as_secs_f64())),
+        ("feasibility_probes_per_sec", Json::Num(feas.per_sec())),
+        ("priced_sims_per_sec", Json::Num(priced.per_sec())),
         ("enumerate_per_sec", Json::Num(enumerate.per_sec())),
     ]);
     let rendered = json.pretty() + "\n";

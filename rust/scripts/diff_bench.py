@@ -4,13 +4,25 @@ and fail on a large planner-throughput regression.
 
 Usage: diff_bench.py <previous.json> <current.json> [max_regression]
 
-`max_regression` is the allowed slowdown factor on configs/sec (default 3.0:
-CI runners are noisy and the sweep space legitimately grows; the gate is for
+`max_regression` is the allowed slowdown factor (default 3.0: CI runners
+are noisy and the sweep space legitimately grows; the gate is for
 order-of-magnitude engine regressions, not percent-level noise).
+
+Gated metrics — each phase of the two-phase evaluator fails independently:
+- configs_per_sec            (whole-sweep throughput)
+- feasibility_probes_per_sec (phase 1: streamed peak-only probes)
+- priced_sims_per_sec        (phase 2: trace build + full pricing)
+
+A metric missing from the *previous* artifact resets its baseline (first
+run after the metric landed); missing from the *current* file fails — the
+bench emitter must not silently drop a gate.
 """
 
 import json
 import sys
+
+GATED = ("configs_per_sec", "feasibility_probes_per_sec", "priced_sims_per_sec")
+REPORTED = GATED + ("sims_per_sec", "plan_wall_s_mean", "configs")
 
 
 def main() -> int:
@@ -27,25 +39,28 @@ def main() -> int:
     cur = json.load(open(sys.argv[2]))  # current must be readable — fail loudly
     max_regression = float(sys.argv[3]) if len(sys.argv) > 3 else 3.0
 
-    for key in ("configs_per_sec", "sims_per_sec", "plan_wall_s_mean", "configs"):
-        p, c = prev.get(key), cur.get(key)
-        print(f"{key}: prev {p} -> cur {c}")
+    for key in REPORTED:
+        print(f"{key}: prev {prev.get(key)} -> cur {cur.get(key)}")
 
-    c = float(cur.get("configs_per_sec") or 0.0)
-    if c <= 0.0:
-        # A missing/zero current value means the bench emitter broke — that
-        # must fail the gate, not silently disable it.
-        print("FAIL: current BENCH_planner.json has no usable configs_per_sec")
-        return 1
-    p = float(prev.get("configs_per_sec") or 0.0)
-    if p <= 0.0:
-        print("previous artifact has no usable configs_per_sec; baseline resets")
-        return 0
-    if c < p / max_regression:
-        print(
-            f"FAIL: planner throughput regressed more than {max_regression}x "
-            f"({p:.1f} -> {c:.1f} configs/sec)"
-        )
+    failures = []
+    for key in GATED:
+        c = float(cur.get(key) or 0.0)
+        if c <= 0.0:
+            # A missing/zero current value means the bench emitter broke —
+            # that must fail the gate, not silently disable it.
+            failures.append(f"current BENCH_planner.json has no usable {key}")
+            continue
+        p = float(prev.get(key) or 0.0)
+        if p <= 0.0:
+            print(f"{key}: no previous baseline; resets")
+            continue
+        if c < p / max_regression:
+            failures.append(
+                f"{key} regressed more than {max_regression}x ({p:.1f} -> {c:.1f})"
+            )
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
         return 1
     print("planner perf trajectory OK")
     return 0

@@ -5,7 +5,7 @@
 
 /// Activation-checkpointing mode (Fig. 2 compares all three for Ulysses;
 /// the planner sweeps them per method).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AcMode {
     /// No checkpointing: every layer's intra-layer activations stay
     /// resident until backward.
@@ -39,7 +39,7 @@ impl AcMode {
 
 /// The context-parallelism methods compared in the paper's evaluation
 /// (Table 3/4 rows, Fig. 1/2/5).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CpMethod {
     /// Native PyTorch ring CP: SDPA attention, no fused/tiled kernels.
     NativePyTorch,

@@ -1,11 +1,22 @@
 //! The engine: executes an op trace against a simulated device.
-
-use std::collections::HashMap;
+//!
+//! Two evaluation modes (the planner's two-phase split):
+//!
+//! - [`Engine::run`] — **priced** mode: serial-stream timing with the
+//!   Table-5 component breakdown, memory-pressure penalties and a labelled
+//!   [`MemoryTimeline`]. Used for the final cells only (max-context point,
+//!   reference point, report/figure rendering).
+//! - [`Engine::feasibility_kernel`] / [`Engine::check`] — **feasibility**
+//!   mode: the peak-only kernel ([`crate::engine::FeasibilityKernel`])
+//!   that skips all pricing; the planner's bisection probes stream
+//!   schedules straight into it. Both modes agree bitwise on `peak_bytes`,
+//!   `oom` and the host-RAM failure.
 
 use super::calibration::Calibration;
-use super::ops::{BufId, Category, Op};
+use super::feasibility::{Feasibility, FeasibilityKernel};
+use super::ops::{Category, Op};
 use super::report::{Components, StepReport};
-use crate::memory::{AllocId, Allocator, MemoryTimeline};
+use crate::memory::MemoryTimeline;
 
 /// Execution parameters for one simulated step.
 #[derive(Debug, Clone)]
@@ -27,45 +38,58 @@ impl Engine {
         Engine { calib, hbm_limit, persistent, host_ram }
     }
 
+    /// Phase-1 entry point: a streaming feasibility kernel seeded with this
+    /// engine's limits (persistent set already charged). Feed it ops, then
+    /// `finish()`.
+    pub fn feasibility_kernel(&self) -> FeasibilityKernel {
+        FeasibilityKernel::new(self.hbm_limit, self.persistent, self.host_ram)
+    }
+
+    /// Feasibility-check a materialized trace without pricing it.
+    pub fn check(&self, ops: &[Op]) -> Feasibility {
+        super::feasibility::check_trace(self.hbm_limit, self.persistent, self.host_ram, ops)
+    }
+
     /// Execute the trace; returns the step report. Serial semantics on the
     /// main stream; `Offload { overlap: true }` ops run on a separate
     /// offload stream and only extend the step if they outrun compute.
+    ///
+    /// All memory accounting (allocator occupancy, host-RAM net, failure
+    /// detection) is delegated to the same [`FeasibilityKernel::step`] the
+    /// phase-1 probes stream into, so the two evaluation modes agree
+    /// bitwise on `peak_bytes`/`oom`/`failed` *by construction* — this
+    /// method only adds the pricing: component clocks, penalties, and the
+    /// labelled timeline.
     pub fn run(&self, ops: &[Op]) -> StepReport {
-        let mut alloc = Allocator::new(self.hbm_limit);
+        // Persistent set occupies HBM for the whole step (charged by the
+        // kernel's constructor).
+        let mut mem = self.feasibility_kernel();
+        if mem.is_done() {
+            return StepReport::failed_oom();
+        }
         let mut timeline = MemoryTimeline::new();
-        let mut ids: HashMap<BufId, AllocId> = HashMap::new();
         let mut comps = Components::default();
         let mut clock = 0.0f64;
         let mut offload_clock = 0.0f64;
-        let mut host_used = 0.0f64;
+        timeline.record(0.0, mem.allocated(), "persistent");
 
-        // Persistent set occupies HBM for the whole step.
-        let persistent_id = alloc.alloc(self.persistent);
-        if persistent_id.is_none() {
-            return StepReport::failed_oom();
-        }
-        timeline.record(0.0, alloc.allocated(), "persistent");
-
-        let mut oom = false;
-        let mut failed = None;
         for op in ops {
             match *op {
-                Op::Alloc { id, bytes, name } => match alloc.alloc(bytes) {
-                    Some(aid) => {
-                        ids.insert(id, aid);
-                        timeline.record(clock, alloc.allocated(), name);
+                Op::Alloc { name, .. } => {
+                    if !mem.step(*op) {
+                        break; // OOM: execution stops, peak stands
                     }
-                    None => {
-                        oom = true;
+                    timeline.record(clock, mem.allocated(), name);
+                }
+                Op::Free { .. } => {
+                    // A malformed trace (free of a dead/unknown buffer) is
+                    // a failed run, not a planner-worker panic.
+                    if !mem.step(*op) {
                         break;
                     }
-                },
-                Op::Free { id } => {
-                    let aid = ids.remove(&id).expect("free of unknown buffer");
-                    alloc.free(aid);
                 }
                 Op::Compute { cat, flops } => {
-                    let headroom = self.hbm_limit - alloc.allocated();
+                    let headroom = self.hbm_limit - mem.allocated();
                     let dur = match cat {
                         Category::Fa3Fwd => {
                             flops / self.calib.fa3_fwd_flops
@@ -85,7 +109,7 @@ impl Engine {
                     add(&mut comps, cat, secs);
                 }
                 Op::AllToAll { bytes, intra, calls, s_tokens } => {
-                    let headroom = self.hbm_limit - alloc.allocated();
+                    let headroom = self.hbm_limit - mem.allocated();
                     let bw = self.calib.a2a_eff(s_tokens, intra);
                     let dur = bytes / bw * self.calib.comm_penalty(headroom)
                         + calls as f64 * self.calib.a2a_call_overhead;
@@ -104,14 +128,10 @@ impl Engine {
                     add(&mut comps, Category::AllToAll, dur);
                 }
                 Op::Offload { bytes, overlap } => {
-                    // Stores occupy host RAM, fetches (negative) release it
-                    // — so sequential micro-batches reuse the same budget
-                    // instead of accumulating phantom occupancy. Floored at
-                    // zero: an over-drawn fetch must not bank credit that
-                    // would mask a later over-budget store.
-                    host_used = (host_used + bytes).max(0.0);
-                    if host_used > self.host_ram {
-                        failed = Some("host RAM exhausted");
+                    // Host-RAM occupancy (stores occupy, fetches release)
+                    // lives in the kernel; a budget breach stops execution
+                    // before the transfer is priced.
+                    if !mem.step(*op) {
                         break;
                     }
                     let dur = bytes.abs() / self.calib.pcie_eff_bps;
@@ -125,7 +145,7 @@ impl Engine {
                     }
                 }
                 Op::Snapshot { label } => {
-                    timeline.record(clock, alloc.allocated(), label);
+                    timeline.record(clock, mem.allocated(), label);
                 }
             }
         }
@@ -134,11 +154,11 @@ impl Engine {
         StepReport {
             step_time,
             components: comps,
-            peak_bytes: alloc.peak_allocated(),
+            peak_bytes: mem.peak_allocated(),
             persistent_bytes: self.persistent,
-            oom: oom || alloc.is_oom(),
-            failed,
-            alloc_retries: alloc.retries(),
+            oom: mem.oom(),
+            failed: mem.failed(),
+            alloc_retries: mem.retries(),
             timeline,
         }
     }
@@ -156,7 +176,7 @@ fn add(c: &mut Components, cat: Category, dur: f64) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::ops::TraceBuilder;
+    use crate::engine::ops::{TraceBuilder, MALFORMED_TRACE_FREE};
 
     fn engine(limit: f64) -> Engine {
         Engine::new(Calibration::default(), limit, 1.0, f64::INFINITY)
@@ -194,6 +214,40 @@ mod tests {
         e.persistent = 100.0;
         let r = e.run(&b.finish());
         assert_eq!(r.peak_bytes, 105.0);
+    }
+
+    #[test]
+    fn malformed_free_fails_instead_of_panicking() {
+        // A Free of an id that was never allocated (or already freed) must
+        // surface as a failed step, not kill a planner worker thread.
+        let r = engine(1e18).run(&[Op::Free { id: 3 }]);
+        assert_eq!(r.failed, Some(MALFORMED_TRACE_FREE));
+        assert!(r.tokens_per_sec_per_gpu(1, 1).is_none());
+
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 1.0);
+        b.free(x);
+        b.free(x);
+        b.fixed(Category::Other, 5.0); // after the break: never priced
+        let r2 = engine(1e18).run(&b.finish());
+        assert_eq!(r2.failed, Some(MALFORMED_TRACE_FREE));
+        assert_eq!(r2.components.other, 0.0, "execution stops at the failure");
+    }
+
+    #[test]
+    fn feasibility_mode_matches_priced_mode() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 7.0 * 1024.0 * 1024.0);
+        b.compute(Category::Fa3Fwd, 1e12);
+        b.offload(3.0, false);
+        b.free(x);
+        let ops = b.finish();
+        let e = engine(1e12);
+        let full = e.run(&ops);
+        let feas = e.check(&ops);
+        assert_eq!(feas.peak_bytes, full.peak_bytes);
+        assert_eq!(feas.oom, full.oom);
+        assert_eq!(feas.failed, full.failed);
     }
 
     #[test]

@@ -1,0 +1,312 @@
+//! Phase-1 evaluation: the peak-only feasibility kernel.
+//!
+//! The planner's bisection probes only need to know whether a cell fits —
+//! peak HBM vs the allocator limit and net host-RAM occupancy vs the
+//! offload budget — yet the pricing engine pays for component timing, a
+//! labelled [`crate::memory::MemoryTimeline`] and per-op rate math on
+//! every probe. [`FeasibilityKernel`] is an [`OpSink`] that consumes the
+//! same op stream a schedule emits and tracks *only* allocator occupancy,
+//! host-RAM net and peaks: no timeline, no component clocks, and a dense
+//! `Vec` keyed by [`crate::engine::ops::BufId`] index instead of a
+//! per-buffer hash map.
+//!
+//! Contract: for any trace the kernel agrees **bitwise** with
+//! [`crate::engine::Engine::run`] on `peak_bytes`, `oom` and the host-RAM
+//! / malformed-trace failures. This holds *by construction* — the priced
+//! engine delegates its own memory accounting to [`FeasibilityKernel::step`],
+//! so there is exactly one copy of the [`Allocator`] arithmetic — and the
+//! schedule-layer property tests pin it end to end.
+
+use super::ops::{Op, OpSink, HOST_RAM_EXHAUSTED, MALFORMED_TRACE_FREE};
+use crate::memory::{AllocId, Allocator};
+
+/// Outcome of streaming one schedule through the kernel — the subset of
+/// [`crate::engine::StepReport`] a bisection probe actually reads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Feasibility {
+    /// Peak allocated bytes (bitwise equal to `StepReport::peak_bytes`).
+    pub peak_bytes: f64,
+    pub oom: bool,
+    /// Host-RAM exhaustion / malformed trace / method failure rule.
+    pub failed: Option<&'static str>,
+}
+
+impl Feasibility {
+    /// The planner's probe predicate: trainable iff neither OOM nor failed.
+    pub fn feasible(&self) -> bool {
+        !self.oom && self.failed.is_none()
+    }
+}
+
+/// Sentinel for a `BufId` slot with no live allocation.
+const DEAD: AllocId = AllocId::MAX;
+
+/// Streaming feasibility evaluator; see the module docs. Build one per
+/// probe via [`crate::engine::Engine::feasibility_kernel`] (or directly),
+/// feed it ops, then [`finish`](Self::finish).
+#[derive(Debug)]
+pub struct FeasibilityKernel {
+    alloc: Allocator,
+    /// BufId -> live AllocId. Dense: builder BufIds are sequential.
+    ids: Vec<AllocId>,
+    host_ram: f64,
+    host_used: f64,
+    oom: bool,
+    failed: Option<&'static str>,
+    /// Set when the persistent set itself did not fit (the engine's
+    /// `failed_oom()` path: infinite peak).
+    persistent_failed: bool,
+    /// Mirrors `Engine::run`'s `break` on first failure: once set, later
+    /// ops are ignored so the recorded peak matches the priced path's.
+    done: bool,
+}
+
+impl FeasibilityKernel {
+    /// `hbm_limit` / `persistent` / `host_ram` exactly as [`crate::engine::Engine`]
+    /// receives them; the persistent set is charged immediately.
+    pub fn new(hbm_limit: f64, persistent: f64, host_ram: f64) -> Self {
+        let mut alloc = Allocator::new(hbm_limit);
+        let persistent_failed = alloc.alloc(persistent).is_none();
+        FeasibilityKernel {
+            alloc,
+            ids: Vec::new(),
+            host_ram,
+            host_used: 0.0,
+            oom: false,
+            failed: None,
+            persistent_failed,
+            done: persistent_failed,
+        }
+    }
+
+    /// Net host-RAM occupancy so far (stores minus fetches, floored at 0).
+    pub fn host_used(&self) -> f64 {
+        self.host_used
+    }
+
+    /// Apply one op's memory effects; returns `false` once the run has
+    /// failed (OOM, host-RAM exhaustion, malformed free — or the
+    /// persistent set never fit) and execution must stop. [`Engine::run`]
+    /// drives this same method for its memory accounting, so the priced
+    /// and feasibility modes agree bitwise *by construction*.
+    ///
+    /// [`Engine::run`]: crate::engine::Engine::run
+    pub fn step(&mut self, op: Op) -> bool {
+        if self.done {
+            return false;
+        }
+        match op {
+            Op::Alloc { id, bytes, .. } => match self.alloc.alloc(bytes) {
+                Some(aid) => {
+                    if self.ids.len() <= id {
+                        self.ids.resize(id + 1, DEAD);
+                    }
+                    self.ids[id] = aid;
+                }
+                None => {
+                    self.oom = true;
+                    self.done = true;
+                    return false;
+                }
+            },
+            Op::Free { id } => {
+                let aid = self.ids.get(id).copied().unwrap_or(DEAD);
+                if aid == DEAD {
+                    self.failed = Some(MALFORMED_TRACE_FREE);
+                    self.done = true;
+                    return false;
+                }
+                self.ids[id] = DEAD;
+                self.alloc.free(aid);
+            }
+            Op::Offload { bytes, .. } => {
+                // Stores occupy host RAM, fetches release it, floored at
+                // zero (an over-drawn fetch must not bank credit).
+                self.host_used = (self.host_used + bytes).max(0.0);
+                if self.host_used > self.host_ram {
+                    self.failed = Some(HOST_RAM_EXHAUSTED);
+                    self.done = true;
+                    return false;
+                }
+            }
+            // Pure timing ops: no memory effect.
+            Op::Compute { .. }
+            | Op::Fixed { .. }
+            | Op::AllToAll { .. }
+            | Op::Ring { .. }
+            | Op::Snapshot { .. } => {}
+        }
+        true
+    }
+
+    /// Currently allocated device bytes (the engine's headroom input).
+    pub fn allocated(&self) -> f64 {
+        self.alloc.allocated()
+    }
+
+    pub fn peak_allocated(&self) -> f64 {
+        self.alloc.peak_allocated()
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.alloc.retries()
+    }
+
+    /// OOM'd — either mid-stream or via the allocator's own flag.
+    pub fn oom(&self) -> bool {
+        self.oom || self.alloc.is_oom()
+    }
+
+    pub fn failed(&self) -> Option<&'static str> {
+        self.failed
+    }
+
+    /// Has the run already failed (no further ops will be applied)?
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    pub fn finish(self) -> Feasibility {
+        if self.persistent_failed {
+            // `Engine::run` returns `StepReport::failed_oom()` here: the
+            // persistent set alone exceeds the device — infinite peak.
+            return Feasibility { peak_bytes: f64::INFINITY, oom: true, failed: None };
+        }
+        Feasibility {
+            peak_bytes: self.alloc.peak_allocated(),
+            oom: self.oom || self.alloc.is_oom(),
+            failed: self.failed,
+        }
+    }
+}
+
+impl OpSink for FeasibilityKernel {
+    fn emit(&mut self, op: Op) {
+        self.step(op);
+    }
+
+    /// Once the run has failed the outcome is decided: schedules streaming
+    /// into this kernel may stop emitting (their layer loops check this).
+    fn done(&self) -> bool {
+        self.done
+    }
+}
+
+/// Convenience: feed a materialized trace through a fresh kernel. The
+/// streamed path (`schedule::feasibility_with`) avoids the slice entirely;
+/// this exists for tests and for re-checking cached traces.
+pub fn check_trace(hbm_limit: f64, persistent: f64, host_ram: f64, ops: &[Op]) -> Feasibility {
+    let mut k = FeasibilityKernel::new(hbm_limit, persistent, host_ram);
+    for op in ops {
+        k.emit(*op);
+    }
+    k.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ops::{Category, TraceBuilder};
+    use crate::engine::{Calibration, Engine};
+
+    fn engine(limit: f64, persistent: f64, host_ram: f64) -> Engine {
+        Engine::new(Calibration::default(), limit, persistent, host_ram)
+    }
+
+    fn both(limit: f64, persistent: f64, host_ram: f64, ops: &[Op]) -> (Feasibility, Feasibility) {
+        let full = engine(limit, persistent, host_ram).run(ops);
+        let feas = check_trace(limit, persistent, host_ram, ops);
+        let as_feas =
+            Feasibility { peak_bytes: full.peak_bytes, oom: full.oom, failed: full.failed };
+        (feas, as_feas)
+    }
+
+    #[test]
+    fn agrees_with_engine_on_clean_trace() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 10.0 * 1024.0 * 1024.0);
+        b.compute(Category::Fa3Fwd, 1e12);
+        let y = b.alloc("y", 20.0 * 1024.0 * 1024.0);
+        b.free(x);
+        b.free(y);
+        let ops = b.finish();
+        let (feas, full) = both(1e12, 5.0 * 1024.0 * 1024.0, f64::INFINITY, &ops);
+        assert_eq!(feas, full);
+        assert!(feas.feasible());
+    }
+
+    #[test]
+    fn agrees_with_engine_on_oom() {
+        let mut b = TraceBuilder::new();
+        b.alloc("big", 2e12);
+        b.alloc("after", 1.0); // engine breaks before this
+        let ops = b.finish();
+        let (feas, full) = both(1e9, 1.0, f64::INFINITY, &ops);
+        assert_eq!(feas, full);
+        assert!(feas.oom && !feas.feasible());
+    }
+
+    #[test]
+    fn agrees_with_engine_on_host_ram_failure() {
+        let mut b = TraceBuilder::new();
+        b.offload(10.0, false);
+        b.offload(-10.0, false); // never reached: engine breaks at failure
+        let ops = b.finish();
+        let (feas, full) = both(1e18, 1.0, 5.0, &ops);
+        assert_eq!(feas, full);
+        assert_eq!(feas.failed, Some(HOST_RAM_EXHAUSTED));
+    }
+
+    #[test]
+    fn agrees_with_engine_on_malformed_free() {
+        let ops = vec![Op::Free { id: 7 }];
+        let (feas, full) = both(1e18, 1.0, f64::INFINITY, &ops);
+        assert_eq!(feas, full);
+        assert_eq!(feas.failed, Some(MALFORMED_TRACE_FREE));
+    }
+
+    #[test]
+    fn agrees_with_engine_on_double_free() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 1.0);
+        b.free(x);
+        b.free(x);
+        let ops = b.finish();
+        let (feas, full) = both(1e18, 1.0, f64::INFINITY, &ops);
+        assert_eq!(feas, full);
+        assert_eq!(feas.failed, Some(MALFORMED_TRACE_FREE));
+    }
+
+    #[test]
+    fn persistent_overflow_matches_failed_oom() {
+        let (feas, full) = both(1e9, 2e9, f64::INFINITY, &[]);
+        assert_eq!(feas, full);
+        assert!(feas.oom && feas.peak_bytes.is_infinite());
+    }
+
+    #[test]
+    fn host_fetches_release_budget() {
+        let mut b = TraceBuilder::new();
+        for _ in 0..4 {
+            b.offload(8.0, true);
+            b.offload(-8.0, true);
+        }
+        let ops = b.finish();
+        let (feas, full) = both(1e18, 1.0, 10.0, &ops);
+        assert_eq!(feas, full);
+        assert!(feas.feasible());
+    }
+
+    #[test]
+    fn ignores_ops_after_first_failure() {
+        // An OOM'd engine breaks its loop; the kernel must not let later
+        // frees/allocs perturb the recorded peak.
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("fits", 10.0);
+        b.alloc("too-big", 2e12);
+        b.free(x);
+        let ops = b.finish();
+        let (feas, full) = both(1e9, 1.0, f64::INFINITY, &ops);
+        assert_eq!(feas, full);
+    }
+}

@@ -6,15 +6,22 @@
 //! column, Llama3-8B); every other cell of every table/figure is then a
 //! *prediction* — see [`calibration`] for the fit provenance and
 //! EXPERIMENTS.md for paper-vs-simulated deltas.
+//!
+//! Evaluation is split into two phases: the streaming peak-only
+//! [`feasibility`] kernel (what planner bisection probes consume) and the
+//! fully priced [`executor`] (timeline + Table-5 components, reserved for
+//! the cells that end up in tables/figures).
 
 pub mod calibration;
 pub mod executor;
+pub mod feasibility;
 pub mod ops;
 pub mod refit;
 pub mod report;
 
 pub use calibration::Calibration;
 pub use executor::Engine;
-pub use ops::{Category, Op, TraceBuilder};
+pub use feasibility::{Feasibility, FeasibilityKernel};
+pub use ops::{Category, Op, OpSink, TraceBuilder};
 pub use refit::{refit, MeasuredCell, Measurements, RefitField, RefitInfo};
 pub use report::{Components, StepReport};

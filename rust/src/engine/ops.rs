@@ -2,6 +2,12 @@
 //! the engine executes. One trace describes one training step on one
 //! (representative) device — context parallelism is symmetric, so every
 //! rank executes the same trace; collective costs account for the peers.
+//!
+//! Ops flow from a schedule into an [`OpSink`]. Collecting into a
+//! `Vec<Op>` (the sink the full pricing engine consumes) is just one sink;
+//! the planner's feasibility probes stream the same emission sequence into
+//! [`crate::engine::FeasibilityKernel`] without ever materializing the
+//! trace.
 
 /// Time-accounting category (the columns of the paper's Table 5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -19,7 +25,16 @@ pub enum Category {
 /// Buffer handle within a trace (index into the builder's table).
 pub type BufId = usize;
 
-#[derive(Debug, Clone)]
+/// Failure message surfaced (as `StepReport::failed` / a `Feasibility`
+/// failure, never a panic) when a trace frees a buffer that is not live.
+pub const MALFORMED_TRACE_FREE: &str = "malformed trace: free of unknown buffer";
+
+/// Failure message when offloaded bytes exceed the host-RAM budget. Shared
+/// by the pricing engine and the feasibility kernel so the two phases
+/// agree bitwise on the failure.
+pub const HOST_RAM_EXHAUSTED: &str = "host RAM exhausted";
+
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Op {
     /// Allocate a named transient buffer on the device HBM.
     Alloc { id: BufId, bytes: f64, name: &'static str },
@@ -47,27 +62,92 @@ pub enum Op {
     Snapshot { label: &'static str },
 }
 
-/// Builder used by schedules: tracks buffer ids and emits ops.
+/// Consumer of a schedule's op stream. A sink sees exactly the op sequence
+/// a collected `Vec<Op>` would contain, in order — so a streaming consumer
+/// (the feasibility kernel) and a collecting one are interchangeable.
+pub trait OpSink {
+    fn emit(&mut self, op: Op);
+
+    /// The sink has seen enough to decide its result and further ops are
+    /// pointless. Schedules check this at loop granularity (per layer /
+    /// per chunk) and may stop emitting early — a truncated stream is only
+    /// ever observed by a sink that already reported `done`, never by a
+    /// collecting sink (which always returns `false`).
+    fn done(&self) -> bool {
+        false
+    }
+}
+
+impl OpSink for Vec<Op> {
+    fn emit(&mut self, op: Op) {
+        self.push(op);
+    }
+}
+
+impl<S: OpSink + ?Sized> OpSink for &mut S {
+    fn emit(&mut self, op: Op) {
+        (**self).emit(op);
+    }
+
+    fn done(&self) -> bool {
+        (**self).done()
+    }
+}
+
+/// Builder used by schedules: tracks buffer ids and emits ops into the
+/// underlying sink. The default sink collects a `Vec<Op>`; `over` wraps
+/// any other [`OpSink`] for streaming emission.
 #[derive(Debug, Default)]
-pub struct TraceBuilder {
-    ops: Vec<Op>,
+pub struct TraceBuilder<S: OpSink = Vec<Op>> {
+    sink: S,
     next_buf: BufId,
 }
 
-impl TraceBuilder {
+impl TraceBuilder<Vec<Op>> {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    pub fn finish(self) -> Vec<Op> {
+        self.sink
+    }
+
+    pub fn len(&self) -> usize {
+        self.sink.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sink.is_empty()
+    }
+}
+
+impl<S: OpSink> TraceBuilder<S> {
+    /// Build over an arbitrary sink (streaming emission; pass `&mut sink`
+    /// to keep ownership).
+    pub fn over(sink: S) -> Self {
+        TraceBuilder { sink, next_buf: 0 }
+    }
+
+    pub fn into_sink(self) -> S {
+        self.sink
+    }
+
+    /// Forwarded [`OpSink::done`]: schedules poll this in their layer and
+    /// chunk loops to abandon emission once the sink's outcome is decided
+    /// (an OOM'd feasibility probe skips the rest of the step).
+    pub fn done(&self) -> bool {
+        self.sink.done()
     }
 
     pub fn alloc(&mut self, name: &'static str, bytes: f64) -> BufId {
         let id = self.next_buf;
         self.next_buf += 1;
-        self.ops.push(Op::Alloc { id, bytes, name });
+        self.sink.emit(Op::Alloc { id, bytes, name });
         id
     }
 
     pub fn free(&mut self, id: BufId) {
-        self.ops.push(Op::Free { id });
+        self.sink.emit(Op::Free { id });
     }
 
     pub fn free_all(&mut self, ids: impl IntoIterator<Item = BufId>) {
@@ -77,39 +157,27 @@ impl TraceBuilder {
     }
 
     pub fn compute(&mut self, cat: Category, flops: f64) {
-        self.ops.push(Op::Compute { cat, flops });
+        self.sink.emit(Op::Compute { cat, flops });
     }
 
     pub fn fixed(&mut self, cat: Category, secs: f64) {
-        self.ops.push(Op::Fixed { cat, secs });
+        self.sink.emit(Op::Fixed { cat, secs });
     }
 
     pub fn all_to_all(&mut self, bytes: f64, intra: bool, calls: u64, s_tokens: f64) {
-        self.ops.push(Op::AllToAll { bytes, intra, calls, s_tokens });
+        self.sink.emit(Op::AllToAll { bytes, intra, calls, s_tokens });
     }
 
     pub fn ring(&mut self, steps: u64, bytes_per_step: f64, inter: bool) {
-        self.ops.push(Op::Ring { steps, bytes_per_step, inter });
+        self.sink.emit(Op::Ring { steps, bytes_per_step, inter });
     }
 
     pub fn offload(&mut self, bytes: f64, overlap: bool) {
-        self.ops.push(Op::Offload { bytes, overlap });
+        self.sink.emit(Op::Offload { bytes, overlap });
     }
 
     pub fn snapshot(&mut self, label: &'static str) {
-        self.ops.push(Op::Snapshot { label });
-    }
-
-    pub fn finish(self) -> Vec<Op> {
-        self.ops
-    }
-
-    pub fn len(&self) -> usize {
-        self.ops.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.ops.is_empty()
+        self.sink.emit(Op::Snapshot { label });
     }
 }
 
@@ -170,5 +238,43 @@ mod tests {
         b.free(x);
         b.free(x);
         assert!(validate_trace(&b.finish()).is_err());
+    }
+
+    #[test]
+    fn streamed_sink_sees_the_same_sequence() {
+        // A counting sink driven through `over(&mut ...)` must observe the
+        // identical op sequence a collecting builder produces.
+        struct Counter {
+            allocs: usize,
+            frees: usize,
+            other: usize,
+        }
+        impl OpSink for Counter {
+            fn emit(&mut self, op: Op) {
+                match op {
+                    Op::Alloc { .. } => self.allocs += 1,
+                    Op::Free { .. } => self.frees += 1,
+                    _ => self.other += 1,
+                }
+            }
+        }
+        let mut c = Counter { allocs: 0, frees: 0, other: 0 };
+        let mut b = TraceBuilder::over(&mut c);
+        let x = b.alloc("x", 1.0);
+        let y = b.alloc("y", 2.0);
+        b.compute(Category::Fa3Fwd, 1.0);
+        b.free(y);
+        b.free(x);
+        assert_eq!((c.allocs, c.frees, c.other), (2, 2, 1));
+    }
+
+    #[test]
+    fn over_assigns_sequential_buf_ids() {
+        let mut ops: Vec<Op> = Vec::new();
+        let mut b = TraceBuilder::over(&mut ops);
+        assert_eq!(b.alloc("a", 1.0), 0);
+        assert_eq!(b.alloc("b", 1.0), 1);
+        drop(b);
+        assert_eq!(ops.len(), 2);
     }
 }

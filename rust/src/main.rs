@@ -111,7 +111,7 @@ repro — Untied Ulysses (UPipe) reproduction
                  [--ac ao|gpu|noac] [--mb N]
   repro plan --model llama3-8b --gpus 8 [--seq 1M] [--quantum 128K] [--cap 32M]
              [--ac ao,gpu,noac] [--mb 1,2,4] [--tp 1,2] [--paper] [--compose]
-             [--refit measurements.json] [--threads N] [--json]
+             [--refit measurements.json] [--threads N] [--cold] [--json]
       sweep every valid parallel config for the model/cluster — method
       families x AC modes x micro-batches x TP mixes x pinning — bisect
       each one's max trainable context, rank, and mark the Pareto frontier.
@@ -240,6 +240,9 @@ fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
         req.dims.tp_degrees = v;
     }
     req.dims.compositions = req.dims.compositions || rest.iter().any(|a| a == "--compose");
+    // --cold disables the warm-started bisections (identical results,
+    // more probes) — a debugging/benchmarking switch.
+    req.warm_start = !rest.iter().any(|a| a == "--cold");
     if let Some(path) = flag(rest, "--refit") {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| anyhow::anyhow!("reading --refit {path}: {e}"))?;

@@ -26,8 +26,11 @@ pub struct Allocator {
     peak_reserved: f64,
     retries: u64,
     oom: bool,
-    next_id: AllocId,
-    live: HashMap<AllocId, f64>,
+    /// Live block sizes, dense by `AllocId` (ids are sequential); freed
+    /// slots hold a NaN tombstone. This keeps the planner's hot path off
+    /// a per-block `HashMap`.
+    live: Vec<f64>,
+    live_count: usize,
     /// size-bucketed free cache: size -> count of cached blocks
     cache: HashMap<u64, u64>,
 }
@@ -42,8 +45,8 @@ impl Allocator {
             peak_reserved: 0.0,
             retries: 0,
             oom: false,
-            next_id: 0,
-            live: HashMap::new(),
+            live: Vec::new(),
+            live_count: 0,
             cache: HashMap::new(),
         }
     }
@@ -82,15 +85,22 @@ impl Allocator {
         }
         self.allocated += bytes;
         self.peak_allocated = self.peak_allocated.max(self.allocated);
-        let id = self.next_id;
-        self.next_id += 1;
-        self.live.insert(id, bytes);
+        let id = self.live.len() as AllocId;
+        self.live.push(bytes);
+        self.live_count += 1;
         Some(id)
     }
 
     /// Free a block back to the cache.
     pub fn free(&mut self, id: AllocId) {
-        let bytes = self.live.remove(&id).expect("double free or unknown id");
+        let slot = self
+            .live
+            .get_mut(id as usize)
+            .filter(|b| !b.is_nan())
+            .expect("double free or unknown id");
+        let bytes = *slot;
+        *slot = f64::NAN;
+        self.live_count -= 1;
         self.allocated -= bytes;
         *self.cache.entry(Self::bucket(bytes)).or_insert(0) += 1;
     }
@@ -135,7 +145,7 @@ impl Allocator {
         self.oom
     }
     pub fn live_blocks(&self) -> usize {
-        self.live.len()
+        self.live_count
     }
 }
 

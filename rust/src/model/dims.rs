@@ -3,7 +3,7 @@
 /// Dimensions of a decoder-only Transformer, following the paper's §2.2
 /// notation: `L` layers, `H` query heads, GQA group size `g = H / Hkv`,
 /// hidden `d_model`, per-head `d_head`, FFN `d_ff`, vocab `V`.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct ModelDims {
     pub name: &'static str,
     pub d_model: u64,

@@ -1,26 +1,36 @@
 //! Parallel plan evaluation: run the calibrated simulator across the
 //! sweep space on a worker pool, bisect each configuration's maximum
 //! trainable context, and extract the Pareto frontier at a reference
-//! sequence length. Traces are memoized in a [`TraceCache`] (pin variants
-//! and re-probed cells share them) and priced reports in a per-plan memo,
-//! so replayed cells cost a hash lookup. The whole sweep prices against
-//! the request's [`Calibration`] — default or `--refit`-fitted — whose
-//! provenance rides along into the outcome.
+//! sequence length.
+//!
+//! Evaluation is two-phase. Bisection probes only need *feasibility*
+//! (peak HBM / host RAM vs the limits), so they stream each schedule
+//! straight into the peak-only `FeasibilityKernel` — no `Vec<Op>` trace,
+//! no component timing, no memory timeline. Full pricing runs only for
+//! the final cells (each configuration's max-context point and the
+//! reference point), where traces are memoized in a [`TraceCache`] (pin
+//! variants share them). Both phases memoize results under hashed
+//! [`CellKey`]s in lock-striped maps, so replayed cells cost a hash
+//! lookup and the worker pool never serializes on a global mutex.
+//! Bisections warm-start from already-finished neighbour cells (pin /
+//! AC / micro-batch / TP variants of the same method), which cuts the
+//! probe count further without changing any result. The whole sweep
+//! prices against the request's [`Calibration`] — default or
+//! `--refit`-fitted — whose provenance rides along into the outcome.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::config::presets::RunPreset;
-use crate::config::{ClusterConfig, ParallelConfig};
-use crate::engine::{Calibration, RefitInfo, StepReport};
+use crate::config::{ClusterConfig, CpMethod, ParallelConfig};
+use crate::engine::{Calibration, Feasibility, RefitInfo, StepReport};
 use crate::model::ModelDims;
-use crate::schedule::{simulate_cached, TraceCache};
+use crate::schedule::{feasibility_with, simulate_cached, CellKey, TraceCache};
 use crate::util::fmt::GIB;
 use crate::util::pool::parallel_map;
+use crate::util::stripe::StripedMap;
 
-use super::search::{bisect_max, pareto_front};
+use super::search::{bisect_max_from, pareto_front};
 use super::space::{enumerate_space, SweepDims};
 
 /// What to sweep and how hard to search.
@@ -44,6 +54,11 @@ pub struct PlanRequest {
     pub refit: Option<RefitInfo>,
     /// Worker threads (0 = auto).
     pub threads: usize,
+    /// Warm-start bisections from already-evaluated neighbour cells.
+    /// Results are identical either way (feasibility is monotone in S);
+    /// disabling forces every configuration to cold-bisect from scratch —
+    /// kept as a switch so the equivalence is testable.
+    pub warm_start: bool,
 }
 
 impl PlanRequest {
@@ -58,6 +73,7 @@ impl PlanRequest {
             calibration: Calibration::default(),
             refit: None,
             threads: 0,
+            warm_start: true,
         }
     }
 }
@@ -95,6 +111,8 @@ pub struct PlanOutcome {
     pub configs: Vec<ConfigPlan>,
     /// Provenance when the sweep priced against a refit calibration.
     pub refit: Option<RefitInfo>,
+    /// Cells actually evaluated (streamed feasibility probes + fully
+    /// priced simulations); memo hits are not counted.
     pub simulations: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -118,6 +136,15 @@ impl PlanOutcome {
     }
 }
 
+/// Neighbourhood key for warm-starting bisections: every pin / AC /
+/// micro-batch / TP variant of one method (method parameters — U, π,
+/// ulysses×ring — keep families apart) hits its wall near the others' —
+/// AC-offload bounds AC-GPU from above, unpinned bounds pinned,
+/// micro-batching leaves peaks unchanged, TP trades residual bytes for
+/// head shards. The hint is just a starting point: the galloping search
+/// stays correct however far off it is.
+type WarmKey = CpMethod;
+
 /// Sweep the whole configuration space for the request.
 pub fn plan(req: &PlanRequest) -> PlanOutcome {
     let t0 = Instant::now();
@@ -126,44 +153,69 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
     let calib = req.calibration.clone();
     let gpus = req.cluster.total_gpus();
     let sims = AtomicU64::new(0);
-    let reports: Mutex<HashMap<String, StepReport>> = Mutex::new(HashMap::new());
+    // Phase-specific memos, hashed keys + striped locks. The memo keys add
+    // pin_memory on top of the cell key: pinning changes pricing (host-RAM
+    // budget) but not the trace.
+    let feas_memo: StripedMap<(CellKey, bool), Feasibility> = StripedMap::default();
+    let report_memo: StripedMap<(CellKey, bool), StepReport> = StripedMap::default();
+    let warm: StripedMap<WarmKey, u64> = StripedMap::default();
     let quantum = req.quantum.max(1);
     let cap = (req.cap_s / quantum).max(1) * quantum;
 
-    // One priced cell, memoized. The report memo key adds pin_memory on
-    // top of the trace key: pinning changes pricing but not the trace.
-    let probe = |parallel: &ParallelConfig, s: u64| -> StepReport {
-        let preset = RunPreset {
-            model: req.model.clone(),
-            cluster: req.cluster.clone(),
-            parallel: parallel.clone(),
-            seq_len: s,
+    let preset_of = |parallel: &ParallelConfig, s: u64| RunPreset {
+        model: req.model.clone(),
+        cluster: req.cluster.clone(),
+        parallel: parallel.clone(),
+        seq_len: s,
+    };
+    // Phase 1 — bisection probe: streamed peak-only feasibility.
+    let feasible = |parallel: &ParallelConfig, s: u64| -> bool {
+        let preset = preset_of(parallel, s);
+        let key = (CellKey::new(&preset, &calib), parallel.pin_memory);
+        let f = match feas_memo.get(&key) {
+            Some(f) => f,
+            None => {
+                let f = feasibility_with(&preset, &calib);
+                sims.fetch_add(1, Ordering::Relaxed);
+                feas_memo.insert(key, f)
+            }
         };
-        let key = format!("{}|pin{}", TraceCache::key(&preset, &calib), parallel.pin_memory);
-        if let Some(r) = reports.lock().unwrap().get(&key) {
-            return r.clone();
+        f.feasible()
+    };
+    // Phase 2 — final cells only: full pricing with timeline/components.
+    let price = |parallel: &ParallelConfig, s: u64| -> StepReport {
+        let preset = preset_of(parallel, s);
+        let key = (CellKey::new(&preset, &calib), parallel.pin_memory);
+        if let Some(r) = report_memo.get(&key) {
+            return r;
         }
         let r = simulate_cached(&preset, &calib, &cache);
         sims.fetch_add(1, Ordering::Relaxed);
-        reports.lock().unwrap().insert(key, r.clone());
-        r
+        report_memo.insert(key, r)
     };
-    let feasible = |r: &StepReport| !r.oom && r.failed.is_none();
+    let ok = |r: &StepReport| !r.oom && r.failed.is_none();
 
     let mut evaluated = parallel_map(&space, req.threads, |_, p| {
-        let max = bisect_max(quantum, cap, |s| feasible(&probe(p, s)));
+        let wkey: WarmKey = p.method;
+        let hint = if req.warm_start { warm.get(&wkey) } else { None };
+        let max = bisect_max_from(quantum, cap, hint, |s| feasible(p, s));
+        if req.warm_start {
+            // First finisher seeds the family; later variants gallop from
+            // it. An infeasible family still seeds the bottom of the range.
+            warm.insert(wkey, max.unwrap_or(quantum));
+        }
         let (mut max_peak, mut max_tput) = (None, None);
         if let Some(s) = max {
-            let r = probe(p, s);
+            let r = price(p, s);
             max_peak = Some(r.peak_bytes / GIB);
             // Throughput counts every micro-batch's tokens over the whole
             // (CP × TP) world.
             max_tput = r.tokens_per_sec_per_gpu(p.micro_batch * s, gpus);
         }
-        let rref = probe(p, req.reference_s);
+        let rref = price(p, req.reference_s);
         let mut ref_peak = None;
         let mut ref_tput = None;
-        if feasible(&rref) {
+        if ok(&rref) {
             ref_peak = Some(rref.peak_bytes / GIB);
             ref_tput = rref.tokens_per_sec_per_gpu(p.micro_batch * req.reference_s, gpus);
         }
@@ -321,12 +373,41 @@ mod tests {
             }
         }
         assert!(fastest.unwrap().pareto, "fastest config must be on frontier");
-        // Pin variants share traces, so the trace cache must have hits and
-        // the report memo must have collapsed replays.
+        // Pin variants share traces at the priced cells, so the trace
+        // cache must have hits, and the memos must have collapsed replays.
         assert!(out.cache_hits > 0, "no trace-cache hits");
         assert!(out.simulations > 0);
         assert!(out.simulations >= out.cache_misses);
         assert!(out.refit.is_none(), "no refit requested");
+    }
+
+    #[test]
+    fn warm_start_matches_cold_and_probes_fewer_cells() {
+        // Satellite gate: warm-started bisection must return the identical
+        // max_context for every configuration of the full default sweep
+        // (coarse quantum), and the number of evaluated cells must
+        // strictly drop.
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 1; // deterministic completion order maximizes reuse
+        let warm = plan(&req);
+        req.warm_start = false;
+        let cold = plan(&req);
+        assert_eq!(warm.configs.len(), cold.configs.len());
+        for (a, b) in warm.configs.iter().zip(&cold.configs) {
+            assert_eq!(a.parallel, b.parallel, "ranking order must match");
+            assert_eq!(a.max_context, b.max_context, "{:?}", a.parallel);
+            assert_eq!(a.hit_cap, b.hit_cap, "{:?}", a.parallel);
+            assert_eq!(a.ref_tok_s_gpu, b.ref_tok_s_gpu, "{:?}", a.parallel);
+            assert_eq!(a.pareto, b.pareto, "{:?}", a.parallel);
+        }
+        assert!(
+            warm.simulations < cold.simulations,
+            "warm start must evaluate strictly fewer cells: {} vs {}",
+            warm.simulations,
+            cold.simulations
+        );
     }
 
     #[test]

@@ -9,9 +9,12 @@
 //!   micro-batch counts and TP×CP mixes ([`SweepDims`]) — generalizing
 //!   the hand-picked §5.1 presets;
 //! - [`search`] holds the bisection that finds each configuration's
-//!   maximum trainable context and the Pareto-frontier extractor;
-//! - [`eval`] runs the sweep on a worker pool with memoized traces and
-//!   reports, producing a ranked [`PlanOutcome`].
+//!   maximum trainable context (warm-startable from a neighbour cell's
+//!   wall) and the Pareto-frontier extractor;
+//! - [`eval`] runs the two-phase sweep on a worker pool — streamed
+//!   peak-only feasibility for bisection probes, full pricing for the
+//!   final cells — with hashed-key lock-striped memos, producing a
+//!   ranked [`PlanOutcome`].
 //!
 //! Driven by `repro plan` / `repro frontier` (`--json` for machine-readable
 //! output) and rendered by [`crate::report::planner`].
@@ -21,5 +24,5 @@ pub mod search;
 pub mod space;
 
 pub use eval::{plan, ConfigPlan, PlanOutcome, PlanRequest};
-pub use search::{bisect_max, pareto_front};
+pub use search::{bisect_max, bisect_max_from, pareto_front};
 pub use space::{enumerate_space, SweepDims};

@@ -1,5 +1,6 @@
 //! Search primitives: bisection for the maximum trainable context of one
-//! configuration, and Pareto-frontier extraction over the evaluated space.
+//! configuration (cold, or warm-started from a neighbour cell's wall),
+//! and Pareto-frontier extraction over the evaluated space.
 
 /// Largest multiple of `quantum` in `[quantum, cap]` for which `feasible`
 /// holds, assuming monotone feasibility (peak memory grows with S).
@@ -30,7 +31,18 @@ pub fn bisect_max(quantum: u64, cap: u64, mut feasible: impl FnMut(u64) -> bool)
             break;
         }
     }
-    // Invariant: feasible(lo), !feasible(hi), both multiples of quantum.
+    Some(bisect_between(lo, hi, quantum, &mut feasible))
+}
+
+/// Pin the wall inside a bracket. Invariant on entry: `feasible(lo)`,
+/// `!feasible(hi)`, both multiples of `quantum` — shared by the cold and
+/// warm-started searches so their convergence can never diverge.
+fn bisect_between(
+    mut lo: u64,
+    mut hi: u64,
+    quantum: u64,
+    feasible: &mut impl FnMut(u64) -> bool,
+) -> u64 {
     while hi - lo > quantum {
         let mut mid = (lo + hi) / 2 / quantum * quantum;
         if mid <= lo {
@@ -42,7 +54,68 @@ pub fn bisect_max(quantum: u64, cap: u64, mut feasible: impl FnMut(u64) -> bool)
             hi = mid;
         }
     }
-    Some(lo)
+    lo
+}
+
+/// [`bisect_max`] warm-started from a neighbour cell's known wall.
+///
+/// Feasibility is monotone in S, and neighbouring configurations (pin
+/// variants, AC-offload vs AC-GPU, adjacent micro-batch/TP cells of the
+/// same method) hit walls near each other — so instead of always doubling
+/// up from `quantum`, gallop outward from `hint` to bracket the wall, then
+/// bisect. Under monotone feasibility the result is *identical* to the
+/// cold search for any hint value; only the probe count changes (2 probes
+/// when the hint is exactly the wall, vs O(log(cap/quantum)) cold).
+pub fn bisect_max_from(
+    quantum: u64,
+    cap: u64,
+    hint: Option<u64>,
+    mut feasible: impl FnMut(u64) -> bool,
+) -> Option<u64> {
+    let Some(hint) = hint else { return bisect_max(quantum, cap, feasible) };
+    assert!(quantum > 0 && cap >= quantum, "bad search bounds");
+    assert!(cap % quantum == 0, "cap must be a multiple of quantum");
+    // Snap the hint onto the search lattice.
+    let h = ((hint / quantum).max(1) * quantum).min(cap);
+    let (lo, hi) = if feasible(h) {
+        if h == cap {
+            return Some(cap);
+        }
+        // Gallop up for the first infeasible bound.
+        let mut lo = h;
+        let mut step = quantum;
+        loop {
+            let cand = lo.saturating_add(step).min(cap);
+            if feasible(cand) {
+                lo = cand;
+                if cand == cap {
+                    return Some(cap);
+                }
+                step = step.saturating_mul(2);
+            } else {
+                break (lo, cand);
+            }
+        }
+    } else {
+        if h == quantum {
+            return None;
+        }
+        // Gallop down for a feasible lower bound.
+        let mut hi = h;
+        let mut step = quantum;
+        loop {
+            let cand = h.saturating_sub(step).max(quantum);
+            if feasible(cand) {
+                break (cand, hi);
+            }
+            hi = cand;
+            if cand == quantum {
+                return None;
+            }
+            step = step.saturating_mul(2);
+        }
+    };
+    Some(bisect_between(lo, hi, quantum, &mut feasible))
 }
 
 /// Indices of the non-dominated points among `(cost, benefit)` pairs —
@@ -102,6 +175,72 @@ mod tests {
             let want = (1..=cap / q).map(|k| k * q).filter(|&s| s <= wall).max();
             got == want
         });
+    }
+
+    #[test]
+    fn prop_hinted_bisection_matches_cold_for_any_hint() {
+        // Any hint — exact, low, high, off-lattice, out of range — must
+        // leave the result identical to the cold search.
+        prop::check("bisect-hint-vs-cold", 300, &[(0, 65), (1, 64), (0, 70)], |a| {
+            let q = 512u64;
+            let wall = a[0] as u64 * q;
+            let cap = a[1] as u64 * q;
+            let hint = a[2] as u64 * q / 3; // deliberately off-lattice
+            let cold = bisect_max(q, cap, |s| s <= wall);
+            let warm = bisect_max_from(q, cap, Some(hint), |s| s <= wall);
+            let none = bisect_max_from(q, cap, None, |s| s <= wall);
+            cold == warm && cold == none
+        });
+    }
+
+    #[test]
+    fn exact_hint_costs_two_probes() {
+        let q = 1u64 << 17;
+        for wall_steps in [1u64, 7, 100, 255] {
+            let wall = wall_steps * q;
+            let mut probes = 0;
+            let got = bisect_max_from(q, 256 * q, Some(wall), |s| {
+                probes += 1;
+                s <= wall
+            });
+            assert_eq!(got, Some(wall));
+            assert!(probes <= 2, "{probes} probes with an exact hint (wall {wall_steps})");
+        }
+    }
+
+    #[test]
+    fn near_hint_beats_cold_probe_count() {
+        let q = 1u64 << 17;
+        let wall = 40 * q;
+        let count = |hint: Option<u64>| {
+            let mut probes = 0;
+            let got = bisect_max_from(q, 256 * q, hint, |s| {
+                probes += 1;
+                s <= wall
+            });
+            assert_eq!(got, Some(wall));
+            probes
+        };
+        let cold = count(None);
+        // A hint one quantum off (the typical pin/AC neighbour distance).
+        assert!(count(Some(wall + q)) < cold, "hint high");
+        assert!(count(Some(wall - q)) < cold, "hint low");
+    }
+
+    #[test]
+    fn hinted_edge_cases() {
+        let q = 1024u64;
+        // Infeasible everywhere: any hint still returns None.
+        for hint in [q, 3 * q, 64 * q, 1_000_000 * q] {
+            assert_eq!(bisect_max_from(q, 64 * q, Some(hint), |_| false), None);
+        }
+        // Feasible everywhere: any hint still returns cap.
+        for hint in [0, q, 63 * q, 64 * q] {
+            assert_eq!(bisect_max_from(q, 64 * q, Some(hint), |_| true), Some(64 * q));
+        }
+        // Single-point range.
+        assert_eq!(bisect_max_from(q, q, Some(q), |_| true), Some(q));
+        assert_eq!(bisect_max_from(q, q, Some(q), |_| false), None);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! micro-batching and TP uniformly through every trace builder.
 
 use crate::config::presets::RunPreset;
-use crate::engine::ops::BufId;
+use crate::engine::ops::{BufId, OpSink};
 use crate::engine::{Calibration, Category, TraceBuilder};
 use crate::model::ModelDims;
 
@@ -104,7 +104,7 @@ impl Quantities {
     /// d_model-wide) plus the attention block's pre-projection output and
     /// its gradient, which are H·d_head-wide (equal for Llama, 1.6× for
     /// Qwen3's explicit head_dim) — total 6.74 units at H·d_head = d_model.
-    pub fn emit_misc(&self, b: &mut TraceBuilder) -> Vec<BufId> {
+    pub fn emit_misc<S: OpSink>(&self, b: &mut TraceBuilder<S>) -> Vec<BufId> {
         let x = self.x_bytes;
         let q = self.q_bytes;
         vec![
@@ -128,7 +128,7 @@ impl Quantities {
 
     /// Bulk "other" time (projections, MLP, norms, loss, optimizer, data):
     /// fitted rate, see calibration.
-    pub fn emit_other(&self, b: &mut TraceBuilder, cal: &Calibration, factor: f64) {
+    pub fn emit_other<S: OpSink>(&self, b: &mut TraceBuilder<S>, cal: &Calibration, factor: f64) {
         let secs = cal.other_fixed_per_layer * self.m.n_layers as f64 + self.other_rate_secs(cal);
         b.fixed(Category::Other, secs * factor);
     }
@@ -137,7 +137,7 @@ impl Quantities {
     /// buffers (block output + its gradient) only ever exist one sequence
     /// chunk at a time, so they drop out; the d_model-wide residual-stream
     /// buffers remain.
-    pub fn emit_misc_chunked(&self, b: &mut TraceBuilder) -> Vec<BufId> {
+    pub fn emit_misc_chunked<S: OpSink>(&self, b: &mut TraceBuilder<S>) -> Vec<BufId> {
         let x = self.x_bytes;
         vec![
             b.alloc("grad_dx", x),
@@ -198,7 +198,7 @@ impl ScheduleCtx {
     /// the per-step fixed share (optimizer, data loader, launch floors),
     /// later micro-batches amortize it and add only the per-token work —
     /// the throughput benefit gradient accumulation actually buys.
-    pub fn emit_other(&self, b: &mut TraceBuilder, factor: f64) {
+    pub fn emit_other<S: OpSink>(&self, b: &mut TraceBuilder<S>, factor: f64) {
         self.q.emit_other(b, &self.cal, factor);
         if self.mb > 1 {
             let per_token = self.q.other_rate_secs(&self.cal);
@@ -212,7 +212,7 @@ impl ScheduleCtx {
     /// layer loops so the engine's comm-pressure penalty prices it against
     /// the allocations actually live when it runs — an end-of-trace
     /// aggregate would always see ample headroom.
-    pub fn emit_tp_allreduce(&self, b: &mut TraceBuilder) {
+    pub fn emit_tp_allreduce<S: OpSink>(&self, b: &mut TraceBuilder<S>) {
         let tp = self.q.tp;
         if tp > 1 {
             let per_ar = 2.0 * (tp - 1) as f64 / tp as f64 * self.q.x_bytes;
@@ -235,7 +235,7 @@ pub struct AcEmitter {
 impl AcEmitter {
     /// End of one layer's forward: checkpoint the layer input (offload /
     /// keep on GPU / keep the whole intra-layer live set).
-    pub fn store(&mut self, b: &mut TraceBuilder) {
+    pub fn store<S: OpSink>(&mut self, b: &mut TraceBuilder<S>) {
         match self.mode {
             AcMode::AcOffload => b.offload(self.x_bytes, true),
             AcMode::AcGpu => self.resident.push(b.alloc("ckpt_gpu", self.x_bytes)),
@@ -245,7 +245,7 @@ impl AcEmitter {
 
     /// Start of one layer's backward: fetch the checkpoint if offloaded
     /// (negative bytes: the transfer is paid, the host RAM is released).
-    pub fn fetch(&mut self, b: &mut TraceBuilder) {
+    pub fn fetch<S: OpSink>(&mut self, b: &mut TraceBuilder<S>) {
         if self.mode == AcMode::AcOffload {
             b.offload(-self.x_bytes, true);
         }
@@ -257,7 +257,7 @@ impl AcEmitter {
     }
 
     /// End of the micro-batch's backward: release retained checkpoints.
-    pub fn finish(&mut self, b: &mut TraceBuilder) {
+    pub fn finish<S: OpSink>(&mut self, b: &mut TraceBuilder<S>) {
         for id in self.resident.drain(..) {
             b.free(id);
         }

@@ -11,13 +11,20 @@
 
 use super::common::ScheduleCtx;
 use super::gqa::gqa_schedule;
-use crate::engine::{Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, OpSink, TraceBuilder};
 use crate::model::flops;
 
+/// Collect one training step as a `Vec<Op>` (the priced path).
 pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    emit(ctx, &mut b, u, pi);
+    b.finish()
+}
+
+/// Emit one training step into any sink.
+pub fn emit<S: OpSink>(ctx: &ScheduleCtx, b: &mut TraceBuilder<S>, u: u32, pi: u32) {
     let q = &ctx.q;
     let cal = &ctx.cal;
-    let mut b = TraceBuilder::new();
     let m = &q.m;
     let stages = gqa_schedule(m.n_heads, m.n_kv_heads, u as u64);
     let nu = stages.len() as f64;
@@ -30,7 +37,7 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
     let l = m.n_layers;
     // FPDT-style residual-stream chunking: the misc set shrinks to the
     // chunked variant, plus FPDT's offload engine + staging.
-    let misc = q.emit_misc_chunked(&mut b);
+    let misc = q.emit_misc_chunked(b);
     let engine = b.alloc("fpdt_offload_engine", cal.fpdt_extra_base);
     let staging = b.alloc("fpdt_pinned_staging", 1.3 * q.x_bytes / p);
 
@@ -38,6 +45,9 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
         let mut ac = ctx.ac_emitter();
 
         for _ in 0..l {
+            if b.done() {
+                return;
+            }
             b.snapshot("before_attn");
             // out buffer also sequence-chunked and offloaded per piece
             let out_buf = b.alloc("compose_out_chunk", q.q_bytes / p);
@@ -46,6 +56,9 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
                 let kvb = 2.0 * st.new_kv_heads.len() as f64 * head_bytes;
                 let calls = if st.new_kv_heads.is_empty() { 1 } else { 3 };
                 for _ in 0..pi {
+                    if b.done() {
+                        return;
+                    }
                     let chunk = b.alloc("compose_qkv_chunk", (qb + kvb) / p * f);
                     b.all_to_all((qb + kvb) / p * a2a_frac, q.nodes == 1, calls, q.s as f64);
                     b.snapshot("inp_all_to_all");
@@ -56,13 +69,16 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
                 }
             }
             b.free(out_buf);
-            ctx.emit_tp_allreduce(&mut b);
-            ac.store(&mut b);
+            ctx.emit_tp_allreduce(b);
+            ac.store(b);
         }
 
         let beta_extra = m.beta() - m.gamma();
         for _ in 0..l {
-            ac.fetch(&mut b);
+            if b.done() {
+                return;
+            }
+            ac.fetch(b);
             if ac.recompute() {
                 b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
             }
@@ -73,6 +89,9 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
                 let kvb = 2.0 * st.new_kv_heads.len() as f64 * head_bytes;
                 let calls = if st.new_kv_heads.is_empty() { 1 } else { 3 };
                 for _ in 0..pi {
+                    if b.done() {
+                        return;
+                    }
                     b.offload(-(2.0 * kvb) / p, true); // fetch KV chunk
                     let chunk = b.alloc(
                         "compose_bwd_chunk",
@@ -86,9 +105,9 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
                 }
             }
             b.free(dout_buf);
-            ctx.emit_tp_allreduce(&mut b);
+            ctx.emit_tp_allreduce(b);
         }
-        ac.finish(&mut b);
+        ac.finish(b);
     }
 
     // both overheads: UPipe's extra launches are inside the a2a calls;
@@ -97,11 +116,10 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, pi: u32) -> Vec<Op> {
         Category::Other,
         cal.fpdt_stall(q.s as f64, m.n_layers) * ctx.mb as f64,
     );
-    ctx.emit_other(&mut b, 1.0);
+    ctx.emit_other(b, 1.0);
     b.free(staging);
     b.free(engine);
     b.free_all(misc);
-    b.finish()
 }
 
 #[cfg(test)]

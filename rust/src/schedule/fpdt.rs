@@ -5,13 +5,20 @@
 //! hard-requires offloaded AC ([`crate::config::CpMethod::supported_ac_modes`]).
 
 use super::common::ScheduleCtx;
-use crate::engine::{Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, OpSink, TraceBuilder};
 use crate::model::flops;
 
+/// Collect one training step as a `Vec<Op>` (the priced path).
 pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    emit(ctx, &mut b, pi);
+    b.finish()
+}
+
+/// Emit one training step into any sink.
+pub fn emit<S: OpSink>(ctx: &ScheduleCtx, b: &mut TraceBuilder<S>, pi: u32) {
     let q = &ctx.q;
     let cal = &ctx.cal;
-    let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let p = pi as f64;
     let attn_fwd = q.attn_flops_layer_fwd();
@@ -20,7 +27,7 @@ pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
     // FPDT runs Ulysses-style a2a; its qwen setup is 16-ulysses-1-ring, so
     // the a2a crosses nodes when the cluster does (§5.2.1).
     let intra = q.nodes == 1;
-    let misc = q.emit_misc_chunked(&mut b);
+    let misc = q.emit_misc_chunked(b);
     // FPDT's extra persistent footprint: pinned double buffers + CPU
     // offload engine state (fit, see calibration provenance).
     let extra = b.alloc("fpdt_offload_engine", cal.fpdt_extra_base);
@@ -30,10 +37,16 @@ pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
         let mut ac = ctx.ac_emitter();
 
         for _ in 0..l {
+            if b.done() {
+                return;
+            }
             b.snapshot("before_attn");
             // double buffers for the in-flight chunk pair
             let dbuf = b.alloc("fpdt_double_buffer", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
             for _ in 0..pi {
+                if b.done() {
+                    return;
+                }
                 let chunk = b.alloc("fpdt_chunk", (2.0 * q.m.gamma() + 1.0) / p * q.q_bytes * f);
                 b.all_to_all((q.qkv_bytes() + q.q_bytes) / p * a2a_frac, intra, 4, q.s as f64);
                 b.snapshot("inp_all_to_all");
@@ -44,13 +57,16 @@ pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
                 b.free(chunk);
             }
             b.free(dbuf);
-            ctx.emit_tp_allreduce(&mut b);
-            ac.store(&mut b);
+            ctx.emit_tp_allreduce(b);
+            ac.store(b);
         }
 
         let beta = q.m.beta();
         for _ in 0..l {
-            ac.fetch(&mut b);
+            if b.done() {
+                return;
+            }
+            ac.fetch(b);
             if ac.recompute() {
                 b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
             }
@@ -58,6 +74,9 @@ pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
             let dbuf =
                 b.alloc("fpdt_double_buffer_bwd", 2.0 * (q.m.gamma() + 1.0) / p * q.q_bytes * f);
             for _ in 0..pi {
+                if b.done() {
+                    return;
+                }
                 // fetch the chunk's KV back from host (releases host RAM)
                 b.offload(-(2.0 * q.kv_bytes) / p, true);
                 let chunk = b.alloc("fpdt_bwd_chunk", (beta + 2.0) / p * q.q_bytes * f);
@@ -67,9 +86,9 @@ pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
                 b.free(chunk);
             }
             b.free(dbuf);
-            ctx.emit_tp_allreduce(&mut b);
+            ctx.emit_tp_allreduce(b);
         }
-        ac.finish(&mut b);
+        ac.finish(b);
     }
 
     // CPU-side scheduler stalls: the throughput penalty §5.3 attributes to
@@ -78,11 +97,10 @@ pub fn trace(ctx: &ScheduleCtx, pi: u32) -> Vec<Op> {
         Category::Other,
         cal.fpdt_stall(q.s as f64, q.m.n_layers) * ctx.mb as f64,
     );
-    ctx.emit_other(&mut b, 1.0);
+    ctx.emit_other(b, 1.0);
     b.free(staging);
     b.free(extra);
     b.free_all(misc);
-    b.finish()
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! Context-parallelism schedules: one module per method in the paper's
 //! evaluation. Each schedule turns a [`ScheduleCtx`] — derived quantities
 //! plus calibration, AC mode, micro-batching and TP, built from a
-//! (model, cluster, parallel layout, S) preset — into an op trace
+//! (model, cluster, parallel layout, S) preset — into an op stream
 //! ([`crate::engine::ops::Op`]) describing one training step on a
 //! representative device; the engine prices it.
 //!
@@ -12,10 +12,15 @@
 //! arrives through the `ScheduleCtx`, so planner-driven refits flow into
 //! every trace uniformly.
 //!
-//! The planner sweeps thousands of (config, S) cells, many of them
-//! repeatedly (bisection re-probes, frontier + report passes, pin-memory
-//! variants that share a trace); [`TraceCache`] memoizes built traces so
-//! those replays skip straight to pricing.
+//! Every schedule emits into a generic [`OpSink`], so one emission path
+//! serves two evaluation phases: [`feasibility_with`] streams the ops
+//! straight into the peak-only [`FeasibilityKernel`] (the planner's
+//! bisection probes — no `Vec<Op>` is ever materialized), while
+//! [`simulate_with`] / [`simulate_cached`] collect and fully price a trace
+//! (timeline + Table-5 components) for the cells that end up in tables and
+//! figures. [`TraceCache`] memoizes priced traces under hashed [`CellKey`]s
+//! in a lock-striped map, so pin variants and report replays skip straight
+//! to pricing without serializing the worker pool on one global mutex.
 
 pub mod common;
 pub mod compose;
@@ -27,13 +32,17 @@ pub mod ulysses;
 pub mod upipe;
 pub mod usp;
 
-use std::collections::HashMap;
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::presets::RunPreset;
 use crate::config::CpMethod;
-use crate::engine::{Calibration, Engine, Op, StepReport};
+use crate::engine::{
+    Calibration, Engine, Feasibility, FeasibilityKernel, Op, OpSink, StepReport, TraceBuilder,
+};
+use crate::util::stripe::StripedMap;
 
 pub use common::{AcEmitter, AcMode, Quantities, ScheduleCtx};
 
@@ -46,18 +55,28 @@ pub fn build_trace(p: &RunPreset) -> Vec<Op> {
 /// uniform builder contract: every schedule consumes calibration, AC mode,
 /// micro-batch count and TP degree through one [`ScheduleCtx`].
 pub fn build_trace_with(p: &RunPreset, calib: &Calibration) -> Vec<Op> {
+    let mut ops = Vec::new();
+    stream_trace_with(p, calib, &mut ops);
+    ops
+}
+
+/// Stream the op trace for a preset into an arbitrary sink without ever
+/// collecting it. This is the feasibility probes' entry point; collecting
+/// sinks (`Vec<Op>`) get exactly the same sequence.
+pub fn stream_trace_with<S: OpSink>(p: &RunPreset, calib: &Calibration, sink: &mut S) {
     let ctx = ScheduleCtx::new(p, calib);
+    let mut b = TraceBuilder::over(sink);
     match p.parallel.method {
-        CpMethod::NativePyTorch => native::trace(&ctx),
-        CpMethod::Ring => ring_attn::trace(&ctx),
-        CpMethod::Ulysses => ulysses::trace(&ctx),
-        CpMethod::Fpdt { pi } => fpdt::trace(&ctx, pi),
-        CpMethod::Upipe { u, gqa_schedule } => upipe::trace(&ctx, u, gqa_schedule, false),
-        CpMethod::UspHybrid { ulysses: cu, ring: cr } => usp::trace(&ctx, cu, cr),
+        CpMethod::NativePyTorch => native::emit(&ctx, &mut b),
+        CpMethod::Ring => ring_attn::emit(&ctx, &mut b),
+        CpMethod::Ulysses => ulysses::emit(&ctx, &mut b),
+        CpMethod::Fpdt { pi } => fpdt::emit(&ctx, &mut b, pi),
+        CpMethod::Upipe { u, gqa_schedule } => upipe::emit(&ctx, &mut b, u, gqa_schedule, false),
+        CpMethod::UspHybrid { ulysses: cu, ring: cr } => usp::emit(&ctx, &mut b, cu, cr),
         CpMethod::UpipeHybrid { u, ulysses: cu, ring: cr } => {
-            usp::upipe_hybrid_trace(&ctx, u, cu, cr)
+            usp::upipe_hybrid_emit(&ctx, &mut b, u, cu, cr)
         }
-        CpMethod::UpipeFpdt { u, pi } => compose::trace(&ctx, u, pi),
+        CpMethod::UpipeFpdt { u, pi } => compose::emit(&ctx, &mut b, u, pi),
     }
 }
 
@@ -72,10 +91,39 @@ pub fn simulate_with(p: &RunPreset, calib: &Calibration) -> StepReport {
 }
 
 /// `simulate_with`, but fetching the op trace from (or inserting it into)
-/// `cache` — the planner's hot path.
+/// `cache` — the priced phase of the planner (final cells, reports).
 pub fn simulate_cached(p: &RunPreset, calib: &Calibration, cache: &TraceCache) -> StepReport {
     let trace = cache.trace(p, calib);
     run_trace(p, calib, trace.as_slice())
+}
+
+/// Phase-1 evaluation: stream the preset's schedule straight into the
+/// peak-only [`FeasibilityKernel`] — no `Vec<Op>`, no pricing, no
+/// timeline. Agrees bitwise with [`simulate_with`] on `peak_bytes`, `oom`
+/// and `failed` (the schedule-layer property tests enforce this).
+pub fn feasibility_with(p: &RunPreset, calib: &Calibration) -> Feasibility {
+    let q = Quantities::new(p);
+    let mut kernel =
+        FeasibilityKernel::new(q.hbm_limit, q.persistent_bytes(calib), q.host_ram_for_offload());
+    stream_trace_with(p, calib, &mut kernel);
+    let mut f = kernel.finish();
+    if let Some(msg) = method_failure(p) {
+        f.failed = Some(msg);
+    }
+    f
+}
+
+/// Method-level failure rules applied on top of the engine's own result
+/// (shared by the priced and feasibility paths so they agree bitwise).
+fn method_failure(p: &RunPreset) -> Option<&'static str> {
+    // FPDT's published implementation fails beyond 4M tokens (§5.2 note);
+    // reproduce the failure rather than extrapolating.
+    if let CpMethod::Fpdt { .. } = p.parallel.method {
+        if p.seq_len > 4 * 1024 * 1024 {
+            return Some("FPDT execution fails at lengths > 4M (paper §5.2)");
+        }
+    }
+    None
 }
 
 /// Price an already-built trace for a preset (shared by the cached and
@@ -91,23 +139,66 @@ fn run_trace(p: &RunPreset, calib: &Calibration, trace: &[Op]) -> StepReport {
         q.host_ram_for_offload(),
     );
     let mut report = engine.run(trace);
-    // FPDT's published implementation fails beyond 4M tokens (§5.2 note);
-    // reproduce the failure rather than extrapolating.
-    if let CpMethod::Fpdt { .. } = p.parallel.method {
-        if p.seq_len > 4 * 1024 * 1024 {
-            report.failed = Some("FPDT execution fails at lengths > 4M (paper §5.2)");
-        }
+    if let Some(msg) = method_failure(p) {
+        report.failed = Some(msg);
     }
     report
 }
 
-/// Thread-safe memo of built op traces, keyed by every input the trace
-/// builder reads. Traces are immutable once built, so they are shared as
-/// `Arc`s; concurrent builders may race on a cold key, in which case one
-/// build is discarded and the canonical entry wins.
+/// Hashed cache key for one evaluated cell: every input the trace builder
+/// reads, as a flat `Copy` struct with derived hashing — no `format!`-built
+/// Strings anywhere near the probe path. Covers the full model dims (as a
+/// fingerprint: refit experiments build modified variants that keep the
+/// name), cluster shape, layout and S, the AC/micro-batch/TP dims, and the
+/// calibration fingerprint (refit calibrations change emitted op durations
+/// and byte sizes, so they must not alias the default fit's traces). Note
+/// `pin_memory` is deliberately absent — pinning changes pricing (host-RAM
+/// budget), not trace structure, so pin variants share one trace; pricing
+/// memos append it separately.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CellKey {
+    method: CpMethod,
+    ac: AcMode,
+    cp_degree: u64,
+    tp: u64,
+    micro_batch: u64,
+    seq_len: u64,
+    nodes: u64,
+    gpus_per_node: u64,
+    model_fp: u64,
+    cal_fp: u64,
+}
+
+impl CellKey {
+    pub fn new(p: &RunPreset, calib: &Calibration) -> Self {
+        // DefaultHasher::new() hashes with fixed keys, so the fingerprint
+        // is stable within (and across) processes.
+        let mut h = DefaultHasher::new();
+        p.model.hash(&mut h);
+        CellKey {
+            method: p.parallel.method,
+            ac: p.parallel.ac_mode,
+            cp_degree: p.parallel.cp_degree,
+            tp: p.parallel.tp,
+            micro_batch: p.parallel.micro_batch,
+            seq_len: p.seq_len,
+            nodes: p.cluster.nodes,
+            gpus_per_node: p.cluster.gpus_per_node,
+            model_fp: h.finish(),
+            cal_fp: calib.fingerprint(),
+        }
+    }
+
+}
+
+/// Thread-safe memo of built op traces, keyed by hashed [`CellKey`]s in a
+/// lock-striped map (planner workers probing different cells no longer
+/// serialize on one global mutex). Traces are immutable once built, so
+/// they are shared as `Arc`s; concurrent builders may race on a cold key,
+/// in which case one build is discarded and the canonical entry wins.
 #[derive(Default)]
 pub struct TraceCache {
-    traces: Mutex<HashMap<String, Arc<Vec<Op>>>>,
+    traces: StripedMap<CellKey, Arc<Vec<Op>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -117,43 +208,23 @@ impl TraceCache {
         Self::default()
     }
 
-    /// Cache key: everything the trace depends on — the full model dims
-    /// (not just the name: refit experiments build modified variants that
-    /// keep it), cluster shape, layout and S, the AC/micro-batch/TP dims,
-    /// and the calibration fingerprint (refit calibrations change emitted
-    /// op durations and byte sizes, so they must not alias the default
-    /// fit's traces). Note `pin_memory` is deliberately absent — pinning
-    /// changes pricing (host-RAM budget), not trace structure, so pin
-    /// variants share one trace.
-    pub fn key(p: &RunPreset, calib: &Calibration) -> String {
-        format!(
-            "{:?}|{:?}|{}n{}g|c{}|s{}|{:?}|b{}|tp{}|cal{:016x}",
-            p.parallel.method,
-            p.model,
-            p.cluster.nodes,
-            p.cluster.gpus_per_node,
-            p.parallel.cp_degree,
-            p.seq_len,
-            p.parallel.ac_mode,
-            p.parallel.micro_batch,
-            p.parallel.tp,
-            calib.fingerprint()
-        )
+    /// Cache key for a cell; see [`CellKey`] for exactly what it covers.
+    pub fn key(p: &RunPreset, calib: &Calibration) -> CellKey {
+        CellKey::new(p, calib)
     }
 
     /// Fetch (or build and insert) the trace for `p` under `calib`.
     pub fn trace(&self, p: &RunPreset, calib: &Calibration) -> Arc<Vec<Op>> {
         let key = Self::key(p, calib);
-        if let Some(t) = self.traces.lock().unwrap().get(&key) {
+        if let Some(t) = self.traces.get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return t.clone();
+            return t;
         }
         // Build outside the lock: traces can be long and the planner's
         // workers build neighbouring cells concurrently.
         let built = Arc::new(build_trace_with(p, calib));
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.traces.lock().unwrap();
-        map.entry(key).or_insert(built).clone()
+        self.traces.insert(key, built)
     }
 
     pub fn hits(&self) -> u64 {
@@ -165,7 +236,7 @@ impl TraceCache {
     }
 
     pub fn len(&self) -> usize {
-        self.traces.lock().unwrap().len()
+        self.traces.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -199,6 +270,27 @@ mod tests {
         let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
         simulate_cached(&p, &cal, &cache);
         assert_eq!((cache.hits(), cache.len()), (1, 4));
+    }
+
+    #[test]
+    fn streamed_trace_equals_collected_trace() {
+        // `stream_trace_with` into a Vec sink must be byte-for-byte the
+        // trace `build_trace_with` returns (same dispatch, same builder).
+        let cal = Calibration::default();
+        for m in [
+            CpMethod::NativePyTorch,
+            CpMethod::Ring,
+            CpMethod::Ulysses,
+            CpMethod::Fpdt { pi: 16 },
+            CpMethod::Upipe { u: 8, gqa_schedule: true },
+            CpMethod::UpipeFpdt { u: 8, pi: 8 },
+        ] {
+            let p = llama_single_node(m, 1 << 20);
+            let collected = build_trace_with(&p, &cal);
+            let mut streamed: Vec<Op> = Vec::new();
+            stream_trace_with(&p, &cal, &mut streamed);
+            assert_eq!(collected, streamed, "{m:?}");
+        }
     }
 
     #[test]
@@ -239,6 +331,67 @@ mod tests {
     }
 
     #[test]
+    fn cell_keys_are_hashed_structs_not_strings() {
+        // The key type is Copy and distinct along every dimension the
+        // trace depends on; pin variants collapse to one key.
+        let cal = Calibration::default();
+        let base = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        let k0 = CellKey::new(&base, &cal);
+        let copied: CellKey = k0; // Copy, not Clone-of-String
+        assert_eq!(k0, copied);
+
+        let mut pin = base.clone();
+        pin.parallel.pin_memory = !pin.parallel.pin_memory;
+        assert_eq!(CellKey::new(&pin, &cal), k0, "pin variants share a key");
+
+        let mut s2 = base.clone();
+        s2.seq_len = 2 << 20;
+        assert_ne!(CellKey::new(&s2, &cal), k0);
+        let mut tp = base.clone();
+        tp.parallel.tp = 2;
+        assert_ne!(CellKey::new(&tp, &cal), k0);
+        let mut model = base.clone();
+        model.model.d_ff += 1; // refit-style dims variant, same name
+        assert_ne!(CellKey::new(&model, &cal), k0);
+        let mut cal2 = cal.clone();
+        cal2.other_rate *= 1.5;
+        assert_ne!(CellKey::new(&base, &cal2), k0);
+    }
+
+    #[test]
+    fn feasibility_matches_pricing_on_hybrid_methods() {
+        // The single-node prop test below cannot reach the hybrid families
+        // (they only enumerate on multi-node clusters), so pin the bitwise
+        // kernel/engine parity contract — and stream-vs-collect equality —
+        // for them explicitly.
+        use crate::config::presets::{llama_two_node, qwen_two_node};
+        let cal = Calibration::default();
+        for s in [1u64 << 19, 1 << 20, 3 << 20, 6 << 20] {
+            for p in [
+                llama_two_node(CpMethod::UspHybrid { ulysses: 8, ring: 2 }, s),
+                llama_two_node(CpMethod::UpipeHybrid { u: 8, ulysses: 8, ring: 2 }, s),
+                qwen_two_node(CpMethod::UspHybrid { ulysses: 8, ring: 2 }, s),
+                qwen_two_node(CpMethod::Ring, s),
+            ] {
+                let m = p.parallel.method;
+                let collected = build_trace_with(&p, &cal);
+                let mut streamed: Vec<Op> = Vec::new();
+                stream_trace_with(&p, &cal, &mut streamed);
+                assert_eq!(collected, streamed, "{m:?} S={s}");
+                let priced = simulate_with(&p, &cal);
+                let feas = feasibility_with(&p, &cal);
+                assert_eq!(
+                    feas.peak_bytes.to_bits(),
+                    priced.peak_bytes.to_bits(),
+                    "{m:?} S={s}"
+                );
+                assert_eq!(feas.oom, priced.oom, "{m:?} S={s}");
+                assert_eq!(feas.failed, priced.failed, "{m:?} S={s}");
+            }
+        }
+    }
+
+    #[test]
     fn fpdt_failure_rule_applies_on_cached_path() {
         let cache = TraceCache::new();
         let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, 5 << 20);
@@ -247,10 +400,19 @@ mod tests {
     }
 
     #[test]
+    fn fpdt_failure_rule_applies_on_feasibility_path() {
+        let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, 5 << 20);
+        let f = feasibility_with(&p, &Calibration::default());
+        assert!(!f.feasible(), "feasibility must reproduce the 4M wall");
+    }
+
+    #[test]
     fn prop_traces_balanced_nonnegative_and_peak_stable_under_replay() {
-        // Every method × S × AC mode × micro-batch: the trace must have
-        // balanced Alloc/Free pairs and non-negative bytes, and its peak
-        // must be invariant when replayed through the trace cache.
+        // Every method × S × AC mode × micro-batch × TP: the trace must
+        // have balanced Alloc/Free pairs and non-negative bytes, its peak
+        // must be invariant when replayed through the trace cache, and the
+        // streaming FeasibilityKernel must agree *bitwise* with the priced
+        // engine on peak_bytes, oom and the failure value.
         let methods = [
             CpMethod::NativePyTorch,
             CpMethod::Ring,
@@ -262,41 +424,56 @@ mod tests {
         let modes = [AcMode::AcOffload, AcMode::AcGpu, AcMode::NoAc];
         let cal = Calibration::default();
         let cache = TraceCache::new();
-        prop::check("trace-invariants", 40, &[(0, 5), (1, 8), (0, 2), (0, 2)], |a| {
-            let mut p = llama_single_node(methods[a[0] as usize], (a[1] as u64) << 18);
-            p.parallel.ac_mode = modes[a[2] as usize];
-            p.parallel.micro_batch = 1 << a[3];
-            if p.parallel.validate_model(&p.model).is_err() {
-                return true; // e.g. FPDT × non-offload AC: not a valid cell
-            }
-            let trace = build_trace_with(&p, &cal);
-            if validate_trace(&trace).is_err() {
-                return false;
-            }
-            // Allocs and comm volumes must be non-negative; offloads may be
-            // negative (fetches release host RAM) but must net out >= 0 —
-            // a trace can never fetch more than it stored.
-            let mut host_net = 0.0f64;
-            for op in &trace {
-                match op {
-                    Op::Alloc { bytes, .. } | Op::AllToAll { bytes, .. } => {
-                        if *bytes < 0.0 {
-                            return false;
-                        }
-                    }
-                    Op::Offload { bytes, .. } => host_net += bytes,
-                    _ => {}
+        prop::check(
+            "trace-invariants",
+            48,
+            &[(0, 5), (1, 8), (0, 2), (0, 2), (0, 1)],
+            |a| {
+                let mut p = llama_single_node(methods[a[0] as usize], (a[1] as u64) << 18);
+                p.parallel.ac_mode = modes[a[2] as usize];
+                p.parallel.micro_batch = 1 << a[3];
+                if a[4] == 1 {
+                    // TP=2 on the same 8-GPU world (C halves).
+                    p.parallel.tp = 2;
+                    p.parallel.cp_degree = 4;
                 }
-            }
-            if host_net < -1e-6 {
-                return false;
-            }
-            let direct = simulate_with(&p, &cal);
-            let replay1 = simulate_cached(&p, &cal, &cache);
-            let replay2 = simulate_cached(&p, &cal, &cache);
-            direct.peak_bytes == replay1.peak_bytes
-                && replay1.peak_bytes == replay2.peak_bytes
-                && direct.oom == replay2.oom
-        });
+                if p.parallel.validate_model(&p.model).is_err() {
+                    return true; // e.g. FPDT × non-offload AC: not a valid cell
+                }
+                let trace = build_trace_with(&p, &cal);
+                if validate_trace(&trace).is_err() {
+                    return false;
+                }
+                // Allocs and comm volumes must be non-negative; offloads may be
+                // negative (fetches release host RAM) but must net out >= 0 —
+                // a trace can never fetch more than it stored.
+                let mut host_net = 0.0f64;
+                for op in &trace {
+                    match op {
+                        Op::Alloc { bytes, .. } | Op::AllToAll { bytes, .. } => {
+                            if *bytes < 0.0 {
+                                return false;
+                            }
+                        }
+                        Op::Offload { bytes, .. } => host_net += bytes,
+                        _ => {}
+                    }
+                }
+                if host_net < -1e-6 {
+                    return false;
+                }
+                let direct = simulate_with(&p, &cal);
+                let replay1 = simulate_cached(&p, &cal, &cache);
+                let replay2 = simulate_cached(&p, &cal, &cache);
+                // Streaming feasibility must agree bitwise with pricing.
+                let feas = feasibility_with(&p, &cal);
+                feas.peak_bytes.to_bits() == direct.peak_bytes.to_bits()
+                    && feas.oom == direct.oom
+                    && feas.failed == direct.failed
+                    && direct.peak_bytes == replay1.peak_bytes
+                    && replay1.peak_bytes == replay2.peak_bytes
+                    && direct.oom == replay2.oom
+            },
+        );
     }
 }

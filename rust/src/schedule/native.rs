@@ -4,13 +4,20 @@
 //! fp32 RoPE / norm casts (§2.3 calls out both overheads).
 
 use super::common::ScheduleCtx;
-use crate::engine::{Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, OpSink, TraceBuilder};
 use crate::model::flops;
 
+/// Collect one training step as a `Vec<Op>` (the priced path).
 pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    emit(ctx, &mut b);
+    b.finish()
+}
+
+/// Emit one training step into any sink.
+pub fn emit<S: OpSink>(ctx: &ScheduleCtx, b: &mut TraceBuilder<S>) {
     let q = &ctx.q;
     let cal = &ctx.cal;
-    let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let slow_path = q.m.q_width() != q.m.d_model;
     let attn_factor = if slow_path {
@@ -21,7 +28,7 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
     let attn_fwd = q.attn_flops_layer_fwd() / attn_factor;
     let l = q.m.n_layers;
     let steps = q.c - 1;
-    let misc = q.emit_misc(&mut b);
+    let misc = q.emit_misc(b);
 
     // Untiled per-layer transients resident while a layer executes:
     // 4 SwiGLU intermediates (8·(S/C)·d_ff bytes), chunked-CE workspace
@@ -49,6 +56,9 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
         let mut ac = ctx.ac_emitter();
 
         for _ in 0..l {
+            if b.done() {
+                return;
+            }
             b.snapshot("before_attn");
             let qkv = b.alloc("native_qkv_local", q.qkv_bytes() * f);
             let inflight = b.alloc("native_kv_inflight", 2.0 * 2.0 * q.kv_bytes * f);
@@ -57,13 +67,16 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
             b.snapshot("attn_kernel");
             b.free(inflight);
             b.free(qkv);
-            ctx.emit_tp_allreduce(&mut b);
-            ac.store(&mut b);
+            ctx.emit_tp_allreduce(b);
+            ac.store(b);
         }
 
         let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
         for _ in 0..l {
-            ac.fetch(&mut b);
+            if b.done() {
+                return;
+            }
+            ac.fetch(b);
             if ac.recompute() {
                 b.compute(Category::Fa3Fwd, attn_fwd);
             }
@@ -79,9 +92,9 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
             b.free(dkv);
             b.free(grads);
             b.free(qkv);
-            ctx.emit_tp_allreduce(&mut b);
+            ctx.emit_tp_allreduce(b);
         }
-        ac.finish(&mut b);
+        ac.finish(b);
     }
 
     if slow_path {
@@ -91,7 +104,7 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
             cal.native_slowpath_per_token * q.s as f64 * ctx.mb as f64,
         );
     }
-    ctx.emit_other(&mut b, cal.native_other_factor);
+    ctx.emit_other(b, cal.native_other_factor);
     if let Some(st) = staging {
         b.free(st);
     }
@@ -100,7 +113,6 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
     }
     b.free(untiled);
     b.free_all(misc);
-    b.finish()
 }
 
 #[cfg(test)]

@@ -3,24 +3,34 @@
 //! attention; no all-to-all, but O(C) communication calls (§2.1).
 
 use super::common::ScheduleCtx;
-use crate::engine::{Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, OpSink, TraceBuilder};
 use crate::model::flops;
 
 pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
     trace_with(ctx, ctx.q.c, ctx.q.nodes > 1)
 }
 
+pub fn emit<S: OpSink>(ctx: &ScheduleCtx, b: &mut TraceBuilder<S>) {
+    emit_with(ctx, b, ctx.q.c, ctx.q.nodes > 1)
+}
+
 /// `ring_c` ranks participate in the ring; `inter` if it crosses nodes.
 /// (USP-Hybrid reuses this for its ring dimension.)
 pub fn trace_with(ctx: &ScheduleCtx, ring_c: u64, inter: bool) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    emit_with(ctx, &mut b, ring_c, inter);
+    b.finish()
+}
+
+/// Streaming form of [`trace_with`].
+pub fn emit_with<S: OpSink>(ctx: &ScheduleCtx, b: &mut TraceBuilder<S>, ring_c: u64, inter: bool) {
     let q = &ctx.q;
     let cal = &ctx.cal;
-    let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let attn_fwd = q.attn_flops_layer_fwd();
     let l = q.m.n_layers;
     let steps = ring_c - 1;
-    let misc = q.emit_misc(&mut b);
+    let misc = q.emit_misc(b);
     // Inter-node rings keep per-peer IB-transport staging buffers pinned
     // for the whole step (fit to the Qwen Ring column, see calibration).
     let staging = inter.then(|| {
@@ -32,6 +42,9 @@ pub fn trace_with(ctx: &ScheduleCtx, ring_c: u64, inter: bool) -> Vec<Op> {
         let mut ac = ctx.ac_emitter();
 
         for _ in 0..l {
+            if b.done() {
+                return;
+            }
             b.snapshot("before_attn");
             // local QKV + two in-flight KV blocks (send/recv double buffer)
             let qkv = b.alloc("ring_qkv_local", q.qkv_bytes() * f);
@@ -45,13 +58,16 @@ pub fn trace_with(ctx: &ScheduleCtx, ring_c: u64, inter: bool) -> Vec<Op> {
             b.free(lse);
             b.free(inflight);
             b.free(qkv);
-            ctx.emit_tp_allreduce(&mut b);
-            ac.store(&mut b);
+            ctx.emit_tp_allreduce(b);
+            ac.store(b);
         }
 
         let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
         for _ in 0..l {
-            ac.fetch(&mut b);
+            if b.done() {
+                return;
+            }
+            ac.fetch(b);
             if ac.recompute() {
                 b.compute(Category::Fa3Fwd, attn_fwd);
             }
@@ -70,17 +86,16 @@ pub fn trace_with(ctx: &ScheduleCtx, ring_c: u64, inter: bool) -> Vec<Op> {
             b.free(dkv);
             b.free(grads);
             b.free(qkv);
-            ctx.emit_tp_allreduce(&mut b);
+            ctx.emit_tp_allreduce(b);
         }
-        ac.finish(&mut b);
+        ac.finish(b);
     }
 
-    ctx.emit_other(&mut b, 1.0);
+    ctx.emit_other(b, 1.0);
     if let Some(st) = staging {
         b.free(st);
     }
     b.free_all(misc);
-    b.finish()
 }
 
 #[cfg(test)]

@@ -4,28 +4,37 @@
 //! (non-QKVPacked) all-to-all variant — one Q-sized comm buffer at a time.
 
 use super::common::ScheduleCtx;
-use crate::engine::{Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, OpSink, TraceBuilder};
 use crate::model::flops;
 
-/// Emit one training step. Peak behaviour reproduces Table 2/6 rows 1–2:
-/// full-head QKV (γ·q_bytes) plus a comm buffer live through the attention
-/// phase; backward adds the β-set. The AC mode, micro-batch count and
-/// calibration all come from the [`ScheduleCtx`].
+/// Collect one training step as a `Vec<Op>` (the priced path).
 pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    emit(ctx, &mut b);
+    b.finish()
+}
+
+/// Emit one training step into any sink. Peak behaviour reproduces Table
+/// 2/6 rows 1–2: full-head QKV (γ·q_bytes) plus a comm buffer live through
+/// the attention phase; backward adds the β-set. The AC mode, micro-batch
+/// count and calibration all come from the [`ScheduleCtx`].
+pub fn emit<S: OpSink>(ctx: &ScheduleCtx, b: &mut TraceBuilder<S>) {
     let q = &ctx.q;
     let cal = &ctx.cal;
-    let mut b = TraceBuilder::new();
     let l = q.m.n_layers;
     let f = cal.attn_transient_factor;
     let attn_fwd = q.attn_flops_layer_fwd();
     let a2a_frac = (q.c - 1) as f64 / q.c as f64;
-    let misc = q.emit_misc(&mut b);
+    let misc = q.emit_misc(b);
 
     for _ in 0..ctx.mb {
         let mut ac = ctx.ac_emitter();
 
         // ---------------- forward ----------------
         for _ in 0..l {
+            if b.done() {
+                return;
+            }
             b.snapshot("before_attn");
             // project into full-head QKV (+ FA3 workspace factor)
             let qkv = b.alloc("qkv_fullhead", q.qkv_bytes() * f);
@@ -40,13 +49,16 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
             b.snapshot("out_all_to_all");
             b.free(comm);
             b.free(qkv);
-            ctx.emit_tp_allreduce(&mut b);
-            ac.store(&mut b);
+            ctx.emit_tp_allreduce(b);
+            ac.store(b);
         }
 
         // ---------------- backward (reverse layer order) ----------------
         for _ in 0..l {
-            ac.fetch(&mut b);
+            if b.done() {
+                return;
+            }
+            ac.fetch(b);
             if ac.recompute() {
                 // recompute forward (same kernels; shows up in FA3-Fwd timing)
                 b.compute(Category::Fa3Fwd, attn_fwd);
@@ -71,16 +83,15 @@ pub fn trace(ctx: &ScheduleCtx) -> Vec<Op> {
             b.free(dout);
             b.free(qkv);
             b.free(comm);
-            ctx.emit_tp_allreduce(&mut b);
+            ctx.emit_tp_allreduce(b);
         }
-        ac.finish(&mut b);
+        ac.finish(b);
     }
 
     // bulk "other": projections, tiled MLP/CE, norms, optimizer, offload
     // engine overhead.
-    ctx.emit_other(&mut b, 1.0);
+    ctx.emit_other(b, 1.0);
     b.free_all(misc);
-    b.finish()
 }
 
 #[cfg(test)]

@@ -14,15 +14,28 @@
 
 use super::common::ScheduleCtx;
 use super::gqa::{gqa_schedule, naive_schedule, Stage};
-use crate::engine::{Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, OpSink, TraceBuilder};
 use crate::model::flops;
 
-/// Emit one training step. `hybrid_ring` adds the inter-node ring KV
-/// exchange of the UPipe-Hybrid setup (ulysses intra-node × ring across).
+/// Collect one training step as a `Vec<Op>` (the priced path).
 pub fn trace(ctx: &ScheduleCtx, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    emit(ctx, &mut b, u, gqa, hybrid_ring);
+    b.finish()
+}
+
+/// Emit one training step into any sink. `hybrid_ring` adds the inter-node
+/// ring KV exchange of the UPipe-Hybrid setup (ulysses intra-node × ring
+/// across).
+pub fn emit<S: OpSink>(
+    ctx: &ScheduleCtx,
+    b: &mut TraceBuilder<S>,
+    u: u32,
+    gqa: bool,
+    hybrid_ring: bool,
+) {
     let q = &ctx.q;
     let cal = &ctx.cal;
-    let mut b = TraceBuilder::new();
     let m = &q.m;
     let stages = if gqa {
         gqa_schedule(m.n_heads, m.n_kv_heads, u as u64)
@@ -39,7 +52,7 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op>
     // One head's shard rows; under TP each rank owns 1/tp of every stage's
     // heads, so stage chunk/comm bytes shard like q_bytes/kv_bytes do.
     let head_bytes = 2.0 * q.sc as f64 * m.d_head as f64 / q.tp as f64;
-    let misc = q.emit_misc(&mut b);
+    let misc = q.emit_misc(b);
     // IB-transport staging for the hybrid's inter-node ring (NCCL keeps
     // per-peer send/recv buffers pinned for the whole step).
     let ring_staging = hybrid_ring.then(|| {
@@ -61,6 +74,9 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op>
 
         // ---------------- forward ----------------
         for _ in 0..l {
+            if b.done() {
+                return;
+            }
             b.snapshot("before_attn");
             // full-head output buffer, initialized upfront, filled per stage
             let out_buf = b.alloc("upipe_out_fullhead", q.q_bytes);
@@ -95,14 +111,17 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op>
                 b.ring(q.nodes - 1, 2.0 * q.kv_bytes, true);
             }
             b.free(out_buf);
-            ctx.emit_tp_allreduce(&mut b);
-            ac.store(&mut b);
+            ctx.emit_tp_allreduce(b);
+            ac.store(b);
         }
 
         // ---------------- backward ----------------
         let beta_extra = m.beta() - m.gamma(); // dQ,dK,dV,Out,dOut beyond QKV
         for _ in 0..l {
-            ac.fetch(&mut b);
+            if b.done() {
+                return;
+            }
+            ac.fetch(b);
             if ac.recompute() {
                 b.compute(Category::Fa3Fwd, attn_fwd); // AC recompute
             }
@@ -138,20 +157,19 @@ pub fn trace(ctx: &ScheduleCtx, u: u32, gqa: bool, hybrid_ring: bool) -> Vec<Op>
                 b.ring(q.nodes - 1, 2.0 * 2.0 * q.kv_bytes, true);
             }
             b.free(dout_buf);
-            ctx.emit_tp_allreduce(&mut b);
+            ctx.emit_tp_allreduce(b);
         }
-        ac.finish(&mut b);
+        ac.finish(b);
     }
 
     if hybrid_ring {
         b.fixed(Category::Other, cal.hybrid_layer_fixed * l as f64 * ctx.mb as f64);
     }
-    ctx.emit_other(&mut b, 1.0);
+    ctx.emit_other(b, 1.0);
     if let Some(rs) = ring_staging {
         b.free(rs);
     }
     b.free_all(misc);
-    b.finish()
 }
 
 #[cfg(test)]

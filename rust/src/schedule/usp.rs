@@ -5,25 +5,34 @@
 
 use super::common::ScheduleCtx;
 use super::upipe;
-use crate::engine::{Category, Op, TraceBuilder};
+use crate::engine::{Category, Op, OpSink, TraceBuilder};
 use crate::model::flops;
 
 /// USP-Hybrid trace: `cu`-way Ulysses intra-node, `cr`-way ring across.
 pub fn trace(ctx: &ScheduleCtx, cu: u32, cr: u32) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    emit(ctx, &mut b, cu, cr);
+    b.finish()
+}
+
+/// Streaming form of [`trace`].
+pub fn emit<S: OpSink>(ctx: &ScheduleCtx, b: &mut TraceBuilder<S>, cu: u32, cr: u32) {
     let q = &ctx.q;
     let cal = &ctx.cal;
-    let mut b = TraceBuilder::new();
     let f = cal.attn_transient_factor;
     let attn_fwd = q.attn_flops_layer_fwd();
     let l = q.m.n_layers;
     let a2a_frac = (cu as f64 - 1.0) / cu as f64;
     let ring_steps = (cr - 1) as u64;
-    let misc = q.emit_misc(&mut b);
+    let misc = q.emit_misc(b);
 
     for _ in 0..ctx.mb {
         let mut ac = ctx.ac_emitter();
 
         for _ in 0..l {
+            if b.done() {
+                return;
+            }
             b.snapshot("before_attn");
             let qkv = b.alloc("usp_qkv_fullhead", q.qkv_bytes() * f);
             let comm = b.alloc("usp_a2a_buffer", q.q_bytes * f);
@@ -40,13 +49,16 @@ pub fn trace(ctx: &ScheduleCtx, cu: u32, cr: u32) -> Vec<Op> {
             b.free(inflight);
             b.free(comm);
             b.free(qkv);
-            ctx.emit_tp_allreduce(&mut b);
-            ac.store(&mut b);
+            ctx.emit_tp_allreduce(b);
+            ac.store(b);
         }
 
         let beta_extra = (q.m.beta() - q.m.gamma()) * q.q_bytes;
         for _ in 0..l {
-            ac.fetch(&mut b);
+            if b.done() {
+                return;
+            }
+            ac.fetch(b);
             if ac.recompute() {
                 b.compute(Category::Fa3Fwd, attn_fwd);
             }
@@ -67,21 +79,33 @@ pub fn trace(ctx: &ScheduleCtx, cu: u32, cr: u32) -> Vec<Op> {
             b.free(dout);
             b.free(qkv);
             b.free(comm);
-            ctx.emit_tp_allreduce(&mut b);
+            ctx.emit_tp_allreduce(b);
         }
-        ac.finish(&mut b);
+        ac.finish(b);
     }
 
     // inter-node barriers + dual-fabric PG launches, once per layer
     b.fixed(Category::Other, cal.hybrid_layer_fixed * l as f64 * ctx.mb as f64);
-    ctx.emit_other(&mut b, 1.0);
+    ctx.emit_other(b, 1.0);
     b.free_all(misc);
-    b.finish()
 }
 
 /// UPipe-Hybrid: UPipe headwise stages intra-node + ring across nodes.
-pub fn upipe_hybrid_trace(ctx: &ScheduleCtx, u: u32, _cu: u32, _cr: u32) -> Vec<Op> {
-    upipe::trace(ctx, u, true, true)
+pub fn upipe_hybrid_trace(ctx: &ScheduleCtx, u: u32, cu: u32, cr: u32) -> Vec<Op> {
+    let mut b = TraceBuilder::new();
+    upipe_hybrid_emit(ctx, &mut b, u, cu, cr);
+    b.finish()
+}
+
+/// Streaming form of [`upipe_hybrid_trace`].
+pub fn upipe_hybrid_emit<S: OpSink>(
+    ctx: &ScheduleCtx,
+    b: &mut TraceBuilder<S>,
+    u: u32,
+    _cu: u32,
+    _cr: u32,
+) {
+    upipe::emit(ctx, b, u, true, true)
 }
 
 #[cfg(test)]

@@ -8,4 +8,5 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod stripe;
 pub mod table;

@@ -1,0 +1,117 @@
+//! N-way lock-striped concurrent hash map. The planner's worker pool used
+//! to serialize on two global `Mutex<HashMap<String, _>>`s (the trace
+//! cache and the report memo); striping the key space over independent
+//! locks lets workers probing different cells proceed concurrently, and
+//! hashed struct keys replace the old `format!`-built Strings.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+/// Default stripe count: enough that 16 planner workers rarely collide,
+/// small enough that `len()` stays cheap.
+pub const DEFAULT_STRIPES: usize = 16;
+
+/// A concurrent insert-once map: values are cloned out (use `Arc`/`Copy`
+/// values for large payloads). First writer wins on a racing key, so
+/// concurrent builders converge on one canonical entry.
+pub struct StripedMap<K, V> {
+    stripes: Vec<Mutex<HashMap<K, V>>>,
+}
+
+impl<K: Hash + Eq, V: Clone> StripedMap<K, V> {
+    pub fn new(stripes: usize) -> Self {
+        StripedMap {
+            stripes: (0..stripes.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn stripe(&self, key: &K) -> &Mutex<HashMap<K, V>> {
+        // DefaultHasher::new() is keyed deterministically (unlike
+        // RandomState), so stripe assignment is stable across runs.
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.stripes[(h.finish() as usize) % self.stripes.len()]
+    }
+
+    pub fn get(&self, key: &K) -> Option<V> {
+        self.stripe(key).lock().unwrap().get(key).cloned()
+    }
+
+    /// Insert if absent; returns the canonical value (the existing one if
+    /// another worker won the race). Build values *outside* this call —
+    /// the stripe lock is held only for the map operation.
+    pub fn insert(&self, key: K, value: V) -> V {
+        self.stripe(&key).lock().unwrap().entry(key).or_insert(value).clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<K: Hash + Eq, V: Clone> Default for StripedMap<K, V> {
+    fn default() -> Self {
+        Self::new(DEFAULT_STRIPES)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_roundtrip() {
+        let m: StripedMap<u64, u64> = StripedMap::default();
+        assert!(m.is_empty());
+        assert_eq!(m.get(&7), None);
+        assert_eq!(m.insert(7, 70), 70);
+        assert_eq!(m.get(&7), Some(70));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn first_writer_wins() {
+        let m: StripedMap<u64, u64> = StripedMap::new(4);
+        assert_eq!(m.insert(1, 10), 10);
+        assert_eq!(m.insert(1, 99), 10, "racing insert returns the canonical value");
+        assert_eq!(m.get(&1), Some(10));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn keys_spread_over_stripes() {
+        let m: StripedMap<u64, u64> = StripedMap::new(8);
+        for k in 0..256 {
+            m.insert(k, k);
+        }
+        assert_eq!(m.len(), 256);
+        let used = m.stripes.iter().filter(|s| !s.lock().unwrap().is_empty()).count();
+        assert!(used >= 4, "only {used}/8 stripes used");
+    }
+
+    #[test]
+    fn concurrent_inserts_converge() {
+        let m: StripedMap<u64, u64> = StripedMap::new(8);
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let m = &m;
+                scope.spawn(move || {
+                    for k in 0..100 {
+                        m.insert(k, t * 1000 + k);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.len(), 100);
+        for k in 0..100 {
+            let v = m.get(&k).unwrap();
+            assert_eq!(v % 1000, k, "value for {k} must come from one canonical insert");
+        }
+    }
+}
