@@ -2,6 +2,8 @@
 //! - engine op execution rate (events/s) — the simulator inner loop;
 //! - streamed feasibility probes vs fully priced simulations (the
 //!   planner's two evaluation phases);
+//! - symbolic wall solve (polynomial fit + closed-form solve) vs one
+//!   streamed probe — the arithmetic that replaces whole bisections;
 //! - allocator alloc/free with cache reuse (the UPipe stage pattern);
 //! - functional all-to-all reshard bandwidth (the coordinator hot path);
 //! - schedule/trace generation;
@@ -12,10 +14,10 @@ use untied_ulysses::collectives::functional::{
 };
 use untied_ulysses::config::presets::llama_single_node;
 use untied_ulysses::config::CpMethod;
-use untied_ulysses::engine::{Calibration, Engine};
+use untied_ulysses::engine::{Calibration, Engine, PeakModel, PeakSample};
 use untied_ulysses::memory::Allocator;
 use untied_ulysses::schedule::gqa::gqa_schedule;
-use untied_ulysses::schedule::{build_trace, feasibility_with, simulate};
+use untied_ulysses::schedule::{build_trace, feasibility_with, peak_probe_with, simulate};
 use untied_ulysses::util::bench::Bench;
 
 fn main() {
@@ -55,6 +57,36 @@ fn main() {
         feas.per_sec(),
         priced.per_sec(),
         feas.per_sec() / priced.per_sec()
+    );
+
+    // symbolic wall solve: sample the kernel at 3 small lattice lengths,
+    // fit the peak polynomials, solve the wall in closed form — the
+    // arithmetic that replaces a whole O(log S) bisection per cell.
+    let quantum = 128 * 1024u64;
+    let c = preset.parallel.cp_degree;
+    let sample_at = |i: u64| {
+        let p = llama_single_node(upipe, i * quantum);
+        let pr = peak_probe_with(&p, &cal);
+        assert!(pr.clean(), "sample {i} not clean");
+        PeakSample { k: i * quantum / c, peak_bytes: pr.peak_bytes, host_peak: pr.host_peak }
+    };
+    // Mirror the planner's fit ladder: linear from 3 samples, quadratic
+    // from 4 if the linear drift check rejects (so a legitimately
+    // quadratic peak keeps the bench alive, like it keeps the plan alive).
+    let samples: Vec<PeakSample> = (1..=4).map(sample_at).collect();
+    let fit = |s: &[PeakSample]| PeakModel::fit(&s[..3]).or_else(|| PeakModel::fit(s));
+    let budget = q.host_ram_for_offload();
+    let s6 = Bench::new("hotpath/symbolic_fit_and_solve").budget_ms(300).run(|| {
+        let m = fit(&samples).expect("degree-<=2 fit");
+        m.solve_wall(q.hbm_limit, budget, c, quantum, 32 << 20)
+    });
+    let model = fit(&samples).expect("degree-<=2 fit");
+    let solved = model.solve_wall(q.hbm_limit, budget, c, quantum, 32 << 20);
+    println!(
+        "  symbolic fit+solve: {:.0}/s (vs {:.0} streamed probes/s), wall = {:?} tokens",
+        s6.per_sec(),
+        feas.per_sec(),
+        solved
     );
 
     // allocator stage-reuse pattern

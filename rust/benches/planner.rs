@@ -1,8 +1,10 @@
 //! Bench: the configuration planner — full-sweep wall time and throughput
-//! (configs/sec, sims/sec), plus the two evaluation phases in isolation
-//! (streamed feasibility probes/sec vs fully priced sims/sec), emitted to
-//! `BENCH_planner.json` so future PRs have a perf trajectory to compare
-//! against and CI can gate each phase independently.
+//! (configs/sec, sims/sec), the symbolic walls-only sweep (walls/sec: the
+//! `--feasibility-only` path the multi-node frontiers run on), plus the
+//! two evaluation phases in isolation (streamed feasibility probes/sec vs
+//! fully priced sims/sec), emitted to `BENCH_planner.json` so future PRs
+//! have a perf trajectory to compare against and CI can gate each phase
+//! independently.
 
 use untied_ulysses::config::presets::llama_single_node;
 use untied_ulysses::config::{ClusterConfig, CpMethod};
@@ -25,9 +27,14 @@ fn main() {
     let top = out.best().expect("plan produced no configs");
     let top_ctx = top.max_context.map(tokens).unwrap_or_else(|| "-".into());
     println!(
-        "plan: {} configs, {} sims, trace cache {}/{} hits, top = {} {} @ {}",
+        "plan: {} configs, {} sims ({} probes + {} priced), {} models/{} fallbacks, \
+         trace cache {}/{} hits, top = {} {} @ {}",
         out.configs.len(),
         out.simulations,
+        out.feasibility_probes,
+        out.priced_sims,
+        out.symbolic_models,
+        out.symbolic_fallbacks,
         out.cache_hits,
         out.cache_hits + out.cache_misses,
         top.parallel.method.label(),
@@ -36,6 +43,24 @@ fn main() {
     );
 
     let sweep = Bench::new("planner/plan_llama3-8b_8xH100").budget_ms(2500).run(|| plan(&req));
+
+    // Walls-only sweep (the symbolic solver end to end, no pricing): the
+    // path multi-node feasibility frontiers run on. Gated independently
+    // as walls_per_sec.
+    let mut walls_req = req.clone();
+    walls_req.feasibility_only = true;
+    let walls_out = plan(&walls_req);
+    assert_eq!(walls_out.priced_sims, 0, "walls-only sweep must not price");
+    let walls = Bench::new("planner/walls_only_llama3-8b_8xH100")
+        .budget_ms(1500)
+        .run(|| plan(&walls_req));
+    println!(
+        "  walls-only: {} configs in {:.3}s ({:.0} walls/s, {} probes)",
+        walls_out.configs.len(),
+        walls.mean.as_secs_f64(),
+        walls_out.configs.len() as f64 / walls.mean.as_secs_f64(),
+        walls_out.feasibility_probes
+    );
     let bench_enum = Bench::new("planner/enumerate_space").budget_ms(200);
     let enum_dims = SweepDims { compositions: true, ..SweepDims::default() };
     let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, &enum_dims));
@@ -65,12 +90,16 @@ fn main() {
         ("gpus", Json::int(req.cluster.total_gpus())),
         ("configs", Json::int(out.configs.len() as u64)),
         ("simulations_per_plan", Json::int(out.simulations)),
+        ("feasibility_probes_per_plan", Json::int(out.feasibility_probes)),
+        ("symbolic_models", Json::int(out.symbolic_models)),
+        ("symbolic_fallbacks", Json::int(out.symbolic_fallbacks)),
         ("plan_wall_s_mean", Json::Num(sweep.mean.as_secs_f64())),
         ("plan_wall_s_p50", Json::Num(sweep.p50.as_secs_f64())),
         ("plan_wall_s_p95", Json::Num(sweep.p95.as_secs_f64())),
         ("plan_iters", Json::int(sweep.iters as u64)),
         ("configs_per_sec", Json::Num(out.configs.len() as f64 / sweep.mean.as_secs_f64())),
         ("sims_per_sec", Json::Num(out.simulations as f64 / sweep.mean.as_secs_f64())),
+        ("walls_per_sec", Json::Num(walls_out.configs.len() as f64 / walls.mean.as_secs_f64())),
         ("feasibility_probes_per_sec", Json::Num(feas.per_sec())),
         ("priced_sims_per_sec", Json::Num(priced.per_sec())),
         ("enumerate_per_sec", Json::Num(enumerate.per_sec())),

@@ -1,0 +1,55 @@
+#!/usr/bin/env python3
+"""Sanity-check multi-node feasibility frontiers: the best achievable
+context wall must be monotone non-decreasing in cluster size (more
+aggregate HBM and smaller per-rank sequence shards can only move memory
+walls outward).
+
+Usage: check_frontier_monotonic.py <plan1.json> <plan2.json> [...]
+
+Arguments are planner JSON artifacts (`repro plan --json` or
+`repro plan --feasibility-only --json`) ordered by increasing GPU count.
+Fails if the GPU counts are not strictly increasing, if any sweep is
+empty, or if a larger cluster's best wall drops below a smaller one's.
+Capped walls (max_context_capped) count at their reported lower bound,
+which keeps the check conservative.
+"""
+
+import json
+import sys
+
+
+def best_wall(path: str) -> tuple[int, int]:
+    with open(path) as f:
+        doc = json.load(f)
+    configs = doc.get("configs") or []
+    if not configs:
+        raise SystemExit(f"FAIL: {path} has no configurations")
+    walls = [c.get("max_context") or 0 for c in configs]
+    return int(doc.get("gpus") or 0), int(max(walls))
+
+
+def main() -> int:
+    if len(sys.argv) < 3:
+        print(__doc__)
+        return 2
+    points = [best_wall(p) for p in sys.argv[1:]]
+    for (path, (gpus, wall)) in zip(sys.argv[1:], points):
+        print(f"{path}: {gpus} GPUs -> best wall {wall} tokens ({wall >> 20}M)")
+    ok = True
+    for (g0, w0), (g1, w1) in zip(points, points[1:]):
+        if g1 <= g0:
+            print(f"FAIL: artifacts out of order ({g0} -> {g1} GPUs)")
+            ok = False
+        if w1 < w0:
+            print(
+                f"FAIL: best wall shrank with cluster size: "
+                f"{g0} GPUs -> {w0} tokens but {g1} GPUs -> {w1} tokens"
+            )
+            ok = False
+    if ok:
+        print("multi-node frontier monotonic in node count OK")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,8 @@ order-of-magnitude engine regressions, not percent-level noise).
 
 Gated metrics — each phase of the two-phase evaluator fails independently:
 - configs_per_sec            (whole-sweep throughput)
+- walls_per_sec              (symbolic walls-only sweep: the
+                              --feasibility-only multi-node frontier path)
 - feasibility_probes_per_sec (phase 1: streamed peak-only probes)
 - priced_sims_per_sec        (phase 2: trace build + full pricing)
 
@@ -21,8 +23,20 @@ bench emitter must not silently drop a gate.
 import json
 import sys
 
-GATED = ("configs_per_sec", "feasibility_probes_per_sec", "priced_sims_per_sec")
-REPORTED = GATED + ("sims_per_sec", "plan_wall_s_mean", "configs")
+GATED = (
+    "configs_per_sec",
+    "walls_per_sec",
+    "feasibility_probes_per_sec",
+    "priced_sims_per_sec",
+)
+REPORTED = GATED + (
+    "sims_per_sec",
+    "plan_wall_s_mean",
+    "configs",
+    "feasibility_probes_per_plan",
+    "symbolic_models",
+    "symbolic_fallbacks",
+)
 
 
 def main() -> int:

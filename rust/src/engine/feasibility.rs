@@ -38,6 +38,51 @@ impl Feasibility {
     }
 }
 
+/// Outcome of one *pin-agnostic* probe: the kernel run with an unbounded
+/// host-RAM budget, reporting the peak host occupancy instead of failing
+/// at a specific budget. One such run answers feasibility for **every**
+/// host budget at once — `feasible_with_host(b)` is provably equal to the
+/// budgeted run's [`Feasibility::feasible`] for budget `b`:
+///
+/// - if the budgeted run host-fails first, its breach point is a prefix
+///   maximum, so `host_peak` here exceeds `b` too (both infeasible);
+/// - if it OOMs or hits a malformed free first, both runs stop at the
+///   same op with the same flag;
+/// - if it runs clean, the op streams are identical and `host_peak <= b`.
+///
+/// The planner's symbolic mode exploits this to share one streamed probe
+/// between the pinned and unpinned variants of a cell (their traces are
+/// identical; only the host budget differs). These are also the samples
+/// the polynomial peak models are fitted from: a clean probe's
+/// `peak_bytes`/`host_peak` are the exact values of the peak functions,
+/// untruncated by any early stop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeakProbe {
+    /// Peak allocated bytes (bitwise equal to `StepReport::peak_bytes`
+    /// when no host budget would have stopped the run earlier).
+    pub peak_bytes: f64,
+    pub oom: bool,
+    /// Malformed trace / method failure rule (host exhaustion cannot occur
+    /// under the unbounded budget).
+    pub failed: Option<&'static str>,
+    /// Max prefix host-RAM occupancy over the run (stores minus fetches).
+    pub host_peak: f64,
+}
+
+impl PeakProbe {
+    /// Feasibility under a specific host-RAM budget; equals the budgeted
+    /// kernel's `feasible()` (see the type docs for the case analysis).
+    pub fn feasible_with_host(&self, host_budget: f64) -> bool {
+        !self.oom && self.failed.is_none() && self.host_peak <= host_budget
+    }
+
+    /// Did the run complete without any early stop? Only such probes are
+    /// valid polynomial samples (a truncated run under-reports the peaks).
+    pub fn clean(&self) -> bool {
+        !self.oom && self.failed.is_none()
+    }
+}
+
 /// Sentinel for a `BufId` slot with no live allocation.
 const DEAD: AllocId = AllocId::MAX;
 
@@ -51,6 +96,9 @@ pub struct FeasibilityKernel {
     ids: Vec<AllocId>,
     host_ram: f64,
     host_used: f64,
+    /// Max prefix value of `host_used` — the host-side peak a pin-agnostic
+    /// probe reports (see [`PeakProbe`]).
+    host_peak: f64,
     oom: bool,
     failed: Option<&'static str>,
     /// Set when the persistent set itself did not fit (the engine's
@@ -72,6 +120,7 @@ impl FeasibilityKernel {
             ids: Vec::new(),
             host_ram,
             host_used: 0.0,
+            host_peak: 0.0,
             oom: false,
             failed: None,
             persistent_failed,
@@ -82,6 +131,11 @@ impl FeasibilityKernel {
     /// Net host-RAM occupancy so far (stores minus fetches, floored at 0).
     pub fn host_used(&self) -> f64 {
         self.host_used
+    }
+
+    /// Max prefix host-RAM occupancy over the run so far.
+    pub fn host_peak(&self) -> f64 {
+        self.host_peak
     }
 
     /// Apply one op's memory effects; returns `false` once the run has
@@ -123,6 +177,7 @@ impl FeasibilityKernel {
                 // Stores occupy host RAM, fetches release it, floored at
                 // zero (an over-drawn fetch must not bank credit).
                 self.host_used = (self.host_used + bytes).max(0.0);
+                self.host_peak = self.host_peak.max(self.host_used);
                 if self.host_used > self.host_ram {
                     self.failed = Some(HOST_RAM_EXHAUSTED);
                     self.done = true;
@@ -167,15 +222,30 @@ impl FeasibilityKernel {
     }
 
     pub fn finish(self) -> Feasibility {
+        let p = self.probe();
+        Feasibility { peak_bytes: p.peak_bytes, oom: p.oom, failed: p.failed }
+    }
+
+    /// Finish as a pin-agnostic [`PeakProbe`]. Meaningful when the kernel
+    /// was built with an unbounded host budget (`schedule::peak_probe_with`);
+    /// under a finite budget it degenerates to `finish()` plus the host
+    /// peak observed before any stop.
+    pub fn probe(self) -> PeakProbe {
         if self.persistent_failed {
             // `Engine::run` returns `StepReport::failed_oom()` here: the
             // persistent set alone exceeds the device — infinite peak.
-            return Feasibility { peak_bytes: f64::INFINITY, oom: true, failed: None };
+            return PeakProbe {
+                peak_bytes: f64::INFINITY,
+                oom: true,
+                failed: None,
+                host_peak: self.host_peak,
+            };
         }
-        Feasibility {
+        PeakProbe {
             peak_bytes: self.alloc.peak_allocated(),
             oom: self.oom || self.alloc.is_oom(),
             failed: self.failed,
+            host_peak: self.host_peak,
         }
     }
 }
@@ -295,6 +365,104 @@ mod tests {
         let (feas, full) = both(1e18, 1.0, 10.0, &ops);
         assert_eq!(feas, full);
         assert!(feas.feasible());
+    }
+
+    /// Run a trace through an unbounded-host kernel, returning the probe.
+    fn probe_trace(hbm: f64, persistent: f64, ops: &[Op]) -> PeakProbe {
+        let mut k = FeasibilityKernel::new(hbm, persistent, f64::INFINITY);
+        for op in ops {
+            k.emit(*op);
+        }
+        k.probe()
+    }
+
+    #[test]
+    fn host_peak_tracks_prefix_maximum() {
+        let mut b = TraceBuilder::new();
+        b.offload(8.0, true);
+        b.offload(5.0, true); // peak 13
+        b.offload(-10.0, true); // down to 3
+        b.offload(4.0, true); // 7 < 13
+        let ops = b.finish();
+        let p = probe_trace(1e18, 1.0, &ops);
+        assert!(p.clean());
+        assert_eq!(p.host_peak, 13.0);
+    }
+
+    #[test]
+    fn probe_predicate_matches_budgeted_run_for_any_budget() {
+        // The pin-sharing contract: one unbounded-host probe must answer
+        // feasibility for every budget exactly as a budgeted run would —
+        // including when the budgeted run would host-fail *before* a later
+        // OOM, and vice versa.
+        let traces: Vec<Vec<Op>> = vec![
+            {
+                // clean: host peak 13, device peak small
+                let mut b = TraceBuilder::new();
+                b.offload(8.0, true);
+                b.offload(5.0, true);
+                b.offload(-13.0, true);
+                b.finish()
+            },
+            {
+                // host climbs to 20, then an alloc OOMs (order matters)
+                let mut b = TraceBuilder::new();
+                b.offload(20.0, true);
+                b.alloc("too-big", 2e12);
+                b.finish()
+            },
+            {
+                // OOM first, host would climb later
+                let mut b = TraceBuilder::new();
+                b.alloc("too-big", 2e12);
+                b.offload(50.0, true);
+                b.finish()
+            },
+            {
+                // malformed free after some host traffic
+                let mut b = TraceBuilder::new();
+                b.offload(6.0, true);
+                let mut ops = b.finish();
+                ops.push(Op::Free { id: 99 });
+                ops
+            },
+        ];
+        let hbm = 1e9;
+        for (ti, ops) in traces.iter().enumerate() {
+            let probe = probe_trace(hbm, 1.0, ops);
+            for budget in [0.0, 5.0, 12.9, 13.0, 13.1, 19.0, 25.0, 100.0, f64::INFINITY] {
+                let budgeted = check_trace(hbm, 1.0, budget, ops);
+                assert_eq!(
+                    probe.feasible_with_host(budget),
+                    budgeted.feasible(),
+                    "trace {ti} budget {budget}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn probe_peaks_are_exact_on_clean_runs() {
+        // A clean unbounded probe's peak_bytes equals the budgeted run's
+        // bitwise (same op stream, same allocator arithmetic).
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 3.0 * 1024.0 * 1024.0);
+        b.offload(7.0, true);
+        b.offload(-7.0, true);
+        b.free(x);
+        let ops = b.finish();
+        let probe = probe_trace(1e12, 5.0, &ops);
+        let budgeted = check_trace(1e12, 5.0, 100.0, &ops);
+        assert!(probe.clean());
+        assert_eq!(probe.peak_bytes.to_bits(), budgeted.peak_bytes.to_bits());
+        assert_eq!(probe.host_peak, 7.0);
+    }
+
+    #[test]
+    fn persistent_overflow_probe_reports_infinite_peak() {
+        let p = probe_trace(1e9, 2e9, &[]);
+        assert!(p.oom && p.peak_bytes.is_infinite());
+        assert!(!p.feasible_with_host(f64::INFINITY));
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //! Evaluation is split into two phases: the streaming peak-only
 //! [`feasibility`] kernel (what planner bisection probes consume) and the
 //! fully priced [`executor`] (timeline + Table-5 components, reserved for
-//! the cells that end up in tables/figures).
+//! the cells that end up in tables/figures). On top of the kernel sits
+//! [`symbolic`]: sampled-polynomial peak models that *solve* each sweep
+//! cell's context wall in closed form, collapsing the planner's per-cell
+//! probe count from O(log S) to O(samples + 2).
 
 pub mod calibration;
 pub mod executor;
@@ -18,10 +21,12 @@ pub mod feasibility;
 pub mod ops;
 pub mod refit;
 pub mod report;
+pub mod symbolic;
 
 pub use calibration::Calibration;
 pub use executor::Engine;
-pub use feasibility::{Feasibility, FeasibilityKernel};
+pub use feasibility::{Feasibility, FeasibilityKernel, PeakProbe};
 pub use ops::{Category, Op, OpSink, TraceBuilder};
 pub use refit::{refit, MeasuredCell, Measurements, RefitField, RefitInfo};
 pub use report::{Components, StepReport};
+pub use symbolic::{PeakModel, PeakSample};

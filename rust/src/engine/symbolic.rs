@@ -1,0 +1,374 @@
+//! Symbolic peak models: closed-form context walls from sampled
+//! polynomials.
+//!
+//! Every schedule in the repo allocates buffers whose byte sizes are
+//! affine in the per-rank token count `k = floor(S / C)` — `x_bytes`,
+//! `q_bytes`, `kv_bytes` and every chunk/staging buffer derived from them
+//! scale linearly with `S/C`, while the persistent set (FSDP shards,
+//! framework base, FPDT's offload engine) is constant. The allocator's
+//! `peak_allocated` is the max over trace prefixes of sums of such terms,
+//! and the host-RAM occupancy peak is likewise a prefix-max of affine
+//! terms — so within one divisibility residue class (fixed `S mod C`,
+//! i.e. fixed rounding of `floor(S/C)`), both peak functions are
+//! polynomials of degree ≤ 2 in `k`. Instead of bisecting O(log S)
+//! streamed [`FeasibilityKernel`] probes per sweep cell, the planner
+//! samples the kernel at a handful of small lattice lengths, fits the
+//! polynomial per class, and *solves* the HBM/host walls in closed form.
+//!
+//! **Exactness contract.** The model is a predictor, not an oracle:
+//!
+//! - A fit is accepted only if a held-out sample matches the fitted
+//!   polynomial bitwise or within [`DRIFT_REL_TOL`] (f64 peaks are sums
+//!   of individually-rounded products, so they are polynomial only up to
+//!   ULP noise; anything worse means the cell's peak is not the assumed
+//!   shape — e.g. a phase crossover — and the planner falls back to
+//!   bisection for that cell).
+//! - The solved wall is then *verified* with exactly two streamed probes
+//!   (wall feasible, wall + quantum infeasible) via the planner's
+//!   galloping search, so the reported `max_context` is identical to the
+//!   bisection path's **regardless** of model quality — a mispredicted
+//!   wall only costs extra probes, never a different answer. (The real
+//!   OOM threshold also differs from `peak_bytes <= limit` by the
+//!   allocator's bucketed-reservation slack of a few tens of MiB; on a
+//!   128K-token lattice that shifts the predicted wall at most one step,
+//!   which the verification probes absorb.)
+//!
+//! [`FeasibilityKernel`]: crate::engine::FeasibilityKernel
+
+/// Relative drift tolerance for accepting a fitted polynomial: held-out
+/// samples must match bitwise or to within this relative error. Streamed
+/// peaks carry ULP-level rounding noise (~1e-16 relative), so 1e-9 is six
+/// orders of magnitude of safety margin while still rejecting any
+/// genuinely non-polynomial cell.
+pub const DRIFT_REL_TOL: f64 = 1e-9;
+
+/// Does a model prediction match a streamed value within the drift
+/// contract (bitwise, or relative error ≤ [`DRIFT_REL_TOL`])?
+pub fn drift_ok(predicted: f64, actual: f64) -> bool {
+    predicted.to_bits() == actual.to_bits()
+        || (predicted - actual).abs() <= DRIFT_REL_TOL * actual.abs().max(1.0)
+}
+
+/// One streamed-kernel sample: the exact peak values at per-rank token
+/// count `k = floor(S / C)`. Only *clean* probes (no OOM, no failure —
+/// see `PeakProbe::clean`) are valid samples; a truncated run
+/// under-reports the peaks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeakSample {
+    pub k: u64,
+    pub peak_bytes: f64,
+    pub host_peak: f64,
+}
+
+/// Degree ≤ 2 polynomial over the integer `k` lattice, stored in Newton
+/// forward-difference form on the (equal-spaced) sample points:
+/// `p(k) = f0 + t·d1 + t·(t−1)/2·d2` with `t = (k − k0)/step`. With
+/// power-of-two sample spacing the divided differences are exact f64
+/// operations, so a truly-polynomial sample set reproduces bitwise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Poly {
+    k0: f64,
+    step: f64,
+    f0: f64,
+    d1: f64,
+    d2: f64,
+}
+
+impl Poly {
+    /// Fit from 2 (linear) or 3 (quadratic) equally-spaced points.
+    /// Rejects shapes the wall solver cannot trust: negative first
+    /// difference or negative curvature (peaks are monotone
+    /// non-decreasing in `k`, and a concave extrapolation would
+    /// overshoot the wall without bound).
+    fn fit(ks: &[u64], vs: &[f64]) -> Option<Poly> {
+        let (f0, d1, d2) = match (ks.len(), vs.len()) {
+            (2, 2) => (vs[0], vs[1] - vs[0], 0.0),
+            (3, 3) => (vs[0], vs[1] - vs[0], vs[2] - 2.0 * vs[1] + vs[0]),
+            _ => return None,
+        };
+        if !f0.is_finite() || !d1.is_finite() || !d2.is_finite() {
+            return None;
+        }
+        if d1 < 0.0 || d2 < 0.0 {
+            return None;
+        }
+        let step = ks[1].checked_sub(ks[0])?;
+        if step == 0 || (ks.len() == 3 && ks[2].checked_sub(ks[1]) != Some(step)) {
+            return None;
+        }
+        Some(Poly { k0: ks[0] as f64, step: step as f64, f0, d1, d2 })
+    }
+
+    fn eval(&self, k: f64) -> f64 {
+        let t = (k - self.k0) / self.step;
+        self.f0 + t * self.d1 + 0.5 * t * (t - 1.0) * self.d2
+    }
+
+    /// Largest integer `k ∈ [0, k_cap]` with `p(k) ≤ lim`, solved in
+    /// closed form (root of the increasing branch) with a short exact
+    /// fix-up walk for float sloppiness. `None` when no such `k` exists —
+    /// or when the walk does not converge, which signals a model
+    /// inconsistent with itself and sends the caller back to bisection.
+    fn max_k_le(&self, lim: f64, k_cap: u64) -> Option<u64> {
+        let f = |k: u64| self.eval(k as f64);
+        if f(k_cap) <= lim {
+            return Some(k_cap);
+        }
+        if f(0) > lim {
+            return None;
+        }
+        // Closed-form crossing of p(t) = lim in the t coordinate.
+        let (a, b, c) = (0.5 * self.d2, self.d1 - 0.5 * self.d2, self.f0 - lim);
+        let t = if self.d2 == 0.0 {
+            if self.d1 == 0.0 {
+                // Constant poly with f(0) ≤ lim < f(k_cap) is impossible;
+                // bail to the fallback rather than divide by zero.
+                return None;
+            }
+            -c / b
+        } else {
+            (-b + (b * b - 4.0 * a * c).max(0.0).sqrt()) / (2.0 * a)
+        };
+        let guess = self.k0 + t * self.step;
+        let mut k = guess.clamp(0.0, k_cap as f64) as u64;
+        for _ in 0..64 {
+            if k < k_cap && f(k + 1) <= lim {
+                k += 1;
+            } else if f(k) > lim {
+                if k == 0 {
+                    return None;
+                }
+                k -= 1;
+            } else {
+                return Some(k);
+            }
+        }
+        None
+    }
+}
+
+/// Fitted peak model for one sweep-cell family: the device-peak and
+/// host-peak polynomials in the per-rank token count. One model serves
+/// every pin and micro-batch variant of a (method, AC, TP) family — pin
+/// changes only the host *budget* the wall is solved against, and
+/// micro-batch iterations repeat an identical alloc/free cycle, leaving
+/// both peaks unchanged (the verification probes would catch either
+/// assumption failing).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PeakModel {
+    peak: Poly,
+    host: Poly,
+}
+
+impl PeakModel {
+    /// Fit from 3 samples (linear, the common case: all byte sizes are
+    /// affine in `k`) or 4 samples (quadratic). The **last** sample is
+    /// always held out for the drift check; the fit is rejected unless
+    /// both polynomials reproduce it bitwise or within
+    /// [`DRIFT_REL_TOL`]. Samples must be equally spaced in `k` and
+    /// strictly increasing.
+    pub fn fit(samples: &[PeakSample]) -> Option<PeakModel> {
+        let n = samples.len();
+        if !(3..=4).contains(&n) {
+            return None;
+        }
+        let fit_pts = n - 1;
+        let ks: Vec<u64> = samples.iter().map(|s| s.k).collect();
+        let peaks: Vec<f64> = samples.iter().map(|s| s.peak_bytes).collect();
+        let hosts: Vec<f64> = samples.iter().map(|s| s.host_peak).collect();
+        // Equal spacing across *all* samples, held-out one included.
+        let step = ks[1].checked_sub(ks[0])?;
+        if step == 0 || ks.windows(2).any(|w| w[1].checked_sub(w[0]) != Some(step)) {
+            return None;
+        }
+        let peak = Poly::fit(&ks[..fit_pts], &peaks[..fit_pts])?;
+        let host = Poly::fit(&ks[..fit_pts], &hosts[..fit_pts])?;
+        let held = &samples[n - 1];
+        if !drift_ok(peak.eval(held.k as f64), held.peak_bytes)
+            || !drift_ok(host.eval(held.k as f64), held.host_peak)
+        {
+            return None;
+        }
+        Some(PeakModel { peak, host })
+    }
+
+    /// Predicted device peak at per-rank token count `k`.
+    pub fn predict_peak(&self, k: u64) -> f64 {
+        self.peak.eval(k as f64)
+    }
+
+    /// Predicted host-RAM occupancy peak at per-rank token count `k`.
+    pub fn predict_host(&self, k: u64) -> f64 {
+        self.host.eval(k as f64)
+    }
+
+    /// Solve the context wall in closed form: the largest `s` on the
+    /// `quantum` lattice, `quantum ≤ s ≤ cap`, whose predicted device
+    /// peak fits `hbm_limit` and predicted host peak fits `host_budget`.
+    /// Both peaks are functions of `k = floor(s / c)`, so the lattice
+    /// conversion is `s ≤ (kmax + 1)·c − 1`. Returns `None` when even one
+    /// quantum of context is predicted infeasible (or when the solve
+    /// cannot trust itself — the caller then verifies/falls back with
+    /// streamed probes either way).
+    pub fn solve_wall(
+        &self,
+        hbm_limit: f64,
+        host_budget: f64,
+        c: u64,
+        quantum: u64,
+        cap: u64,
+    ) -> Option<u64> {
+        if c == 0 || quantum == 0 || cap < quantum {
+            return None;
+        }
+        let k_cap = cap / c;
+        let k_peak = self.peak.max_k_le(hbm_limit, k_cap)?;
+        let k_host = self.host.max_k_le(host_budget, k_cap)?;
+        let kmax = k_peak.min(k_host);
+        let s_max = kmax.saturating_add(1).saturating_mul(c).saturating_sub(1).min(cap);
+        let wall = s_max / quantum * quantum;
+        if wall < quantum {
+            None
+        } else {
+            Some(wall)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lin_samples(ks: &[u64], slope: f64, base: f64, host_slope: f64) -> Vec<PeakSample> {
+        ks.iter()
+            .map(|&k| PeakSample {
+                k,
+                peak_bytes: base + slope * k as f64,
+                host_peak: host_slope * k as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn linear_fit_reproduces_bitwise_and_solves_exact_wall() {
+        // peak(k) = 100 + 5k, host(k) = 0 — exact dyadic arithmetic.
+        let s = lin_samples(&[16, 32, 48], 5.0, 100.0, 0.0);
+        let m = PeakModel::fit(&s).expect("linear fit");
+        for k in [8u64, 64, 100, 1000] {
+            let want = 100.0 + 5.0 * k as f64;
+            assert_eq!(m.predict_peak(k).to_bits(), want.to_bits(), "k={k}");
+            assert_eq!(m.predict_host(k), 0.0);
+        }
+        // Wall at peak ≤ 300 → k ≤ 40 → s ≤ 41·4−1 = 163 → lattice 160.
+        assert_eq!(m.solve_wall(300.0, 1e18, 4, 8, 400), Some(160));
+        // Wall exactly on a lattice-cell boundary: k ≤ 39 → s ≤ 159 → 152.
+        assert_eq!(m.solve_wall(295.0, 1e18, 4, 8, 400), Some(152));
+    }
+
+    #[test]
+    fn solve_wall_caps_and_floors() {
+        let s = lin_samples(&[16, 32, 48], 5.0, 100.0, 0.0);
+        let m = PeakModel::fit(&s).unwrap();
+        // Everything fits: the cap is the answer.
+        assert_eq!(m.solve_wall(1e18, 1e18, 4, 8, 400), Some(400));
+        // Nothing fits (even k = 0 exceeds the limit).
+        assert_eq!(m.solve_wall(50.0, 1e18, 4, 8, 400), None);
+        // k = 0 fits but one quantum does not → None.
+        assert_eq!(m.solve_wall(100.0, 1e18, 4, 8, 400), None);
+        // Degenerate ranges.
+        assert_eq!(m.solve_wall(300.0, 1e18, 0, 8, 400), None);
+        assert_eq!(m.solve_wall(300.0, 1e18, 4, 0, 400), None);
+        assert_eq!(m.solve_wall(300.0, 1e18, 4, 8, 4), None);
+    }
+
+    #[test]
+    fn host_constraint_binds_independently() {
+        // peak generous, host(k) = 2k against budget 100 → k ≤ 50.
+        let s = lin_samples(&[16, 32, 48], 1.0, 0.0, 2.0);
+        let m = PeakModel::fit(&s).unwrap();
+        assert_eq!(m.solve_wall(1e18, 100.0, 4, 8, 400), Some(200));
+        // Tighter of the two wins: peak ≤ 30 → k ≤ 30 < 50.
+        assert_eq!(m.solve_wall(30.0, 100.0, 4, 8, 400), Some(120));
+    }
+
+    #[test]
+    fn quadratic_fit_reproduces_and_solves() {
+        // v(k) = 2k² + 3k + 7 sampled at k = 2,4,6, held out at 8.
+        let v = |k: u64| 2.0 * (k * k) as f64 + 3.0 * k as f64 + 7.0;
+        let samples: Vec<PeakSample> = [2u64, 4, 6, 8]
+            .iter()
+            .map(|&k| PeakSample { k, peak_bytes: v(k), host_peak: 0.0 })
+            .collect();
+        let m = PeakModel::fit(&samples).expect("quadratic fit");
+        for k in [1u64, 10, 31] {
+            assert_eq!(m.predict_peak(k).to_bits(), v(k).to_bits(), "k={k}");
+        }
+        // v(8) = 159: limit 159 admits k = 8, limit 158 only k = 7.
+        assert_eq!(m.solve_wall(159.0, 1e18, 1, 1, 1000), Some(8));
+        assert_eq!(m.solve_wall(158.0, 1e18, 1, 1, 1000), Some(7));
+    }
+
+    #[test]
+    fn drift_check_rejects_non_polynomial_cells() {
+        // A held-out sample off by 1 byte at ~1e2 magnitude is far outside
+        // the ULP-noise tolerance → the fit must refuse (fallback path).
+        let mut s = lin_samples(&[16, 32, 48], 5.0, 100.0, 0.0);
+        s[2].peak_bytes += 1.0;
+        assert!(PeakModel::fit(&s).is_none());
+        // Host drift rejects too.
+        let mut s2 = lin_samples(&[16, 32, 48], 5.0, 100.0, 3.0);
+        s2[2].host_peak += 1.0;
+        assert!(PeakModel::fit(&s2).is_none());
+    }
+
+    #[test]
+    fn drift_tolerates_ulp_noise() {
+        // A relative error of 1e-12 (well under DRIFT_REL_TOL) passes.
+        let mut s = lin_samples(&[16, 32, 48], 5.0, 1e10, 0.0);
+        s[2].peak_bytes *= 1.0 + 1e-12;
+        assert!(PeakModel::fit(&s).is_some());
+        assert!(drift_ok(1e10, 1e10 * (1.0 + 1e-12)));
+        assert!(!drift_ok(1e10, 1e10 * (1.0 + 1e-6)));
+    }
+
+    #[test]
+    fn fit_rejects_bad_shapes() {
+        // Decreasing values (non-monotone peak).
+        let dec: Vec<PeakSample> = [16u64, 32, 48]
+            .iter()
+            .enumerate()
+            .map(|(i, &k)| PeakSample { k, peak_bytes: 100.0 - i as f64, host_peak: 0.0 })
+            .collect();
+        assert!(PeakModel::fit(&dec).is_none());
+        // Unequal spacing.
+        let uneq = lin_samples(&[16, 32, 64], 5.0, 100.0, 0.0);
+        assert!(PeakModel::fit(&uneq).is_none());
+        // Too few / too many samples.
+        assert!(PeakModel::fit(&lin_samples(&[16, 32], 5.0, 100.0, 0.0)).is_none());
+        assert!(PeakModel::fit(&lin_samples(&[1, 2, 3, 4, 5], 5.0, 100.0, 0.0)).is_none());
+        // Concave quadratic (negative curvature): cannot extrapolate.
+        let concave: Vec<PeakSample> = [2u64, 4, 6, 8]
+            .iter()
+            .map(|&k| PeakSample {
+                k,
+                peak_bytes: 100.0 * k as f64 - (k * k) as f64,
+                host_peak: 0.0,
+            })
+            .collect();
+        assert!(PeakModel::fit(&concave).is_none());
+        // Non-finite sample.
+        let mut inf = lin_samples(&[16, 32, 48], 5.0, 100.0, 0.0);
+        inf[1].peak_bytes = f64::INFINITY;
+        assert!(PeakModel::fit(&inf).is_none());
+    }
+
+    #[test]
+    fn constant_polys_solve_to_the_cap_or_nothing() {
+        // Constant peak below the limit: every length fits → cap.
+        let s = lin_samples(&[16, 32, 48], 0.0, 10.0, 0.0);
+        let m = PeakModel::fit(&s).unwrap();
+        assert_eq!(m.solve_wall(10.0, 1e18, 4, 8, 400), Some(400));
+        // Constant peak above the limit: nothing fits.
+        assert_eq!(m.solve_wall(9.0, 1e18, 4, 8, 400), None);
+    }
+}

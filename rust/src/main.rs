@@ -111,14 +111,20 @@ repro — Untied Ulysses (UPipe) reproduction
                  [--ac ao|gpu|noac] [--mb N]
   repro plan --model llama3-8b --gpus 8 [--seq 1M] [--quantum 128K] [--cap 32M]
              [--ac ao,gpu,noac] [--mb 1,2,4] [--tp 1,2] [--paper] [--compose]
-             [--refit measurements.json] [--threads N] [--cold] [--json]
+             [--refit measurements.json] [--threads N] [--feasibility-only]
+             [--cold] [--json]
       sweep every valid parallel config for the model/cluster — method
-      families x AC modes x micro-batches x TP mixes x pinning — bisect
-      each one's max trainable context, rank, and mark the Pareto frontier.
-      --paper restricts to the paper's §5.1 dims (offloaded AC, batch 1,
-      no TP); --refit re-derives the fitted calibration rates from a
-      Table-5-style measurements file and replans with them (provenance is
-      echoed into the table notes / JSON `refit` field)
+      families x AC modes x micro-batches x TP mixes x pinning — solve
+      each one's max trainable context (sampled-polynomial peak models,
+      walls verified with two streamed probes), rank, and mark the Pareto
+      frontier. --paper restricts to the paper's §5.1 dims (offloaded AC,
+      batch 1, no TP); --refit re-derives the fitted calibration rates
+      from a Table-5-style measurements file and replans with them
+      (provenance is echoed into the table notes / JSON `refit` field);
+      --feasibility-only skips all reference-length pricing and reports
+      walls only (multi-node N x 8 frontier sweeps become near-free);
+      --cold disables the symbolic solver and warm starts (probe-per-
+      bisection reference path, identical results)
   repro frontier ...  same flags; print only the Pareto frontier
   repro compose       UPipe x FPDT composition study (paper §5.3.2)
   repro parity
@@ -240,9 +246,15 @@ fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
         req.dims.tp_degrees = v;
     }
     req.dims.compositions = req.dims.compositions || rest.iter().any(|a| a == "--compose");
-    // --cold disables the warm-started bisections (identical results,
-    // more probes) — a debugging/benchmarking switch.
-    req.warm_start = !rest.iter().any(|a| a == "--cold");
+    // --cold disables the symbolic wall solver *and* the warm-started
+    // fallback bisections, restoring the probe-per-bisection reference
+    // path end to end (identical results, O(log S) more probes) — a
+    // debugging/benchmarking switch.
+    let cold = rest.iter().any(|a| a == "--cold");
+    req.warm_start = !cold;
+    req.symbolic = !cold;
+    // --feasibility-only skips phase-2 pricing: walls-only tables/JSON.
+    req.feasibility_only = rest.iter().any(|a| a == "--feasibility-only");
     if let Some(path) = flag(rest, "--refit") {
         let text = std::fs::read_to_string(&path)
             .map_err(|e| anyhow::anyhow!("reading --refit {path}: {e}"))?;

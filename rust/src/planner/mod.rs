@@ -8,16 +8,22 @@
 //!   for a (model, cluster) pair — including per-method AC modes,
 //!   micro-batch counts and TP×CP mixes ([`SweepDims`]) — generalizing
 //!   the hand-picked §5.1 presets;
-//! - [`search`] holds the bisection that finds each configuration's
-//!   maximum trainable context (warm-startable from a neighbour cell's
-//!   wall) and the Pareto-frontier extractor;
-//! - [`eval`] runs the two-phase sweep on a worker pool — streamed
-//!   peak-only feasibility for bisection probes, full pricing for the
-//!   final cells — with hashed-key lock-striped memos, producing a
-//!   ranked [`PlanOutcome`].
+//! - [`search`] holds the galloping bisection that *verifies* each
+//!   configuration's solved context wall (and finds it from scratch for
+//!   fallback cells, warm-startable from a neighbour cell's wall) and
+//!   the Pareto-frontier extractor;
+//! - [`eval`] runs the two-phase sweep on a worker pool — walls solved
+//!   in closed form from sampled-polynomial peak models
+//!   ([`crate::engine::symbolic`]) and confirmed with two streamed
+//!   probes each, full pricing for the final cells only — with
+//!   hashed-key lock-striped memos, producing a ranked [`PlanOutcome`].
+//!   `feasibility_only` skips pricing entirely, making multi-node
+//!   walls-only frontier sweeps (N×8 H100) near-free.
 //!
 //! Driven by `repro plan` / `repro frontier` (`--json` for machine-readable
-//! output) and rendered by [`crate::report::planner`].
+//! output, `--feasibility-only` for walls-only sweeps, `--cold` for the
+//! probe-per-bisection reference path) and rendered by
+//! [`crate::report::planner`].
 
 pub mod eval;
 pub mod search;

@@ -1,6 +1,17 @@
 //! Search primitives: bisection for the maximum trainable context of one
-//! configuration (cold, or warm-started from a neighbour cell's wall),
-//! and Pareto-frontier extraction over the evaluated space.
+//! configuration (cold, warm-started from a neighbour cell's wall, or —
+//! the default path — *verifying* a wall solved in closed form by the
+//! symbolic peak model), and Pareto-frontier extraction over the
+//! evaluated space.
+//!
+//! The symbolic solver's exactness guarantee lives here: a solved wall is
+//! passed to [`bisect_max_from`] as the hint, which confirms it with
+//! exactly two probes (hint feasible, hint + quantum infeasible) and
+//! **gallops to the true wall if the model mispredicted** — so for any
+//! monotone feasibility predicate the result is identical to
+//! [`bisect_max`], whatever the model said. A predicted-infeasible cell
+//! (hint = quantum) and a predicted-at-cap cell (hint = cap) each verify
+//! with a single probe.
 
 /// Largest multiple of `quantum` in `[quantum, cap]` for which `feasible`
 /// holds, assuming monotone feasibility (peak memory grows with S).
@@ -206,6 +217,31 @@ mod tests {
             assert_eq!(got, Some(wall));
             assert!(probes <= 2, "{probes} probes with an exact hint (wall {wall_steps})");
         }
+    }
+
+    #[test]
+    fn solved_wall_verification_probe_counts() {
+        // The symbolic solver's probe budget, pinned: an exact solved
+        // wall costs 2 probes, a wall at the cap costs 1 (cap feasible),
+        // a predicted-infeasible cell costs 1 (quantum infeasible), and
+        // an off-by-one prediction (the allocator's bucketed-reservation
+        // slack) still costs only 2.
+        let q = 1u64 << 17;
+        let cap = 256 * q;
+        let count = |wall: Option<u64>, hint: u64| {
+            let mut probes = 0;
+            let got = bisect_max_from(q, cap, Some(hint), |s| {
+                probes += 1;
+                wall.is_some_and(|w| s <= w)
+            });
+            assert_eq!(got, wall.filter(|&w| w >= q).map(|w| w.min(cap)));
+            probes
+        };
+        assert_eq!(count(Some(40 * q), 40 * q), 2, "exact wall");
+        assert_eq!(count(Some(cap), cap), 1, "wall at cap");
+        assert_eq!(count(None, q), 1, "infeasible at one quantum");
+        assert_eq!(count(Some(40 * q), 41 * q), 2, "hint one step high");
+        assert!(count(Some(40 * q), 39 * q) <= 4, "hint one step low");
     }
 
     #[test]

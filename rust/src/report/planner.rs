@@ -1,7 +1,8 @@
 //! Planner output rendering: the ranked plan table, the Pareto-frontier
-//! table, and machine-readable JSON for CI artifacts / downstream tooling.
-//! Surfaces every sweep dimension (AC mode, micro-batch, TP) and, for
-//! `--refit` runs, the calibration provenance.
+//! table, the walls-only table for `--feasibility-only` sweeps, and
+//! machine-readable JSON for CI artifacts / downstream tooling. Surfaces
+//! every sweep dimension (AC mode, micro-batch, TP) and, for `--refit`
+//! runs, the calibration provenance.
 
 use crate::engine::RefitInfo;
 use crate::planner::{ConfigPlan, PlanOutcome};
@@ -13,6 +14,9 @@ const PLAN_HEADER: [&str; 12] = [
     "#", "Method", "Params", "AC", "b", "TP", "Host", "MaxCtx", "tok/s@max", "GiB@ref",
     "tok/s@ref", "Pareto",
 ];
+
+/// Walls-only view: no pricing columns exist in a feasibility-only sweep.
+const WALLS_HEADER: [&str; 8] = ["#", "Method", "Params", "AC", "b", "TP", "Host", "MaxCtx"];
 
 fn fmt_opt(v: Option<f64>, prec: usize) -> String {
     match v {
@@ -50,14 +54,29 @@ fn config_cells(rank: usize, c: &ConfigPlan) -> Vec<String> {
 
 fn add_notes(t: &mut Table, out: &PlanOutcome) {
     t.note(&format!(
-        "ref = {}; search granularity {}; {} sims, trace cache {}/{} hits",
+        "ref = {}; search granularity {}; {} sims ({} probes + {} priced), \
+         trace cache {}/{} hits",
         tokens(out.reference_s),
         tokens(out.quantum),
         out.simulations,
+        out.feasibility_probes,
+        out.priced_sims,
         out.cache_hits,
         out.cache_hits + out.cache_misses
     ));
-    t.note("Pareto * = non-dominated on (GiB@ref, tok/s@ref); Host = offload pinning");
+    // Zero families means the symbolic solver never ran (`--cold`, or an
+    // empty sweep) — saying "solved 0" would misread as a failed solver.
+    if out.symbolic_models + out.symbolic_fallbacks > 0 {
+        t.note(&format!(
+            "walls solved symbolically for {} cell families ({} fell back to bisection)",
+            out.symbolic_models, out.symbolic_fallbacks
+        ));
+    }
+    if out.feasibility_only {
+        t.note("Host = offload pinning");
+    } else {
+        t.note("Pareto * = non-dominated on (GiB@ref, tok/s@ref); Host = offload pinning");
+    }
     t.note("AC = activation ckpt (ao=offload, ac=gpu, noac); b = micro-batches; TP = tensor-par.");
     if let Some(r) = &out.refit {
         t.note(&format!(
@@ -81,8 +100,32 @@ fn add_notes(t: &mut Table, out: &PlanOutcome) {
     }
 }
 
-/// Full ranked plan (the `repro plan` output).
+/// Walls-only table for feasibility-only sweeps: every configuration's
+/// solved context wall, no pricing columns.
+pub fn walls_table(out: &PlanOutcome) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Context walls — {} on {} ({} GPUs), feasibility only",
+            out.model.name,
+            out.cluster.name,
+            out.cluster.total_gpus()
+        ),
+        &WALLS_HEADER,
+    );
+    for (i, c) in out.configs.iter().enumerate() {
+        t.row(config_cells(i + 1, c).into_iter().take(WALLS_HEADER.len()).collect());
+    }
+    add_notes(&mut t, out);
+    t.note("feasibility-only sweep: reference-length pricing skipped (walls only)");
+    t
+}
+
+/// Full ranked plan (the `repro plan` output); the walls-only view when
+/// the sweep skipped pricing.
 pub fn plan_table(out: &PlanOutcome) -> Table {
+    if out.feasibility_only {
+        return walls_table(out);
+    }
     let mut t = Table::new(
         &format!(
             "Plan — {} on {} ({} GPUs), ranked by max trainable context",
@@ -100,7 +143,12 @@ pub fn plan_table(out: &PlanOutcome) -> Table {
 }
 
 /// Frontier-only view (the `repro frontier` output), cheapest peak first.
+/// A feasibility-only sweep has no priced frontier, so it degrades to the
+/// walls table.
 pub fn frontier_table(out: &PlanOutcome) -> Table {
+    if out.feasibility_only {
+        return walls_table(out);
+    }
     let mut t = Table::new(
         &format!(
             "Pareto frontier — {} on {} ({} GPUs) at S = {}",
@@ -190,8 +238,13 @@ fn outcome_json(out: &PlanOutcome, configs: Vec<Json>) -> Json {
             "refit",
             out.refit.as_ref().map(refit_json).unwrap_or(Json::Null),
         ),
+        ("feasibility_only", Json::Bool(out.feasibility_only)),
         ("configs", Json::Arr(configs)),
         ("simulations", Json::int(out.simulations)),
+        ("feasibility_probes", Json::int(out.feasibility_probes)),
+        ("priced_sims", Json::int(out.priced_sims)),
+        ("symbolic_models", Json::int(out.symbolic_models)),
+        ("symbolic_fallbacks", Json::int(out.symbolic_fallbacks)),
         ("trace_cache", cache),
         ("wall_s", Json::Num(out.wall_s)),
     ])
@@ -202,8 +255,13 @@ pub fn plan_json(out: &PlanOutcome) -> Json {
     outcome_json(out, out.configs.iter().map(config_json).collect())
 }
 
-/// Machine-readable frontier (`repro frontier --json`).
+/// Machine-readable frontier (`repro frontier --json`). A feasibility-only
+/// sweep has no priced frontier, so it degrades to the full walls list
+/// (matching the table behaviour).
 pub fn frontier_json(out: &PlanOutcome) -> Json {
+    if out.feasibility_only {
+        return plan_json(out);
+    }
     outcome_json(out, out.frontier().into_iter().map(config_json).collect())
 }
 
@@ -249,6 +307,38 @@ mod tests {
         assert_eq!(max_ctx_label(top), ">=4M");
         let j = plan_json(&out).render();
         assert!(j.contains("\"max_context_capped\":true"));
+    }
+
+    #[test]
+    fn feasibility_only_renders_walls_view() {
+        let mut req = small_req();
+        req.feasibility_only = true;
+        let out = plan(&req);
+        let t = plan_table(&out).render();
+        assert!(t.contains("Context walls"), "{t}");
+        assert!(t.contains("feasibility-only sweep"), "{t}");
+        assert!(!t.contains("tok/s@ref"), "pricing columns must not render");
+        assert!(t.contains("5M"), "the 5M wall survives without pricing");
+        // The frontier command degrades to the same walls view.
+        let f = frontier_table(&out).render();
+        assert!(f.contains("Context walls"));
+        let j = plan_json(&out).render();
+        assert!(j.contains("\"feasibility_only\":true"));
+        assert!(j.contains("\"priced_sims\":0"));
+        assert!(j.contains("\"max_context\":"));
+        assert!(j.contains("\"ref_tok_s_per_gpu\":null"));
+    }
+
+    #[test]
+    fn symbolic_accounting_lands_in_output() {
+        let out = small_plan();
+        let j = plan_json(&out).render();
+        assert!(j.contains("\"feasibility_probes\":"));
+        assert!(j.contains("\"symbolic_models\":"));
+        assert!(j.contains("\"feasibility_only\":false"));
+        let t = plan_table(&out).render();
+        assert!(t.contains("walls solved symbolically"), "{t}");
+        assert!(t.contains("probes"), "{t}");
     }
 
     #[test]

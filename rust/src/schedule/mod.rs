@@ -32,17 +32,16 @@ pub mod ulysses;
 pub mod upipe;
 pub mod usp;
 
-use std::collections::hash_map::DefaultHasher;
-use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::config::presets::RunPreset;
 use crate::config::CpMethod;
 use crate::engine::{
-    Calibration, Engine, Feasibility, FeasibilityKernel, Op, OpSink, StepReport, TraceBuilder,
+    Calibration, Engine, Feasibility, FeasibilityKernel, Op, OpSink, PeakProbe, StepReport,
+    TraceBuilder,
 };
-use crate::util::stripe::StripedMap;
+use crate::util::stripe::{fx_hash_one, StripedMap};
 
 pub use common::{AcEmitter, AcMode, Quantities, ScheduleCtx};
 
@@ -113,17 +112,52 @@ pub fn feasibility_with(p: &RunPreset, calib: &Calibration) -> Feasibility {
     f
 }
 
-/// Method-level failure rules applied on top of the engine's own result
-/// (shared by the priced and feasibility paths so they agree bitwise).
-fn method_failure(p: &RunPreset) -> Option<&'static str> {
+/// Phase-1 evaluation, pin-agnostic: stream the schedule into a kernel
+/// with an **unbounded host budget**, reporting the host-occupancy peak
+/// instead of failing at one budget. One probe answers feasibility for
+/// every pin variant of the cell (`PeakProbe::feasible_with_host` is
+/// provably equal to [`feasibility_with`]'s predicate at that budget —
+/// see the type docs), and a clean probe's peaks are the exact sample
+/// values the symbolic wall solver fits its polynomials from.
+pub fn peak_probe_with(p: &RunPreset, calib: &Calibration) -> PeakProbe {
+    let q = Quantities::new(p);
+    let mut kernel = FeasibilityKernel::new(q.hbm_limit, q.persistent_bytes(calib), f64::INFINITY);
+    stream_trace_with(p, calib, &mut kernel);
+    let mut probe = kernel.probe();
+    if let Some(msg) = method_failure(p) {
+        probe.failed = Some(msg);
+    }
+    probe
+}
+
+/// Hard sequence-length ceiling a method imposes regardless of memory
+/// (`None` = memory-limited only). The symbolic wall solver clamps its
+/// closed-form solve to this, so a predicted memory wall beyond the
+/// method ceiling does not send the verification probes galloping.
+/// [`method_failure`] is derived from the same ceiling, so the two can
+/// never disagree.
+pub fn method_seq_cap(method: CpMethod) -> Option<u64> {
     // FPDT's published implementation fails beyond 4M tokens (§5.2 note);
     // reproduce the failure rather than extrapolating.
-    if let CpMethod::Fpdt { .. } = p.parallel.method {
-        if p.seq_len > 4 * 1024 * 1024 {
-            return Some("FPDT execution fails at lengths > 4M (paper §5.2)");
-        }
+    match method {
+        CpMethod::Fpdt { .. } => Some(4 * 1024 * 1024),
+        _ => None,
     }
-    None
+}
+
+/// Method-level failure rules applied on top of the engine's own result
+/// (shared by the priced and feasibility paths so they agree bitwise).
+/// The ceiling comes from [`method_seq_cap`]; the message stays
+/// per-method so a future capped method cannot inherit FPDT's label.
+fn method_failure(p: &RunPreset) -> Option<&'static str> {
+    let cap = method_seq_cap(p.parallel.method)?;
+    if p.seq_len <= cap {
+        return None;
+    }
+    Some(match p.parallel.method {
+        CpMethod::Fpdt { .. } => "FPDT execution fails at lengths > 4M (paper §5.2)",
+        _ => "method fails beyond its sequence-length ceiling",
+    })
 }
 
 /// Price an already-built trace for a preset (shared by the cached and
@@ -171,10 +205,6 @@ pub struct CellKey {
 
 impl CellKey {
     pub fn new(p: &RunPreset, calib: &Calibration) -> Self {
-        // DefaultHasher::new() hashes with fixed keys, so the fingerprint
-        // is stable within (and across) processes.
-        let mut h = DefaultHasher::new();
-        p.model.hash(&mut h);
         CellKey {
             method: p.parallel.method,
             ac: p.parallel.ac_mode,
@@ -184,11 +214,49 @@ impl CellKey {
             seq_len: p.seq_len,
             nodes: p.cluster.nodes,
             gpus_per_node: p.cluster.gpus_per_node,
-            model_fp: h.finish(),
+            // FxHash, not SipHash: deterministic across processes and an
+            // order of magnitude cheaper — this fingerprint is computed
+            // once per probe, which dominates per-cell overhead now that
+            // the symbolic solver collapses probes to O(1) per cell.
+            model_fp: fx_hash_one(&p.model),
             cal_fp: calib.fingerprint(),
         }
     }
 
+    /// The cell's *family*: every dimension except the sequence length,
+    /// the micro-batch count and (as in `CellKey` itself) pinning. One
+    /// fitted [`crate::engine::PeakModel`] serves the whole family — the
+    /// peaks are functions of `S/C` shared by all micro-batch variants
+    /// (each micro-batch repeats an identical alloc/free + offload cycle),
+    /// and pinning only changes the host budget the wall is solved
+    /// against, never the trace.
+    pub fn family(&self) -> FamilyKey {
+        FamilyKey {
+            method: self.method,
+            ac: self.ac,
+            cp_degree: self.cp_degree,
+            tp: self.tp,
+            nodes: self.nodes,
+            gpus_per_node: self.gpus_per_node,
+            model_fp: self.model_fp,
+            cal_fp: self.cal_fp,
+        }
+    }
+}
+
+/// Hashed key for a family of sweep cells sharing one symbolic peak
+/// model: [`CellKey`] minus `seq_len` and `micro_batch` (see
+/// [`CellKey::family`] for why those collapse).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FamilyKey {
+    method: CpMethod,
+    ac: AcMode,
+    cp_degree: u64,
+    tp: u64,
+    nodes: u64,
+    gpus_per_node: u64,
+    model_fp: u64,
+    cal_fp: u64,
 }
 
 /// Thread-safe memo of built op traces, keyed by hashed [`CellKey`]s in a
@@ -392,6 +460,87 @@ mod tests {
     }
 
     #[test]
+    fn method_seq_cap_agrees_with_failure_rule() {
+        // The symbolic solver clamps to method_seq_cap; the probe paths
+        // apply method_failure. If they ever disagreed, a solved wall
+        // could contradict its own verification probes.
+        let methods = [
+            CpMethod::NativePyTorch,
+            CpMethod::Ring,
+            CpMethod::Ulysses,
+            CpMethod::Fpdt { pi: 16 },
+            CpMethod::Upipe { u: 8, gqa_schedule: true },
+            CpMethod::UpipeFpdt { u: 8, pi: 8 },
+        ];
+        for m in methods {
+            let cap = method_seq_cap(m);
+            for s in [1u64 << 20, 4 << 20, (4 << 20) + 1, 8 << 20] {
+                let p = llama_single_node(m, s);
+                let failed = method_failure(&p).is_some();
+                let beyond = cap.is_some_and(|c| s > c);
+                assert_eq!(failed, beyond, "{m:?} S={s}");
+            }
+        }
+        assert_eq!(method_seq_cap(CpMethod::Fpdt { pi: 4 }), Some(4 << 20));
+        assert_eq!(method_seq_cap(CpMethod::Upipe { u: 8, gqa_schedule: true }), None);
+    }
+
+    #[test]
+    fn peak_probe_predicate_matches_budgeted_feasibility_for_both_pins() {
+        // The pin-sharing contract at the schedule layer: one unbounded-
+        // host probe answers the budgeted predicate for every pin variant.
+        let cal = Calibration::default();
+        for m in [
+            CpMethod::Ulysses,
+            CpMethod::Fpdt { pi: 16 },
+            CpMethod::Upipe { u: 8, gqa_schedule: true },
+        ] {
+            for s in [1u64 << 19, 1 << 20, 3 << 20, 6 << 20] {
+                let mut p = llama_single_node(m, s);
+                let probe = peak_probe_with(&p, &cal);
+                for pin in [true, false] {
+                    p.parallel.pin_memory = pin;
+                    let budget = Quantities::new(&p).host_ram_for_offload();
+                    let budgeted = feasibility_with(&p, &cal);
+                    assert_eq!(
+                        probe.feasible_with_host(budget),
+                        budgeted.feasible(),
+                        "{m:?} S={s} pin={pin}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn family_key_collapses_mb_and_pin_but_not_ac_s_or_method() {
+        let cal = Calibration::default();
+        let base = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        let fam = |p: &RunPreset| CellKey::new(p, &cal).family();
+        let f0 = fam(&base);
+
+        let mut mb = base.clone();
+        mb.parallel.micro_batch = 4;
+        assert_eq!(fam(&mb), f0, "micro-batch variants share a model");
+        let mut pin = base.clone();
+        pin.parallel.pin_memory = !pin.parallel.pin_memory;
+        assert_eq!(fam(&pin), f0, "pin variants share a model");
+        let mut s2 = base.clone();
+        s2.seq_len = 2 << 20;
+        assert_eq!(fam(&s2), f0, "the model spans sequence lengths");
+
+        let mut ac = base.clone();
+        ac.parallel.ac_mode = AcMode::AcGpu;
+        assert_ne!(fam(&ac), f0, "AC changes the peak polynomial");
+        let mut tp = base.clone();
+        tp.parallel.tp = 2;
+        tp.parallel.cp_degree = 4;
+        assert_ne!(fam(&tp), f0, "TP reshards the buffers");
+        let other = llama_single_node(CpMethod::Ring, 1 << 20);
+        assert_ne!(fam(&other), f0);
+    }
+
+    #[test]
     fn fpdt_failure_rule_applies_on_cached_path() {
         let cache = TraceCache::new();
         let p = llama_single_node(CpMethod::Fpdt { pi: 16 }, 5 << 20);
@@ -406,13 +555,85 @@ mod tests {
         assert!(!f.feasible(), "feasibility must reproduce the 4M wall");
     }
 
+    /// Symbolic-solver invariants for one configuration: peaks monotone
+    /// non-decreasing in S within the divisibility class, the pin-agnostic
+    /// probe predicate equal to the budgeted one, and a degree-≤2 fit that
+    /// reproduces the streamed kernel at *fresh* lattice points within the
+    /// drift contract (bitwise-or-1e-9; every schedule's byte sizes are
+    /// affine in S/C, so clean samples always admit a fit).
+    fn symbolic_invariants_hold(p: &RunPreset, cal: &Calibration) -> bool {
+        use crate::engine::symbolic::drift_ok;
+        use crate::engine::{PeakModel, PeakSample};
+        // 2^18 is a multiple of every swept C, so all probes share one
+        // divisibility residue class (floor(S/C) steps exactly).
+        let base = 1u64 << 18;
+        let c = p.parallel.cp_degree;
+        let probe_at = |i: u64| {
+            let mut p2 = p.clone();
+            p2.seq_len = i * base;
+            peak_probe_with(&p2, cal)
+        };
+        let probes: Vec<PeakProbe> = (1..=6).map(probe_at).collect();
+        for w in probes.windows(2) {
+            if w[0].clean() && w[1].clean() {
+                // Monotone peaks (the property bisection already relies on).
+                if w[1].peak_bytes < w[0].peak_bytes || w[1].host_peak < w[0].host_peak {
+                    return false;
+                }
+            } else if w[0].clean() != w[1].clean() && w[1].clean() {
+                // Feasibility itself is monotone: a clean longer run
+                // implies the shorter one was clean too.
+                return false;
+            }
+        }
+        // Pin-agnostic probe == budgeted predicate at this cell's own S.
+        let probe_here = peak_probe_with(p, cal);
+        for pin in [true, false] {
+            let mut pp = p.clone();
+            pp.parallel.pin_memory = pin;
+            let budget = Quantities::new(&pp).host_ram_for_offload();
+            if probe_here.feasible_with_host(budget) != feasibility_with(&pp, cal).feasible() {
+                return false;
+            }
+        }
+        // Fit on the first samples, check fresh points (the planner's
+        // drift contract, extended beyond the held-out sample).
+        if !probes[..4].iter().all(|pr| pr.clean()) {
+            return true; // walls below the sample range: fallback territory
+        }
+        let sample = |i: usize| PeakSample {
+            k: (i as u64 + 1) * base / c,
+            peak_bytes: probes[i].peak_bytes,
+            host_peak: probes[i].host_peak,
+        };
+        let linear: Vec<PeakSample> = (0..3).map(sample).collect();
+        let quad: Vec<PeakSample> = (0..4).map(sample).collect();
+        let Some(model) = PeakModel::fit(&linear).or_else(|| PeakModel::fit(&quad)) else {
+            return false; // clean affine samples must always fit
+        };
+        for (i, pr) in probes.iter().enumerate().skip(3) {
+            if !pr.clean() {
+                continue;
+            }
+            let k = (i as u64 + 1) * base / c;
+            if !drift_ok(model.predict_peak(k), pr.peak_bytes)
+                || !drift_ok(model.predict_host(k), pr.host_peak)
+            {
+                return false;
+            }
+        }
+        true
+    }
+
     #[test]
     fn prop_traces_balanced_nonnegative_and_peak_stable_under_replay() {
         // Every method × S × AC mode × micro-batch × TP: the trace must
         // have balanced Alloc/Free pairs and non-negative bytes, its peak
-        // must be invariant when replayed through the trace cache, and the
+        // must be invariant when replayed through the trace cache, the
         // streaming FeasibilityKernel must agree *bitwise* with the priced
-        // engine on peak_bytes, oom and the failure value.
+        // engine on peak_bytes, oom and the failure value, and the
+        // symbolic wall solver's invariants (monotone polynomial peaks,
+        // pin-agnostic probes) must hold — see `symbolic_invariants_hold`.
         let methods = [
             CpMethod::NativePyTorch,
             CpMethod::Ring,
@@ -473,6 +694,7 @@ mod tests {
                     && direct.peak_bytes == replay1.peak_bytes
                     && replay1.peak_bytes == replay2.peak_bytes
                     && direct.oom == replay2.oom
+                    && symbolic_invariants_hold(&p, &cal)
             },
         );
     }

@@ -1,13 +1,106 @@
-//! N-way lock-striped concurrent hash map. The planner's worker pool used
-//! to serialize on two global `Mutex<HashMap<String, _>>`s (the trace
-//! cache and the report memo); striping the key space over independent
-//! locks lets workers probing different cells proceed concurrently, and
-//! hashed struct keys replace the old `format!`-built Strings.
+//! N-way lock-striped concurrent hash map plus the fast deterministic
+//! hasher behind every hashed-key cache. The planner's worker pool used to
+//! serialize on two global `Mutex<HashMap<String, _>>`s (the trace cache
+//! and the report memo); striping the key space over independent locks
+//! lets workers probing different cells proceed concurrently, and hashed
+//! struct keys replace the old `format!`-built Strings.
+//!
+//! The hash function is [`FxHasher`], an FxHash-style multiply-rotate
+//! hasher, not the standard library's SipHash. SipHash buys DoS resistance
+//! the planner does not need (keys are derived from enumerated sweep
+//! cells, never attacker-controlled) and costs ~1ns/word of keyed setup
+//! and rounds; once the symbolic wall solver collapses bisections to O(1)
+//! streamed probes, the per-probe `CellKey` hash is a measurable slice of
+//! the remaining cell cost. FxHash is deterministic across runs and
+//! processes (no random keys), which the stripe assignment and the
+//! `CellKey` model fingerprint both rely on.
 
-use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
+use std::hash::{BuildHasherDefault, Hash, Hasher};
 use std::sync::Mutex;
+
+/// Multiplier from the FxHash scheme (rustc's `FxHasher`): a single
+/// odd 64-bit constant with well-mixed high bits.
+const FX_SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// FxHash-style hasher: `hash = (hash rotl 5 ^ word) * SEED` per 8-byte
+/// word. Deterministic (no per-process keys), ~1 multiply per word — a
+/// good fit for small `Copy` struct keys hashed on every probe.
+#[derive(Debug, Default, Clone)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(FX_SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in chunks.by_ref() {
+            self.add(u64::from_le_bytes(c.try_into().unwrap()));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut tail = [0u8; 8];
+            tail[..rest.len()].copy_from_slice(rest);
+            // Fold the length in so "ab" and "ab\0" cannot collide.
+            self.add(u64::from_le_bytes(tail) ^ ((rest.len() as u64) << 56));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, n: u8) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, n: u16) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, n: u32) {
+        self.add(n as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, n: u64) {
+        self.add(n);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, n: u128) {
+        self.add(n as u64);
+        self.add((n >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, n: usize) {
+        self.add(n as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`]: plugs into `HashMap` and friends.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// Hash one value with [`FxHasher`] — the fingerprint helper used by
+/// `CellKey` for model dims (stable within and across processes).
+pub fn fx_hash_one<T: Hash>(value: &T) -> u64 {
+    let mut h = FxHasher::default();
+    value.hash(&mut h);
+    h.finish()
+}
 
 /// Default stripe count: enough that 16 planner workers rarely collide,
 /// small enough that `len()` stays cheap.
@@ -17,22 +110,21 @@ pub const DEFAULT_STRIPES: usize = 16;
 /// values for large payloads). First writer wins on a racing key, so
 /// concurrent builders converge on one canonical entry.
 pub struct StripedMap<K, V> {
-    stripes: Vec<Mutex<HashMap<K, V>>>,
+    stripes: Vec<Mutex<HashMap<K, V, FxBuildHasher>>>,
 }
 
 impl<K: Hash + Eq, V: Clone> StripedMap<K, V> {
     pub fn new(stripes: usize) -> Self {
         StripedMap {
-            stripes: (0..stripes.max(1)).map(|_| Mutex::new(HashMap::new())).collect(),
+            stripes: (0..stripes.max(1)).map(|_| Mutex::new(HashMap::default())).collect(),
         }
     }
 
-    fn stripe(&self, key: &K) -> &Mutex<HashMap<K, V>> {
-        // DefaultHasher::new() is keyed deterministically (unlike
-        // RandomState), so stripe assignment is stable across runs.
-        let mut h = DefaultHasher::new();
-        key.hash(&mut h);
-        &self.stripes[(h.finish() as usize) % self.stripes.len()]
+    fn stripe(&self, key: &K) -> &Mutex<HashMap<K, V, FxBuildHasher>> {
+        // FxHasher is deterministic (unlike RandomState), so stripe
+        // assignment is stable across runs; the inner maps re-hash with
+        // the same cheap function.
+        &self.stripes[(fx_hash_one(key) as usize) % self.stripes.len()]
     }
 
     pub fn get(&self, key: &K) -> Option<V> {
@@ -52,6 +144,20 @@ impl<K: Hash + Eq, V: Clone> StripedMap<K, V> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Fold over a snapshot of every entry (stripe by stripe). Used for
+    /// end-of-sweep accounting (e.g. counting fitted vs fallen-back
+    /// symbolic models); not a consistent point-in-time view under
+    /// concurrent writers.
+    pub fn fold<A>(&self, init: A, mut f: impl FnMut(A, &K, &V) -> A) -> A {
+        let mut acc = init;
+        for s in &self.stripes {
+            for (k, v) in s.lock().unwrap().iter() {
+                acc = f(acc, k, v);
+            }
+        }
+        acc
     }
 }
 
@@ -113,5 +219,45 @@ mod tests {
             let v = m.get(&k).unwrap();
             assert_eq!(v % 1000, k, "value for {k} must come from one canonical insert");
         }
+    }
+
+    #[test]
+    fn fold_visits_every_entry() {
+        let m: StripedMap<u64, u64> = StripedMap::new(4);
+        for k in 0..32 {
+            m.insert(k, 2 * k);
+        }
+        let (count, sum) = m.fold((0u64, 0u64), |(c, s), _, v| (c + 1, s + v));
+        assert_eq!(count, 32);
+        assert_eq!(sum, (0..32).map(|k| 2 * k).sum::<u64>());
+    }
+
+    #[test]
+    fn fx_hash_is_deterministic_and_spreads() {
+        // Same value, same hash — across hasher instances (no random keys).
+        assert_eq!(fx_hash_one(&42u64), fx_hash_one(&42u64));
+        assert_ne!(fx_hash_one(&42u64), fx_hash_one(&43u64));
+        // Byte-stream hashing: length folding keeps prefixes distinct.
+        let mut a = FxHasher::default();
+        a.write(b"ab");
+        let mut b = FxHasher::default();
+        b.write(b"ab\0");
+        assert_ne!(a.finish(), b.finish());
+        // Sequential keys land in many distinct buckets of a 16-way split.
+        let mut seen = std::collections::HashSet::new();
+        for k in 0u64..64 {
+            seen.insert(fx_hash_one(&k) % 16);
+        }
+        assert!(seen.len() >= 8, "only {} buckets hit", seen.len());
+    }
+
+    #[test]
+    fn fx_hash_mixed_width_writes() {
+        // Tuple keys (the planner's memo keys) exercise the width-specific
+        // write paths; equal tuples must agree, unequal must (here) differ.
+        let k1 = (7u64, true, 3u32);
+        let k2 = (7u64, false, 3u32);
+        assert_eq!(fx_hash_one(&k1), fx_hash_one(&k1));
+        assert_ne!(fx_hash_one(&k1), fx_hash_one(&k2));
     }
 }
