@@ -1,7 +1,9 @@
 //! Bench: the configuration planner — full-sweep wall time and throughput
 //! (configs/sec, sims/sec), the symbolic walls-only sweep (walls/sec: the
-//! `--feasibility-only` path the multi-node frontiers run on), plus the
-//! two evaluation phases in isolation (streamed feasibility probes/sec vs
+//! `--feasibility-only` path the multi-node frontiers run on), the
+//! planner-service warm path (warm_requests/sec: repeated identical
+//! requests answered from one session's plan memo), plus the two
+//! evaluation phases in isolation (streamed feasibility probes/sec vs
 //! fully priced sims/sec), emitted to `BENCH_planner.json` so future PRs
 //! have a perf trajectory to compare against and CI can gate each phase
 //! independently.
@@ -12,6 +14,7 @@ use untied_ulysses::engine::Calibration;
 use untied_ulysses::model::ModelDims;
 use untied_ulysses::planner::{enumerate_space, plan, PlanRequest, SweepDims};
 use untied_ulysses::schedule::{feasibility_with, simulate_with};
+use untied_ulysses::service::{PlanParams, PlannerService};
 use untied_ulysses::util::bench::Bench;
 use untied_ulysses::util::fmt::tokens;
 use untied_ulysses::util::json::Json;
@@ -61,6 +64,27 @@ fn main() {
         walls_out.configs.len() as f64 / walls.mean.as_secs_f64(),
         walls_out.feasibility_probes
     );
+    // Planner-as-a-service warm path: repeated identical requests against
+    // one session are answered from the whole-plan memo (zero probes,
+    // zero priced sims). Gated independently as warm_requests_per_sec —
+    // a regression here means the session stopped memoizing.
+    let service = PlannerService::new();
+    let mut sp = PlanParams::defaults("llama3-8b", 8);
+    sp.quantum = 512 * 1024;
+    sp.cap_s = 16 << 20;
+    let cold_reply = service.plan(&sp).expect("service plan");
+    assert!(!cold_reply.memo_hit, "first service request must compute");
+    let warm = Bench::new("planner/service_warm_plan").budget_ms(400).run(|| {
+        let r = service.plan(&sp).expect("warm service plan");
+        assert!(r.memo_hit, "repeated request must hit the session memo");
+        r
+    });
+    println!(
+        "  service warm path: {:.0} requests/s ({} memo hits)",
+        warm.per_sec(),
+        service.stats().plan_memo_hits
+    );
+
     let bench_enum = Bench::new("planner/enumerate_space").budget_ms(200);
     let enum_dims = SweepDims { compositions: true, ..SweepDims::default() };
     let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, &enum_dims));
@@ -100,6 +124,7 @@ fn main() {
         ("configs_per_sec", Json::Num(out.configs.len() as f64 / sweep.mean.as_secs_f64())),
         ("sims_per_sec", Json::Num(out.simulations as f64 / sweep.mean.as_secs_f64())),
         ("walls_per_sec", Json::Num(walls_out.configs.len() as f64 / walls.mean.as_secs_f64())),
+        ("warm_requests_per_sec", Json::Num(warm.per_sec())),
         ("feasibility_probes_per_sec", Json::Num(feas.per_sec())),
         ("priced_sims_per_sec", Json::Num(priced.per_sec())),
         ("enumerate_per_sec", Json::Num(enumerate.per_sec())),

@@ -12,6 +12,8 @@ Gated metrics — each phase of the two-phase evaluator fails independently:
 - configs_per_sec            (whole-sweep throughput)
 - walls_per_sec              (symbolic walls-only sweep: the
                               --feasibility-only multi-node frontier path)
+- warm_requests_per_sec      (planner-service warm path: repeated requests
+                              answered from one session's plan memo)
 - feasibility_probes_per_sec (phase 1: streamed peak-only probes)
 - priced_sims_per_sec        (phase 2: trace build + full pricing)
 
@@ -26,6 +28,7 @@ import sys
 GATED = (
     "configs_per_sec",
     "walls_per_sec",
+    "warm_requests_per_sec",
     "feasibility_probes_per_sec",
     "priced_sims_per_sec",
 )

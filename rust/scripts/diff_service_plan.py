@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Compare a `repro plan --json` artifact against a `repro serve-plan`
+`/v1/plan` response for the same preset.
+
+Usage: diff_service_plan.py <cli_plan.json> <service_response.json>
+
+The service's `result` is the CLI plan JSON minus run accounting
+(`simulations`, `feasibility_probes`, `priced_sims`, `symbolic_models`,
+`symbolic_fallbacks`, `trace_cache`, `wall_s`) — those describe one run,
+not the plan, and a warm session legitimately reports different numbers.
+Everything else must match exactly: same configs, same walls, same
+ranking, same floats. Exits non-zero on any divergence — this is the CI
+gate that the daemon and the CLI can never drift apart.
+"""
+
+import json
+import sys
+
+ACCOUNTING = (
+    "simulations",
+    "feasibility_probes",
+    "priced_sims",
+    "symbolic_models",
+    "symbolic_fallbacks",
+    "trace_cache",
+    "wall_s",
+)
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    cli = json.load(open(sys.argv[1]))
+    resp = json.load(open(sys.argv[2]))
+    if resp.get("api_version") != 1:
+        print(f"FAIL: service response api_version {resp.get('api_version')!r} != 1")
+        return 1
+    if "error" in resp:
+        print(f"FAIL: service answered an error: {resp['error']}")
+        return 1
+    result = resp.get("result")
+    if not isinstance(result, dict):
+        print("FAIL: service response has no `result` object")
+        return 1
+    expected = {k: v for k, v in cli.items() if k not in ACCOUNTING}
+    if result == expected:
+        n = len(result.get("configs", []))
+        print(f"service /v1/plan matches the CLI plan exactly ({n} configs)")
+        return 0
+    # Pinpoint every diverging field for the CI log.
+    for k in sorted(set(expected) | set(result)):
+        if expected.get(k) != result.get(k):
+            print(f"FAIL: field `{k}` differs")
+            print(f"  cli:     {json.dumps(expected.get(k))[:400]}")
+            print(f"  service: {json.dumps(result.get(k))[:400]}")
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

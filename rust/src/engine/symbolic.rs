@@ -202,6 +202,17 @@ impl PeakModel {
         self.host.eval(k as f64)
     }
 
+    /// Predicted feasibility at per-rank token count `k`: both peaks
+    /// within their budgets. This is the service's warm *point-query*
+    /// path (answer a "can I train S?" capacity question with zero
+    /// streamed probes); unlike a verified wall it is a prediction, exact
+    /// up to the drift contract plus the allocator's bucketed-reservation
+    /// slack — callers that need the exact answer verify with probes (the
+    /// planner's wall search always does).
+    pub fn predict_feasible(&self, k: u64, hbm_limit: f64, host_budget: f64) -> bool {
+        self.predict_peak(k) <= hbm_limit && self.predict_host(k) <= host_budget
+    }
+
     /// Solve the context wall in closed form: the largest `s` on the
     /// `quantum` lattice, `quantum ≤ s ≤ cap`, whose predicted device
     /// peak fits `hbm_limit` and predicted host peak fits `host_budget`.
@@ -279,6 +290,21 @@ mod tests {
         assert_eq!(m.solve_wall(300.0, 1e18, 0, 8, 400), None);
         assert_eq!(m.solve_wall(300.0, 1e18, 4, 0, 400), None);
         assert_eq!(m.solve_wall(300.0, 1e18, 4, 8, 4), None);
+    }
+
+    #[test]
+    fn predict_feasible_matches_both_budgets() {
+        // peak(k) = 100 + 5k, host(k) = 2k.
+        let s = lin_samples(&[16, 32, 48], 5.0, 100.0, 2.0);
+        let m = PeakModel::fit(&s).unwrap();
+        assert!(m.predict_feasible(10, 150.0, 20.0)); // 150 <= 150, 20 <= 20
+        assert!(!m.predict_feasible(10, 149.0, 20.0), "device budget binds");
+        assert!(!m.predict_feasible(10, 150.0, 19.0), "host budget binds");
+        // Consistent with the solved wall: every k at or below the wall's
+        // kmax predicts feasible, the next one does not.
+        let wall = m.solve_wall(300.0, 1e18, 1, 1, 1000).unwrap();
+        assert!(m.predict_feasible(wall, 300.0, 1e18));
+        assert!(!m.predict_feasible(wall + 1, 300.0, 1e18));
     }
 
     #[test]

@@ -7,10 +7,12 @@
 //! - **L3 (this crate)** — the paper's coordination contribution: context-
 //!   parallel schedules ([`schedule`]), a calibrated cluster/memory/collective
 //!   simulator ([`cluster`], [`memory`], [`collectives`], [`engine`]) that
-//!   regenerates every table/figure ([`report`]), and a *functional*
-//!   multi-rank UPipe pipeline ([`coordinator`]) that moves real tensors
-//!   between rank buffers and executes AOT-compiled JAX/Pallas programs
-//!   through PJRT ([`runtime`]).
+//!   regenerates every table/figure ([`report`]), a capacity planner
+//!   ([`planner`]) served as a long-lived session API with persistent
+//!   cross-request caches and an HTTP daemon ([`service`]), and a
+//!   *functional* multi-rank UPipe pipeline ([`coordinator`]) that moves
+//!   real tensors between rank buffers and executes AOT-compiled
+//!   JAX/Pallas programs through PJRT ([`runtime`]).
 //! - **L2/L1 (python/, build-time only)** — the JAX transformer and Pallas
 //!   kernels, lowered once to HLO text in `artifacts/` by `make artifacts`.
 //!   Python never runs on the request path.
@@ -26,6 +28,7 @@ pub mod planner;
 pub mod report;
 pub mod runtime;
 pub mod schedule;
+pub mod service;
 pub mod util;
 
 /// Crate-wide result alias.

@@ -7,10 +7,17 @@
 //!   repro all                                         everything above
 //! Simulation:
 //!   repro simulate --model llama3-8b --method upipe --seq 1M
-//! Planning:
-//!   repro plan --model llama3-8b --gpus 8 [--json]    sweep every valid
-//!       config, bisect max trainable context, rank (the "5M" search)
-//!   repro frontier --model ... [--json]               Pareto frontier only
+//!                  [--ac ao|gpu|noac] [--mb N]
+//! Planning (thin clients of the planner service):
+//!   repro plan --model llama3-8b --gpus 8 [--seq 1M] [--quantum 128K]
+//!       [--cap 32M] [--ac ao,gpu] [--mb 1,2,4] [--tp 1,2] [--paper]
+//!       [--compose] [--refit measurements.json] [--threads N]
+//!       [--feasibility-only] [--cold] [--json]
+//!       sweep every valid config, solve max trainable context, rank
+//!   repro frontier ...                                Pareto frontier only
+//!   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
+//!       planner-service daemon: POST /v1/plan | /v1/walls | /v1/frontier
+//!       | /v1/refit, GET /v1/health — persistent cross-request caches
 //! Functional runtime (needs `make artifacts`):
 //!   repro parity        distributed UPipe vs monolithic logits check
 //!   repro train N       N training steps of the SMALL model (AOT step)
@@ -26,6 +33,8 @@ use untied_ulysses::model::ModelDims;
 use untied_ulysses::report::{figures, savings, tables};
 use untied_ulysses::runtime::Runtime;
 use untied_ulysses::schedule::simulate;
+use untied_ulysses::service::wire;
+use untied_ulysses::service::{MeasurementsSource, PlanParams};
 use untied_ulysses::util::fmt::{parse_tokens, GIB};
 use untied_ulysses::util::rng::Rng;
 
@@ -92,6 +101,7 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
         "compose" => cmd_compose()?,
         "plan" => cmd_plan(rest, false)?,
         "frontier" => cmd_plan(rest, true)?,
+        "serve-plan" => cmd_serve_plan(rest)?,
         "simulate" => cmd_simulate(rest)?,
         "parity" => cmd_parity()?,
         "train" => cmd_train(rest)?,
@@ -126,17 +136,61 @@ repro — Untied Ulysses (UPipe) reproduction
       --cold disables the symbolic solver and warm starts (probe-per-
       bisection reference path, identical results)
   repro frontier ...  same flags; print only the Pareto frontier
+  repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
+      planner-as-a-service daemon over one warm session: POST /v1/plan,
+      /v1/walls (add \"at\" for a point capacity query), /v1/frontier,
+      /v1/refit; GET /v1/health. Persistent cross-request caches: a
+      repeated request is served from memos byte-for-byte, and a warm
+      walls query streams zero probes. api_version 1; see README.
   repro compose       UPipe x FPDT composition study (paper §5.3.2)
   repro parity
   repro train [steps=100]
   repro serve [requests=20]
 ";
 
-fn flag(rest: &[String], name: &str) -> Option<String> {
-    rest.iter()
-        .position(|a| a == name)
-        .and_then(|i| rest.get(i + 1))
-        .cloned()
+/// The one shared argument parser (every subcommand reads its flags
+/// through this instead of ad-hoc scanning).
+struct Args<'a> {
+    rest: &'a [String],
+}
+
+impl<'a> Args<'a> {
+    fn new(rest: &'a [String]) -> Self {
+        Args { rest }
+    }
+
+    /// `--flag value` lookup.
+    fn str(&self, name: &str) -> Option<String> {
+        self.rest.iter().position(|a| a == name).and_then(|i| self.rest.get(i + 1)).cloned()
+    }
+
+    /// Bare `--flag` presence.
+    fn has(&self, name: &str) -> bool {
+        self.rest.iter().any(|a| a == name)
+    }
+
+    fn u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.str(name) {
+            None => Ok(None),
+            Some(v) => v.parse().map(Some).map_err(|_| anyhow::anyhow!("bad {name} {v}")),
+        }
+    }
+
+    /// Token-count flag: a label ("1M", "128K") or a raw count.
+    fn tokens(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.str(name) {
+            None => Ok(None),
+            Some(v) => match parse_tokens(&v) {
+                Some(t) => Ok(Some(t)),
+                None => Err(anyhow::anyhow!("bad {name} {v}")),
+            },
+        }
+    }
+
+    /// First positional argument, parsed, with a default.
+    fn positional_usize(&self, default: usize) -> usize {
+        self.rest.first().and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
 }
 
 fn cmd_compose() -> anyhow::Result<()> {
@@ -175,173 +229,98 @@ fn cmd_compose() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_u64_list(s: &str, what: &str) -> anyhow::Result<Vec<u64>> {
-    s.split(',')
-        .map(|x| {
-            x.trim()
-                .parse::<u64>()
-                .map_err(|_| anyhow::anyhow!("bad {what} entry `{x}`"))
-        })
-        .collect()
+/// Build the service request from CLI flags — the same [`PlanParams`] an
+/// HTTP client would POST, so `repro plan` and the daemon cannot drift.
+fn parse_plan_params(args: &Args) -> anyhow::Result<PlanParams> {
+    let model = args.str("--model").unwrap_or_else(|| "llama3-8b".into());
+    let gpus = args.u64("--gpus")?.unwrap_or(8);
+    let mut p = PlanParams::defaults(&model, gpus);
+    if args.has("--paper") {
+        p.set_paper();
+    }
+    if let Some(s) = args.tokens("--seq")? {
+        p.reference_s = s;
+    }
+    if let Some(q) = args.tokens("--quantum")? {
+        p.quantum = q;
+    }
+    if let Some(c) = args.tokens("--cap")? {
+        p.cap_s = c;
+    }
+    if let Some(t) = args.u64("--threads")? {
+        p.threads = t as usize;
+    }
+    if let Some(ac) = args.str("--ac") {
+        p.ac_modes = wire::parse_ac_list(&ac).map_err(anyhow::Error::msg)?;
+    }
+    if let Some(mb) = args.str("--mb") {
+        p.micro_batches = wire::parse_u64_list(&mb, "--mb").map_err(anyhow::Error::msg)?;
+    }
+    if let Some(tp) = args.str("--tp") {
+        p.tp_degrees = wire::parse_u64_list(&tp, "--tp").map_err(anyhow::Error::msg)?;
+    }
+    p.compositions = p.compositions || args.has("--compose");
+    p.cold = args.has("--cold");
+    p.feasibility_only = args.has("--feasibility-only");
+    if let Some(path) = args.str("--refit") {
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading --refit {path}: {e}"))?;
+        p.measurements = Some(MeasurementsSource { source: path, text });
+    }
+    Ok(p)
 }
 
 fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
-    use untied_ulysses::config::ClusterConfig;
-    use untied_ulysses::engine::{refit, Calibration, Measurements};
-    use untied_ulysses::planner::{plan, PlanRequest, SweepDims};
     use untied_ulysses::report::planner as planner_report;
+    use untied_ulysses::service::PlannerService;
 
-    let model_name = flag(rest, "--model").unwrap_or_else(|| "llama3-8b".into());
-    let model = ModelDims::by_name(&model_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown --model {model_name}"))?;
-    let gpus: u64 = match flag(rest, "--gpus") {
-        Some(g) => g.parse().map_err(|_| anyhow::anyhow!("bad --gpus {g}"))?,
-        None => 8,
-    };
-    let cluster = ClusterConfig::h100_cluster(gpus).map_err(anyhow::Error::msg)?;
-    let mut req = PlanRequest::new(model, cluster);
-    if let Some(s) = flag(rest, "--seq") {
-        req.reference_s = parse_tokens(&s).ok_or_else(|| anyhow::anyhow!("bad --seq {s}"))?;
+    let args = Args::new(rest);
+    let params = parse_plan_params(&args)?;
+    // One-shot session: the CLI is a thin client of the same service type
+    // the daemon runs — same params, same evaluator, same JSON.
+    let service = PlannerService::new();
+    let reply = service.plan(&params).map_err(anyhow::Error::msg)?;
+    for note in &reply.warnings {
+        eprintln!("{note}");
     }
-    if let Some(q) = flag(rest, "--quantum") {
-        req.quantum = parse_tokens(&q).ok_or_else(|| anyhow::anyhow!("bad --quantum {q}"))?;
-    }
-    if let Some(c) = flag(rest, "--cap") {
-        req.cap_s = parse_tokens(&c).ok_or_else(|| anyhow::anyhow!("bad --cap {c}"))?;
-    }
-    if let Some(t) = flag(rest, "--threads") {
-        req.threads = t.parse().map_err(|_| anyhow::anyhow!("bad --threads {t}"))?;
-    }
-    if rest.iter().any(|a| a == "--paper") {
-        req.dims = SweepDims::paper();
-    }
-    if let Some(ac) = flag(rest, "--ac") {
-        let modes = ac
-            .split(',')
-            .map(|m| {
-                AcMode::parse(m.trim())
-                    .ok_or_else(|| anyhow::anyhow!("bad --ac entry `{m}` (ao|gpu|noac)"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        // Dedup (order-preserving): repeated entries would enumerate
-        // duplicate configs.
-        let mut deduped: Vec<AcMode> = Vec::new();
-        for m in modes {
-            if !deduped.contains(&m) {
-                deduped.push(m);
-            }
-        }
-        req.dims.ac_modes = deduped;
-    }
-    if let Some(mb) = flag(rest, "--mb") {
-        let mut v = parse_u64_list(&mb, "--mb")?;
-        v.sort_unstable();
-        v.dedup();
-        req.dims.micro_batches = v;
-    }
-    if let Some(tp) = flag(rest, "--tp") {
-        let mut v = parse_u64_list(&tp, "--tp")?;
-        v.sort_unstable();
-        v.dedup();
-        req.dims.tp_degrees = v;
-    }
-    req.dims.compositions = req.dims.compositions || rest.iter().any(|a| a == "--compose");
-    // --cold disables the symbolic wall solver *and* the warm-started
-    // fallback bisections, restoring the probe-per-bisection reference
-    // path end to end (identical results, O(log S) more probes) — a
-    // debugging/benchmarking switch.
-    let cold = rest.iter().any(|a| a == "--cold");
-    req.warm_start = !cold;
-    req.symbolic = !cold;
-    // --feasibility-only skips phase-2 pricing: walls-only tables/JSON.
-    req.feasibility_only = rest.iter().any(|a| a == "--feasibility-only");
-    if let Some(path) = flag(rest, "--refit") {
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("reading --refit {path}: {e}"))?;
-        let m = Measurements::parse(&text, &path).map_err(anyhow::Error::msg)?;
-        anyhow::ensure!(
-            m.model == req.model.name,
-            "--refit file measures `{}` but --model is `{}`",
-            m.model,
-            req.model.name
-        );
-        let (cal, mut info) = refit(&Calibration::default(), &m, &req.model)
-            .map_err(anyhow::Error::msg)?;
-        eprintln!(
-            "refit from {path}: {} cells, anchored at {} tokens;{}",
-            info.cells,
-            untied_ulysses::util::fmt::tokens(info.anchor_seq),
-            info.fields.iter().fold(String::new(), |mut s, f| {
-                s.push_str(&format!(" {} {:.3e} -> {:.3e};", f.name, f.old, f.new));
-                s
-            })
-        );
-        if !info.skipped.is_empty() {
-            eprintln!(
-                "WARNING: refit kept defaults for {} (measurements at or below the \
-                 modelled overhead floor)",
-                info.skipped.join(", ")
-            );
-        }
-        // Pressure sanity: simulate the measured anchor cell. If it runs
-        // with headroom below the pressure threshold, its measured times
-        // already include the allocator-pressure penalties the engine
-        // re-applies during the sweep — the refit rates absorb them.
-        // refit guarantees a single-node (<= 8 GPU) Ulysses anchor.
-        let anchor_cluster = ClusterConfig::h100_cluster(m.gpus).map_err(anyhow::Error::msg)?;
-        let anchor_preset = untied_ulysses::config::presets::RunPreset {
-            model: req.model.clone(),
-            parallel: untied_ulysses::config::ParallelConfig::new(
-                CpMethod::Ulysses,
-                anchor_cluster.total_gpus(),
-            ),
-            cluster: anchor_cluster,
-            seq_len: info.anchor_seq,
-        };
-        let q = untied_ulysses::schedule::Quantities::new(&anchor_preset);
-        let anchor_report = simulate(&anchor_preset);
-        let headroom = q.hbm_limit - anchor_report.peak_bytes;
-        if headroom < cal.pressure_h0_gib * GIB {
-            info.pressured_anchor = true;
-            eprintln!(
-                "WARNING: anchor cell ({} tokens) runs with only {:.1} GiB of predicted \
-                 headroom — its measured times include memory-pressure penalties, so the \
-                 refit rates are pessimistic near the memory walls; prefer an anchor at \
-                 shorter context",
-                untied_ulysses::util::fmt::tokens(info.anchor_seq),
-                headroom.max(0.0) / GIB
-            );
-        }
-        req.calibration = cal;
-        req.refit = Some(info);
-    }
-    anyhow::ensure!(req.cap_s >= req.quantum, "--cap must be at least --quantum");
-
-    let out = plan(&req);
-    anyhow::ensure!(
-        !out.configs.is_empty(),
-        "no valid configurations: the requested sweep dims (--tp {:?}, --mb {:?}, --ac {:?}) \
-         fit neither {} nor the {}-GPU cluster",
-        req.dims.tp_degrees,
-        req.dims.micro_batches,
-        req.dims.ac_modes.iter().map(|a| a.label()).collect::<Vec<_>>(),
-        req.model.name,
-        req.cluster.total_gpus()
-    );
-    let json = rest.iter().any(|a| a == "--json");
+    let out = &reply.outcome;
+    let json = args.has("--json");
     match (json, frontier_only) {
-        (true, true) => println!("{}", planner_report::frontier_json(&out).pretty()),
-        (true, false) => println!("{}", planner_report::plan_json(&out).pretty()),
-        (false, true) => planner_report::frontier_table(&out).print(),
-        (false, false) => planner_report::plan_table(&out).print(),
+        (true, true) => println!("{}", planner_report::frontier_json(out).pretty()),
+        (true, false) => println!("{}", planner_report::plan_json(out).pretty()),
+        (false, true) => planner_report::frontier_table(out).print(),
+        (false, false) => planner_report::plan_table(out).print(),
     }
     Ok(())
 }
 
+fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
+    use untied_ulysses::service::{http, PlannerService};
+
+    let args = Args::new(rest);
+    let port = args.u64("--port")?.unwrap_or(8077);
+    anyhow::ensure!(port <= u16::MAX as u64, "bad --port {port}");
+    let bind = args.str("--bind").unwrap_or_else(|| "127.0.0.1".into());
+    let threads = args.u64("--threads")?.unwrap_or(0) as usize;
+    let service = std::sync::Arc::new(PlannerService::new());
+    let handle = http::serve(service, &format!("{bind}:{port}"), threads)?;
+    println!("repro planner service listening on http://{}", handle.addr());
+    println!(
+        "  POST /v1/plan | /v1/walls | /v1/frontier | /v1/refit   GET /v1/health   \
+         (api_version {})",
+        untied_ulysses::service::API_VERSION
+    );
+    use std::io::Write;
+    std::io::stdout().flush().ok();
+    handle.join();
+    Ok(())
+}
+
 fn cmd_simulate(rest: &[String]) -> anyhow::Result<()> {
-    let model = flag(rest, "--model").unwrap_or_else(|| "llama3-8b".into());
-    let method = flag(rest, "--method").unwrap_or_else(|| "upipe".into());
-    let seq = flag(rest, "--seq").unwrap_or_else(|| "1M".into());
+    let args = Args::new(rest);
+    let model = args.str("--model").unwrap_or_else(|| "llama3-8b".into());
+    let method = args.str("--method").unwrap_or_else(|| "upipe".into());
+    let seq = args.str("--seq").unwrap_or_else(|| "1M".into());
     let s = parse_tokens(&seq).ok_or_else(|| anyhow::anyhow!("bad --seq {seq}"))?;
     let qwen = model == "qwen3-32b";
     let m = match method.as_str() {
@@ -359,13 +338,12 @@ fn cmd_simulate(rest: &[String]) -> anyhow::Result<()> {
     } else {
         llama_single_node(m, s)
     };
-    if let Some(ac) = flag(rest, "--ac") {
+    if let Some(ac) = args.str("--ac") {
         preset.parallel.ac_mode =
             AcMode::parse(&ac).ok_or_else(|| anyhow::anyhow!("bad --ac {ac} (ao|gpu|noac)"))?;
     }
-    if let Some(mb) = flag(rest, "--mb") {
-        preset.parallel.micro_batch =
-            mb.parse().map_err(|_| anyhow::anyhow!("bad --mb {mb}"))?;
+    if let Some(mb) = args.u64("--mb")? {
+        preset.parallel.micro_batch = mb;
     }
     preset
         .parallel
@@ -429,7 +407,7 @@ fn cmd_parity() -> anyhow::Result<()> {
 }
 
 fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
-    let steps: usize = rest.first().and_then(|s| s.parse().ok()).unwrap_or(100);
+    let steps = Args::new(rest).positional_usize(100);
     let rt = Runtime::load(&Runtime::default_dir())?;
     let mut tr = Trainer::new(&rt, 42)?;
     let mut corpus = MarkovCorpus::new(tr.vocab, 0.9, 7);
@@ -460,7 +438,7 @@ fn cmd_train(rest: &[String]) -> anyhow::Result<()> {
 }
 
 fn cmd_serve(rest: &[String]) -> anyhow::Result<()> {
-    let n: usize = rest.first().and_then(|s| s.parse().ok()).unwrap_or(20);
+    let n = Args::new(rest).positional_usize(20);
     let rt = Runtime::load(&Runtime::default_dir())?;
     let mut server = untied_ulysses::coordinator::server::Server::new(&rt, 3)?;
     let mut rng = Rng::new(4);

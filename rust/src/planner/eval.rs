@@ -32,6 +32,17 @@
 //! serializes on a global mutex. The whole sweep prices against the
 //! request's [`Calibration`] — default or `--refit`-fitted — whose
 //! provenance rides along into the outcome.
+//!
+//! Since the service redesign, every memo lives in a [`PlannerCaches`]
+//! owned by the *caller*: [`plan`] builds a fresh set per invocation (the
+//! one-shot CLI behaviour, unchanged), while [`plan_with`] lets a
+//! long-lived session — [`crate::service::PlannerService`], which backs
+//! `repro serve-plan` — reuse traces, probes, fitted models and verified
+//! walls across requests. A repeated request then replays entirely from
+//! memos (zero streamed probes, zero priced sims, bitwise-identical
+//! results), and [`walls_at`] answers point capacity questions ("can I
+//! train S tokens on this config?") from the session's verified walls or
+//! fitted polynomials without streaming anything.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
@@ -181,26 +192,130 @@ impl PlanOutcome {
 /// AC / micro-batch / TP variant of one method hits its wall near the
 /// others'. Under the symbolic solver this only seeds cells whose model
 /// fit failed; the hint is just a starting point either way — the
-/// galloping search stays correct however far off it is.
+/// galloping search stays correct however far off it is. (Per-call, not
+/// session state: hints are only meaningful between neighbours of one
+/// sweep, and keeping them out of [`PlannerCaches`] keeps per-request
+/// probe accounting reproducible.)
 type WarmKey = CpMethod;
 
-/// Sweep the whole configuration space for the request.
+/// Verified-wall memo key: the cell family plus everything else the wall
+/// depends on — micro-batch and pinning pick the exact sweep cell (so
+/// within a single sweep every cell keys uniquely and per-call probe
+/// accounting is unchanged by the memo), and the search lattice
+/// (quantum, rounded cap) pins the granularity the wall was verified at.
+type WallKey = (FamilyKey, u64, bool, u64, u64);
+
+/// Session-persistent evaluator state: every memo the sweep consults,
+/// owned by the caller instead of one `plan()` invocation. The one-shot
+/// [`plan`] wrapper builds a fresh set; the `PlannerService` session API
+/// keeps one alive across requests, so repeated requests replay from
+/// memos and new queries against already-swept families reuse fitted
+/// models and verified walls. Sharing is always safe: every key embeds
+/// the model and calibration fingerprints plus the full cell layout
+/// ([`CellKey`] / [`FamilyKey`]), so refit calibrations and different
+/// models/clusters never alias, and memoized walls are exact by the
+/// solver's verification contract.
+pub struct PlannerCaches {
+    /// Priced op traces (phase 2); pin variants share entries.
+    trace: TraceCache,
+    /// Pin-agnostic streamed peak probes (symbolic phase 1 samples and
+    /// wall verifications; also `walls_at`'s cold tier).
+    probe_memo: StripedMap<CellKey, PeakProbe>,
+    /// Budgeted feasibility probes (the `--cold` bisection path).
+    feas_memo: StripedMap<(CellKey, bool), Feasibility>,
+    /// Fully priced step reports (phase 2), keyed with pinning.
+    report_memo: StripedMap<(CellKey, bool), StepReport>,
+    /// Fitted symbolic peak models per cell family (`None` = the family's
+    /// samples failed the drift check; it bisects instead).
+    models: StripedMap<FamilyKey, Option<PeakModel>>,
+    /// Verified context walls (`None` = infeasible at one quantum).
+    walls: StripedMap<WallKey, Option<u64>>,
+}
+
+impl PlannerCaches {
+    pub fn new() -> Self {
+        PlannerCaches {
+            trace: TraceCache::new(),
+            probe_memo: StripedMap::default(),
+            feas_memo: StripedMap::default(),
+            report_memo: StripedMap::default(),
+            models: StripedMap::default(),
+            walls: StripedMap::default(),
+        }
+    }
+
+    /// Entry counts for observability (`/v1/health`): traces, peak
+    /// probes, budgeted probes, priced reports, fitted models, walls.
+    pub fn sizes(&self) -> [usize; 6] {
+        [
+            self.trace.len(),
+            self.probe_memo.len(),
+            self.feas_memo.len(),
+            self.report_memo.len(),
+            self.models.len(),
+            self.walls.len(),
+        ]
+    }
+
+    /// Evict everything (a long-lived daemon's pressure valve); the
+    /// session stays usable and simply re-evaluates on the next request.
+    pub fn clear(&self) {
+        self.trace.clear();
+        self.probe_memo.clear();
+        self.feas_memo.clear();
+        self.report_memo.clear();
+        self.models.clear();
+        self.walls.clear();
+    }
+}
+
+impl Default for PlannerCaches {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Sweep the whole configuration space with a fresh set of caches — the
+/// one-shot CLI path, byte-identical to the session path by construction.
 pub fn plan(req: &PlanRequest) -> PlanOutcome {
+    plan_with(req, &PlannerCaches::new())
+}
+
+/// Sweep the whole configuration space for the request, consulting (and
+/// filling) the caller-owned session caches. All probe/simulation/cache
+/// counters in the returned [`PlanOutcome`] are per-call deltas — a fully
+/// warm replay reports zero everywhere — except `symbolic_models` /
+/// `symbolic_fallbacks`, which count the session's fitted families.
+pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
     let t0 = Instant::now();
+    // `--cold` (symbolic and warm_start both off) is a measurement
+    // switch: it must exercise the probe-per-bisection path end to end,
+    // so it never reads a warm session's memos (a memoized wall or probe
+    // would turn the "reference path" into memo lookups). It runs against
+    // a private fresh cache set — exactly a one-shot CLI run — and leaves
+    // the session state untouched.
+    let fresh;
+    let caches = if req.symbolic || req.warm_start {
+        caches
+    } else {
+        fresh = PlannerCaches::new();
+        &fresh
+    };
     let space = enumerate_space(&req.model, &req.cluster, &req.dims);
-    let cache = TraceCache::new();
+    let cache = &caches.trace;
+    let (trace_hits0, trace_misses0) = (cache.hits(), cache.misses());
     let calib = req.calibration.clone();
     let gpus = req.cluster.total_gpus();
     let probes = AtomicU64::new(0);
     let priced = AtomicU64::new(0);
-    // Phase-specific memos, hashed keys + striped locks. The symbolic
-    // probe memo is pin-agnostic (CellKey already excludes pinning); the
-    // budgeted `--cold` memo and the pricing memo append pin_memory,
-    // which changes the host budget but not the trace.
-    let probe_memo: StripedMap<CellKey, PeakProbe> = StripedMap::default();
-    let feas_memo: StripedMap<(CellKey, bool), Feasibility> = StripedMap::default();
-    let report_memo: StripedMap<(CellKey, bool), StepReport> = StripedMap::default();
-    let models: StripedMap<FamilyKey, Option<PeakModel>> = StripedMap::default();
+    // Phase-specific memos, hashed keys + striped locks, owned by the
+    // session. The symbolic probe memo is pin-agnostic (CellKey already
+    // excludes pinning); the budgeted `--cold` memo and the pricing memo
+    // append pin_memory, which changes the host budget but not the trace.
+    let probe_memo = &caches.probe_memo;
+    let feas_memo = &caches.feas_memo;
+    let report_memo = &caches.report_memo;
+    let models = &caches.models;
     let warm: StripedMap<WarmKey, u64> = StripedMap::default();
     let quantum = req.quantum.max(1);
     let cap = (req.cap_s / quantum).max(1) * quantum;
@@ -267,7 +382,7 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
         if let Some(r) = report_memo.get(&key) {
             return r;
         }
-        let r = simulate_cached(&preset, &calib, &cache);
+        let r = simulate_cached(&preset, &calib, cache);
         priced.fetch_add(1, Ordering::Relaxed);
         report_memo.insert(key, r)
     };
@@ -275,7 +390,15 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
 
     let mut evaluated = parallel_map(&space, req.threads, |_, p| {
         let wkey: WarmKey = p.method;
-        let max = if req.symbolic {
+        let fam = CellKey::new(&preset_of(p, quantum), &calib).family();
+        let wall_key: WallKey = (fam, p.micro_batch, p.pin_memory, quantum, cap);
+        // A wall verified by an earlier request in this session is exact
+        // (the solver's verification contract), so recomputing could only
+        // reproduce it — a warm replay of the whole sweep probes nothing.
+        let memoized_wall = caches.walls.get(&wall_key);
+        let max = if let Some(w) = memoized_wall {
+            w
+        } else if req.symbolic {
             // Budgets and limits for this cell (S-independent).
             let qd = Quantities::new(&preset_of(p, quantum));
             let host_budget = qd.host_ram_for_offload();
@@ -287,7 +410,6 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
                 Some(mc) => ((mc / quantum) * quantum).min(cap),
                 None => cap,
             };
-            let fam = CellKey::new(&preset_of(p, quantum), &calib).family();
             // Check-then-act: workers racing on a cold family may fit it
             // more than once (first insert wins, extras are discarded) —
             // the same benign-race policy as the trace cache, chosen over
@@ -317,6 +439,9 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
             let hint = if req.warm_start { warm.get(&wkey) } else { None };
             bisect_max_from(quantum, cap, hint, |s| feasible(p, s))
         };
+        if memoized_wall.is_none() {
+            caches.walls.insert(wall_key, max);
+        }
         if req.warm_start {
             // First finisher seeds the family; later fallback cells
             // gallop from it. An infeasible family still seeds the
@@ -399,9 +524,158 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
         symbolic_models: fitted,
         symbolic_fallbacks: fallbacks,
         feasibility_only: req.feasibility_only,
-        cache_hits: cache.hits(),
-        cache_misses: cache.misses(),
+        // Per-call deltas: the session's trace cache outlives the request.
+        cache_hits: cache.hits() - trace_hits0,
+        cache_misses: cache.misses() - trace_misses0,
         wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
+/// One configuration's answer to a point capacity query ([`walls_at`]).
+#[derive(Debug, Clone)]
+pub struct WallAt {
+    pub parallel: ParallelConfig,
+    /// Trainable at the query's lattice point?
+    pub feasible: bool,
+    /// Device-peak prediction at the lattice point, GiB — from the
+    /// family's fitted model, or from the probe itself on the cold tier
+    /// (`None` for fallback families answered by a memoized wall).
+    pub predicted_peak_gib: Option<f64>,
+    pub source: WallSource,
+}
+
+/// Which tier answered a point query — strongest first.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WallSource {
+    /// A wall verified by an earlier sweep in this session: exact.
+    VerifiedWall,
+    /// The family's fitted peak polynomial: zero probes, exact up to the
+    /// drift contract plus the allocator's bucketed-reservation slack.
+    Model,
+    /// A streamed kernel probe (cold family; memoized for next time).
+    Probe,
+}
+
+impl WallSource {
+    pub fn label(&self) -> &'static str {
+        match self {
+            WallSource::VerifiedWall => "wall",
+            WallSource::Model => "model",
+            WallSource::Probe => "probe",
+        }
+    }
+}
+
+/// A point capacity query's full answer (one row per sweep configuration).
+#[derive(Debug, Clone)]
+pub struct WallsAtOutcome {
+    pub model: ModelDims,
+    pub cluster: ClusterConfig,
+    /// The queried sequence length, verbatim.
+    pub seq: u64,
+    /// `seq` rounded up to the search lattice — walls are verified at
+    /// quantum granularity, and feasibility is monotone in S, so the
+    /// covering lattice point answers conservatively.
+    pub seq_lattice: u64,
+    pub quantum: u64,
+    pub cells: Vec<WallAt>,
+    /// Streamed kernel probes this query ran (0 once the session is warm
+    /// for this model/calibration/lattice).
+    pub probes: u64,
+    pub from_walls: u64,
+    pub from_models: u64,
+    pub from_probes: u64,
+}
+
+/// Point capacity query: "is sequence length `seq` trainable?" for every
+/// configuration in the request's sweep space — the session's warm-path
+/// Q&A (`POST /v1/walls {"at": ...}`). Three answer tiers, strongest
+/// first: a verified wall memoized by an earlier sweep on the same
+/// lattice (exact, zero probes), the family's fitted peak polynomial
+/// (zero probes, prediction), or a streamed kernel probe (cold family —
+/// memoized under its [`CellKey`] for next time). After any full sweep
+/// with the same model/calibration/lattice, every configuration answers
+/// from tier 1.
+pub fn walls_at(req: &PlanRequest, seq: u64, caches: &PlannerCaches) -> WallsAtOutcome {
+    let space = enumerate_space(&req.model, &req.cluster, &req.dims);
+    let calib = req.calibration.clone();
+    let quantum = req.quantum.max(1);
+    let cap = (req.cap_s / quantum).max(1) * quantum;
+    let s_lat = seq.div_ceil(quantum).max(1) * quantum;
+    let probes = AtomicU64::new(0);
+    let preset_of = |parallel: &ParallelConfig, s: u64| RunPreset {
+        model: req.model.clone(),
+        cluster: req.cluster.clone(),
+        parallel: parallel.clone(),
+        seq_len: s,
+    };
+    let cells = parallel_map(&space, req.threads, |_, p| {
+        let fam = CellKey::new(&preset_of(p, quantum), &calib).family();
+        let c = p.cp_degree.max(1);
+        let model = caches.models.get(&fam).flatten();
+        let predicted = model.map(|m| m.predict_peak(s_lat / c) / GIB);
+        let cell = |feasible: bool, peak: Option<f64>, source: WallSource| WallAt {
+            parallel: p.clone(),
+            feasible,
+            predicted_peak_gib: peak,
+            source,
+        };
+        if let Some(w) = caches.walls.get(&(fam, p.micro_batch, p.pin_memory, quantum, cap)) {
+            match w {
+                Some(wall) if s_lat <= wall => {
+                    return cell(true, predicted, WallSource::VerifiedWall);
+                }
+                // A wall strictly below the cap is a real memory/method
+                // wall; monotone feasibility answers any longer S.
+                Some(wall) if wall < cap => {
+                    return cell(false, predicted, WallSource::VerifiedWall);
+                }
+                None => return cell(false, predicted, WallSource::VerifiedWall),
+                // The memoized search hit its cap while still feasible
+                // and the query lies beyond it: the memo cannot answer.
+                Some(_) => {}
+            }
+        }
+        if let Some(m) = model {
+            let qd = Quantities::new(&preset_of(p, s_lat));
+            let beyond = method_seq_cap(p.method).is_some_and(|mc| s_lat > mc);
+            let ok = !beyond
+                && m.predict_feasible(s_lat / c, qd.hbm_limit, qd.host_ram_for_offload());
+            return cell(ok, predicted, WallSource::Model);
+        }
+        // Cold tier: one streamed probe, memoized under its CellKey.
+        let preset = preset_of(p, s_lat);
+        let key = CellKey::new(&preset, &calib);
+        let pr = match caches.probe_memo.get(&key) {
+            Some(pr) => pr,
+            None => {
+                probes.fetch_add(1, Ordering::Relaxed);
+                caches.probe_memo.insert(key, peak_probe_with(&preset, &calib))
+            }
+        };
+        let budget = Quantities::new(&preset).host_ram_for_offload();
+        let peak = if pr.clean() { Some(pr.peak_bytes / GIB) } else { predicted };
+        cell(pr.feasible_with_host(budget), peak, WallSource::Probe)
+    });
+    let mut from = [0u64; 3];
+    for c in &cells {
+        match c.source {
+            WallSource::VerifiedWall => from[0] += 1,
+            WallSource::Model => from[1] += 1,
+            WallSource::Probe => from[2] += 1,
+        }
+    }
+    WallsAtOutcome {
+        model: req.model.clone(),
+        cluster: req.cluster.clone(),
+        seq,
+        seq_lattice: s_lat,
+        quantum,
+        probes: probes.load(Ordering::Relaxed),
+        from_walls: from[0],
+        from_models: from[1],
+        from_probes: from[2],
+        cells,
     }
 }
 
@@ -653,6 +927,113 @@ mod tests {
         assert!(one >= 5 << 20, "single node must reach the 5M headline");
         assert!(four >= one, "4-node best wall {four} below single-node {one}");
         assert!(eight >= four, "8-node best wall {eight} below 4-node {four}");
+    }
+
+    fn assert_configs_bitwise_equal(a: &PlanOutcome, b: &PlanOutcome) {
+        assert_eq!(a.configs.len(), b.configs.len());
+        let bits = |v: Option<f64>| v.map(f64::to_bits);
+        for (x, y) in a.configs.iter().zip(&b.configs) {
+            assert_eq!(x.parallel, y.parallel, "ranking order must match");
+            assert_eq!(x.max_context, y.max_context, "{:?}", x.parallel);
+            assert_eq!(x.hit_cap, y.hit_cap, "{:?}", x.parallel);
+            assert_eq!(bits(x.max_ctx_peak_gib), bits(y.max_ctx_peak_gib), "{:?}", x.parallel);
+            assert_eq!(bits(x.max_ctx_tok_s_gpu), bits(y.max_ctx_tok_s_gpu), "{:?}", x.parallel);
+            assert_eq!(bits(x.ref_peak_gib), bits(y.ref_peak_gib), "{:?}", x.parallel);
+            assert_eq!(bits(x.ref_tok_s_gpu), bits(y.ref_tok_s_gpu), "{:?}", x.parallel);
+            assert_eq!(x.pareto, y.pareto, "{:?}", x.parallel);
+        }
+    }
+
+    #[test]
+    fn session_caches_replay_bitwise_identical_and_probe_free() {
+        // The service acceptance gate at the evaluator layer: a repeated
+        // request against one cache set must be served entirely from
+        // memos — zero streamed probes, zero priced sims, zero trace
+        // builds — with every field bitwise-identical to both the cold
+        // session pass and a fresh one-shot `plan()`.
+        let caches = PlannerCaches::new();
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 2;
+        let cold = plan_with(&req, &caches);
+        assert!(cold.feasibility_probes > 0 && cold.priced_sims > 0);
+        let warm = plan_with(&req, &caches);
+        assert_eq!(warm.feasibility_probes, 0, "verified walls must be memoized");
+        assert_eq!(warm.priced_sims, 0, "priced reports must be memoized");
+        assert_eq!(warm.cache_misses, 0, "no new traces on a warm replay");
+        assert_configs_bitwise_equal(&warm, &cold);
+        let one_shot = plan(&req);
+        assert_configs_bitwise_equal(&warm, &one_shot);
+        // Cache observability: the session actually accumulated state.
+        let sizes = caches.sizes();
+        assert!(sizes.iter().any(|&n| n > 0), "caches stayed empty: {sizes:?}");
+        assert!(sizes[5] > 0, "no verified walls memoized");
+        caches.clear();
+        assert_eq!(caches.sizes(), [0; 6]);
+        // A cleared session re-evaluates and still agrees.
+        let refilled = plan_with(&req, &caches);
+        assert!(refilled.feasibility_probes > 0);
+        assert_configs_bitwise_equal(&refilled, &cold);
+    }
+
+    #[test]
+    fn walls_at_answers_from_memos_after_a_sweep() {
+        let caches = PlannerCaches::new();
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 2;
+        req.feasibility_only = true;
+        // Cold point query: nothing is memoized, every family probes.
+        let cold_q = walls_at(&req, 6 << 20, &caches);
+        assert!(cold_q.probes > 0, "cold query must stream probes");
+        assert_eq!(cold_q.from_walls, 0);
+        assert_eq!(cold_q.from_probes, cold_q.cells.len() as u64);
+        // Sweep, then requery: every configuration answers from its
+        // verified wall with zero streamed probes — the warm-session
+        // acceptance property.
+        let out = plan_with(&req, &caches);
+        let warm_q = walls_at(&req, 6 << 20, &caches);
+        assert_eq!(warm_q.probes, 0, "warm query must not stream");
+        assert_eq!(warm_q.from_probes, 0);
+        assert_eq!(warm_q.from_walls, warm_q.cells.len() as u64);
+        assert_eq!(warm_q.seq_lattice, 6 << 20);
+        // Warm answers equal the swept walls *and* the cold probes.
+        for cell in &warm_q.cells {
+            let planned = out.configs.iter().find(|c| c.parallel == cell.parallel).unwrap();
+            let want = planned.max_context.is_some_and(|w| warm_q.seq_lattice <= w);
+            assert_eq!(cell.feasible, want, "{:?}", cell.parallel);
+        }
+        for (a, b) in cold_q.cells.iter().zip(&warm_q.cells) {
+            assert_eq!(a.parallel, b.parallel);
+            assert_eq!(a.feasible, b.feasible, "{:?}", a.parallel);
+        }
+    }
+
+    #[test]
+    fn walls_at_model_tier_when_lattice_differs() {
+        // A query on a *different* search lattice misses the wall memo but
+        // still answers fitted families from their polynomials — the
+        // "fitted polynomial path, zero streamed probes" tier.
+        let caches = PlannerCaches::new();
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 1;
+        req.feasibility_only = true;
+        plan_with(&req, &caches);
+        let mut req2 = req.clone();
+        req2.cap_s = 16 << 20; // new lattice cap: wall memo keys miss
+        let q = walls_at(&req2, 2 << 20, &caches);
+        assert_eq!(q.from_walls, 0, "different lattice must miss the wall memo");
+        assert!(q.from_models > 0, "fitted families answer from the polynomial");
+        for cell in q.cells.iter().filter(|c| c.source == WallSource::Model) {
+            assert!(cell.predicted_peak_gib.is_some(), "{:?}", cell.parallel);
+        }
+        // Off-lattice query lengths quantize up.
+        let q2 = walls_at(&req, (2 << 20) + 5, &caches);
+        assert_eq!(q2.seq_lattice, 3 << 20);
     }
 
     #[test]

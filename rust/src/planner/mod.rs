@@ -24,11 +24,21 @@
 //! output, `--feasibility-only` for walls-only sweeps, `--cold` for the
 //! probe-per-bisection reference path) and rendered by
 //! [`crate::report::planner`].
+//!
+//! All evaluator memos live in a caller-owned [`PlannerCaches`]: [`plan`]
+//! is the one-shot wrapper (fresh caches per call), [`plan_with`] the
+//! session entry point [`crate::service::PlannerService`] keeps warm
+//! across requests, and [`walls_at`] answers point capacity queries from
+//! a warm session's verified walls / fitted models with zero streamed
+//! probes.
 
 pub mod eval;
 pub mod search;
 pub mod space;
 
-pub use eval::{plan, ConfigPlan, PlanOutcome, PlanRequest};
+pub use eval::{
+    plan, plan_with, walls_at, ConfigPlan, PlanOutcome, PlanRequest, PlannerCaches, WallAt,
+    WallSource, WallsAtOutcome,
+};
 pub use search::{bisect_max, bisect_max_from, pareto_front};
 pub use space::{enumerate_space, SweepDims};

@@ -5,7 +5,7 @@
 //! runs, the calibration provenance.
 
 use crate::engine::RefitInfo;
-use crate::planner::{ConfigPlan, PlanOutcome};
+use crate::planner::{ConfigPlan, PlanOutcome, WallsAtOutcome};
 use crate::util::fmt::tokens;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -194,7 +194,9 @@ fn config_json(c: &ConfigPlan) -> Json {
     ])
 }
 
-fn refit_json(r: &RefitInfo) -> Json {
+/// Refit provenance as JSON (shared by the CLI plan output and the
+/// service's `/v1/refit` response).
+pub fn refit_json(r: &RefitInfo) -> Json {
     Json::obj(vec![
         ("source", Json::string(&r.source)),
         ("model", Json::string(&r.model)),
@@ -223,12 +225,13 @@ fn refit_json(r: &RefitInfo) -> Json {
     ])
 }
 
-fn outcome_json(out: &PlanOutcome, configs: Vec<Json>) -> Json {
-    let cache = Json::obj(vec![
-        ("hits", Json::int(out.cache_hits)),
-        ("misses", Json::int(out.cache_misses)),
-    ]);
-    Json::obj(vec![
+/// The deterministic plan core: every field a repeated request must
+/// reproduce byte-for-byte — what the wire protocol serves as `result`.
+/// Run accounting (probe/sim counters, cache hits, wall-clock) stays out
+/// deliberately: a warm session answers from memos, so those numbers
+/// describe one run, not the plan.
+fn core_pairs(out: &PlanOutcome, configs: Vec<Json>) -> Vec<(&'static str, Json)> {
+    vec![
         ("model", Json::string(out.model.name)),
         ("cluster", Json::string(out.cluster.name)),
         ("gpus", Json::int(out.cluster.total_gpus())),
@@ -240,6 +243,18 @@ fn outcome_json(out: &PlanOutcome, configs: Vec<Json>) -> Json {
         ),
         ("feasibility_only", Json::Bool(out.feasibility_only)),
         ("configs", Json::Arr(configs)),
+    ]
+}
+
+/// Per-run accounting: appended to the CLI JSON (whose consumers — the
+/// bench diff, the CI artifacts — want the search cost), excluded from
+/// the service `result` (whose contract is bitwise determinism).
+fn accounting_pairs(out: &PlanOutcome) -> Vec<(&'static str, Json)> {
+    let cache = Json::obj(vec![
+        ("hits", Json::int(out.cache_hits)),
+        ("misses", Json::int(out.cache_misses)),
+    ]);
+    vec![
         ("simulations", Json::int(out.simulations)),
         ("feasibility_probes", Json::int(out.feasibility_probes)),
         ("priced_sims", Json::int(out.priced_sims)),
@@ -247,10 +262,17 @@ fn outcome_json(out: &PlanOutcome, configs: Vec<Json>) -> Json {
         ("symbolic_fallbacks", Json::int(out.symbolic_fallbacks)),
         ("trace_cache", cache),
         ("wall_s", Json::Num(out.wall_s)),
-    ])
+    ]
 }
 
-/// Machine-readable plan (`repro plan --json`).
+fn outcome_json(out: &PlanOutcome, configs: Vec<Json>) -> Json {
+    let mut pairs = core_pairs(out, configs);
+    pairs.extend(accounting_pairs(out));
+    Json::obj(pairs)
+}
+
+/// Machine-readable plan (`repro plan --json`): the deterministic core
+/// plus this run's accounting.
 pub fn plan_json(out: &PlanOutcome) -> Json {
     outcome_json(out, out.configs.iter().map(config_json).collect())
 }
@@ -263,6 +285,70 @@ pub fn frontier_json(out: &PlanOutcome) -> Json {
         return plan_json(out);
     }
     outcome_json(out, out.frontier().into_iter().map(config_json).collect())
+}
+
+/// The deterministic plan core alone — the `result` field of a `/v1/plan`
+/// (or walls-sweep `/v1/walls`) response. Identical requests must render
+/// this byte-for-byte, warm or cold.
+pub fn plan_result_json(out: &PlanOutcome) -> Json {
+    Json::obj(core_pairs(out, out.configs.iter().map(config_json).collect()))
+}
+
+/// The deterministic frontier core — the `result` of `/v1/frontier`
+/// (degrades like [`frontier_json`] for feasibility-only sweeps).
+pub fn frontier_result_json(out: &PlanOutcome) -> Json {
+    if out.feasibility_only {
+        return plan_result_json(out);
+    }
+    Json::obj(core_pairs(out, out.frontier().into_iter().map(config_json).collect()))
+}
+
+/// A point capacity query's answer — the `result` of `/v1/walls` with
+/// `"at"`. `probes` is part of the payload on purpose: "zero streamed
+/// probes on a warm session" is the service's observable contract, and
+/// the CI smoke greps for it.
+pub fn walls_at_json(q: &WallsAtOutcome) -> Json {
+    let cells = q
+        .cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("method", Json::string(c.parallel.method.label())),
+                ("params", Json::string(&c.parallel.method.params())),
+                ("ac_mode", Json::string(c.parallel.ac_mode.label())),
+                ("micro_batch", Json::int(c.parallel.micro_batch)),
+                ("tp", Json::int(c.parallel.tp)),
+                ("pin_memory", Json::Bool(c.parallel.pin_memory)),
+                ("cp_degree", Json::int(c.parallel.cp_degree)),
+                ("feasible", Json::Bool(c.feasible)),
+                (
+                    "predicted_peak_gib",
+                    c.predicted_peak_gib.map(Json::Num).unwrap_or(Json::Null),
+                ),
+                ("source", Json::string(c.source.label())),
+            ])
+        })
+        .collect();
+    let feasible = q.cells.iter().filter(|c| c.feasible).count() as u64;
+    Json::obj(vec![
+        ("model", Json::string(q.model.name)),
+        ("cluster", Json::string(q.cluster.name)),
+        ("gpus", Json::int(q.cluster.total_gpus())),
+        ("seq", Json::int(q.seq)),
+        ("seq_lattice", Json::int(q.seq_lattice)),
+        ("quantum", Json::int(q.quantum)),
+        ("feasible_configs", Json::int(feasible)),
+        ("cells", Json::Arr(cells)),
+        (
+            "sources",
+            Json::obj(vec![
+                ("wall", Json::int(q.from_walls)),
+                ("model", Json::int(q.from_models)),
+                ("probe", Json::int(q.from_probes)),
+            ]),
+        ),
+        ("probes", Json::int(q.probes)),
+    ])
 }
 
 #[cfg(test)]
@@ -355,6 +441,39 @@ mod tests {
         assert!(j.starts_with('{') && j.ends_with('}'));
         let fj = frontier_json(&out).render();
         assert!(fj.contains("\"pareto\":true"));
+    }
+
+    #[test]
+    fn result_core_is_deterministic_prefix_of_plan_json() {
+        use crate::planner::{plan_with, walls_at, PlannerCaches};
+        let req = small_req();
+        let caches = PlannerCaches::new();
+        let cold = plan_with(&req, &caches);
+        let warm = plan_with(&req, &caches);
+        // The deterministic core must not carry run accounting...
+        let core = plan_result_json(&cold).render();
+        assert!(!core.contains("\"wall_s\""), "{core}");
+        assert!(!core.contains("\"simulations\""));
+        assert!(!core.contains("\"trace_cache\""));
+        assert!(core.contains("\"configs\""));
+        // ...and renders byte-identically warm and cold, while the full
+        // CLI JSON keeps the accounting fields (different between runs).
+        assert_eq!(core, plan_result_json(&warm).render());
+        let full = plan_json(&cold).render();
+        assert!(full.contains("\"wall_s\""));
+        assert!(full.starts_with(&core[..core.len() - 1]), "core must prefix the full JSON");
+        // Frontier core: only Pareto rows.
+        let fr = frontier_result_json(&cold).render();
+        assert!(fr.contains("\"pareto\":true"));
+        assert!(!fr.contains("\"pareto\":false"));
+        assert!(!fr.contains("\"wall_s\""));
+        // Point-query rendering carries sources and the probe count.
+        let q = walls_at(&req, 2 << 20, &caches);
+        let qj = walls_at_json(&q).render();
+        assert!(qj.contains("\"seq_lattice\":2097152"), "{qj}");
+        assert!(qj.contains("\"sources\""));
+        assert!(qj.contains("\"probes\":"));
+        assert!(qj.contains("\"feasible\":true"));
     }
 
     #[test]

@@ -21,6 +21,11 @@
 //! figures. [`TraceCache`] memoizes priced traces under hashed [`CellKey`]s
 //! in a lock-striped map, so pin variants and report replays skip straight
 //! to pricing without serializing the worker pool on one global mutex.
+//! The cache is owned by whoever scopes the evaluation — a one-shot
+//! `plan()` call builds a private one, while the planner service's
+//! session caches ([`crate::planner::PlannerCaches`]) keep one alive
+//! across requests; [`TraceCache::clear`] is the eviction valve for that
+//! long-lived case.
 
 pub mod common;
 pub mod compose;
@@ -310,6 +315,12 @@ impl TraceCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Drop every memoized trace (hit/miss counters keep running — they
+    /// are lifetime totals; per-request deltas are the caller's job).
+    pub fn clear(&self) {
+        self.traces.clear();
+    }
 }
 
 #[cfg(test)]
@@ -359,6 +370,20 @@ mod tests {
             stream_trace_with(&p, &cal, &mut streamed);
             assert_eq!(collected, streamed, "{m:?}");
         }
+    }
+
+    #[test]
+    fn trace_cache_clear_evicts_but_keeps_counting() {
+        let cache = TraceCache::new();
+        let cal = Calibration::default();
+        let p = llama_single_node(CpMethod::Ulysses, 1 << 20);
+        simulate_cached(&p, &cal, &cache);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 1, 1));
+        cache.clear();
+        assert!(cache.is_empty());
+        // Replay rebuilds (a miss): counters are lifetime totals.
+        simulate_cached(&p, &cal, &cache);
+        assert_eq!((cache.hits(), cache.misses(), cache.len()), (0, 2, 1));
     }
 
     #[test]

@@ -1,0 +1,613 @@
+//! `repro serve-plan`: a dependency-free HTTP/1.1 front-end over one
+//! [`PlannerService`] session. A std `TcpListener` accept loop feeds a
+//! [`JobQueue`] drained by N worker threads (the same pool philosophy as
+//! the sweep evaluator: no async runtime, no framework — the offline
+//! vendor set has neither), each connection handled read → route →
+//! respond with `Connection: close`.
+//!
+//! Endpoints (wire dialect: [`super::wire`], `api_version 1`):
+//!
+//! | method + path      | body                          | result            |
+//! |--------------------|-------------------------------|-------------------|
+//! | `POST /v1/plan`    | plan params                   | ranked plan       |
+//! | `POST /v1/walls`   | plan params (+ `"at"`)        | walls sweep / point query |
+//! | `POST /v1/frontier`| plan params                   | Pareto frontier   |
+//! | `POST /v1/refit`   | `{"measurements": {...}}`     | refit provenance  |
+//! | `GET  /v1/health`  | —                             | status, per-endpoint p50/p95 + hit rates, cache sizes |
+//!
+//! Every error is a structured JSON envelope (`error.code` /
+//! `error.message`) with a matching status code; handler panics are
+//! caught and answered as 500s so one bad request cannot take the daemon
+//! down.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::report::planner as planner_report;
+use crate::util::json::Json;
+use crate::util::pool::{default_threads, JobQueue};
+
+use super::wire::{self, PlanParams, RefitParams, WallsParams, API_VERSION};
+use super::PlannerService;
+
+/// Request-size ceilings: a header block or body beyond these is refused
+/// with a structured error rather than buffered without bound.
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// Per-connection socket timeout — a stalled peer releases its worker.
+const IO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Connection-queue depth bound: handlers can hold workers for seconds
+/// (a cold sweep), so without a bound a connection burst would buffer
+/// sockets — and file descriptors — without limit. Beyond this depth the
+/// accept loop answers 503 inline and drops the connection.
+const MAX_QUEUED_CONNECTIONS: usize = 128;
+
+/// Endpoint identities for the latency/hit-rate stats (index = slot).
+const ENDPOINTS: [&str; 6] = ["plan", "walls", "frontier", "refit", "health", "other"];
+const EP_PLAN: usize = 0;
+const EP_WALLS: usize = 1;
+const EP_FRONTIER: usize = 2;
+const EP_REFIT: usize = 3;
+const EP_HEALTH: usize = 4;
+const EP_OTHER: usize = 5;
+
+/// Per-endpoint request accounting, `coordinator::server::ServerStats`
+/// style: served/error counts plus latency percentiles.
+#[derive(Default)]
+struct EndpointAgg {
+    served: u64,
+    errors: u64,
+    latencies_ms: Vec<f64>,
+}
+
+impl EndpointAgg {
+    fn percentile(&self, q: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut ls = self.latencies_ms.clone();
+        ls.sort_by(f64::total_cmp);
+        ls[((ls.len() as f64 - 1.0) * q) as usize]
+    }
+}
+
+struct HttpStats {
+    endpoints: [Mutex<EndpointAgg>; 6],
+    started: Instant,
+}
+
+impl HttpStats {
+    fn new() -> Self {
+        HttpStats {
+            endpoints: std::array::from_fn(|_| Mutex::new(EndpointAgg::default())),
+            started: Instant::now(),
+        }
+    }
+
+    fn record(&self, ep: usize, ok: bool, ms: f64) {
+        let mut agg = self.endpoints[ep].lock().unwrap();
+        agg.served += 1;
+        if !ok {
+            agg.errors += 1;
+        }
+        agg.latencies_ms.push(ms);
+        // Bound memory on a long-lived daemon: keep the recent half.
+        if agg.latencies_ms.len() > 4096 {
+            agg.latencies_ms.drain(..2048);
+        }
+    }
+
+    fn json(&self) -> Json {
+        let eps = ENDPOINTS
+            .iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let agg = self.endpoints[i].lock().unwrap();
+                let body = Json::obj(vec![
+                    ("served", Json::int(agg.served)),
+                    ("errors", Json::int(agg.errors)),
+                    ("p50_ms", Json::Num(agg.percentile(0.5))),
+                    ("p95_ms", Json::Num(agg.percentile(0.95))),
+                ]);
+                (name.to_string(), body)
+            })
+            .collect();
+        Json::Obj(eps)
+    }
+}
+
+/// A running daemon: its bound address plus the handles needed to stop
+/// it cleanly (tests) or block on it forever (the CLI daemon).
+pub struct ServeHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<JobQueue<TcpStream>>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain in-flight connections, join every thread.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // Wake the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Block until the process dies — the `repro serve-plan` foreground
+    /// path.
+    pub fn join(mut self) {
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:8077`; port 0 picks a free one) and serve
+/// the session on `threads` workers (0 = auto, capped — handlers hold the
+/// planner's own worker pool busy, so a few are plenty).
+pub fn serve(
+    service: Arc<PlannerService>,
+    addr: &str,
+    threads: usize,
+) -> std::io::Result<ServeHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let bound = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let queue: Arc<JobQueue<TcpStream>> = Arc::new(JobQueue::new());
+    let stats = Arc::new(HttpStats::new());
+    let threads = if threads == 0 { default_threads().min(4) } else { threads };
+    let mut workers = Vec::new();
+    for _ in 0..threads.max(1) {
+        let q = Arc::clone(&queue);
+        let svc = Arc::clone(&service);
+        let st = Arc::clone(&stats);
+        workers.push(std::thread::spawn(move || {
+            while let Some(stream) = q.pop() {
+                handle_connection(&svc, &st, stream);
+            }
+        }));
+    }
+    let accept = {
+        let q = Arc::clone(&queue);
+        let stop = Arc::clone(&stop);
+        Some(std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                if let Ok(mut stream) = conn {
+                    // Backpressure: shed load with a fast 503 instead of
+                    // buffering sockets (= file descriptors) unboundedly
+                    // while the workers grind long sweeps.
+                    if q.len() >= MAX_QUEUED_CONNECTIONS {
+                        let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+                        let body = wire::error_envelope(
+                            "overloaded",
+                            "request queue is full; retry later",
+                        );
+                        write_response(&mut stream, 503, &body);
+                        continue;
+                    }
+                    q.push(stream);
+                }
+            }
+        }))
+    };
+    Ok(ServeHandle { addr: bound, stop, queue, accept, workers })
+}
+
+struct HttpError {
+    status: u16,
+    code: &'static str,
+    message: String,
+}
+
+impl HttpError {
+    fn bad(message: impl Into<String>) -> Self {
+        HttpError { status: 400, code: "bad_request", message: message.into() }
+    }
+}
+
+fn handle_connection(service: &PlannerService, stats: &HttpStats, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let (status, body) = match read_request(&mut stream) {
+        Ok((method, path, body)) => {
+            let t0 = Instant::now();
+            let (ep, resp) = route(service, stats, &method, &path, &body);
+            stats.record(ep, resp.0 < 400, t0.elapsed().as_secs_f64() * 1e3);
+            resp
+        }
+        Err(e) => {
+            // Unreadable/oversized requests never reach routing; count
+            // them under "other" so /v1/health still sees the errors.
+            stats.record(EP_OTHER, false, 0.0);
+            (e.status, wire::error_envelope(e.code, &e.message))
+        }
+    };
+    write_response(&mut stream, status, &body);
+}
+
+fn known_path(path: &str) -> bool {
+    ["/v1/plan", "/v1/walls", "/v1/frontier", "/v1/refit", "/v1/health"].contains(&path)
+}
+
+fn route(
+    service: &PlannerService,
+    stats: &HttpStats,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> (usize, (u16, Json)) {
+    match (method, path) {
+        ("GET", "/v1/health") => (EP_HEALTH, (200, health_json(service, stats))),
+        ("POST", "/v1/plan") => (EP_PLAN, guarded(|| plan_endpoint(service, body, false))),
+        ("POST", "/v1/frontier") => (EP_FRONTIER, guarded(|| plan_endpoint(service, body, true))),
+        ("POST", "/v1/walls") => (EP_WALLS, guarded(|| walls_endpoint(service, body))),
+        ("POST", "/v1/refit") => (EP_REFIT, guarded(|| refit_endpoint(service, body))),
+        (_, p) if known_path(p) => {
+            let msg = format!("{method} not supported on {p}");
+            (EP_OTHER, (405, wire::error_envelope("method_not_allowed", &msg)))
+        }
+        (_, p) => {
+            let msg = format!("no such endpoint `{p}` (api_version {API_VERSION})");
+            (EP_OTHER, (404, wire::error_envelope("not_found", &msg)))
+        }
+    }
+}
+
+/// Run a handler with a panic firewall: a panicking request answers 500
+/// and the daemon lives on.
+fn guarded(f: impl FnOnce() -> (u16, Json)) -> (u16, Json) {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(resp) => resp,
+        Err(_) => (500, wire::error_envelope("internal", "request handler panicked")),
+    }
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, String> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| "request body is not valid UTF-8".to_string())?;
+    if text.trim().is_empty() {
+        // An explicitly empty body (Content-Length: 0, e.g. `curl -d ''`)
+        // means "all defaults"; a POST with *unknown* length is rejected
+        // upstream in `read_request`.
+        return Ok(Json::obj(vec![]));
+    }
+    Json::parse(text)
+}
+
+fn plan_endpoint(service: &PlannerService, body: &[u8], frontier: bool) -> (u16, Json) {
+    let params = match parse_body(body).and_then(|j| PlanParams::from_json(&j)) {
+        Ok(p) => p,
+        Err(e) => return (400, wire::error_envelope("bad_request", &e)),
+    };
+    match service.plan(&params) {
+        Ok(reply) => {
+            let (kind, result) = if frontier {
+                ("frontier", planner_report::frontier_result_json(&reply.outcome))
+            } else {
+                ("plan", planner_report::plan_result_json(&reply.outcome))
+            };
+            (200, wire::envelope(kind, params.canonical(), &reply.warnings, result))
+        }
+        Err(e) => (400, wire::error_envelope("bad_request", &e)),
+    }
+}
+
+fn walls_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json) {
+    let mut params = match parse_body(body).and_then(|j| WallsParams::from_json(&j)) {
+        Ok(p) => p,
+        Err(e) => return (400, wire::error_envelope("bad_request", &e)),
+    };
+    match params.at {
+        Some(at) => match service.walls_point(&params.plan, at) {
+            Ok((q, warnings)) => {
+                let result = planner_report::walls_at_json(&q);
+                (200, wire::envelope("walls_at", params.canonical(), &warnings, result))
+            }
+            Err(e) => (400, wire::error_envelope("bad_request", &e)),
+        },
+        None => {
+            // A walls sweep *is* a feasibility-only plan; force the flag
+            // before both execution and the echo, so the canonical
+            // `request` matches what was actually memoized and a client
+            // replaying the echo gets the same sweep back.
+            params.plan.feasibility_only = true;
+            match service.walls_sweep(&params.plan) {
+                Ok(reply) => {
+                    let result = planner_report::plan_result_json(&reply.outcome);
+                    (200, wire::envelope("walls", params.canonical(), &reply.warnings, result))
+                }
+                Err(e) => (400, wire::error_envelope("bad_request", &e)),
+            }
+        }
+    }
+}
+
+fn refit_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json) {
+    let params = match parse_body(body).and_then(|j| RefitParams::from_json(&j)) {
+        Ok(p) => p,
+        Err(e) => return (400, wire::error_envelope("bad_request", &e)),
+    };
+    match service.refit(&params) {
+        Ok(reply) => {
+            let result = Json::obj(vec![
+                ("refit", planner_report::refit_json(&reply.info)),
+                (
+                    "calibration_fingerprint",
+                    Json::string(&format!("{:016x}", reply.calibration_fingerprint)),
+                ),
+            ]);
+            (200, wire::envelope("refit", params.canonical(), &reply.warnings, result))
+        }
+        Err(e) => (400, wire::error_envelope("bad_request", &e)),
+    }
+}
+
+fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
+    let st = service.stats();
+    let sizes = service.caches().sizes();
+    Json::obj(vec![
+        ("api_version", Json::int(API_VERSION)),
+        ("status", Json::string("ok")),
+        ("uptime_s", Json::Num(stats.started.elapsed().as_secs_f64())),
+        ("endpoints", stats.json()),
+        (
+            "service",
+            Json::obj(vec![
+                ("plan_requests", Json::int(st.plan_requests)),
+                ("plan_memo_hits", Json::int(st.plan_memo_hits)),
+                ("point_queries", Json::int(st.point_queries)),
+                ("refits", Json::int(st.refits)),
+                ("probes_streamed", Json::int(st.probes_streamed)),
+                ("sims_priced", Json::int(st.sims_priced)),
+                ("cache_evictions", Json::int(st.cache_evictions)),
+            ]),
+        ),
+        (
+            "caches",
+            Json::obj(vec![
+                ("plans", Json::int(service.plan_memo_len() as u64)),
+                ("traces", Json::int(sizes[0] as u64)),
+                ("peak_probes", Json::int(sizes[1] as u64)),
+                ("budgeted_probes", Json::int(sizes[2] as u64)),
+                ("priced_reports", Json::int(sizes[3] as u64)),
+                ("models", Json::int(sizes[4] as u64)),
+                ("walls", Json::int(sizes[5] as u64)),
+            ]),
+        ),
+    ])
+}
+
+fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
+    hay.windows(needle.len()).position(|w| w == needle)
+}
+
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, Vec<u8>), HttpError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError {
+                status: 431,
+                code: "headers_too_large",
+                message: format!("request head exceeds {MAX_HEAD_BYTES} bytes"),
+            });
+        }
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::bad(format!("reading request: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::bad("truncated request"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::bad("request head is not valid UTF-8"))?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    // Ignore any query string: routing is by path.
+    let path = target.split('?').next().unwrap_or("").to_string();
+    if method.is_empty() || !path.starts_with('/') {
+        return Err(HttpError::bad(format!("malformed request line `{request_line}`")));
+    }
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            let key = k.trim();
+            if key.eq_ignore_ascii_case("content-length") {
+                let n = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| HttpError::bad(format!("bad Content-Length `{}`", v.trim())))?;
+                content_length = Some(n);
+            } else if key.eq_ignore_ascii_case("transfer-encoding") {
+                // Chunked framing is not implemented; silently reading an
+                // empty body would plan with defaults, which the wire
+                // contract forbids ("a typo fails loudly").
+                return Err(HttpError::bad(
+                    "Transfer-Encoding is not supported; send Content-Length",
+                ));
+            }
+        }
+    }
+    // A POST whose body length is unknown must not default to empty for
+    // the same reason; `-d ''` (Content-Length: 0) still means defaults.
+    let content_length = match (method.as_str(), content_length) {
+        (_, Some(n)) => n,
+        ("POST", None) => {
+            return Err(HttpError::bad("POST requires a Content-Length header"));
+        }
+        (_, None) => 0,
+    };
+    if content_length > MAX_BODY_BYTES {
+        return Err(HttpError {
+            status: 413,
+            code: "payload_too_large",
+            message: format!("request body exceeds {MAX_BODY_BYTES} bytes"),
+        });
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream
+            .read(&mut chunk)
+            .map_err(|e| HttpError::bad(format!("reading request body: {e}")))?;
+        if n == 0 {
+            return Err(HttpError::bad("truncated request body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok((method, path, body))
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json) {
+    let reason = match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let payload = body.pretty() + "\n";
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        payload.len()
+    );
+    let _ = stream.write_all(head.as_bytes());
+    let _ = stream.write_all(payload.as_bytes());
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn request(addr: SocketAddr, raw: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        let status: u16 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (status, body)
+    }
+
+    fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+        let raw = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        request(addr, &raw)
+    }
+
+    #[test]
+    fn daemon_serves_plan_walls_health_and_errors() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", 2).unwrap();
+        let addr = handle.addr();
+        let body = r#"{"model":"llama3-8b","gpus":8,"quantum":"1M","cap":"8M",
+                       "feasibility_only":true,"threads":2}"#;
+        let (st, first) = post(addr, "/v1/plan", body);
+        assert_eq!(st, 200, "{first}");
+        assert!(first.contains("\"api_version\": 1"), "{first}");
+        assert!(first.contains("\"kind\": \"plan\""));
+        assert!(first.contains("\"configs\""));
+        assert!(!first.contains("\"wall_s\""), "no run accounting in results");
+        // The acceptance gate end to end: a repeated identical request is
+        // served from the session memo, byte-for-byte identical.
+        let (st2, second) = post(addr, "/v1/plan", body);
+        assert_eq!(st2, 200);
+        assert_eq!(first, second);
+        // Warm point query on the same lattice: zero streamed probes.
+        let at = r#"{"model":"llama3-8b","gpus":8,"quantum":"1M","cap":"8M",
+                     "feasibility_only":true,"at":"6M"}"#;
+        let (st3, walls) = post(addr, "/v1/walls", at);
+        assert_eq!(st3, 200, "{walls}");
+        assert!(walls.contains("\"kind\": \"walls_at\""));
+        assert!(walls.contains("\"probes\": 0"), "{walls}");
+        // Frontier shares the plan memo (same canonical request).
+        let (st4, frontier) = post(addr, "/v1/frontier", body);
+        assert_eq!(st4, 200);
+        assert!(frontier.contains("\"kind\": \"frontier\""));
+        // Health: status, memo hit-rate, latency percentiles, cache sizes.
+        let (st5, health) = request(addr, "GET /v1/health HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(st5, 200);
+        assert!(health.contains("\"status\": \"ok\""), "{health}");
+        assert!(health.contains("\"plan_memo_hits\": 2"), "{health}");
+        assert!(health.contains("\"p95_ms\""));
+        assert!(health.contains("\"walls\""));
+        // Structured errors: 404 / 405 / 400 (parse, unknown field,
+        // foreign api_version).
+        let (s404, e404) = request(addr, "GET /v1/nope HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(s404, 404);
+        assert!(e404.contains("\"code\": \"not_found\""), "{e404}");
+        let (s405, e405) = request(addr, "GET /v1/plan HTTP/1.1\r\nHost: t\r\n\r\n");
+        assert_eq!(s405, 405);
+        assert!(e405.contains("\"code\": \"method_not_allowed\""));
+        let (s400, e400) = post(addr, "/v1/plan", "{not json");
+        assert_eq!(s400, 400);
+        assert!(e400.contains("\"code\": \"bad_request\""), "{e400}");
+        let (su, eu) = post(addr, "/v1/plan", r#"{"modle":"x"}"#);
+        assert_eq!(su, 400);
+        assert!(eu.contains("unknown field"), "{eu}");
+        let (sv, ev) = post(addr, "/v1/plan", r#"{"api_version":99}"#);
+        assert_eq!(sv, 400);
+        assert!(ev.contains("unsupported api_version"), "{ev}");
+        handle.stop();
+    }
+
+    #[test]
+    fn refit_endpoint_round_trips_measurements() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", 1).unwrap();
+        let addr = handle.addr();
+        let text = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/table5_measurements.json"
+        ))
+        .unwrap();
+        let body = format!("{{\"measurements\": {}}}", text.trim());
+        let (st, resp) = post(addr, "/v1/refit", &body);
+        assert_eq!(st, 200, "{resp}");
+        assert!(resp.contains("\"kind\": \"refit\""));
+        assert!(resp.contains("\"calibration_fingerprint\""));
+        assert!(resp.contains("fa3_fwd_flops"), "{resp}");
+        // Missing payload is a structured 400.
+        let (sm, em) = post(addr, "/v1/refit", "{}");
+        assert_eq!(sm, 400);
+        assert!(em.contains("missing `measurements`"), "{em}");
+        handle.stop();
+    }
+}

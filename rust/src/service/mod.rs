@@ -1,0 +1,365 @@
+//! Planner-as-a-service: the session API behind `repro serve-plan` (and,
+//! one-shot, behind `repro plan`/`frontier` — the CLI is a thin client of
+//! the same type).
+//!
+//! A [`PlannerService`] owns a [`crate::planner::PlannerCaches`] — the
+//! trace cache, streamed-probe and pricing memos, fitted symbolic
+//! [`crate::engine::PeakModel`]s and verified context walls — plus a
+//! whole-plan memo keyed by the canonical request bytes. Everything is
+//! fingerprint-keyed ([`crate::schedule::CellKey`] /
+//! [`crate::schedule::FamilyKey`] embed the model dims and calibration),
+//! so refit calibrations and different models/clusters never alias, and
+//! sharing one session across arbitrary request mixes is always safe.
+//!
+//! The payoff is the warm path: a repeated identical request is answered
+//! from the plan memo (zero streamed probes, zero priced sims,
+//! byte-for-byte the cold response), and a point capacity query
+//! ([`PlannerService::walls_point`]) against an already-swept family
+//! answers from verified walls / fitted polynomials in microseconds —
+//! the workload shape long-lived training-infrastructure services
+//! (DeepSpeed Ulysses, USP deployments) actually see.
+//!
+//! [`wire`] defines the versioned JSON protocol, [`http`] the
+//! `serve-plan` HTTP/1.1 daemon.
+
+pub mod http;
+pub mod wire;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::engine::{Calibration, Measurements, RefitInfo};
+use crate::model::ModelDims;
+use crate::planner::{plan_with, walls_at, PlanOutcome, PlannerCaches, WallsAtOutcome};
+use crate::util::stripe::StripedMap;
+
+pub use wire::{MeasurementsSource, PlanParams, RefitParams, WallsParams, API_VERSION};
+
+/// One plan request's answer: the (possibly memoized) outcome plus the
+/// request's deterministic notes. `memo_hit` is observability, never part
+/// of the wire result — repeated requests must serialize identically.
+pub struct PlanReply {
+    pub outcome: Arc<PlanOutcome>,
+    pub memo_hit: bool,
+    pub warnings: Vec<String>,
+}
+
+/// A refit request's answer: the provenance, the fitted calibration's
+/// fingerprint (what plan cache keys embed), and deterministic notes.
+pub struct RefitReply {
+    pub info: RefitInfo,
+    pub calibration_fingerprint: u64,
+    pub warnings: Vec<String>,
+}
+
+/// Snapshot of the session's lifetime counters (surfaced by
+/// `/v1/health`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub plan_requests: u64,
+    pub plan_memo_hits: u64,
+    pub point_queries: u64,
+    pub refits: u64,
+    /// Streamed kernel probes across all requests (memo hits excluded).
+    pub probes_streamed: u64,
+    /// Fully priced simulations across all requests (memo hits excluded).
+    pub sims_priced: u64,
+    /// Times the automatic pressure valve evicted the session caches.
+    pub cache_evictions: u64,
+}
+
+/// A long-lived planner session: persistent cross-request caches behind
+/// typed request/response methods. Thread-safe — the HTTP daemon calls
+/// one instance from every worker; interleaved identical and distinct
+/// requests return results bitwise-identical to sequential one-shot
+/// `plan()` calls (the service-concurrency property test pins this).
+/// One memoized plan: the outcome plus the request's deterministic notes
+/// (refit provenance), so a memo hit replays both without re-running the
+/// refit pipeline.
+struct PlanMemoEntry {
+    outcome: Arc<PlanOutcome>,
+    warnings: Vec<String>,
+}
+
+pub struct PlannerService {
+    caches: PlannerCaches,
+    /// Whole-plan memo keyed by the canonical request bytes — exact for
+    /// every field except `measurements`, which keys as a 64-bit content
+    /// fingerprint (see `PlanParams::canonical`). A repeated request is
+    /// one lookup.
+    plans: StripedMap<String, Arc<PlanMemoEntry>>,
+    plan_requests: AtomicU64,
+    plan_memo_hits: AtomicU64,
+    point_queries: AtomicU64,
+    refits: AtomicU64,
+    probes_streamed: AtomicU64,
+    sims_priced: AtomicU64,
+    cache_evictions: AtomicU64,
+}
+
+/// Automatic pressure-valve bounds: when the session holds more memoized
+/// plans or cache entries than this, everything is evicted and the next
+/// requests rebuild (correctness is unaffected — only warmth). Keeps a
+/// long-lived daemon serving arbitrarily varied request shapes at
+/// bounded memory.
+const MAX_MEMO_PLANS: usize = 1024;
+const MAX_CACHE_ENTRIES: usize = 1 << 20;
+
+impl PlannerService {
+    pub fn new() -> Self {
+        PlannerService {
+            caches: PlannerCaches::new(),
+            plans: StripedMap::default(),
+            plan_requests: AtomicU64::new(0),
+            plan_memo_hits: AtomicU64::new(0),
+            point_queries: AtomicU64::new(0),
+            refits: AtomicU64::new(0),
+            probes_streamed: AtomicU64::new(0),
+            sims_priced: AtomicU64::new(0),
+            cache_evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// The automatic pressure valve (see [`MAX_MEMO_PLANS`] /
+    /// [`MAX_CACHE_ENTRIES`]): called on the request paths that grow
+    /// session state.
+    fn pressure_valve(&self) {
+        if self.plans.len() > MAX_MEMO_PLANS
+            || self.caches.sizes().iter().sum::<usize>() > MAX_CACHE_ENTRIES
+        {
+            self.cache_evictions.fetch_add(1, Ordering::Relaxed);
+            self.clear_caches();
+        }
+    }
+
+    /// Full sweep (`POST /v1/plan`, and the CLI's `repro plan`). Warm
+    /// path: the canonical request bytes hit the plan memo and *nothing*
+    /// is re-run — not the sweep, not a refit, not the anchor simulation
+    /// (warnings are memoized with the outcome); otherwise the sweep runs
+    /// against the session caches, reusing whatever earlier requests left
+    /// behind. A memoized key implies the params validated when first
+    /// computed, so the hit path skips `to_request` entirely.
+    pub fn plan(&self, params: &PlanParams) -> Result<PlanReply, String> {
+        self.pressure_valve();
+        self.plan_requests.fetch_add(1, Ordering::Relaxed);
+        let key = params.canonical().render();
+        if let Some(hit) = self.plans.get(&key) {
+            self.plan_memo_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(PlanReply {
+                outcome: Arc::clone(&hit.outcome),
+                memo_hit: true,
+                warnings: hit.warnings.clone(),
+            });
+        }
+        let (req, warnings) = params.to_request()?;
+        let out = plan_with(&req, &self.caches);
+        if out.configs.is_empty() {
+            return Err(format!(
+                "no valid configurations: the requested sweep dims (tp {:?}, mb {:?}, ac {:?}) \
+                 fit neither {} nor the {}-GPU cluster",
+                req.dims.tp_degrees,
+                req.dims.micro_batches,
+                req.dims.ac_modes.iter().map(|a| a.label()).collect::<Vec<_>>(),
+                req.model.name,
+                req.cluster.total_gpus()
+            ));
+        }
+        self.probes_streamed.fetch_add(out.feasibility_probes, Ordering::Relaxed);
+        self.sims_priced.fetch_add(out.priced_sims, Ordering::Relaxed);
+        // First writer wins on a racing key; both callers get the
+        // canonical entry either way.
+        let entry = self
+            .plans
+            .insert(key, Arc::new(PlanMemoEntry { outcome: Arc::new(out), warnings }));
+        Ok(PlanReply {
+            outcome: Arc::clone(&entry.outcome),
+            memo_hit: false,
+            warnings: entry.warnings.clone(),
+        })
+    }
+
+    /// Walls-only sweep (`POST /v1/walls` without `"at"`): the plan
+    /// endpoint with pricing forced off.
+    pub fn walls_sweep(&self, params: &PlanParams) -> Result<PlanReply, String> {
+        let mut p = params.clone();
+        p.feasibility_only = true;
+        self.plan(&p)
+    }
+
+    /// Point capacity query (`POST /v1/walls` with `"at"`): "is sequence
+    /// length `at` trainable?" per sweep configuration, answered from the
+    /// session's verified walls / fitted models when warm — zero streamed
+    /// probes after any full sweep on the same lattice.
+    pub fn walls_point(
+        &self,
+        params: &PlanParams,
+        at: u64,
+    ) -> Result<(WallsAtOutcome, Vec<String>), String> {
+        self.pressure_valve();
+        let (req, warnings) = params.to_request()?;
+        self.point_queries.fetch_add(1, Ordering::Relaxed);
+        let q = walls_at(&req, at, &self.caches);
+        self.probes_streamed.fetch_add(q.probes, Ordering::Relaxed);
+        Ok((q, warnings))
+    }
+
+    /// Fit a refit calibration from measurements without planning
+    /// (`POST /v1/refit`). The model comes from the measurements payload;
+    /// the returned fingerprint is what a follow-up plan request carrying
+    /// the same measurements will key its caches under.
+    pub fn refit(&self, params: &RefitParams) -> Result<RefitReply, String> {
+        self.refits.fetch_add(1, Ordering::Relaxed);
+        let m = Measurements::parse(&params.measurements.text, &params.measurements.source)?;
+        let model = ModelDims::by_name(&m.model)
+            .ok_or_else(|| format!("unknown model `{}` in measurements", m.model))?;
+        let (cal, info, warnings) = wire::build_refit(&model, &m)?;
+        Ok(RefitReply { info, calibration_fingerprint: cal.fingerprint(), warnings })
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            plan_requests: self.plan_requests.load(Ordering::Relaxed),
+            plan_memo_hits: self.plan_memo_hits.load(Ordering::Relaxed),
+            point_queries: self.point_queries.load(Ordering::Relaxed),
+            refits: self.refits.load(Ordering::Relaxed),
+            probes_streamed: self.probes_streamed.load(Ordering::Relaxed),
+            sims_priced: self.sims_priced.load(Ordering::Relaxed),
+            cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The session's evaluator caches (observability: `/v1/health` sizes).
+    pub fn caches(&self) -> &PlannerCaches {
+        &self.caches
+    }
+
+    /// Memoized whole-plan count.
+    pub fn plan_memo_len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Evict every cache. Invoked automatically by the size-triggered
+    /// pressure valve on the daemon's request paths (and callable
+    /// directly by embedders); counters keep running, the session stays
+    /// usable.
+    pub fn clear_caches(&self) {
+        self.caches.clear();
+        self.plans.clear();
+    }
+
+    /// The session's baseline calibration fingerprint (what cache keys
+    /// embed for non-refit requests).
+    pub fn default_calibration_fingerprint(&self) -> u64 {
+        Calibration::default().fingerprint()
+    }
+}
+
+impl Default for PlannerService {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::planner as planner_report;
+
+    fn small_params() -> PlanParams {
+        let mut p = PlanParams::defaults("llama3-8b", 8);
+        p.quantum = 1 << 20;
+        p.cap_s = 8 << 20;
+        p.threads = 2;
+        p.feasibility_only = true;
+        p
+    }
+
+    #[test]
+    fn repeated_plan_hits_memo_and_serializes_identically() {
+        let service = PlannerService::new();
+        let p = small_params();
+        let first = service.plan(&p).unwrap();
+        assert!(!first.memo_hit);
+        let second = service.plan(&p).unwrap();
+        assert!(second.memo_hit, "identical request must hit the plan memo");
+        assert!(Arc::ptr_eq(&first.outcome, &second.outcome));
+        let a = planner_report::plan_result_json(&first.outcome).render();
+        let b = planner_report::plan_result_json(&second.outcome).render();
+        assert_eq!(a, b);
+        let st = service.stats();
+        assert_eq!(st.plan_requests, 2);
+        assert_eq!(st.plan_memo_hits, 1);
+        assert!(st.probes_streamed > 0);
+        assert_eq!(st.sims_priced, 0, "feasibility-only sweep never prices");
+        // A *different* request (thread count aside) is a distinct key...
+        let mut p2 = small_params();
+        p2.cap_s = 4 << 20;
+        assert!(!service.plan(&p2).unwrap().memo_hit);
+        // ...but a thread-count variant is not.
+        let mut p3 = small_params();
+        p3.threads = 1;
+        assert!(service.plan(&p3).unwrap().memo_hit);
+    }
+
+    #[test]
+    fn frontier_and_walls_share_the_session() {
+        let service = PlannerService::new();
+        let mut p = small_params();
+        p.feasibility_only = false;
+        let probes_cold = {
+            let reply = service.plan(&p).unwrap();
+            assert!(reply.outcome.configs.iter().any(|c| c.pareto));
+            service.stats().probes_streamed
+        };
+        // The walls sweep reuses the session's verified walls: no new
+        // streamed probes at all.
+        let walls = service.walls_sweep(&p).unwrap();
+        assert!(walls.outcome.feasibility_only);
+        assert!(!walls.memo_hit, "different canonical request");
+        assert_eq!(service.stats().probes_streamed, probes_cold);
+        // Warm point query: zero probes, every cell from a verified wall.
+        let (q, _) = service.walls_point(&p, 6 << 20).unwrap();
+        assert_eq!(q.probes, 0);
+        assert_eq!(q.from_walls, q.cells.len() as u64);
+        assert_eq!(service.stats().point_queries, 1);
+        // Eviction keeps the session usable.
+        service.clear_caches();
+        assert_eq!(service.plan_memo_len(), 0);
+        let again = service.plan(&p).unwrap();
+        assert!(!again.memo_hit);
+    }
+
+    #[test]
+    fn service_errors_are_typed_strings() {
+        let service = PlannerService::new();
+        let mut p = small_params();
+        p.model = "nope".into();
+        let err = service.plan(&p).unwrap_err();
+        assert!(err.contains("unknown model"), "{err}");
+        let mut p = small_params();
+        p.gpus = 12; // not 1..=8 and not a whole number of 8-GPU nodes
+        assert!(service.plan(&p).is_err());
+        let bad = RefitParams {
+            measurements: MeasurementsSource { source: "t".into(), text: "{]".into() },
+        };
+        assert!(service.refit(&bad).is_err());
+    }
+
+    #[test]
+    fn refit_reply_carries_fingerprint_and_provenance() {
+        let text = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/table5_measurements.json"
+        ))
+        .unwrap();
+        let service = PlannerService::new();
+        let reply = service
+            .refit(&RefitParams {
+                measurements: MeasurementsSource { source: "inline".into(), text },
+            })
+            .unwrap();
+        assert_eq!(reply.info.model, "llama3-8b");
+        assert_ne!(reply.calibration_fingerprint, service.default_calibration_fingerprint());
+        assert_eq!(service.stats().refits, 1);
+    }
+}

@@ -1,0 +1,770 @@
+//! The planner service's versioned JSON wire protocol: typed request
+//! parameter structs with strict parsing, canonical request echoes (the
+//! session's plan-memo keys), and the success/error envelopes every
+//! endpoint answers with.
+//!
+//! **Stability contract (api_version 1).** Requests may carry an
+//! `"api_version"` field; when present it must equal [`API_VERSION`]
+//! (anything else is rejected, so a client never silently gets the wrong
+//! dialect). Unknown request fields are errors — new fields only appear
+//! together with a version bump, so a typo'd request fails loudly instead
+//! of planning with defaults. Responses always carry `api_version`, a
+//! `kind`, the canonical `request` echo, deterministic `warnings`, and
+//! the `result`; errors are always `{"api_version", "error": {"code",
+//! "message"}}`. The `result` of a plan/walls/frontier response is
+//! *deterministic*: repeated identical requests render byte-for-byte
+//! equal bytes whether answered cold or from session memos (run
+//! accounting lives in `/v1/health`, never in results).
+
+use crate::config::presets::RunPreset;
+use crate::config::{AcMode, ClusterConfig, CpMethod, ParallelConfig};
+use crate::engine::{refit, Calibration, Measurements, RefitInfo};
+use crate::model::ModelDims;
+use crate::planner::{PlanRequest, SweepDims};
+use crate::schedule::{simulate, Quantities};
+use crate::util::fmt::{parse_tokens, tokens, GIB};
+use crate::util::json::Json;
+use crate::util::stripe::fx_hash_one;
+
+/// The wire dialect this build speaks (see the module docs for the
+/// stability contract).
+pub const API_VERSION: u64 = 1;
+
+/// Highest `"at"` / token-count value a request may carry — keeps the
+/// lattice arithmetic far from u64 overflow while allowing any plausible
+/// context length (2^40 tokens = 1T).
+pub const MAX_TOKENS: u64 = 1 << 40;
+
+/// A refit measurements payload: the raw JSON text plus where it came
+/// from (a file path on the CLI, `"inline"` over HTTP) for provenance.
+#[derive(Debug, Clone)]
+pub struct MeasurementsSource {
+    pub source: String,
+    pub text: String,
+}
+
+/// Typed `/v1/plan` (and walls-sweep / frontier) request parameters —
+/// also what the CLI's flag parser produces, so `repro plan` is a thin
+/// client of the same service entry points.
+#[derive(Debug, Clone)]
+pub struct PlanParams {
+    pub model: String,
+    pub gpus: u64,
+    pub reference_s: u64,
+    pub quantum: u64,
+    pub cap_s: u64,
+    pub ac_modes: Vec<AcMode>,
+    pub micro_batches: Vec<u64>,
+    pub tp_degrees: Vec<u64>,
+    pub compositions: bool,
+    /// Disable the symbolic solver and warm starts (`--cold`).
+    pub cold: bool,
+    pub feasibility_only: bool,
+    /// Worker threads (0 = auto). Never part of the canonical echo — it
+    /// cannot change results, so thread-count variants share memos.
+    pub threads: usize,
+    /// Optional Table-5-style measurements: plan with a refit calibration.
+    pub measurements: Option<MeasurementsSource>,
+}
+
+/// Top-level fields `/v1/plan` accepts (walls adds `"at"` via
+/// [`PlanParams::from_json_with`]).
+const PLAN_FIELDS: [&str; 15] = [
+    "api_version",
+    "model",
+    "gpus",
+    "seq",
+    "quantum",
+    "cap",
+    "ac",
+    "mb",
+    "tp",
+    "paper",
+    "compose",
+    "cold",
+    "feasibility_only",
+    "threads",
+    "measurements",
+];
+
+impl PlanParams {
+    /// The CLI/service defaults: the full default sweep space at the
+    /// default search lattice (mirrors `PlanRequest::new`).
+    pub fn defaults(model: &str, gpus: u64) -> PlanParams {
+        let dims = SweepDims::default();
+        PlanParams {
+            model: model.to_string(),
+            gpus,
+            reference_s: 1 << 20,
+            quantum: 128 * 1024,
+            cap_s: 32 << 20,
+            ac_modes: dims.ac_modes,
+            micro_batches: dims.micro_batches,
+            tp_degrees: dims.tp_degrees,
+            compositions: dims.compositions,
+            cold: false,
+            feasibility_only: false,
+            threads: 0,
+            measurements: None,
+        }
+    }
+
+    /// Restrict to the paper's §5.1 dims (the CLI's `--paper`).
+    pub fn set_paper(&mut self) {
+        let dims = SweepDims::paper();
+        self.ac_modes = dims.ac_modes;
+        self.micro_batches = dims.micro_batches;
+        self.tp_degrees = dims.tp_degrees;
+        self.compositions = dims.compositions;
+    }
+
+    /// Dedup the sweep lists the way the CLI always has: AC order is
+    /// meaningful (kept, first occurrence wins), micro-batch and TP lists
+    /// sort ascending.
+    pub fn normalize(&mut self) {
+        let mut deduped: Vec<AcMode> = Vec::new();
+        for m in self.ac_modes.drain(..) {
+            if !deduped.contains(&m) {
+                deduped.push(m);
+            }
+        }
+        self.ac_modes = deduped;
+        self.micro_batches.sort_unstable();
+        self.micro_batches.dedup();
+        self.tp_degrees.sort_unstable();
+        self.tp_degrees.dedup();
+    }
+
+    pub fn from_json(j: &Json) -> Result<PlanParams, String> {
+        Self::from_json_with(j, &[])
+    }
+
+    /// Parse request params, additionally allowing `extra` top-level
+    /// fields (the walls endpoint's `"at"`). Strict: unknown fields and
+    /// foreign `api_version`s are errors (see the module docs).
+    pub fn from_json_with(j: &Json, extra: &[&str]) -> Result<PlanParams, String> {
+        let Json::Obj(pairs) = j else {
+            return Err("request body must be a JSON object".to_string());
+        };
+        for (k, _) in pairs {
+            if !PLAN_FIELDS.contains(&k.as_str()) && !extra.contains(&k.as_str()) {
+                return Err(format!("unknown field `{k}` (this server speaks api_version {API_VERSION})"));
+            }
+        }
+        check_api_version(j)?;
+        let model = match j.get("model") {
+            None => "llama3-8b".to_string(),
+            Some(v) => v
+                .as_str()
+                .ok_or_else(|| "`model` must be a string".to_string())?
+                .to_string(),
+        };
+        let gpus = match j.get("gpus") {
+            None => 8,
+            Some(v) => v.as_u64().ok_or_else(|| "`gpus` must be a whole number".to_string())?,
+        };
+        let mut p = PlanParams::defaults(&model, gpus);
+        if bool_field(j, "paper")? {
+            p.set_paper();
+        }
+        if let Some(s) = tokens_field(j, "seq")? {
+            p.reference_s = s;
+        }
+        if let Some(q) = tokens_field(j, "quantum")? {
+            p.quantum = q;
+        }
+        if let Some(c) = tokens_field(j, "cap")? {
+            p.cap_s = c;
+        }
+        if let Some(v) = j.get("ac") {
+            p.ac_modes = ac_modes_from_json(v)?;
+        }
+        if let Some(v) = j.get("mb") {
+            p.micro_batches = u64_list_from_json(v, "mb")?;
+        }
+        if let Some(v) = j.get("tp") {
+            p.tp_degrees = u64_list_from_json(v, "tp")?;
+        }
+        p.compositions = p.compositions || bool_field(j, "compose")?;
+        p.cold = bool_field(j, "cold")?;
+        p.feasibility_only = bool_field(j, "feasibility_only")?;
+        if let Some(v) = j.get("threads") {
+            let t = v.as_u64().ok_or_else(|| "`threads` must be a whole number".to_string())?;
+            p.threads = t.min(1024) as usize;
+        }
+        if let Some(m) = j.get("measurements") {
+            if !matches!(m, Json::Obj(_)) {
+                return Err("`measurements` must be a measurements object".to_string());
+            }
+            p.measurements =
+                Some(MeasurementsSource { source: "inline".to_string(), text: m.render() });
+        }
+        p.normalize();
+        Ok(p)
+    }
+
+    /// Canonical request echo: fixed field order, normalized lists, one
+    /// spelling per request — equal requests render equal bytes, which is
+    /// both the response's `request` field and the session's plan-memo
+    /// key. Measurements appear as a content fingerprint, not the full
+    /// payload.
+    pub fn canonical(&self) -> Json {
+        let mut p = self.clone();
+        p.normalize();
+        let measurements = match &p.measurements {
+            None => Json::Null,
+            Some(m) => Json::obj(vec![
+                ("source", Json::string(&m.source)),
+                ("fingerprint", Json::string(&format!("{:016x}", fx_hash_one(&m.text)))),
+            ]),
+        };
+        Json::obj(vec![
+            ("api_version", Json::int(API_VERSION)),
+            ("model", Json::string(&p.model)),
+            ("gpus", Json::int(p.gpus)),
+            ("reference_s", Json::int(p.reference_s)),
+            ("quantum", Json::int(p.quantum)),
+            ("cap_s", Json::int(p.cap_s)),
+            (
+                "ac_modes",
+                Json::Arr(p.ac_modes.iter().map(|m| Json::string(m.label())).collect()),
+            ),
+            (
+                "micro_batches",
+                Json::Arr(p.micro_batches.iter().map(|&v| Json::int(v)).collect()),
+            ),
+            (
+                "tp_degrees",
+                Json::Arr(p.tp_degrees.iter().map(|&v| Json::int(v)).collect()),
+            ),
+            ("compositions", Json::Bool(p.compositions)),
+            ("cold", Json::Bool(p.cold)),
+            ("feasibility_only", Json::Bool(p.feasibility_only)),
+            ("measurements", measurements),
+        ])
+    }
+
+    /// Convert to the evaluator's request, applying the refit calibration
+    /// when measurements ride along. Returns deterministic human-readable
+    /// notes (refit provenance and warnings) for the caller to surface.
+    pub fn to_request(&self) -> Result<(PlanRequest, Vec<String>), String> {
+        let model = ModelDims::by_name(&self.model)
+            .ok_or_else(|| format!("unknown model `{}`", self.model))?;
+        let cluster = ClusterConfig::h100_cluster(self.gpus)?;
+        if self.quantum == 0 || self.quantum > MAX_TOKENS {
+            return Err(format!("quantum must be in [1, {MAX_TOKENS}] tokens"));
+        }
+        if self.cap_s < self.quantum {
+            return Err("cap must be at least the quantum".to_string());
+        }
+        if self.cap_s > MAX_TOKENS {
+            return Err(format!("cap must be at most {MAX_TOKENS} tokens"));
+        }
+        let mut p = self.clone();
+        p.normalize();
+        if p.ac_modes.is_empty() {
+            return Err("ac must name at least one mode (ao|gpu|noac)".to_string());
+        }
+        if p.micro_batches.is_empty() || p.micro_batches.contains(&0) {
+            return Err("mb entries must be whole numbers >= 1".to_string());
+        }
+        if p.tp_degrees.is_empty() || p.tp_degrees.contains(&0) {
+            return Err("tp entries must be whole numbers >= 1".to_string());
+        }
+        let mut req = PlanRequest::new(model, cluster);
+        req.reference_s = p.reference_s;
+        req.quantum = p.quantum;
+        req.cap_s = p.cap_s;
+        req.dims = SweepDims {
+            compositions: p.compositions,
+            ac_modes: p.ac_modes,
+            micro_batches: p.micro_batches,
+            tp_degrees: p.tp_degrees,
+        };
+        req.threads = self.threads;
+        req.warm_start = !self.cold;
+        req.symbolic = !self.cold;
+        req.feasibility_only = self.feasibility_only;
+        let mut warnings = Vec::new();
+        if let Some(ms) = &self.measurements {
+            let m = Measurements::parse(&ms.text, &ms.source)?;
+            let (cal, info, notes) = build_refit(&req.model, &m)?;
+            req.calibration = cal;
+            req.refit = Some(info);
+            warnings = notes;
+        }
+        Ok((req, warnings))
+    }
+}
+
+/// `/v1/walls` parameters: the plan params plus an optional point query.
+#[derive(Debug, Clone)]
+pub struct WallsParams {
+    pub plan: PlanParams,
+    /// Point capacity query: "is this sequence length trainable?" for
+    /// every sweep configuration, answered from session memos when warm.
+    /// Absent = a feasibility-only walls sweep.
+    pub at: Option<u64>,
+}
+
+impl WallsParams {
+    pub fn from_json(j: &Json) -> Result<WallsParams, String> {
+        let plan = PlanParams::from_json_with(j, &["at"])?;
+        let at = match j.get("at") {
+            None => None,
+            Some(v) => {
+                let s = tokens_value(v)
+                    .ok_or_else(|| "`at` must be a token count (e.g. \"6M\")".to_string())?;
+                if s == 0 || s > MAX_TOKENS {
+                    return Err(format!("`at` must be in [1, {MAX_TOKENS}] tokens"));
+                }
+                Some(s)
+            }
+        };
+        Ok(WallsParams { plan, at })
+    }
+
+    pub fn canonical(&self) -> Json {
+        let mut c = self.plan.canonical();
+        if let Json::Obj(pairs) = &mut c {
+            let at = self.at.map(Json::int).unwrap_or(Json::Null);
+            pairs.push(("at".to_string(), at));
+        }
+        c
+    }
+}
+
+/// `/v1/refit` parameters: fit a calibration from measurements without
+/// planning. The model comes from the measurements file itself.
+#[derive(Debug, Clone)]
+pub struct RefitParams {
+    pub measurements: MeasurementsSource,
+}
+
+impl RefitParams {
+    pub fn from_json(j: &Json) -> Result<RefitParams, String> {
+        let Json::Obj(pairs) = j else {
+            return Err("request body must be a JSON object".to_string());
+        };
+        for (k, _) in pairs {
+            if !["api_version", "measurements"].contains(&k.as_str()) {
+                return Err(format!("unknown field `{k}` (this server speaks api_version {API_VERSION})"));
+            }
+        }
+        check_api_version(j)?;
+        let m = j
+            .get("measurements")
+            .ok_or_else(|| "missing `measurements`".to_string())?;
+        if !matches!(m, Json::Obj(_)) {
+            return Err("`measurements` must be a measurements object".to_string());
+        }
+        Ok(RefitParams {
+            measurements: MeasurementsSource { source: "inline".to_string(), text: m.render() },
+        })
+    }
+
+    pub fn canonical(&self) -> Json {
+        Json::obj(vec![
+            ("api_version", Json::int(API_VERSION)),
+            (
+                "measurements",
+                Json::obj(vec![
+                    ("source", Json::string(&self.measurements.source)),
+                    (
+                        "fingerprint",
+                        Json::string(&format!("{:016x}", fx_hash_one(&self.measurements.text))),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Versioned success envelope shared by every endpoint.
+pub fn envelope(kind: &str, request: Json, warnings: &[String], result: Json) -> Json {
+    Json::obj(vec![
+        ("api_version", Json::int(API_VERSION)),
+        ("kind", Json::string(kind)),
+        ("request", request),
+        (
+            "warnings",
+            Json::Arr(warnings.iter().map(|w| Json::string(w)).collect()),
+        ),
+        ("result", result),
+    ])
+}
+
+/// Structured error envelope — the only non-2xx body shape the daemon
+/// ever emits.
+pub fn error_envelope(code: &str, message: &str) -> Json {
+    Json::obj(vec![
+        ("api_version", Json::int(API_VERSION)),
+        (
+            "error",
+            Json::obj(vec![("code", Json::string(code)), ("message", Json::string(message))]),
+        ),
+    ])
+}
+
+/// Parse a comma-separated AC-mode list (the CLI's `--ac` spelling).
+pub fn parse_ac_list(s: &str) -> Result<Vec<AcMode>, String> {
+    s.split(',')
+        .map(|m| {
+            AcMode::parse(m.trim()).ok_or_else(|| format!("bad ac entry `{m}` (ao|gpu|noac)"))
+        })
+        .collect()
+}
+
+/// Parse a comma-separated list of whole numbers (the CLI's `--mb`/`--tp`
+/// spelling); `what` names the flag in errors.
+pub fn parse_u64_list(s: &str, what: &str) -> Result<Vec<u64>, String> {
+    s.split(',')
+        .map(|x| x.trim().parse::<u64>().map_err(|_| format!("bad {what} entry `{x}`")))
+        .collect()
+}
+
+/// Token-count value: a label string ("1M", "512K") or a whole number.
+pub fn tokens_value(v: &Json) -> Option<u64> {
+    match v {
+        Json::Str(s) => parse_tokens(s),
+        _ => v.as_u64(),
+    }
+}
+
+fn tokens_field(j: &Json, key: &str) -> Result<Option<u64>, String> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let s = tokens_value(v).ok_or_else(|| {
+                format!("`{key}` must be a token count (a label like \"1M\" or a whole number)")
+            })?;
+            if s == 0 || s > MAX_TOKENS {
+                return Err(format!("`{key}` must be in [1, {MAX_TOKENS}] tokens"));
+            }
+            Ok(Some(s))
+        }
+    }
+}
+
+fn bool_field(j: &Json, key: &str) -> Result<bool, String> {
+    match j.get(key) {
+        None => Ok(false),
+        Some(v) => v.as_bool().ok_or_else(|| format!("`{key}` must be true or false")),
+    }
+}
+
+fn ac_modes_from_json(v: &Json) -> Result<Vec<AcMode>, String> {
+    match v {
+        Json::Str(s) => parse_ac_list(s),
+        Json::Arr(items) => items
+            .iter()
+            .map(|i| {
+                i.as_str()
+                    .and_then(AcMode::parse)
+                    .ok_or_else(|| format!("bad ac entry `{}` (ao|gpu|noac)", i.render()))
+            })
+            .collect(),
+        _ => Err("`ac` must be a list of modes or a comma-separated string".to_string()),
+    }
+}
+
+fn u64_list_from_json(v: &Json, what: &str) -> Result<Vec<u64>, String> {
+    match v {
+        Json::Str(s) => parse_u64_list(s, what),
+        Json::Arr(items) => items
+            .iter()
+            .map(|i| i.as_u64().ok_or_else(|| format!("bad {what} entry `{}`", i.render())))
+            .collect(),
+        _ => Err(format!("`{what}` must be a list of whole numbers")),
+    }
+}
+
+fn check_api_version(j: &Json) -> Result<(), String> {
+    match j.get("api_version") {
+        None => Ok(()),
+        Some(v) if v.as_u64() == Some(API_VERSION) => Ok(()),
+        Some(v) => Err(format!(
+            "unsupported api_version {} (this server speaks {API_VERSION})",
+            v.render()
+        )),
+    }
+}
+
+/// Fit a refit calibration from parsed measurements, with the same
+/// sanity analysis the CLI has always run: model match, unusable-rate
+/// skips, and the anchor-pressure check (an anchor cell simulated with
+/// sub-threshold HBM headroom means its measured times already include
+/// allocator-pressure penalties). Returns the calibration, its
+/// provenance, and deterministic notes — the first is informational,
+/// the rest are prefixed `WARNING:`.
+pub fn build_refit(
+    model: &ModelDims,
+    m: &Measurements,
+) -> Result<(Calibration, RefitInfo, Vec<String>), String> {
+    if m.model != model.name {
+        return Err(format!(
+            "measurements are for `{}` but the request plans `{}`",
+            m.model, model.name
+        ));
+    }
+    let (cal, mut info) = refit(&Calibration::default(), m, model)?;
+    let mut notes = Vec::new();
+    notes.push(format!(
+        "refit from {}: {} cells, anchored at {} tokens;{}",
+        m.source,
+        info.cells,
+        tokens(info.anchor_seq),
+        info.fields.iter().fold(String::new(), |mut s, f| {
+            s.push_str(&format!(" {} {:.3e} -> {:.3e};", f.name, f.old, f.new));
+            s
+        })
+    ));
+    if !info.skipped.is_empty() {
+        notes.push(format!(
+            "WARNING: refit kept defaults for {} (measurements at or below the modelled \
+             overhead floor)",
+            info.skipped.join(", ")
+        ));
+    }
+    // Pressure sanity: simulate the measured anchor cell. If it runs with
+    // headroom below the pressure threshold, its measured times already
+    // include the allocator-pressure penalties the engine re-applies
+    // during the sweep — the refit rates absorb them. refit guarantees a
+    // single-node (<= 8 GPU) Ulysses anchor.
+    let anchor_cluster = ClusterConfig::h100_cluster(m.gpus)?;
+    let anchor_preset = RunPreset {
+        model: model.clone(),
+        parallel: ParallelConfig::new(CpMethod::Ulysses, anchor_cluster.total_gpus()),
+        cluster: anchor_cluster,
+        seq_len: info.anchor_seq,
+    };
+    let q = Quantities::new(&anchor_preset);
+    let anchor_report = simulate(&anchor_preset);
+    let headroom = q.hbm_limit - anchor_report.peak_bytes;
+    if headroom < cal.pressure_h0_gib * GIB {
+        info.pressured_anchor = true;
+        notes.push(format!(
+            "WARNING: anchor cell ({} tokens) runs with only {:.1} GiB of predicted headroom \
+             — its measured times include memory-pressure penalties, so the refit rates are \
+             pessimistic near the memory walls; prefer an anchor at shorter context",
+            tokens(info.anchor_seq),
+            headroom.max(0.0) / GIB
+        ));
+    }
+    Ok((cal, info, notes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{ConfigPlan, PlanOutcome};
+
+    #[test]
+    fn parse_defaults_and_overrides() {
+        let p = PlanParams::from_json(&Json::obj(vec![])).unwrap();
+        assert_eq!(p.model, "llama3-8b");
+        assert_eq!(p.gpus, 8);
+        assert_eq!(p.quantum, 128 * 1024);
+        assert_eq!(p.cap_s, 32 << 20);
+        assert_eq!(p.ac_modes, vec![AcMode::AcOffload, AcMode::AcGpu]);
+        assert!(!p.cold && !p.feasibility_only && p.measurements.is_none());
+
+        let j = Json::parse(
+            r#"{"model":"qwen3-32b","gpus":16,"seq":"2M","quantum":"256K","cap":"16M",
+                "ac":["ao"],"mb":[4,1,1],"tp":"2,1","cold":true,"feasibility_only":true,
+                "threads":3}"#,
+        )
+        .unwrap();
+        let p = PlanParams::from_json(&j).unwrap();
+        assert_eq!(p.model, "qwen3-32b");
+        assert_eq!(p.gpus, 16);
+        assert_eq!(p.reference_s, 2 << 20);
+        assert_eq!(p.quantum, 256 * 1024);
+        assert_eq!(p.cap_s, 16 << 20);
+        assert_eq!(p.ac_modes, vec![AcMode::AcOffload]);
+        assert_eq!(p.micro_batches, vec![1, 4], "sorted + deduped");
+        assert_eq!(p.tp_degrees, vec![1, 2]);
+        assert!(p.cold && p.feasibility_only);
+        assert_eq!(p.threads, 3);
+    }
+
+    #[test]
+    fn parse_paper_flag_and_walls_at() {
+        let j = Json::parse(r#"{"paper":true,"at":"6M"}"#).unwrap();
+        let w = WallsParams::from_json(&j).unwrap();
+        assert_eq!(w.at, Some(6 << 20));
+        assert_eq!(w.plan.ac_modes, vec![AcMode::AcOffload]);
+        assert_eq!(w.plan.micro_batches, vec![1]);
+        let c = w.canonical().render();
+        assert!(c.ends_with("\"at\":6291456}"), "{c}");
+    }
+
+    #[test]
+    fn parse_rejects_unknowns_and_foreign_versions() {
+        let unknown = Json::parse(r#"{"modle":"llama3-8b"}"#).unwrap();
+        let err = PlanParams::from_json(&unknown).unwrap_err();
+        assert!(err.contains("unknown field `modle`"), "{err}");
+        let v99 = Json::parse(r#"{"api_version":99}"#).unwrap();
+        let err = PlanParams::from_json(&v99).unwrap_err();
+        assert!(err.contains("unsupported api_version 99"), "{err}");
+        let v1 = Json::parse(r#"{"api_version":1}"#).unwrap();
+        assert!(PlanParams::from_json(&v1).is_ok());
+        assert!(PlanParams::from_json(&Json::Arr(vec![])).is_err());
+        let bad_ac = Json::parse(r#"{"ac":"turbo"}"#).unwrap();
+        assert!(PlanParams::from_json(&bad_ac).is_err());
+        let zero = Json::parse(r#"{"quantum":0}"#).unwrap();
+        assert!(PlanParams::from_json(&zero).is_err());
+    }
+
+    #[test]
+    fn to_request_validates_and_maps() {
+        let mut p = PlanParams::defaults("llama3-8b", 8);
+        p.cold = true;
+        let (req, warnings) = p.to_request().unwrap();
+        assert!(warnings.is_empty());
+        assert_eq!(req.model.name, "llama3-8b");
+        assert_eq!(req.cluster.total_gpus(), 8);
+        assert!(!req.symbolic && !req.warm_start, "cold maps to both switches");
+
+        assert!(PlanParams::defaults("nope", 8).to_request().is_err());
+        assert!(PlanParams::defaults("llama3-8b", 7).to_request().is_err(), "7 GPUs multi-node");
+        let mut bad = PlanParams::defaults("llama3-8b", 8);
+        bad.cap_s = bad.quantum / 2;
+        assert!(bad.to_request().is_err());
+        let mut bad = PlanParams::defaults("llama3-8b", 8);
+        bad.micro_batches = vec![0];
+        assert!(bad.to_request().is_err());
+    }
+
+    #[test]
+    fn canonical_is_stable_and_ignores_threads() {
+        let mut a = PlanParams::defaults("llama3-8b", 8);
+        a.threads = 1;
+        let mut b = PlanParams::defaults("llama3-8b", 8);
+        b.threads = 7;
+        // Unnormalized duplicates collapse to the same canonical bytes.
+        b.micro_batches = vec![4, 1, 2, 1];
+        assert_eq!(a.canonical().render(), b.canonical().render());
+        let mut c = a.clone();
+        c.feasibility_only = true;
+        assert_ne!(a.canonical().render(), c.canonical().render());
+    }
+
+    /// The byte-for-byte golden for a `/v1/plan` response: a handcrafted
+    /// outcome through the full serializer stack (canonical request echo,
+    /// envelope, deterministic result core). If this changes, the wire
+    /// format changed — bump [`API_VERSION`].
+    #[test]
+    fn golden_plan_response_bytes() {
+        let outcome = PlanOutcome {
+            model: ModelDims::llama3_8b(),
+            cluster: ClusterConfig::h100_node(),
+            reference_s: 1 << 20,
+            quantum: 128 * 1024,
+            configs: vec![
+                ConfigPlan {
+                    parallel: ParallelConfig::new(
+                        CpMethod::Upipe { u: 8, gqa_schedule: true },
+                        8,
+                    ),
+                    max_context: Some(5 << 20),
+                    hit_cap: false,
+                    max_ctx_peak_gib: Some(68.5),
+                    max_ctx_tok_s_gpu: Some(1234.0),
+                    ref_peak_gib: Some(21.25),
+                    ref_tok_s_gpu: Some(4321.5),
+                    pareto: true,
+                },
+                ConfigPlan {
+                    parallel: {
+                        let mut p = ParallelConfig::new(CpMethod::Ulysses, 8);
+                        p.pin_memory = false;
+                        p
+                    },
+                    max_context: None,
+                    hit_cap: false,
+                    max_ctx_peak_gib: None,
+                    max_ctx_tok_s_gpu: None,
+                    ref_peak_gib: None,
+                    ref_tok_s_gpu: None,
+                    pareto: false,
+                },
+            ],
+            refit: None,
+            simulations: 999, // accounting: must NOT appear in the result
+            feasibility_probes: 999,
+            priced_sims: 999,
+            symbolic_models: 9,
+            symbolic_fallbacks: 9,
+            feasibility_only: false,
+            cache_hits: 9,
+            cache_misses: 9,
+            wall_s: 123.456,
+        };
+        let params = PlanParams::defaults("llama3-8b", 8);
+        let resp = envelope(
+            "plan",
+            params.canonical(),
+            &[],
+            crate::report::planner::plan_result_json(&outcome),
+        );
+        let want = concat!(
+            "{\"api_version\":1,\"kind\":\"plan\",",
+            "\"request\":{\"api_version\":1,\"model\":\"llama3-8b\",\"gpus\":8,",
+            "\"reference_s\":1048576,\"quantum\":131072,\"cap_s\":33554432,",
+            "\"ac_modes\":[\"ao\",\"gpu\"],\"micro_batches\":[1,2,4],",
+            "\"tp_degrees\":[1,2],\"compositions\":false,\"cold\":false,",
+            "\"feasibility_only\":false,\"measurements\":null},",
+            "\"warnings\":[],",
+            "\"result\":{\"model\":\"llama3-8b\",\"cluster\":\"8xH100\",\"gpus\":8,",
+            "\"reference_s\":1048576,\"quantum\":131072,\"refit\":null,",
+            "\"feasibility_only\":false,\"configs\":[",
+            "{\"method\":\"UPipe\",\"params\":\"U=8,gqa\",\"ac_mode\":\"ao\",",
+            "\"micro_batch\":1,\"tp\":1,\"pin_memory\":true,\"cp_degree\":8,",
+            "\"max_context\":5242880,\"max_context_label\":\"5M\",",
+            "\"max_context_capped\":false,\"max_ctx_peak_gib\":68.5,",
+            "\"max_ctx_tok_s_per_gpu\":1234,\"ref_peak_gib\":21.25,",
+            "\"ref_tok_s_per_gpu\":4321.5,\"pareto\":true},",
+            "{\"method\":\"Ulysses\",\"params\":\"\",\"ac_mode\":\"ao\",",
+            "\"micro_batch\":1,\"tp\":1,\"pin_memory\":false,\"cp_degree\":8,",
+            "\"max_context\":null,\"max_context_label\":null,",
+            "\"max_context_capped\":false,\"max_ctx_peak_gib\":null,",
+            "\"max_ctx_tok_s_per_gpu\":null,\"ref_peak_gib\":null,",
+            "\"ref_tok_s_per_gpu\":null,\"pareto\":false}]}}",
+        );
+        assert_eq!(resp.render(), want);
+        // The envelope round-trips through our own parser.
+        let parsed = Json::parse(&resp.render()).unwrap();
+        assert_eq!(parsed.get("api_version").and_then(Json::as_u64), Some(1));
+        assert_eq!(parsed.render(), want);
+    }
+
+    #[test]
+    fn error_envelope_shape() {
+        let e = error_envelope("bad_request", "unknown field `x`");
+        assert_eq!(
+            e.render(),
+            "{\"api_version\":1,\"error\":{\"code\":\"bad_request\",\
+             \"message\":\"unknown field `x`\"}}"
+        );
+    }
+
+    #[test]
+    fn build_refit_matches_cli_semantics() {
+        let text = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/table5_measurements.json"
+        ))
+        .expect("example measurements present");
+        let model = ModelDims::llama3_8b();
+        let m = Measurements::parse(&text, "table5.json").unwrap();
+        let (cal, info, notes) = build_refit(&model, &m).unwrap();
+        assert_ne!(cal.fingerprint(), Calibration::default().fingerprint());
+        assert_eq!(info.model, "llama3-8b");
+        assert!(!notes.is_empty());
+        assert!(notes[0].starts_with("refit from table5.json:"), "{}", notes[0]);
+        // Mismatched model is refused.
+        let qwen = ModelDims::qwen3_32b();
+        assert!(build_refit(&qwen, &m).is_err());
+    }
+}

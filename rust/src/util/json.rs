@@ -1,8 +1,18 @@
 //! Minimal JSON value + serializer + parser (serde is not in the offline
-//! vendor set). Covers what the planner's `--json` output, the bench
-//! emitters and the `--refit` measurement files need: order-preserving
-//! objects, arrays, strings, finite numbers, bools and null. Non-finite
-//! numbers serialize as `null`.
+//! vendor set). Covers what the planner's `--json` output, the service
+//! wire protocol, the bench emitters and the `--refit` measurement files
+//! need: order-preserving objects, arrays, strings, finite numbers, bools
+//! and null.
+//!
+//! The serializer is **canonical**: a given `Json` value always renders to
+//! the same bytes, across runs and platforms. Object fields keep their
+//! insertion order (builders fix the field order once), numbers have one
+//! spelling each — integers in `(−2^53, 2^53)` render without a fraction,
+//! every zero (including `-0.0`) renders as `0`, all other finite numbers
+//! use Rust's shortest-roundtrip `Display` (pure-Rust Ryū-style, no
+//! platform `printf` involved) — and non-finite numbers serialize as
+//! `null`. The service's byte-for-byte response contract (a repeated
+//! `/v1/plan` request compares equal with `cmp`) rests on this.
 
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -55,6 +65,22 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Whole non-negative number below 2^53 (counts, token lengths, GPU
+    /// counts — everything the wire protocol carries as an integer).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x < 9.0e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
             _ => None,
         }
     }
@@ -343,9 +369,15 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
     }
 }
 
+/// Canonical number spelling (see the module docs): `-0.0` folds into
+/// `0`, exact integers below 2^53 drop the fraction, everything else is
+/// the shortest string that round-trips — so equal values always render
+/// to equal bytes.
 fn fmt_num(x: f64) -> String {
     if !x.is_finite() {
         "null".to_string()
+    } else if x == 0.0 {
+        "0".to_string()
     } else if x == x.trunc() && x.abs() < 9.0e15 {
         format!("{}", x as i64)
     } else {
@@ -383,6 +415,36 @@ mod tests {
         assert_eq!(Json::Num(1.5).render(), "1.5");
         assert_eq!(Json::Num(f64::NAN).render(), "null");
         assert_eq!(Json::Num(f64::INFINITY).render(), "null");
+    }
+
+    #[test]
+    fn canonical_number_spelling() {
+        // Every zero is `0`; integers drop the fraction; fractions use the
+        // shortest round-trip spelling — one spelling per value.
+        assert_eq!(Json::Num(-0.0).render(), "0");
+        assert_eq!(Json::Num(0.0).render(), "0");
+        assert_eq!(Json::Num(3.0).render(), "3");
+        assert_eq!(Json::Num(-17.0).render(), "-17");
+        assert_eq!(Json::Num(0.1).render(), "0.1");
+        assert_eq!(Json::Num(4.25).render(), "4.25");
+        assert_eq!(Json::Num(1.0 / 3.0).render(), "0.3333333333333333");
+        // Canonical: parse(render(x)) renders to the same bytes again.
+        for x in [0.1, -0.0, 2.5e-4, 123456789.125, 1.0e16] {
+            let once = Json::Num(x).render();
+            let twice = Json::parse(&once).unwrap().render();
+            assert_eq!(once, twice, "{x}");
+        }
+    }
+
+    #[test]
+    fn integer_accessor() {
+        assert_eq!(Json::int(8).as_u64(), Some(8));
+        assert_eq!(Json::Num(8.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.0e16).as_u64(), None);
+        assert_eq!(Json::string("8").as_u64(), None);
+        assert_eq!(Json::Bool(true).as_bool(), Some(true));
+        assert_eq!(Json::Null.as_bool(), None);
     }
 
     #[test]

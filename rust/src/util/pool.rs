@@ -1,10 +1,14 @@
 //! Minimal scoped worker pool (rayon is not in the offline vendor set):
-//! an order-preserving parallel map over a slice. Workers claim items from
-//! a shared counter, so uneven per-item cost (a cheap Native bisection vs
-//! an expensive FPDT π=64 one) balances automatically.
+//! an order-preserving parallel map over a slice, plus a blocking
+//! [`JobQueue`] for long-lived worker threads. Map workers claim items
+//! from a shared counter, so uneven per-item cost (a cheap Native
+//! bisection vs an expensive FPDT π=64 one) balances automatically; queue
+//! workers block on a condvar, so the `serve-plan` daemon's accept loop
+//! can hand connections to however many handler threads are configured.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Default worker count: the machine's parallelism, capped — planner items
 /// are short and share memoization locks, so more threads only contend.
@@ -50,6 +54,69 @@ where
         .collect()
 }
 
+/// Blocking multi-producer multi-consumer FIFO for long-lived workers
+/// (the HTTP daemon's connection queue). `pop` parks the caller until an
+/// item arrives or the queue is closed; closing wakes everyone, drains
+/// the remaining items, then yields `None` — the worker-loop shutdown
+/// signal.
+pub struct JobQueue<T> {
+    state: Mutex<(VecDeque<T>, bool)>,
+    ready: Condvar,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new() -> Self {
+        JobQueue { state: Mutex::new((VecDeque::new(), false)), ready: Condvar::new() }
+    }
+
+    /// Enqueue an item; `false` (item dropped) after `close`.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.state.lock().unwrap();
+        if g.1 {
+            return false;
+        }
+        g.0.push_back(item);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Dequeue, blocking while the queue is open and empty. `None` once
+    /// the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = g.0.pop_front() {
+                return Some(item);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue: pending items still drain, new pushes are
+    /// refused, blocked and future `pop`s return `None` once empty.
+    pub fn close(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.ready.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Default for JobQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,5 +143,43 @@ mod tests {
     fn auto_thread_count_is_sane() {
         let t = default_threads();
         assert!((1..=16).contains(&t));
+    }
+
+    #[test]
+    fn job_queue_fifo_and_close() {
+        let q: JobQueue<u64> = JobQueue::new();
+        assert!(q.is_empty());
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        q.close();
+        // Pending items drain after close; new pushes are refused.
+        assert!(!q.push(3));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn job_queue_feeds_blocked_workers() {
+        let q: JobQueue<u64> = JobQueue::new();
+        let total = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..3 {
+                scope.spawn(|| {
+                    while let Some(v) = q.pop() {
+                        total.fetch_add(v as usize, Ordering::Relaxed);
+                    }
+                });
+            }
+            // Workers are (or will be) parked on the condvar; feed them.
+            for v in 1..=100u64 {
+                assert!(q.push(v));
+            }
+            q.close();
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 5050);
+        assert_eq!(q.pop(), None, "closed and drained");
     }
 }

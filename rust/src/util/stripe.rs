@@ -146,6 +146,15 @@ impl<K: Hash + Eq, V: Clone> StripedMap<K, V> {
         self.len() == 0
     }
 
+    /// Drop every entry (stripe by stripe — not an atomic snapshot under
+    /// concurrent writers). The planner-service session API uses this to
+    /// evict its cross-request memos without tearing down the session.
+    pub fn clear(&self) {
+        for s in &self.stripes {
+            s.lock().unwrap().clear();
+        }
+    }
+
     /// Fold over a snapshot of every entry (stripe by stripe). Used for
     /// end-of-sweep accounting (e.g. counting fitted vs fallen-back
     /// symbolic models); not a consistent point-in-time view under
@@ -219,6 +228,21 @@ mod tests {
             let v = m.get(&k).unwrap();
             assert_eq!(v % 1000, k, "value for {k} must come from one canonical insert");
         }
+    }
+
+    #[test]
+    fn clear_empties_every_stripe() {
+        let m: StripedMap<u64, u64> = StripedMap::new(4);
+        for k in 0..64 {
+            m.insert(k, k);
+        }
+        assert_eq!(m.len(), 64);
+        m.clear();
+        assert!(m.is_empty());
+        assert_eq!(m.get(&7), None);
+        // The map stays usable after eviction.
+        m.insert(7, 70);
+        assert_eq!(m.get(&7), Some(70));
     }
 
     #[test]

@@ -1,0 +1,125 @@
+//! Service-layer concurrency gate: N threads issuing interleaved
+//! identical + distinct plan/walls requests through **one**
+//! [`PlannerService`] must receive results bitwise-identical to
+//! sequential one-shot `plan()` calls (fresh caches, no session), the
+//! session's memo-hit counters must strictly increase on repeats, and a
+//! warm session must answer repeats and point queries with zero new
+//! streamed probes — the PR's acceptance criteria, end to end.
+//!
+//! Why this is non-trivial: the session shares lock-striped memos, a
+//! trace cache and fitted peak models across racing requests (first
+//! writer wins on every cold key), so the test is exactly the
+//! "plausible-sounding but wrong if any cache aliases" surface.
+
+use std::sync::Arc;
+
+use untied_ulysses::planner::plan;
+use untied_ulysses::report::planner::{plan_result_json, walls_at_json};
+use untied_ulysses::service::{PlanParams, PlannerService};
+use untied_ulysses::util::rng::Rng;
+
+/// Walls-only sweep on the 1M lattice.
+fn params_a() -> PlanParams {
+    let mut p = PlanParams::defaults("llama3-8b", 8);
+    p.quantum = 1 << 20;
+    p.cap_s = 8 << 20;
+    p.threads = 2;
+    p.feasibility_only = true;
+    p
+}
+
+/// Fully priced paper-dims plan (exercises the pricing memos too).
+fn params_b() -> PlanParams {
+    let mut p = PlanParams::defaults("llama3-8b", 8);
+    p.set_paper();
+    p.quantum = 1 << 20;
+    p.cap_s = 8 << 20;
+    p.threads = 2;
+    p
+}
+
+/// Distinct lattice (cap) — must never alias A's memoized walls.
+fn params_c() -> PlanParams {
+    let mut p = params_a();
+    p.cap_s = 4 << 20;
+    p
+}
+
+/// The ground truth: a fresh one-shot `plan()` with no session at all.
+fn one_shot_bytes(p: &PlanParams) -> String {
+    let (req, _) = p.to_request().expect("valid params");
+    plan_result_json(&plan(&req)).render()
+}
+
+#[test]
+fn interleaved_requests_match_one_shot_bitwise_and_memos_hit() {
+    let all = [params_a(), params_b(), params_c()];
+    let baselines: Vec<String> = all.iter().map(one_shot_bytes).collect();
+    assert_eq!(baselines.iter().collect::<std::collections::HashSet<_>>().len(), 3);
+
+    let service = Arc::new(PlannerService::new());
+    // Pre-warm the A lattice so point queries have a deterministic warm
+    // answer to compare against (tier-1 verified walls).
+    let warm_a = service.plan(&all[0]).expect("warm-up plan");
+    assert!(!warm_a.memo_hit);
+    let (point_base, _) = service.walls_point(&all[0], 6 << 20).expect("warm point query");
+    assert_eq!(point_base.probes, 0, "warm point query must not stream");
+    let point_base_bytes = walls_at_json(&point_base).render();
+
+    // The storm: 4 threads × 6 requests each, a pseudo-random interleave
+    // of the three plan shapes plus warm point queries.
+    std::thread::scope(|scope| {
+        for t in 0..4u64 {
+            let service = Arc::clone(&service);
+            let all = &all;
+            let baselines = &baselines;
+            let point_base_bytes = &point_base_bytes;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xC0FFEE + t);
+                for _ in 0..6 {
+                    let i = rng.below(all.len() as u64) as usize;
+                    let reply = service.plan(&all[i]).expect("plan");
+                    let got = plan_result_json(&reply.outcome).render();
+                    assert_eq!(&got, &baselines[i], "params {i} diverged from one-shot");
+                    if rng.below(2) == 0 {
+                        let (q, _) =
+                            service.walls_point(&all[0], 6 << 20).expect("point query");
+                        assert_eq!(&walls_at_json(&q).render(), point_base_bytes);
+                    }
+                }
+            });
+        }
+    });
+
+    // Memo accounting: 1 warm-up + 24 threaded requests over 3 distinct
+    // shapes. A was memoized before the storm, so only B's and C's first
+    // arrivals miss — racing first arrivals may each compute (first
+    // insert wins), bounding misses at 4 per cold shape. Hits dominate
+    // regardless and must strictly increase on a further repeat.
+    let st = service.stats();
+    assert_eq!(st.plan_requests, 25);
+    assert!(
+        st.plan_memo_hits >= 25 - 1 - 4 - 4,
+        "too few memo hits: {} of {}",
+        st.plan_memo_hits,
+        st.plan_requests
+    );
+    let hits_before = st.plan_memo_hits;
+    let probes_before = st.probes_streamed;
+    let sims_before = st.sims_priced;
+
+    // A repeated identical request: memo-hit counter strictly increases,
+    // zero new probes, zero new priced sims, bitwise-identical bytes.
+    let again = service.plan(&all[1]).expect("repeat");
+    assert!(again.memo_hit);
+    let st2 = service.stats();
+    assert!(st2.plan_memo_hits > hits_before, "memo hits must strictly increase");
+    assert_eq!(st2.probes_streamed, probes_before);
+    assert_eq!(st2.sims_priced, sims_before);
+    assert_eq!(plan_result_json(&again.outcome).render(), baselines[1]);
+
+    // And the warm point query stays probe-free after the storm.
+    let (q, _) = service.walls_point(&all[0], 6 << 20).expect("warm point query");
+    assert_eq!(q.probes, 0);
+    assert_eq!(walls_at_json(&q).render(), point_base_bytes);
+}
