@@ -8,16 +8,57 @@
 //! have a perf trajectory to compare against and CI can gate each phase
 //! independently.
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
 use untied_ulysses::config::presets::llama_single_node;
 use untied_ulysses::config::{ClusterConfig, CpMethod};
 use untied_ulysses::engine::Calibration;
 use untied_ulysses::model::ModelDims;
 use untied_ulysses::planner::{enumerate_space, plan, PlanRequest, SweepDims};
 use untied_ulysses::schedule::{feasibility_with, simulate_with};
-use untied_ulysses::service::{PlanParams, PlannerService};
+use untied_ulysses::service::{http, PlanParams, PlannerService};
 use untied_ulysses::util::bench::Bench;
 use untied_ulysses::util::fmt::tokens;
 use untied_ulysses::util::json::Json;
+
+/// Read one `Content-Length`-framed HTTP response off a persistent
+/// connection, keeping any over-read bytes in `buf` for the next call.
+fn read_one_response(s: &mut TcpStream, buf: &mut Vec<u8>) -> Vec<u8> {
+    fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+        hay.windows(needle.len()).position(|w| w == needle)
+    }
+    let mut chunk = [0u8; 4096];
+    let head_end = loop {
+        if let Some(p) = find(buf, b"\r\n\r\n") {
+            break p;
+        }
+        let n = s.read(&mut chunk).expect("read response");
+        assert!(n > 0, "daemon closed the keep-alive connection");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).expect("response head");
+    let len: usize = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                v.trim().parse().ok()
+            } else {
+                None
+            }
+        })
+        .expect("response Content-Length");
+    let total = head_end + 4 + len;
+    while buf.len() < total {
+        let n = s.read(&mut chunk).expect("read response body");
+        assert!(n > 0, "daemon closed mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let body = buf[head_end + 4..total].to_vec();
+    buf.drain(..total);
+    body
+}
 
 fn main() {
     // Bench-sized request: coarser quantum than the CLI default so one
@@ -85,6 +126,38 @@ fn main() {
         service.stats().plan_memo_hits
     );
 
+    // Sustained keep-alive HTTP path: the same warm request over ONE
+    // persistent connection through the real daemon — wire parse +
+    // memo hit + response framing per iteration, no TCP handshake.
+    // Gated as warm_http_requests_per_sec.
+    let http_service = std::sync::Arc::new(PlannerService::new());
+    let handle = http::serve(
+        std::sync::Arc::clone(&http_service),
+        "127.0.0.1:0",
+        http::ServeOptions { max_requests_per_connection: u64::MAX, ..Default::default() },
+    )
+    .expect("bind bench daemon");
+    let body = r#"{"model":"llama3-8b","gpus":8,"quantum":"512K","cap":"16M"}"#;
+    let raw = format!(
+        "POST /v1/plan HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    let mut conn = TcpStream::connect(handle.addr()).expect("connect bench daemon");
+    let mut leftover: Vec<u8> = Vec::new();
+    let mut http_round = || {
+        conn.write_all(raw.as_bytes()).expect("write request");
+        read_one_response(&mut conn, &mut leftover)
+    };
+    let first = http_round();
+    let http_warm = Bench::new("planner/service_warm_http").budget_ms(400).run(&mut http_round);
+    let again = http_round();
+    assert_eq!(first, again, "warm keep-alive responses must be byte-identical");
+    // Drop the client connection before stopping: the worker parks in
+    // the keep-alive read until its peer goes away.
+    drop(conn);
+    handle.stop();
+    println!("  service warm HTTP keep-alive: {:.0} requests/s", http_warm.per_sec());
+
     let bench_enum = Bench::new("planner/enumerate_space").budget_ms(200);
     let enum_dims = SweepDims { compositions: true, ..SweepDims::default() };
     let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, &enum_dims));
@@ -125,6 +198,7 @@ fn main() {
         ("sims_per_sec", Json::Num(out.simulations as f64 / sweep.mean.as_secs_f64())),
         ("walls_per_sec", Json::Num(walls_out.configs.len() as f64 / walls.mean.as_secs_f64())),
         ("warm_requests_per_sec", Json::Num(warm.per_sec())),
+        ("warm_http_requests_per_sec", Json::Num(http_warm.per_sec())),
         ("feasibility_probes_per_sec", Json::Num(feas.per_sec())),
         ("priced_sims_per_sec", Json::Num(priced.per_sec())),
         ("enumerate_per_sec", Json::Num(enumerate.per_sec())),

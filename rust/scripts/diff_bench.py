@@ -14,6 +14,9 @@ Gated metrics — each phase of the two-phase evaluator fails independently:
                               --feasibility-only multi-node frontier path)
 - warm_requests_per_sec      (planner-service warm path: repeated requests
                               answered from one session's plan memo)
+- warm_http_requests_per_sec (the same warm request through the daemon over
+                              one keep-alive connection: wire parse + memo
+                              hit + response framing, no TCP handshake)
 - feasibility_probes_per_sec (phase 1: streamed peak-only probes)
 - priced_sims_per_sec        (phase 2: trace build + full pricing)
 
@@ -29,6 +32,7 @@ GATED = (
     "configs_per_sec",
     "walls_per_sec",
     "warm_requests_per_sec",
+    "warm_http_requests_per_sec",
     "feasibility_probes_per_sec",
     "priced_sims_per_sec",
 )

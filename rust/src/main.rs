@@ -16,8 +16,10 @@
 //!       sweep every valid config, solve max trainable context, rank
 //!   repro frontier ...                                Pareto frontier only
 //!   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
+//!       [--cache-budget 1G] [--keep-alive-timeout 5]
 //!       planner-service daemon: POST /v1/plan | /v1/walls | /v1/frontier
 //!       | /v1/refit, GET /v1/health — persistent cross-request caches
+//!       under a tiered-LRU byte budget, HTTP/1.1 keep-alive
 //! Functional runtime (needs `make artifacts`):
 //!   repro parity        distributed UPipe vs monolithic logits check
 //!   repro train N       N training steps of the SMALL model (AOT step)
@@ -137,11 +139,17 @@ repro — Untied Ulysses (UPipe) reproduction
       bisection reference path, identical results)
   repro frontier ...  same flags; print only the Pareto frontier
   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
+                   [--cache-budget 1G] [--keep-alive-timeout 5]
       planner-as-a-service daemon over one warm session: POST /v1/plan,
-      /v1/walls (add \"at\" for a point capacity query), /v1/frontier,
-      /v1/refit; GET /v1/health. Persistent cross-request caches: a
-      repeated request is served from memos byte-for-byte, and a warm
-      walls query streams zero probes. api_version 1; see README.
+      /v1/walls (add \"at\" for a point query, or \"at\": [s1, s2, ...]
+      for a whole capacity curve), /v1/frontier, /v1/refit;
+      GET /v1/health. Persistent cross-request caches under a byte
+      budget (tiered LRU: bulky trace/report tiers evict first, verified
+      walls and fitted models last; 0 = unbounded): a repeated request
+      is served from memos byte-for-byte, and a warm walls query streams
+      zero probes. HTTP/1.1 keep-alive with pipelining
+      (--keep-alive-timeout seconds idle, 0 = one-shot connections).
+      api_version 1; see README and docs/OPERATIONS.md.
   repro compose       UPipe x FPDT composition study (paper §5.3.2)
   repro parity
   repro train [steps=100]
@@ -296,20 +304,47 @@ fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
 
 fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
     use untied_ulysses::service::{http, PlannerService};
+    use untied_ulysses::util::fmt::gib;
 
     let args = Args::new(rest);
     let port = args.u64("--port")?.unwrap_or(8077);
     anyhow::ensure!(port <= u16::MAX as u64, "bad --port {port}");
     let bind = args.str("--bind").unwrap_or_else(|| "127.0.0.1".into());
     let threads = args.u64("--threads")?.unwrap_or(0) as usize;
-    let service = std::sync::Arc::new(PlannerService::new());
-    let handle = http::serve(service, &format!("{bind}:{port}"), threads)?;
+    // `--cache-budget 2G` style; 0 = unbounded (never evict).
+    let budget = match args.tokens("--cache-budget")? {
+        None => untied_ulysses::service::DEFAULT_CACHE_BUDGET,
+        Some(0) => usize::MAX,
+        Some(b) => b as usize,
+    };
+    // Seconds of keep-alive idle window; 0 disables keep-alive.
+    let keep_alive = args.u64("--keep-alive-timeout")?.unwrap_or(5);
+    let opts = http::ServeOptions {
+        threads,
+        keep_alive_timeout: std::time::Duration::from_secs(keep_alive),
+        ..http::ServeOptions::default()
+    };
+    let service = std::sync::Arc::new(PlannerService::with_budget(budget));
+    let handle = http::serve(service, &format!("{bind}:{port}"), opts)?;
     println!("repro planner service listening on http://{}", handle.addr());
     println!(
         "  POST /v1/plan | /v1/walls | /v1/frontier | /v1/refit   GET /v1/health   \
          (api_version {})",
         untied_ulysses::service::API_VERSION
     );
+    if budget == usize::MAX {
+        println!("  cache budget: unbounded");
+    } else {
+        println!(
+            "  cache budget: {} GiB (tiered LRU; walls/models evicted last)",
+            gib(budget as f64)
+        );
+    }
+    if keep_alive == 0 {
+        println!("  keep-alive: disabled (one request per connection)");
+    } else {
+        println!("  keep-alive: {keep_alive}s idle timeout");
+    }
     use std::io::Write;
     std::io::stdout().flush().ok();
     handle.join();

@@ -257,6 +257,111 @@ impl PlannerCaches {
         ]
     }
 
+    /// Approximate resident bytes across every tier.
+    pub fn bytes(&self) -> usize {
+        self.trace.bytes()
+            + self.probe_memo.bytes()
+            + self.feas_memo.bytes()
+            + self.report_memo.bytes()
+            + self.models.bytes()
+            + self.walls.bytes()
+    }
+
+    /// Per-tier observability snapshot (`/v1/health`'s byte sizes and
+    /// eviction counts), in [`PlannerCaches::sizes`] order.
+    pub fn tiers(&self) -> [CacheTier; 6] {
+        [
+            CacheTier {
+                name: "traces",
+                entries: self.trace.len(),
+                bytes: self.trace.bytes(),
+                evictions: self.trace.evictions(),
+            },
+            CacheTier {
+                name: "peak_probes",
+                entries: self.probe_memo.len(),
+                bytes: self.probe_memo.bytes(),
+                evictions: self.probe_memo.evicted(),
+            },
+            CacheTier {
+                name: "budgeted_probes",
+                entries: self.feas_memo.len(),
+                bytes: self.feas_memo.bytes(),
+                evictions: self.feas_memo.evicted(),
+            },
+            CacheTier {
+                name: "priced_reports",
+                entries: self.report_memo.len(),
+                bytes: self.report_memo.bytes(),
+                evictions: self.report_memo.evicted(),
+            },
+            CacheTier {
+                name: "models",
+                entries: self.models.len(),
+                bytes: self.models.bytes(),
+                evictions: self.models.evicted(),
+            },
+            CacheTier {
+                name: "walls",
+                entries: self.walls.len(),
+                bytes: self.walls.bytes(),
+                evictions: self.walls.evicted(),
+            },
+        ]
+    }
+
+    /// Evict from the *bulk* tiers — cheapest to rebuild, biggest
+    /// footprint first: traces, then priced reports, then budgeted
+    /// probes, then peak probes — until the caches plus `extra_bytes` of
+    /// caller-side state (the service's plan memo) fit `budget`. Returns
+    /// entries dropped. Never touches the fitted-model or verified-walls
+    /// tiers: those are tiny, expensive to refit, and exactly what keeps
+    /// the warm walls path probe-free.
+    pub fn evict_bulk_to_fit(&self, budget: usize, extra_bytes: usize) -> u64 {
+        let excess = |c: &Self| (c.bytes() + extra_bytes).saturating_sub(budget);
+        let mut dropped = 0u64;
+        let e = excess(self);
+        if e == 0 {
+            return dropped;
+        }
+        dropped += self.trace.evict_lru(self.trace.bytes().saturating_sub(e));
+        let e = excess(self);
+        if e == 0 {
+            return dropped;
+        }
+        dropped += self.report_memo.evict_lru(self.report_memo.bytes().saturating_sub(e));
+        let e = excess(self);
+        if e == 0 {
+            return dropped;
+        }
+        dropped += self.feas_memo.evict_lru(self.feas_memo.bytes().saturating_sub(e));
+        let e = excess(self);
+        if e == 0 {
+            return dropped;
+        }
+        dropped += self.probe_memo.evict_lru(self.probe_memo.bytes().saturating_sub(e));
+        dropped
+    }
+
+    /// Last-resort eviction of the precious tiers (fitted models, then
+    /// verified walls) — only reached when a budget is set below the
+    /// tiers' own floor after every bulk tier is already empty.
+    pub fn evict_precious_to_fit(&self, budget: usize, extra_bytes: usize) -> u64 {
+        let excess = |c: &Self| (c.bytes() + extra_bytes).saturating_sub(budget);
+        let mut dropped = 0u64;
+        let e = excess(self);
+        if e == 0 {
+            return dropped;
+        }
+        dropped += self.models.evict_lru(self.models.bytes().saturating_sub(e));
+        let e = excess(self);
+        if e == 0 {
+            return dropped;
+        }
+        dropped += self.walls.evict_lru(self.walls.bytes().saturating_sub(e));
+        dropped
+    }
+
     /// Evict everything (a long-lived daemon's pressure valve); the
     /// session stays usable and simply re-evaluates on the next request.
     pub fn clear(&self) {
@@ -267,6 +372,16 @@ impl PlannerCaches {
         self.models.clear();
         self.walls.clear();
     }
+}
+
+/// One cache tier's observability snapshot (see [`PlannerCaches::tiers`]):
+/// what `/v1/health` reports so operators can size `--cache-budget`.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheTier {
+    pub name: &'static str,
+    pub entries: usize,
+    pub bytes: usize,
+    pub evictions: u64,
 }
 
 impl Default for PlannerCaches {
@@ -384,7 +499,11 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         }
         let r = simulate_cached(&preset, &calib, cache);
         priced.fetch_add(1, Ordering::Relaxed);
-        report_memo.insert(key, r)
+        // The timeline vector dominates a report's footprint; declare it
+        // so the service's byte budget can rank this tier honestly.
+        let payload = r.timeline.samples().len()
+            * std::mem::size_of::<crate::memory::tracker::Sample>();
+        report_memo.insert_weighed(key, r, payload)
     };
     let ok = |r: &StepReport| !r.oom && r.failed.is_none();
 

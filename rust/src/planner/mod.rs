@@ -37,8 +37,8 @@ pub mod search;
 pub mod space;
 
 pub use eval::{
-    plan, plan_with, walls_at, ConfigPlan, PlanOutcome, PlanRequest, PlannerCaches, WallAt,
-    WallSource, WallsAtOutcome,
+    plan, plan_with, walls_at, CacheTier, ConfigPlan, PlanOutcome, PlanRequest, PlannerCaches,
+    WallAt, WallSource, WallsAtOutcome,
 };
 pub use search::{bisect_max, bisect_max_from, pareto_front};
 pub use space::{enumerate_space, SweepDims};

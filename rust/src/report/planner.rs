@@ -351,6 +351,18 @@ pub fn walls_at_json(q: &WallsAtOutcome) -> Json {
     ])
 }
 
+/// A batch point query's answer — the `result` of `/v1/walls` with an
+/// `"at"` array: the per-point payloads in request order plus the total
+/// streamed-probe count (still 0 on a warm session; the CI batch smoke
+/// greps for it).
+pub fn walls_batch_json(qs: &[WallsAtOutcome]) -> Json {
+    let total: u64 = qs.iter().map(|q| q.probes).sum();
+    Json::obj(vec![
+        ("points", Json::Arr(qs.iter().map(walls_at_json).collect())),
+        ("probes", Json::int(total)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

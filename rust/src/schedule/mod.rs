@@ -297,7 +297,11 @@ impl TraceCache {
         // workers build neighbouring cells concurrently.
         let built = Arc::new(build_trace_with(p, calib));
         self.misses.fetch_add(1, Ordering::Relaxed);
-        self.traces.insert(key, built)
+        // The ops vector is the entry's real footprint — the `Arc` itself
+        // is 8 bytes; weigh it so the service's byte budget sees traces
+        // as the dominant tier they are.
+        let payload = built.len() * std::mem::size_of::<Op>();
+        self.traces.insert_weighed(key, built, payload)
     }
 
     pub fn hits(&self) -> u64 {
@@ -314,6 +318,23 @@ impl TraceCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Approximate resident bytes (keys + `Op` payloads).
+    pub fn bytes(&self) -> usize {
+        self.traces.bytes()
+    }
+
+    /// Lifetime count of traces dropped by [`TraceCache::evict_lru`].
+    pub fn evictions(&self) -> u64 {
+        self.traces.evicted()
+    }
+
+    /// Shed least-recently-used traces until the cache weighs at most
+    /// `target_bytes`; returns how many were dropped. Only warmth is
+    /// lost — an evicted cell rebuilds on its next miss.
+    pub fn evict_lru(&self, target_bytes: usize) -> u64 {
+        self.traces.evict_lru(target_bytes)
     }
 
     /// Drop every memoized trace (hit/miss counters keep running — they

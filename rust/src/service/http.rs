@@ -2,18 +2,25 @@
 //! [`PlannerService`] session. A std `TcpListener` accept loop feeds a
 //! [`JobQueue`] drained by N worker threads (the same pool philosophy as
 //! the sweep evaluator: no async runtime, no framework — the offline
-//! vendor set has neither), each connection handled read → route →
-//! respond with `Connection: close`.
+//! vendor set has neither). Each worker owns its connection for the
+//! connection's whole life: requests are served in a keep-alive loop
+//! (read → route → respond → read again), pipelined requests are drained
+//! from the same buffer in order, and the connection closes on
+//! `Connection: close`, an idle timeout, a per-connection request cap,
+//! or an unrecoverable framing error. Routed errors (400/404/405) answer
+//! and keep the connection alive — the stream is still in sync; framing
+//! errors (truncated head, oversized body) answer and close, because
+//! resynchronizing an unparseable stream is guesswork.
 //!
 //! Endpoints (wire dialect: [`super::wire`], `api_version 1`):
 //!
 //! | method + path      | body                          | result            |
 //! |--------------------|-------------------------------|-------------------|
 //! | `POST /v1/plan`    | plan params                   | ranked plan       |
-//! | `POST /v1/walls`   | plan params (+ `"at"`)        | walls sweep / point query |
+//! | `POST /v1/walls`   | plan params (+ `"at"`)        | walls sweep / point query / batch curve |
 //! | `POST /v1/frontier`| plan params                   | Pareto frontier   |
 //! | `POST /v1/refit`   | `{"measurements": {...}}`     | refit provenance  |
-//! | `GET  /v1/health`  | —                             | status, per-endpoint p50/p95 + hit rates, cache sizes |
+//! | `GET  /v1/health`  | —                             | status, per-endpoint p50/p95, per-tier cache bytes + evictions |
 //!
 //! Every error is a structured JSON envelope (`error.code` /
 //! `error.message`) with a matching status code; handler panics are
@@ -23,7 +30,7 @@
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -32,7 +39,7 @@ use crate::report::planner as planner_report;
 use crate::util::json::Json;
 use crate::util::pool::{default_threads, JobQueue};
 
-use super::wire::{self, PlanParams, RefitParams, WallsParams, API_VERSION};
+use super::wire::{self, AtQuery, PlanParams, RefitParams, WallsParams, API_VERSION};
 use super::PlannerService;
 
 /// Request-size ceilings: a header block or body beyond these is refused
@@ -40,7 +47,10 @@ use super::PlannerService;
 const MAX_HEAD_BYTES: usize = 16 * 1024;
 const MAX_BODY_BYTES: usize = 1024 * 1024;
 
-/// Per-connection socket timeout — a stalled peer releases its worker.
+/// Mid-request socket timeout — a peer that stalls halfway through a
+/// head or body releases its worker. The *between*-requests wait on a
+/// kept-alive connection uses [`ServeOptions::keep_alive_timeout`]
+/// instead.
 const IO_TIMEOUT: Duration = Duration::from_secs(10);
 
 /// Connection-queue depth bound: handlers can hold workers for seconds
@@ -48,6 +58,33 @@ const IO_TIMEOUT: Duration = Duration::from_secs(10);
 /// sockets — and file descriptors — without limit. Beyond this depth the
 /// accept loop answers 503 inline and drops the connection.
 const MAX_QUEUED_CONNECTIONS: usize = 128;
+
+/// How the daemon serves connections. `Default` is the production shape:
+/// auto worker count, 5 s keep-alive idle window, and a per-connection
+/// request cap so one client cannot monopolize a worker forever.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Worker threads (0 = auto, capped — handlers hold the planner's
+    /// own worker pool busy, so a few are plenty).
+    pub threads: usize,
+    /// How long a kept-alive connection may sit idle between requests
+    /// before the server closes it. `Duration::ZERO` disables keep-alive
+    /// entirely: every response carries `Connection: close`.
+    pub keep_alive_timeout: Duration,
+    /// Requests served on one connection before the server closes it
+    /// (fairness under sustained traffic; 0 behaves like 1).
+    pub max_requests_per_connection: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            threads: 0,
+            keep_alive_timeout: Duration::from_secs(5),
+            max_requests_per_connection: 1000,
+        }
+    }
+}
 
 /// Endpoint identities for the latency/hit-rate stats (index = slot).
 const ENDPOINTS: [&str; 6] = ["plan", "walls", "frontier", "refit", "health", "other"];
@@ -80,6 +117,12 @@ impl EndpointAgg {
 
 struct HttpStats {
     endpoints: [Mutex<EndpointAgg>; 6],
+    /// Connections accepted and handed to a worker.
+    connections: AtomicU64,
+    /// Requests served on an already-used connection — the keep-alive
+    /// win: `keepalive_reuses / total served` is the fraction of requests
+    /// that skipped a TCP handshake.
+    keepalive_reuses: AtomicU64,
     started: Instant,
 }
 
@@ -87,6 +130,8 @@ impl HttpStats {
     fn new() -> Self {
         HttpStats {
             endpoints: std::array::from_fn(|_| Mutex::new(EndpointAgg::default())),
+            connections: AtomicU64::new(0),
+            keepalive_reuses: AtomicU64::new(0),
             started: Instant::now(),
         }
     }
@@ -139,6 +184,8 @@ impl ServeHandle {
     }
 
     /// Stop accepting, drain in-flight connections, join every thread.
+    /// Clients must drop their kept-alive connections for the workers to
+    /// come home (they will, within the idle timeout, regardless).
     pub fn stop(mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // Wake the accept loop with a throwaway connection.
@@ -162,27 +209,28 @@ impl ServeHandle {
 }
 
 /// Bind `addr` (e.g. `127.0.0.1:8077`; port 0 picks a free one) and serve
-/// the session on `threads` workers (0 = auto, capped — handlers hold the
-/// planner's own worker pool busy, so a few are plenty).
+/// the session per `opts`.
 pub fn serve(
     service: Arc<PlannerService>,
     addr: &str,
-    threads: usize,
+    opts: ServeOptions,
 ) -> std::io::Result<ServeHandle> {
     let listener = TcpListener::bind(addr)?;
     let bound = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
     let queue: Arc<JobQueue<TcpStream>> = Arc::new(JobQueue::new());
     let stats = Arc::new(HttpStats::new());
-    let threads = if threads == 0 { default_threads().min(4) } else { threads };
+    let threads = if opts.threads == 0 { default_threads().min(4) } else { opts.threads };
+    let opts = Arc::new(opts);
     let mut workers = Vec::new();
     for _ in 0..threads.max(1) {
         let q = Arc::clone(&queue);
         let svc = Arc::clone(&service);
         let st = Arc::clone(&stats);
+        let op = Arc::clone(&opts);
         workers.push(std::thread::spawn(move || {
             while let Some(stream) = q.pop() {
-                handle_connection(&svc, &st, stream);
+                handle_connection(&svc, &st, &op, stream);
             }
         }));
     }
@@ -204,7 +252,7 @@ pub fn serve(
                             "overloaded",
                             "request queue is full; retry later",
                         );
-                        write_response(&mut stream, 503, &body);
+                        write_response(&mut stream, 503, &body, false);
                         continue;
                     }
                     q.push(stream);
@@ -227,24 +275,63 @@ impl HttpError {
     }
 }
 
-fn handle_connection(service: &PlannerService, stats: &HttpStats, mut stream: TcpStream) {
-    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+/// One parsed request off a connection's stream.
+struct Request {
+    method: String,
+    path: String,
+    body: Vec<u8>,
+    /// The client asked for this to be the connection's last request
+    /// (`Connection: close`, or HTTP/1.0 without `keep-alive`).
+    close: bool,
+}
+
+/// The per-connection request loop. Each iteration reads one request
+/// from the shared buffer (pipelined successors are already there),
+/// routes it, and answers with the right `Connection` header. `Ok(None)`
+/// from the reader is a clean end (peer EOF or idle timeout between
+/// requests); a framing error answers and closes.
+fn handle_connection(
+    service: &PlannerService,
+    stats: &HttpStats,
+    opts: &ServeOptions,
+    mut stream: TcpStream,
+) {
+    stats.connections.fetch_add(1, Ordering::Relaxed);
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
-    let (status, body) = match read_request(&mut stream) {
-        Ok((method, path, body)) => {
-            let t0 = Instant::now();
-            let (ep, resp) = route(service, stats, &method, &path, &body);
-            stats.record(ep, resp.0 < 400, t0.elapsed().as_secs_f64() * 1e3);
-            resp
+    let keep_alive_enabled = !opts.keep_alive_timeout.is_zero();
+    let idle = if keep_alive_enabled { opts.keep_alive_timeout } else { IO_TIMEOUT };
+    let mut buf: Vec<u8> = Vec::new();
+    let mut served: u64 = 0;
+    loop {
+        match read_request(&mut stream, &mut buf, idle) {
+            Ok(None) => break,
+            Ok(Some(req)) => {
+                let t0 = Instant::now();
+                let (ep, (status, body)) = route(service, stats, &req.method, &req.path, &req.body);
+                stats.record(ep, status < 400, t0.elapsed().as_secs_f64() * 1e3);
+                served += 1;
+                if served > 1 {
+                    stats.keepalive_reuses.fetch_add(1, Ordering::Relaxed);
+                }
+                let keep = keep_alive_enabled
+                    && !req.close
+                    && served < opts.max_requests_per_connection.max(1)
+                    && status < 500;
+                write_response(&mut stream, status, &body, keep);
+                if !keep {
+                    break;
+                }
+            }
+            Err(e) => {
+                // Unreadable/oversized requests never reach routing; count
+                // them under "other" so /v1/health still sees the errors.
+                stats.record(EP_OTHER, false, 0.0);
+                let body = wire::error_envelope(e.code, &e.message);
+                write_response(&mut stream, e.status, &body, false);
+                break;
+            }
         }
-        Err(e) => {
-            // Unreadable/oversized requests never reach routing; count
-            // them under "other" so /v1/health still sees the errors.
-            stats.record(EP_OTHER, false, 0.0);
-            (e.status, wire::error_envelope(e.code, &e.message))
-        }
-    };
-    write_response(&mut stream, status, &body);
+    }
 }
 
 fn known_path(path: &str) -> bool {
@@ -319,11 +406,18 @@ fn walls_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json) {
         Ok(p) => p,
         Err(e) => return (400, wire::error_envelope("bad_request", &e)),
     };
-    match params.at {
-        Some(at) => match service.walls_point(&params.plan, at) {
+    match params.at.clone() {
+        Some(AtQuery::One(at)) => match service.walls_point(&params.plan, at) {
             Ok((q, warnings)) => {
                 let result = planner_report::walls_at_json(&q);
                 (200, wire::envelope("walls_at", params.canonical(), &warnings, result))
+            }
+            Err(e) => (400, wire::error_envelope("bad_request", &e)),
+        },
+        Some(AtQuery::Many(points)) => match service.walls_batch(&params.plan, &points) {
+            Ok((qs, warnings)) => {
+                let result = planner_report::walls_batch_json(&qs);
+                (200, wire::envelope("walls_batch", params.canonical(), &warnings, result))
             }
             Err(e) => (400, wire::error_envelope("bad_request", &e)),
         },
@@ -367,11 +461,34 @@ fn refit_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json) {
 fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
     let st = service.stats();
     let sizes = service.caches().sizes();
+    let tiers = service.caches().tiers();
+    let mut tier_bytes = vec![
+        ("budget", Json::int(service.cache_budget() as u64)),
+        ("total", Json::int(service.cache_bytes() as u64)),
+        ("plans", Json::int(service.plan_memo_bytes() as u64)),
+    ];
+    for t in &tiers {
+        tier_bytes.push((t.name, Json::int(t.bytes as u64)));
+    }
+    let mut tier_evictions = vec![("plans", Json::int(service.plan_memo_evictions()))];
+    for t in &tiers {
+        tier_evictions.push((t.name, Json::int(t.evictions)));
+    }
     Json::obj(vec![
         ("api_version", Json::int(API_VERSION)),
         ("status", Json::string("ok")),
         ("uptime_s", Json::Num(stats.started.elapsed().as_secs_f64())),
         ("endpoints", stats.json()),
+        (
+            "http",
+            Json::obj(vec![
+                ("connections", Json::int(stats.connections.load(Ordering::Relaxed))),
+                (
+                    "keepalive_reuses",
+                    Json::int(stats.keepalive_reuses.load(Ordering::Relaxed)),
+                ),
+            ]),
+        ),
         (
             "service",
             Json::obj(vec![
@@ -382,6 +499,7 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
                 ("probes_streamed", Json::int(st.probes_streamed)),
                 ("sims_priced", Json::int(st.sims_priced)),
                 ("cache_evictions", Json::int(st.cache_evictions)),
+                ("entries_evicted", Json::int(st.entries_evicted)),
             ]),
         ),
         (
@@ -396,6 +514,8 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
                 ("walls", Json::int(sizes[5] as u64)),
             ]),
         ),
+        ("cache_bytes", Json::obj(tier_bytes)),
+        ("evictions", Json::obj(tier_evictions)),
     ])
 }
 
@@ -403,11 +523,23 @@ fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
     hay.windows(needle.len()).position(|w| w == needle)
 }
 
-fn read_request(stream: &mut TcpStream) -> Result<(String, String, Vec<u8>), HttpError> {
-    let mut buf: Vec<u8> = Vec::new();
+fn timed_out(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one request from `stream`, carrying leftover bytes across calls
+/// in `buf` so pipelined requests are served in order without touching
+/// the socket. Returns `Ok(None)` for a clean end between requests (peer
+/// closed, or nothing arrived within `idle`); a timeout or EOF *mid*-
+/// request is a framing error — the stream cannot be resynced.
+fn read_request(
+    stream: &mut TcpStream,
+    buf: &mut Vec<u8>,
+    idle: Duration,
+) -> Result<Option<Request>, HttpError> {
     let mut chunk = [0u8; 4096];
     let head_end = loop {
-        if let Some(pos) = find_subslice(&buf, b"\r\n\r\n") {
+        if let Some(pos) = find_subslice(buf, b"\r\n\r\n") {
             break pos;
         }
         if buf.len() > MAX_HEAD_BYTES {
@@ -417,13 +549,29 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, Vec<u8>), Htt
                 message: format!("request head exceeds {MAX_HEAD_BYTES} bytes"),
             });
         }
-        let n = stream
-            .read(&mut chunk)
-            .map_err(|e| HttpError::bad(format!("reading request: {e}")))?;
-        if n == 0 {
-            return Err(HttpError::bad("truncated request"));
+        // Between requests the connection may sit idle for the keep-alive
+        // window; once the first byte of a head arrives, the peer must
+        // finish it within the ordinary I/O timeout.
+        let wait = if buf.is_empty() { idle } else { IO_TIMEOUT };
+        let _ = stream.set_read_timeout(Some(wait));
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(HttpError::bad("truncated request"))
+                };
+            }
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if timed_out(&e) => {
+                return if buf.is_empty() {
+                    Ok(None)
+                } else {
+                    Err(HttpError::bad("timed out reading request"))
+                };
+            }
+            Err(e) => return Err(HttpError::bad(format!("reading request: {e}"))),
         }
-        buf.extend_from_slice(&chunk[..n]);
     };
     let head = std::str::from_utf8(&buf[..head_end])
         .map_err(|_| HttpError::bad("request head is not valid UTF-8"))?;
@@ -432,12 +580,15 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, Vec<u8>), Htt
     let mut parts = request_line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
     // Ignore any query string: routing is by path.
     let path = target.split('?').next().unwrap_or("").to_string();
     if method.is_empty() || !path.starts_with('/') {
         return Err(HttpError::bad(format!("malformed request line `{request_line}`")));
     }
     let mut content_length: Option<usize> = None;
+    // HTTP/1.0 defaults to one-shot; HTTP/1.1 to persistent.
+    let mut close = version.eq_ignore_ascii_case("HTTP/1.0");
     for line in lines {
         if let Some((k, v)) = line.split_once(':') {
             let key = k.trim();
@@ -454,6 +605,13 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, Vec<u8>), Htt
                 return Err(HttpError::bad(
                     "Transfer-Encoding is not supported; send Content-Length",
                 ));
+            } else if key.eq_ignore_ascii_case("connection") {
+                let v = v.trim();
+                if v.eq_ignore_ascii_case("close") {
+                    close = true;
+                } else if v.eq_ignore_ascii_case("keep-alive") {
+                    close = false;
+                }
             }
         }
     }
@@ -473,21 +631,25 @@ fn read_request(stream: &mut TcpStream) -> Result<(String, String, Vec<u8>), Htt
             message: format!("request body exceeds {MAX_BODY_BYTES} bytes"),
         });
     }
-    let mut body = buf[head_end + 4..].to_vec();
-    while body.len() < content_length {
-        let n = stream
-            .read(&mut chunk)
-            .map_err(|e| HttpError::bad(format!("reading request body: {e}")))?;
-        if n == 0 {
-            return Err(HttpError::bad("truncated request body"));
+    let total = head_end + 4 + content_length;
+    while buf.len() < total {
+        let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+        match stream.read(&mut chunk) {
+            Ok(0) => return Err(HttpError::bad("truncated request body")),
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if timed_out(&e) => {
+                return Err(HttpError::bad("timed out reading request body"));
+            }
+            Err(e) => return Err(HttpError::bad(format!("reading request body: {e}"))),
         }
-        body.extend_from_slice(&chunk[..n]);
     }
-    body.truncate(content_length);
-    Ok((method, path, body))
+    let body = buf[head_end + 4..total].to_vec();
+    // Keep any pipelined successor bytes for the next iteration.
+    buf.drain(..total);
+    Ok(Some(Request { method, path, body, close }))
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, body: &Json) {
+fn write_response(stream: &mut TcpStream, status: u16, body: &Json, keep_alive: bool) {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -499,10 +661,11 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &Json) {
         503 => "Service Unavailable",
         _ => "Error",
     };
+    let connection = if keep_alive { "keep-alive" } else { "close" };
     let payload = body.pretty() + "\n";
     let head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
         payload.len()
     );
     let _ = stream.write_all(head.as_bytes());
@@ -514,6 +677,8 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &Json) {
 mod tests {
     use super::*;
 
+    /// One-shot helper: asks for `Connection: close` so `read_to_string`
+    /// sees EOF right after the response.
     fn request(addr: SocketAddr, raw: &str) -> (u16, String) {
         let mut s = TcpStream::connect(addr).unwrap();
         s.write_all(raw.as_bytes()).unwrap();
@@ -526,19 +691,68 @@ mod tests {
 
     fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
         let raw = format!(
-            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+             Content-Length: {}\r\n\r\n{body}",
             body.len()
         );
         request(addr, &raw)
     }
 
+    /// A keep-alive POST: no `Connection` header, so the connection
+    /// stays open for the next request.
+    fn write_post(s: &mut TcpStream, path: &str, body: &str) {
+        let raw = format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        s.write_all(raw.as_bytes()).unwrap();
+    }
+
+    /// Read exactly one framed response off a persistent connection,
+    /// carrying pipelined leftover bytes in `buf`.
+    fn read_one_response(s: &mut TcpStream, buf: &mut Vec<u8>) -> (u16, String, String) {
+        let mut chunk = [0u8; 4096];
+        let head_end = loop {
+            if let Some(p) = find_subslice(buf, b"\r\n\r\n") {
+                break p;
+            }
+            let n = s.read(&mut chunk).unwrap();
+            assert!(n > 0, "connection closed mid-response");
+            buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = String::from_utf8(buf[..head_end].to_vec()).unwrap();
+        let status: u16 = head.split_whitespace().nth(1).unwrap().parse().unwrap();
+        let len: usize = head
+            .lines()
+            .find_map(|l| {
+                let (k, v) = l.split_once(':')?;
+                if k.trim().eq_ignore_ascii_case("content-length") {
+                    v.trim().parse().ok()
+                } else {
+                    None
+                }
+            })
+            .expect("response has Content-Length");
+        let total = head_end + 4 + len;
+        while buf.len() < total {
+            let n = s.read(&mut chunk).unwrap();
+            assert!(n > 0, "connection closed mid-body");
+            buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = String::from_utf8(buf[head_end + 4..total].to_vec()).unwrap();
+        buf.drain(..total);
+        (status, head, body)
+    }
+
+    const WARM_BODY: &str = r#"{"model":"llama3-8b","gpus":8,"quantum":"1M","cap":"8M",
+                       "feasibility_only":true,"threads":2}"#;
+
     #[test]
     fn daemon_serves_plan_walls_health_and_errors() {
         let service = Arc::new(PlannerService::new());
-        let handle = serve(Arc::clone(&service), "127.0.0.1:0", 2).unwrap();
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
         let addr = handle.addr();
-        let body = r#"{"model":"llama3-8b","gpus":8,"quantum":"1M","cap":"8M",
-                       "feasibility_only":true,"threads":2}"#;
+        let body = WARM_BODY;
         let (st, first) = post(addr, "/v1/plan", body);
         assert_eq!(st, 200, "{first}");
         assert!(first.contains("\"api_version\": 1"), "{first}");
@@ -562,18 +776,24 @@ mod tests {
         assert_eq!(st4, 200);
         assert!(frontier.contains("\"kind\": \"frontier\""));
         // Health: status, memo hit-rate, latency percentiles, cache sizes.
-        let (st5, health) = request(addr, "GET /v1/health HTTP/1.1\r\nHost: t\r\n\r\n");
+        let (st5, health) =
+            request(addr, "GET /v1/health HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
         assert_eq!(st5, 200);
         assert!(health.contains("\"status\": \"ok\""), "{health}");
         assert!(health.contains("\"plan_memo_hits\": 2"), "{health}");
         assert!(health.contains("\"p95_ms\""));
         assert!(health.contains("\"walls\""));
+        assert!(health.contains("\"cache_bytes\""), "{health}");
+        assert!(health.contains("\"evictions\""), "{health}");
+        assert!(health.contains("\"keepalive_reuses\""), "{health}");
         // Structured errors: 404 / 405 / 400 (parse, unknown field,
         // foreign api_version).
-        let (s404, e404) = request(addr, "GET /v1/nope HTTP/1.1\r\nHost: t\r\n\r\n");
+        let (s404, e404) =
+            request(addr, "GET /v1/nope HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
         assert_eq!(s404, 404);
         assert!(e404.contains("\"code\": \"not_found\""), "{e404}");
-        let (s405, e405) = request(addr, "GET /v1/plan HTTP/1.1\r\nHost: t\r\n\r\n");
+        let (s405, e405) =
+            request(addr, "GET /v1/plan HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
         assert_eq!(s405, 405);
         assert!(e405.contains("\"code\": \"method_not_allowed\""));
         let (s400, e400) = post(addr, "/v1/plan", "{not json");
@@ -589,9 +809,147 @@ mod tests {
     }
 
     #[test]
+    fn keep_alive_serves_identical_bytes_and_honors_close() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = handle.addr();
+        // One-shot reference response (also warms the session memo).
+        let (st, oneshot) = post(addr, "/v1/plan", WARM_BODY);
+        assert_eq!(st, 200, "{oneshot}");
+        // Two sequential requests on ONE connection: both keep-alive,
+        // both byte-identical to the one-shot body.
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut buf = Vec::new();
+        write_post(&mut s, "/v1/plan", WARM_BODY);
+        let (st1, head1, body1) = read_one_response(&mut s, &mut buf);
+        assert_eq!(st1, 200);
+        assert!(head1.contains("Connection: keep-alive"), "{head1}");
+        assert_eq!(body1, oneshot);
+        write_post(&mut s, "/v1/plan", WARM_BODY);
+        let (st2, _, body2) = read_one_response(&mut s, &mut buf);
+        assert_eq!(st2, 200);
+        assert_eq!(body2, oneshot);
+        // `Connection: close` is honored: response says close, then EOF.
+        let raw = format!(
+            "POST /v1/plan HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+             Content-Length: {}\r\n\r\n{}",
+            WARM_BODY.len(),
+            WARM_BODY
+        );
+        s.write_all(raw.as_bytes()).unwrap();
+        let (st3, head3, body3) = read_one_response(&mut s, &mut buf);
+        assert_eq!(st3, 200);
+        assert!(head3.contains("Connection: close"), "{head3}");
+        assert_eq!(body3, oneshot);
+        let mut rest = Vec::new();
+        s.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "server must close after Connection: close");
+        // The daemon observed the reuse.
+        let (_, health) =
+            request(addr, "GET /v1/health HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert!(health.contains("\"keepalive_reuses\": 2"), "{health}");
+        handle.stop();
+    }
+
+    #[test]
+    fn pipelined_requests_survive_an_early_routed_error() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = handle.addr();
+        let (_, warm) = post(addr, "/v1/plan", WARM_BODY);
+        // Both requests written before reading anything: the first is a
+        // routed 400 (bad JSON body, stream still framed), the second
+        // must still answer — in order, from the same buffer.
+        let mut s = TcpStream::connect(addr).unwrap();
+        let bad = "{oops";
+        let raw = format!(
+            "POST /v1/plan HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{bad}\
+             POST /v1/plan HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+             Content-Length: {}\r\n\r\n{}",
+            bad.len(),
+            WARM_BODY.len(),
+            WARM_BODY
+        );
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut buf = Vec::new();
+        let (st1, _, err) = read_one_response(&mut s, &mut buf);
+        assert_eq!(st1, 400);
+        assert!(err.contains("\"code\": \"bad_request\""), "{err}");
+        let (st2, _, body) = read_one_response(&mut s, &mut buf);
+        assert_eq!(st2, 200);
+        assert_eq!(body, warm, "pipelined warm reply matches the one-shot bytes");
+        handle.stop();
+    }
+
+    #[test]
+    fn idle_keep_alive_connections_are_closed_by_the_server() {
+        let service = Arc::new(PlannerService::new());
+        let opts = ServeOptions {
+            keep_alive_timeout: Duration::from_millis(300),
+            ..ServeOptions::default()
+        };
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", opts).unwrap();
+        let addr = handle.addr();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let mut buf = Vec::new();
+        write_post(&mut s, "/v1/plan", WARM_BODY);
+        let (st, head, _) = read_one_response(&mut s, &mut buf);
+        assert_eq!(st, 200);
+        assert!(head.contains("Connection: keep-alive"), "{head}");
+        // Say nothing: the server hangs up within the idle window.
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut rest = Vec::new();
+        s.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "idle close sends no bytes");
+        // keep_alive_timeout zero disables keep-alive outright.
+        let svc2 = Arc::new(PlannerService::new());
+        let opts2 = ServeOptions { keep_alive_timeout: Duration::ZERO, ..ServeOptions::default() };
+        let h2 = serve(Arc::clone(&svc2), "127.0.0.1:0", opts2).unwrap();
+        let mut s2 = TcpStream::connect(h2.addr()).unwrap();
+        // No Connection: close, yet the response closes the connection.
+        s2.write_all(b"GET /v1/health HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s2.read_to_string(&mut resp).unwrap();
+        assert!(resp.contains("Connection: close"), "{resp}");
+        h2.stop();
+        handle.stop();
+    }
+
+    #[test]
+    fn batch_walls_answers_a_curve_in_one_request() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = handle.addr();
+        // Warm the lattice with a sweep, then ask for a three-point curve.
+        let (st, _) = post(addr, "/v1/plan", WARM_BODY);
+        assert_eq!(st, 200);
+        let batch = r#"{"model":"llama3-8b","gpus":8,"quantum":"1M","cap":"8M",
+                        "feasibility_only":true,"at":["4M","5M","6M"]}"#;
+        let (st2, resp) = post(addr, "/v1/walls", batch);
+        assert_eq!(st2, 200, "{resp}");
+        assert!(resp.contains("\"kind\": \"walls_batch\""), "{resp}");
+        // Canonical echo keeps the batch in request order.
+        for seq in ["4194304", "5242880", "6291456"] {
+            assert!(resp.contains(seq), "{resp}");
+        }
+        assert_eq!(resp.matches("\"seq_lattice\"").count(), 3, "{resp}");
+        // All three points answered from session memos: zero probes.
+        assert!(resp.contains("\"probes\": 0"), "{resp}");
+        // Batch edge cases are structured 400s.
+        let (se, ee) = post(addr, "/v1/walls", r#"{"at":[]}"#);
+        assert_eq!(se, 400);
+        assert!(ee.contains("at least one point"), "{ee}");
+        let over: Vec<String> = (1..=257).map(|i| i.to_string()).collect();
+        let (so, eo) = post(addr, "/v1/walls", &format!("{{\"at\":[{}]}}", over.join(",")));
+        assert_eq!(so, 400);
+        assert!(eo.contains("at most 256"), "{eo}");
+        handle.stop();
+    }
+
+    #[test]
     fn refit_endpoint_round_trips_measurements() {
         let service = Arc::new(PlannerService::new());
-        let handle = serve(Arc::clone(&service), "127.0.0.1:0", 1).unwrap();
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
         let addr = handle.addr();
         let text = std::fs::read_to_string(concat!(
             env!("CARGO_MANIFEST_DIR"),

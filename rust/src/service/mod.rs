@@ -64,8 +64,10 @@ pub struct ServiceStats {
     pub probes_streamed: u64,
     /// Fully priced simulations across all requests (memo hits excluded).
     pub sims_priced: u64,
-    /// Times the automatic pressure valve evicted the session caches.
+    /// Times the byte-budget valve ran and evicted at least one entry.
     pub cache_evictions: u64,
+    /// Total entries dropped by the valve across every tier.
+    pub entries_evicted: u64,
 }
 
 /// A long-lived planner session: persistent cross-request caches behind
@@ -88,6 +90,9 @@ pub struct PlannerService {
     /// fingerprint (see `PlanParams::canonical`). A repeated request is
     /// one lookup.
     plans: StripedMap<String, Arc<PlanMemoEntry>>,
+    /// Byte budget for every cache tier combined (`usize::MAX` =
+    /// unbounded); see [`PlannerService::enforce_budget`].
+    cache_budget: usize,
     plan_requests: AtomicU64,
     plan_memo_hits: AtomicU64,
     point_queries: AtomicU64,
@@ -95,21 +100,27 @@ pub struct PlannerService {
     probes_streamed: AtomicU64,
     sims_priced: AtomicU64,
     cache_evictions: AtomicU64,
+    entries_evicted: AtomicU64,
 }
 
-/// Automatic pressure-valve bounds: when the session holds more memoized
-/// plans or cache entries than this, everything is evicted and the next
-/// requests rebuild (correctness is unaffected — only warmth). Keeps a
-/// long-lived daemon serving arbitrarily varied request shapes at
-/// bounded memory.
-const MAX_MEMO_PLANS: usize = 1024;
-const MAX_CACHE_ENTRIES: usize = 1 << 20;
+/// Default byte budget for the session caches (all tiers plus the plan
+/// memo): 1 GiB. Keeps a long-lived daemon serving arbitrarily varied
+/// request shapes at bounded memory; the `repro serve-plan` CLI overrides
+/// it with `--cache-budget`.
+pub const DEFAULT_CACHE_BUDGET: usize = 1 << 30;
 
 impl PlannerService {
     pub fn new() -> Self {
+        Self::with_budget(DEFAULT_CACHE_BUDGET)
+    }
+
+    /// A session whose caches are evicted down to `cache_budget` bytes at
+    /// the end of each state-growing request (`usize::MAX` = unbounded).
+    pub fn with_budget(cache_budget: usize) -> Self {
         PlannerService {
             caches: PlannerCaches::new(),
             plans: StripedMap::default(),
+            cache_budget,
             plan_requests: AtomicU64::new(0),
             plan_memo_hits: AtomicU64::new(0),
             point_queries: AtomicU64::new(0),
@@ -117,18 +128,36 @@ impl PlannerService {
             probes_streamed: AtomicU64::new(0),
             sims_priced: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
+            entries_evicted: AtomicU64::new(0),
         }
     }
 
-    /// The automatic pressure valve (see [`MAX_MEMO_PLANS`] /
-    /// [`MAX_CACHE_ENTRIES`]): called on the request paths that grow
-    /// session state.
-    fn pressure_valve(&self) {
-        if self.plans.len() > MAX_MEMO_PLANS
-            || self.caches.sizes().iter().sum::<usize>() > MAX_CACHE_ENTRIES
-        {
+    /// The size-aware pressure valve, called at the end of every request
+    /// that grows session state: evicts least-recently-used entries,
+    /// tier by tier, until the total footprint fits the budget again.
+    /// Order — trace cache (dominant footprint, cheap rebuild) first,
+    /// then priced reports, budgeted probes, peak probes, then the
+    /// whole-plan memo; fitted models and verified walls are tiny,
+    /// expensive-to-refit tiers evicted only if everything else is
+    /// already gone. Mid-request the footprint may transiently exceed
+    /// the budget (a cold sweep fills its caches before the valve runs);
+    /// the budget is the steady-state bound between requests.
+    fn enforce_budget(&self) {
+        let budget = self.cache_budget;
+        if self.caches.bytes() + self.plans.bytes() <= budget {
+            return;
+        }
+        let mut dropped = self.caches.evict_bulk_to_fit(budget, self.plans.bytes());
+        if self.caches.bytes() + self.plans.bytes() > budget {
+            let keep = budget.saturating_sub(self.caches.bytes());
+            dropped += self.plans.evict_lru(keep);
+        }
+        if self.caches.bytes() + self.plans.bytes() > budget {
+            dropped += self.caches.evict_precious_to_fit(budget, self.plans.bytes());
+        }
+        if dropped > 0 {
             self.cache_evictions.fetch_add(1, Ordering::Relaxed);
-            self.clear_caches();
+            self.entries_evicted.fetch_add(dropped, Ordering::Relaxed);
         }
     }
 
@@ -140,7 +169,6 @@ impl PlannerService {
     /// behind. A memoized key implies the params validated when first
     /// computed, so the hit path skips `to_request` entirely.
     pub fn plan(&self, params: &PlanParams) -> Result<PlanReply, String> {
-        self.pressure_valve();
         self.plan_requests.fetch_add(1, Ordering::Relaxed);
         let key = params.canonical().render();
         if let Some(hit) = self.plans.get(&key) {
@@ -167,15 +195,23 @@ impl PlannerService {
         self.probes_streamed.fetch_add(out.feasibility_probes, Ordering::Relaxed);
         self.sims_priced.fetch_add(out.priced_sims, Ordering::Relaxed);
         // First writer wins on a racing key; both callers get the
-        // canonical entry either way.
-        let entry = self
-            .plans
-            .insert(key, Arc::new(PlanMemoEntry { outcome: Arc::new(out), warnings }));
-        Ok(PlanReply {
+        // canonical entry either way. The entry's weight is its heap
+        // payload: the key bytes, the per-config rows, and the notes.
+        let payload = key.len()
+            + out.configs.len() * std::mem::size_of::<crate::planner::ConfigPlan>()
+            + warnings.iter().map(String::len).sum::<usize>();
+        let entry = self.plans.insert_weighed(
+            key,
+            Arc::new(PlanMemoEntry { outcome: Arc::new(out), warnings }),
+            payload,
+        );
+        let reply = PlanReply {
             outcome: Arc::clone(&entry.outcome),
             memo_hit: false,
             warnings: entry.warnings.clone(),
-        })
+        };
+        self.enforce_budget();
+        Ok(reply)
     }
 
     /// Walls-only sweep (`POST /v1/walls` without `"at"`): the plan
@@ -186,21 +222,39 @@ impl PlannerService {
         self.plan(&p)
     }
 
-    /// Point capacity query (`POST /v1/walls` with `"at"`): "is sequence
-    /// length `at` trainable?" per sweep configuration, answered from the
-    /// session's verified walls / fitted models when warm — zero streamed
-    /// probes after any full sweep on the same lattice.
+    /// Point capacity query (`POST /v1/walls` with a single `"at"`): "is
+    /// sequence length `at` trainable?" per sweep configuration, answered
+    /// from the session's verified walls / fitted models when warm — zero
+    /// streamed probes after any full sweep on the same lattice.
     pub fn walls_point(
         &self,
         params: &PlanParams,
         at: u64,
     ) -> Result<(WallsAtOutcome, Vec<String>), String> {
-        self.pressure_valve();
+        let (mut outs, warnings) = self.walls_batch(params, &[at])?;
+        Ok((outs.pop().expect("one point per query"), warnings))
+    }
+
+    /// Batch point capacity query (`POST /v1/walls` with `"at": [...]`):
+    /// one validated request, one response carrying a full capacity curve
+    /// — each point answered independently, tier by tier, from the same
+    /// memos a single-point query consults (so a dashboard's sweep is as
+    /// warm as its hottest point).
+    pub fn walls_batch(
+        &self,
+        params: &PlanParams,
+        ats: &[u64],
+    ) -> Result<(Vec<WallsAtOutcome>, Vec<String>), String> {
         let (req, warnings) = params.to_request()?;
-        self.point_queries.fetch_add(1, Ordering::Relaxed);
-        let q = walls_at(&req, at, &self.caches);
-        self.probes_streamed.fetch_add(q.probes, Ordering::Relaxed);
-        Ok((q, warnings))
+        let mut outs = Vec::with_capacity(ats.len());
+        for &at in ats {
+            self.point_queries.fetch_add(1, Ordering::Relaxed);
+            let q = walls_at(&req, at, &self.caches);
+            self.probes_streamed.fetch_add(q.probes, Ordering::Relaxed);
+            outs.push(q);
+        }
+        self.enforce_budget();
+        Ok((outs, warnings))
     }
 
     /// Fit a refit calibration from measurements without planning
@@ -225,6 +279,7 @@ impl PlannerService {
             probes_streamed: self.probes_streamed.load(Ordering::Relaxed),
             sims_priced: self.sims_priced.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
+            entries_evicted: self.entries_evicted.load(Ordering::Relaxed),
         }
     }
 
@@ -236,6 +291,28 @@ impl PlannerService {
     /// Memoized whole-plan count.
     pub fn plan_memo_len(&self) -> usize {
         self.plans.len()
+    }
+
+    /// Approximate resident bytes of the whole-plan memo.
+    pub fn plan_memo_bytes(&self) -> usize {
+        self.plans.bytes()
+    }
+
+    /// Entries the valve has dropped from the whole-plan memo.
+    pub fn plan_memo_evictions(&self) -> u64 {
+        self.plans.evicted()
+    }
+
+    /// Approximate resident bytes across every tier plus the plan memo —
+    /// the quantity [`PlannerService::cache_budget`] bounds between
+    /// requests.
+    pub fn cache_bytes(&self) -> usize {
+        self.caches.bytes() + self.plans.bytes()
+    }
+
+    /// The configured byte budget (`usize::MAX` = unbounded).
+    pub fn cache_budget(&self) -> usize {
+        self.cache_budget
     }
 
     /// Evict every cache. Invoked automatically by the size-triggered
@@ -343,6 +420,47 @@ mod tests {
             measurements: MeasurementsSource { source: "t".into(), text: "{]".into() },
         };
         assert!(service.refit(&bad).is_err());
+    }
+
+    #[test]
+    fn budget_evicts_bulk_tiers_but_never_walls_or_models() {
+        // A budget far below one priced sweep's trace/report footprint,
+        // but comfortably above the precious tiers' floor.
+        const BUDGET: usize = 256 * 1024;
+        let service = PlannerService::with_budget(BUDGET);
+        let mut p = small_params();
+        p.feasibility_only = false;
+        let first = service.plan(&p).unwrap();
+        // The valve ran at the end of the request: steady-state bytes fit.
+        assert!(
+            service.cache_bytes() <= BUDGET,
+            "bytes {} over budget {BUDGET}",
+            service.cache_bytes()
+        );
+        let st = service.stats();
+        assert!(st.cache_evictions > 0, "a priced sweep must outgrow 256K");
+        assert!(st.entries_evicted > 0);
+        let tiers = service.caches().tiers();
+        let by_name = |n: &str| tiers.iter().find(|t| t.name == n).copied().unwrap();
+        assert!(by_name("traces").evictions + by_name("priced_reports").evictions > 0);
+        assert_eq!(by_name("walls").evictions, 0, "verified walls are precious");
+        assert_eq!(by_name("models").evictions, 0, "fitted models are precious");
+        assert!(by_name("walls").entries > 0, "walls survive the valve");
+        // Eviction under budget leaves verified walls intact: a warm
+        // point query still answers every cell from tier 1, probe-free.
+        let (q, _) = service.walls_point(&p, 6 << 20).unwrap();
+        assert_eq!(q.probes, 0);
+        assert_eq!(q.from_walls, q.cells.len() as u64);
+        // And a replayed plan stays byte-identical whether or not its
+        // memo entry survived.
+        let again = service.plan(&p).unwrap();
+        let a = planner_report::plan_result_json(&first.outcome).render();
+        let b = planner_report::plan_result_json(&again.outcome).render();
+        assert_eq!(a, b);
+        // Batch point queries answer tier-by-tier from the same memos.
+        let (points, _) = service.walls_batch(&p, &[2 << 20, 4 << 20, 6 << 20]).unwrap();
+        assert_eq!(points.len(), 3);
+        assert!(points.iter().all(|q| q.probes == 0), "warm batch streams nothing");
     }
 
     #[test]

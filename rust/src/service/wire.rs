@@ -297,14 +297,40 @@ impl PlanParams {
     }
 }
 
+/// Most points one batch `"at"` query may carry: a capacity-dashboard
+/// curve, not a bulk export — keeps a single request's work (and its
+/// response body) bounded.
+pub const MAX_AT_POINTS: usize = 256;
+
+/// The `/v1/walls` point query: one sequence length or an ordered batch.
+/// A batch is answered point-by-point from the same three-tier lookup a
+/// single query uses, in the order the client sent — one request framing
+/// for a whole capacity curve.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AtQuery {
+    One(u64),
+    Many(Vec<u64>),
+}
+
+impl AtQuery {
+    /// The points in request order (a `One` is a batch of one).
+    pub fn points(&self) -> Vec<u64> {
+        match self {
+            AtQuery::One(s) => vec![*s],
+            AtQuery::Many(v) => v.clone(),
+        }
+    }
+}
+
 /// `/v1/walls` parameters: the plan params plus an optional point query.
 #[derive(Debug, Clone)]
 pub struct WallsParams {
     pub plan: PlanParams,
     /// Point capacity query: "is this sequence length trainable?" for
     /// every sweep configuration, answered from session memos when warm.
+    /// A scalar asks about one length, an array about a whole curve.
     /// Absent = a feasibility-only walls sweep.
-    pub at: Option<u64>,
+    pub at: Option<AtQuery>,
 }
 
 impl WallsParams {
@@ -312,13 +338,37 @@ impl WallsParams {
         let plan = PlanParams::from_json_with(j, &["at"])?;
         let at = match j.get("at") {
             None => None,
+            Some(Json::Arr(items)) => {
+                if items.is_empty() {
+                    return Err("`at` array must name at least one point".to_string());
+                }
+                if items.len() > MAX_AT_POINTS {
+                    return Err(format!(
+                        "`at` array carries {} points (at most {MAX_AT_POINTS} per request)",
+                        items.len()
+                    ));
+                }
+                let points = items
+                    .iter()
+                    .map(|v| {
+                        let s = tokens_value(v).ok_or_else(|| {
+                            format!("bad `at` entry `{}` (a label like \"6M\" or a whole number)", v.render())
+                        })?;
+                        if s == 0 || s > MAX_TOKENS {
+                            return Err(format!("`at` entries must be in [1, {MAX_TOKENS}] tokens"));
+                        }
+                        Ok(s)
+                    })
+                    .collect::<Result<Vec<u64>, String>>()?;
+                Some(AtQuery::Many(points))
+            }
             Some(v) => {
                 let s = tokens_value(v)
                     .ok_or_else(|| "`at` must be a token count (e.g. \"6M\")".to_string())?;
                 if s == 0 || s > MAX_TOKENS {
                     return Err(format!("`at` must be in [1, {MAX_TOKENS}] tokens"));
                 }
-                Some(s)
+                Some(AtQuery::One(s))
             }
         };
         Ok(WallsParams { plan, at })
@@ -327,7 +377,13 @@ impl WallsParams {
     pub fn canonical(&self) -> Json {
         let mut c = self.plan.canonical();
         if let Json::Obj(pairs) = &mut c {
-            let at = self.at.map(Json::int).unwrap_or(Json::Null);
+            // A scalar echoes as an int (byte-compatible with every
+            // api_version-1 client), a batch as the ordered int array.
+            let at = match &self.at {
+                None => Json::Null,
+                Some(AtQuery::One(s)) => Json::int(*s),
+                Some(AtQuery::Many(v)) => Json::Arr(v.iter().map(|&s| Json::int(s)).collect()),
+            };
             pairs.push(("at".to_string(), at));
         }
         c
@@ -592,11 +648,36 @@ mod tests {
     fn parse_paper_flag_and_walls_at() {
         let j = Json::parse(r#"{"paper":true,"at":"6M"}"#).unwrap();
         let w = WallsParams::from_json(&j).unwrap();
-        assert_eq!(w.at, Some(6 << 20));
+        assert_eq!(w.at, Some(AtQuery::One(6 << 20)));
         assert_eq!(w.plan.ac_modes, vec![AcMode::AcOffload]);
         assert_eq!(w.plan.micro_batches, vec![1]);
         let c = w.canonical().render();
         assert!(c.ends_with("\"at\":6291456}"), "{c}");
+    }
+
+    #[test]
+    fn parse_batch_at_preserves_order_and_bounds() {
+        let j = Json::parse(r#"{"at":["6M","4M",5242880]}"#).unwrap();
+        let w = WallsParams::from_json(&j).unwrap();
+        // Request order is answer order — no sorting, no dedup.
+        assert_eq!(w.at, Some(AtQuery::Many(vec![6 << 20, 4 << 20, 5 << 20])));
+        let c = w.canonical().render();
+        assert!(c.ends_with("\"at\":[6291456,4194304,5242880]}"), "{c}");
+
+        let empty = Json::parse(r#"{"at":[]}"#).unwrap();
+        let err = WallsParams::from_json(&empty).unwrap_err();
+        assert!(err.contains("at least one point"), "{err}");
+
+        let over: Vec<Json> = (0..=MAX_AT_POINTS as u64).map(|i| Json::int(i + 1)).collect();
+        let big = Json::obj(vec![("at", Json::Arr(over))]);
+        let err = WallsParams::from_json(&big).unwrap_err();
+        assert!(err.contains("at most 256"), "{err}");
+
+        let zero = Json::parse(r#"{"at":["1M",0]}"#).unwrap();
+        assert!(WallsParams::from_json(&zero).is_err());
+        let bad = Json::parse(r#"{"at":[true]}"#).unwrap();
+        let err = WallsParams::from_json(&bad).unwrap_err();
+        assert!(err.contains("bad `at` entry"), "{err}");
     }
 
     #[test]

@@ -32,12 +32,15 @@ pub fn secs(s: f64) -> String {
     }
 }
 
-/// Parse a token-count label ("128K", "1M", "512k") to a count.
+/// Parse a token-count label ("128K", "1M", "512k") to a count. The `G`
+/// suffix exists for byte-sized flags that share this parser (the
+/// daemon's `--cache-budget 2G`).
 pub fn parse_tokens(s: &str) -> Option<u64> {
     let s = s.trim();
     let (num, mult) = match s.chars().last()? {
         'k' | 'K' => (&s[..s.len() - 1], 1024),
         'm' | 'M' => (&s[..s.len() - 1], 1024 * 1024),
+        'g' | 'G' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
         _ => (s, 1),
     };
     num.parse::<u64>().ok().map(|n| n * mult)
@@ -58,6 +61,12 @@ mod tests {
     fn parse_rejects_garbage() {
         assert_eq!(parse_tokens("x1M"), None);
         assert_eq!(parse_tokens(""), None);
+    }
+
+    #[test]
+    fn parse_gib_suffix() {
+        assert_eq!(parse_tokens("1G"), Some(1 << 30));
+        assert_eq!(parse_tokens("2g"), Some(2 << 30));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use std::collections::HashMap;
 use std::hash::{BuildHasherDefault, Hash, Hasher};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Multiplier from the FxHash scheme (rustc's `FxHasher`): a single
@@ -106,36 +107,92 @@ pub fn fx_hash_one<T: Hash>(value: &T) -> u64 {
 /// small enough that `len()` stays cheap.
 pub const DEFAULT_STRIPES: usize = 16;
 
+/// One stored value plus the accounting the byte-budgeted LRU needs: an
+/// approximate weight (fixed at insert) and the last-access stamp from
+/// the map-wide clock.
+struct Slot<V> {
+    value: V,
+    weight: usize,
+    stamp: u64,
+}
+
 /// A concurrent insert-once map: values are cloned out (use `Arc`/`Copy`
 /// values for large payloads). First writer wins on a racing key, so
 /// concurrent builders converge on one canonical entry.
+///
+/// Every entry carries an approximate byte weight (`size_of` the key and
+/// value, plus whatever heap payload the caller declares via
+/// [`StripedMap::insert_weighed`]) and a last-access stamp, so a
+/// long-lived owner — the planner service's tiered caches — can ask for
+/// the total footprint ([`StripedMap::bytes`]) and shed
+/// least-recently-used entries down to a byte target
+/// ([`StripedMap::evict_lru`]) without dropping the whole map.
 pub struct StripedMap<K, V> {
-    stripes: Vec<Mutex<HashMap<K, V, FxBuildHasher>>>,
+    stripes: Vec<Mutex<HashMap<K, Slot<V>, FxBuildHasher>>>,
+    /// Map-wide access clock; `get`/`insert` stamp entries from it.
+    clock: AtomicU64,
+    /// Sum of entry weights (approximate under racing evictions).
+    bytes: AtomicUsize,
+    /// Lifetime count of entries removed by [`StripedMap::evict_lru`].
+    evicted: AtomicU64,
 }
 
-impl<K: Hash + Eq, V: Clone> StripedMap<K, V> {
+impl<K: Hash + Eq + Clone, V: Clone> StripedMap<K, V> {
     pub fn new(stripes: usize) -> Self {
         StripedMap {
             stripes: (0..stripes.max(1)).map(|_| Mutex::new(HashMap::default())).collect(),
+            clock: AtomicU64::new(0),
+            bytes: AtomicUsize::new(0),
+            evicted: AtomicU64::new(0),
         }
     }
 
-    fn stripe(&self, key: &K) -> &Mutex<HashMap<K, V, FxBuildHasher>> {
+    fn stripe(&self, key: &K) -> &Mutex<HashMap<K, Slot<V>, FxBuildHasher>> {
         // FxHasher is deterministic (unlike RandomState), so stripe
         // assignment is stable across runs; the inner maps re-hash with
         // the same cheap function.
         &self.stripes[(fx_hash_one(key) as usize) % self.stripes.len()]
     }
 
+    fn tick(&self) -> u64 {
+        self.clock.fetch_add(1, Ordering::Relaxed)
+    }
+
     pub fn get(&self, key: &K) -> Option<V> {
-        self.stripe(key).lock().unwrap().get(key).cloned()
+        let stamp = self.tick();
+        let mut g = self.stripe(key).lock().unwrap();
+        g.get_mut(key).map(|slot| {
+            slot.stamp = stamp;
+            slot.value.clone()
+        })
     }
 
     /// Insert if absent; returns the canonical value (the existing one if
     /// another worker won the race). Build values *outside* this call —
-    /// the stripe lock is held only for the map operation.
+    /// the stripe lock is held only for the map operation. Weighs the
+    /// entry at `size_of::<K>() + size_of::<V>()`; values with heap
+    /// payloads should use [`StripedMap::insert_weighed`].
     pub fn insert(&self, key: K, value: V) -> V {
-        self.stripe(&key).lock().unwrap().entry(key).or_insert(value).clone()
+        self.insert_weighed(key, value, 0)
+    }
+
+    /// [`StripedMap::insert`] with `payload_bytes` of caller-declared heap
+    /// payload added to the entry's weight (an `Arc<Vec<Op>>` value is 8
+    /// inline bytes but megabytes of trace).
+    pub fn insert_weighed(&self, key: K, value: V, payload_bytes: usize) -> V {
+        let weight = std::mem::size_of::<K>() + std::mem::size_of::<V>() + payload_bytes;
+        let stamp = self.tick();
+        let mut g = self.stripe(&key).lock().unwrap();
+        match g.entry(key) {
+            std::collections::hash_map::Entry::Occupied(mut o) => {
+                o.get_mut().stamp = stamp;
+                o.get().value.clone()
+            }
+            std::collections::hash_map::Entry::Vacant(v) => {
+                self.bytes.fetch_add(weight, Ordering::Relaxed);
+                v.insert(Slot { value, weight, stamp }).value.clone()
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -146,12 +203,57 @@ impl<K: Hash + Eq, V: Clone> StripedMap<K, V> {
         self.len() == 0
     }
 
+    /// Approximate resident bytes: the sum of entry weights.
+    pub fn bytes(&self) -> usize {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Lifetime count of entries dropped by [`StripedMap::evict_lru`]
+    /// (full [`StripedMap::clear`]s are not evictions).
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Shed least-recently-used entries until the map weighs at most
+    /// `target_bytes`; returns how many entries were dropped. The stamp
+    /// snapshot is taken stripe by stripe, so entries touched by racing
+    /// readers mid-eviction may still be dropped — correctness is
+    /// unaffected (only warmth), which is the same benign-race policy as
+    /// the map's first-writer-wins inserts.
+    pub fn evict_lru(&self, target_bytes: usize) -> u64 {
+        if self.bytes() <= target_bytes {
+            return 0;
+        }
+        let mut candidates: Vec<(u64, usize, K)> = Vec::new();
+        for (i, s) in self.stripes.iter().enumerate() {
+            for (k, slot) in s.lock().unwrap().iter() {
+                candidates.push((slot.stamp, i, k.clone()));
+            }
+        }
+        candidates.sort_by_key(|&(stamp, _, _)| stamp);
+        let mut dropped = 0u64;
+        for (_, i, key) in candidates {
+            if self.bytes() <= target_bytes {
+                break;
+            }
+            if let Some(slot) = self.stripes[i].lock().unwrap().remove(&key) {
+                self.bytes.fetch_sub(slot.weight, Ordering::Relaxed);
+                dropped += 1;
+            }
+        }
+        self.evicted.fetch_add(dropped, Ordering::Relaxed);
+        dropped
+    }
+
     /// Drop every entry (stripe by stripe — not an atomic snapshot under
     /// concurrent writers). The planner-service session API uses this to
     /// evict its cross-request memos without tearing down the session.
     pub fn clear(&self) {
         for s in &self.stripes {
-            s.lock().unwrap().clear();
+            let mut g = s.lock().unwrap();
+            let freed: usize = g.values().map(|slot| slot.weight).sum();
+            g.clear();
+            self.bytes.fetch_sub(freed, Ordering::Relaxed);
         }
     }
 
@@ -162,15 +264,15 @@ impl<K: Hash + Eq, V: Clone> StripedMap<K, V> {
     pub fn fold<A>(&self, init: A, mut f: impl FnMut(A, &K, &V) -> A) -> A {
         let mut acc = init;
         for s in &self.stripes {
-            for (k, v) in s.lock().unwrap().iter() {
-                acc = f(acc, k, v);
+            for (k, slot) in s.lock().unwrap().iter() {
+                acc = f(acc, k, &slot.value);
             }
         }
         acc
     }
 }
 
-impl<K: Hash + Eq, V: Clone> Default for StripedMap<K, V> {
+impl<K: Hash + Eq + Clone, V: Clone> Default for StripedMap<K, V> {
     fn default() -> Self {
         Self::new(DEFAULT_STRIPES)
     }
@@ -254,6 +356,48 @@ mod tests {
         let (count, sum) = m.fold((0u64, 0u64), |(c, s), _, v| (c + 1, s + v));
         assert_eq!(count, 32);
         assert_eq!(sum, (0..32).map(|k| 2 * k).sum::<u64>());
+    }
+
+    #[test]
+    fn weights_track_bytes_and_clear_resets() {
+        let m: StripedMap<u64, u64> = StripedMap::new(4);
+        assert_eq!(m.bytes(), 0);
+        m.insert(1, 10);
+        assert_eq!(m.bytes(), 16, "default weight is size_of K + size_of V");
+        m.insert_weighed(2, 20, 1000);
+        assert_eq!(m.bytes(), 16 + 1016);
+        // A racing duplicate insert never double-counts.
+        m.insert_weighed(2, 99, 5000);
+        assert_eq!(m.bytes(), 16 + 1016);
+        m.clear();
+        assert_eq!(m.bytes(), 0);
+        assert_eq!(m.evicted(), 0, "clear is not an eviction");
+    }
+
+    #[test]
+    fn lru_eviction_drops_oldest_first() {
+        let m: StripedMap<u64, u64> = StripedMap::new(4);
+        for k in 0..32 {
+            m.insert_weighed(k, k, 84); // 100 bytes per entry
+        }
+        assert_eq!(m.bytes(), 3200);
+        // Touch the first 8 keys so they are the most recently used.
+        for k in 0..8 {
+            m.get(&k);
+        }
+        let dropped = m.evict_lru(1600);
+        assert_eq!(dropped, 16);
+        assert_eq!(m.bytes(), 1600);
+        assert_eq!(m.len(), 16);
+        assert_eq!(m.evicted(), 16);
+        for k in 0..8 {
+            assert!(m.get(&k).is_some(), "recently-touched key {k} must survive");
+        }
+        // Already under target: a no-op.
+        assert_eq!(m.evict_lru(1600), 0);
+        // The map stays usable after eviction.
+        m.insert(100, 1);
+        assert_eq!(m.get(&100), Some(1));
     }
 
     #[test]

@@ -1,0 +1,146 @@
+//! Sustained-traffic soak for the planner service: a deterministic but
+//! randomized mix of warm/cold plan, point-query and batch-query
+//! requests against one session running under a deliberately tiny cache
+//! budget. The properties under test are the daemon's production
+//! contract:
+//!
+//! - the session's steady-state cache footprint stays under the byte
+//!   budget after every request (the valve runs at request end);
+//! - eviction is tiered: the bulky trace/report tiers shrink first,
+//!   while verified walls and fitted peak models — tiny, and expensive
+//!   to refit — are never evicted before them;
+//! - warm repeats stay byte-for-byte identical to their first answer no
+//!   matter what the valve dropped in between (determinism holds cold
+//!   or warm).
+//!
+//! Iteration count comes from `SOAK_ITERS` (default 60; CI runs a
+//! bounded pass) so the same binary serves both a quick gate and a
+//! longer local soak.
+
+use std::collections::HashMap;
+
+use untied_ulysses::report::planner as planner_report;
+use untied_ulysses::service::{PlanParams, PlannerService};
+use untied_ulysses::util::rng::Rng;
+
+/// Small on purpose: one priced sweep's traces + timelines overflow
+/// this, so the valve has to work on every shape rotation.
+const BUDGET: usize = 4 << 20;
+
+fn shapes() -> Vec<PlanParams> {
+    let mut out = Vec::new();
+    for (cap, feas) in [(8u64, true), (6, true), (4, true), (8, false)] {
+        let mut p = PlanParams::defaults("llama3-8b", 8);
+        p.quantum = 1 << 20;
+        p.cap_s = cap << 20;
+        p.feasibility_only = feas;
+        p.threads = 2;
+        out.push(p);
+    }
+    out
+}
+
+fn plan_key(p: &PlanParams) -> String {
+    p.canonical().render()
+}
+
+fn point_key(p: &PlanParams, at: u64) -> String {
+    format!("{}@{at}", plan_key(p))
+}
+
+/// Remember the first rendering seen under `key`; every later one must
+/// match it byte for byte.
+fn check_golden(goldens: &mut HashMap<String, String>, key: String, bytes: String) {
+    match goldens.get(&key) {
+        None => {
+            goldens.insert(key, bytes);
+        }
+        Some(first) => assert_eq!(first, &bytes, "warm reply drifted for {key}"),
+    }
+}
+
+#[test]
+fn soak_bounded_caches_serve_identical_bytes() {
+    let iters: u64 = std::env::var("SOAK_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let service = PlannerService::with_budget(BUDGET);
+    let shapes = shapes();
+    let points: Vec<u64> = (2..=8).map(|m| m << 20).collect();
+    let mut goldens: HashMap<String, String> = HashMap::new();
+    let mut rng = Rng::new(0x50AC);
+
+    // Deterministic warm-up: every shape sweeps once (cold), and one
+    // point per shape is recorded — guarantees the mix below hits both
+    // warm and post-eviction paths regardless of the draw order.
+    for p in &shapes {
+        let reply = service.plan(p).expect("warm-up plan");
+        check_golden(
+            &mut goldens,
+            plan_key(p),
+            planner_report::plan_result_json(&reply.outcome).render(),
+        );
+        assert!(service.cache_bytes() <= BUDGET, "warm-up left {} bytes", service.cache_bytes());
+    }
+
+    for i in 0..iters {
+        let p = rng.choice(&shapes).clone();
+        match rng.below(3) {
+            0 => {
+                let reply = service.plan(&p).expect("soak plan");
+                check_golden(
+                    &mut goldens,
+                    plan_key(&p),
+                    planner_report::plan_result_json(&reply.outcome).render(),
+                );
+            }
+            1 => {
+                let at = *rng.choice(&points);
+                let (q, _) = service.walls_point(&p, at).expect("soak point query");
+                check_golden(
+                    &mut goldens,
+                    point_key(&p, at),
+                    planner_report::walls_at_json(&q).render(),
+                );
+            }
+            _ => {
+                let n = 1 + rng.below(3) as usize;
+                let ats: Vec<u64> = (0..n).map(|_| *rng.choice(&points)).collect();
+                let (qs, _) = service.walls_batch(&p, &ats).expect("soak batch query");
+                assert_eq!(qs.len(), ats.len());
+                for (at, q) in ats.iter().zip(&qs) {
+                    check_golden(
+                        &mut goldens,
+                        point_key(&p, *at),
+                        planner_report::walls_at_json(q).render(),
+                    );
+                }
+            }
+        }
+        assert!(
+            service.cache_bytes() <= BUDGET,
+            "iteration {i}: {} bytes over the {BUDGET}-byte budget",
+            service.cache_bytes()
+        );
+    }
+
+    // Tier discipline over the whole run: the bulk tiers paid for the
+    // budget, the precious tiers never did.
+    let tiers = service.caches().tiers();
+    let by_name = |n: &str| tiers.iter().find(|t| t.name == n).copied().unwrap();
+    assert!(
+        by_name("traces").evictions > 0,
+        "a {BUDGET}-byte budget must force trace eviction"
+    );
+    assert_eq!(by_name("walls").evictions, 0, "verified walls were evicted");
+    assert_eq!(by_name("models").evictions, 0, "fitted models were evicted");
+    assert!(by_name("walls").entries > 0);
+    // Eviction left the verified walls intact: a warm point query on the
+    // first shape still answers entirely from tier 1, probe-free.
+    let (q, _) = service.walls_point(&shapes[0], 6 << 20).expect("final point query");
+    assert_eq!(q.probes, 0, "warm walls lookup streamed probes after eviction");
+    assert_eq!(q.from_walls, q.cells.len() as u64);
+    let st = service.stats();
+    assert!(st.cache_evictions > 0 && st.entries_evicted > 0);
+}
