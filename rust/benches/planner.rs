@@ -70,13 +70,16 @@ fn main() {
     let out = plan(&req);
     let top = out.best().expect("plan produced no configs");
     let top_ctx = top.max_context.map(tokens).unwrap_or_else(|| "-".into());
+    let frontier_len = out.configs.iter().filter(|c| c.pareto).count();
     println!(
-        "plan: {} configs, {} sims ({} probes + {} priced), {} models/{} fallbacks, \
-         trace cache {}/{} hits, top = {} {} @ {}",
+        "plan: {} configs ({} on the frontier), {} sims ({} probes + {} priced + {} modeled), \
+         {} models/{} fallbacks, trace cache {}/{} hits, top = {} {} @ {}",
         out.configs.len(),
+        frontier_len,
         out.simulations,
         out.feasibility_probes,
         out.priced_sims,
+        out.modeled_prices,
         out.symbolic_models,
         out.symbolic_fallbacks,
         out.cache_hits,
@@ -197,6 +200,8 @@ fn main() {
         ("configs_per_sec", Json::Num(out.configs.len() as f64 / sweep.mean.as_secs_f64())),
         ("sims_per_sec", Json::Num(out.simulations as f64 / sweep.mean.as_secs_f64())),
         ("walls_per_sec", Json::Num(walls_out.configs.len() as f64 / walls.mean.as_secs_f64())),
+        ("frontier_per_sec", Json::Num(frontier_len as f64 / sweep.mean.as_secs_f64())),
+        ("modeled_prices_per_sec", Json::Num(out.modeled_prices as f64 / sweep.mean.as_secs_f64())),
         ("warm_requests_per_sec", Json::Num(warm.per_sec())),
         ("warm_http_requests_per_sec", Json::Num(http_warm.per_sec())),
         ("feasibility_probes_per_sec", Json::Num(feas.per_sec())),

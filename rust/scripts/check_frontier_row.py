@@ -1,0 +1,78 @@
+#!/usr/bin/env python3
+"""Cross-check the `repro frontier --at-lengths` artifact against the
+`repro plan --json` artifact from the same CI run.
+
+Usage: check_frontier_row.py <plan.json> <frontier_at_lengths.json>
+
+The at-lengths artifact carries one deterministic plan core per requested
+reference length; its row at the plan artifact's own reference length must
+be byte-identical to that plan's deterministic core. Anything else means
+symbolic pricing changed a ranking, a throughput, or a Pareto flag — the
+exact regression the fitted step-time models must never introduce.
+
+Both trees pass through the same json parse + dump here, so float
+round-trip differences cancel and the comparison is about values, not
+formatting. Run accounting (probe/sim counters, wall-clock) is stripped
+from the plan artifact first: it describes one run, not the plan.
+"""
+
+import json
+import sys
+
+# Per-run accounting keys appended to the CLI plan JSON after the
+# deterministic core (see report/planner.rs `accounting_pairs`).
+ACCOUNTING_KEYS = (
+    "simulations",
+    "feasibility_probes",
+    "priced_sims",
+    "modeled_prices",
+    "symbolic_models",
+    "symbolic_fallbacks",
+    "time_models",
+    "time_fallbacks",
+    "trace_cache",
+    "wall_s",
+)
+
+
+def main() -> int:
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    plan = json.load(open(sys.argv[1]))
+    frontier = json.load(open(sys.argv[2]))
+
+    core = {k: v for k, v in plan.items() if k not in ACCOUNTING_KEYS}
+    reference_s = core["reference_s"]
+
+    rows = frontier.get("rows")
+    if not rows:
+        print("FAIL: at-lengths artifact has no rows")
+        return 1
+    row = next((r for r in rows if r.get("reference_s") == reference_s), None)
+    if row is None:
+        lengths = [r.get("reference_s") for r in rows]
+        print(f"FAIL: no row at reference length {reference_s} (rows: {lengths})")
+        return 1
+
+    want = json.dumps(core, sort_keys=True)
+    got = json.dumps(row["result"], sort_keys=True)
+    if want != got:
+        print(f"FAIL: at-lengths row at {reference_s} differs from the plan core")
+        for key in core:
+            a = json.dumps(core[key], sort_keys=True)
+            b = json.dumps(row["result"].get(key), sort_keys=True)
+            if a != b:
+                print(f"  mismatched `{key}`:\n    plan:     {a[:400]}\n    frontier: {b[:400]}")
+        return 1
+
+    acct = frontier.get("accounting", {})
+    print(
+        f"at-lengths row at {reference_s} matches the plan core byte-for-byte "
+        f"({len(rows)} rows; accounting: {json.dumps(acct)})"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,10 @@ Gated metrics — each phase of the two-phase evaluator fails independently:
 - configs_per_sec            (whole-sweep throughput)
 - walls_per_sec              (symbolic walls-only sweep: the
                               --feasibility-only multi-node frontier path)
+- frontier_per_sec           (Pareto rows extracted per second of full
+                              sweep: the symbolic-pricing payoff)
+- modeled_prices_per_sec     (phase-2 cells priced by the streamed timing
+                              kernel instead of a full simulation)
 - warm_requests_per_sec      (planner-service warm path: repeated requests
                               answered from one session's plan memo)
 - warm_http_requests_per_sec (the same warm request through the daemon over
@@ -31,6 +35,8 @@ import sys
 GATED = (
     "configs_per_sec",
     "walls_per_sec",
+    "frontier_per_sec",
+    "modeled_prices_per_sec",
     "warm_requests_per_sec",
     "warm_http_requests_per_sec",
     "feasibility_probes_per_sec",

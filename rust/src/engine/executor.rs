@@ -102,11 +102,11 @@ impl Engine {
                         _ => flops / self.calib.fa3_fwd_flops,
                     };
                     clock += dur;
-                    add(&mut comps, cat, dur);
+                    comps.add(cat, dur);
                 }
                 Op::Fixed { cat, secs } => {
                     clock += secs;
-                    add(&mut comps, cat, secs);
+                    comps.add(cat, secs);
                 }
                 Op::AllToAll { bytes, intra, calls, s_tokens } => {
                     let headroom = self.hbm_limit - mem.allocated();
@@ -114,7 +114,7 @@ impl Engine {
                     let dur = bytes / bw * self.calib.comm_penalty(headroom)
                         + calls as f64 * self.calib.a2a_call_overhead;
                     clock += dur;
-                    add(&mut comps, Category::AllToAll, dur);
+                    comps.add(Category::AllToAll, dur);
                 }
                 Op::Ring { steps, bytes_per_step, inter } => {
                     let bw = if inter {
@@ -125,7 +125,7 @@ impl Engine {
                     let alpha = if inter { 60e-6 } else { 20e-6 };
                     let dur = steps as f64 * (alpha + bytes_per_step / bw);
                     clock += dur;
-                    add(&mut comps, Category::AllToAll, dur);
+                    comps.add(Category::AllToAll, dur);
                 }
                 Op::Offload { bytes, overlap } => {
                     // Host-RAM occupancy (stores occupy, fetches release)
@@ -141,7 +141,7 @@ impl Engine {
                         offload_clock = offload_clock.max(clock) + dur;
                     } else {
                         clock += dur;
-                        add(&mut comps, Category::Other, dur);
+                        comps.add(Category::Other, dur);
                     }
                 }
                 Op::Snapshot { label } => {
@@ -161,15 +161,6 @@ impl Engine {
             alloc_retries: mem.retries(),
             timeline,
         }
-    }
-}
-
-fn add(c: &mut Components, cat: Category, dur: f64) {
-    match cat {
-        Category::AllToAll => c.all_to_all += dur,
-        Category::Fa3Fwd => c.fa3_fwd += dur,
-        Category::Fa3Bwd => c.fa3_bwd += dur,
-        Category::Other => c.other += dur,
     }
 }
 

@@ -7,13 +7,18 @@
 //! *prediction* — see [`calibration`] for the fit provenance and
 //! EXPERIMENTS.md for paper-vs-simulated deltas.
 //!
-//! Evaluation is split into two phases: the streaming peak-only
-//! [`feasibility`] kernel (what planner bisection probes consume) and the
+//! Evaluation is split into three streaming/priced modes: the peak-only
+//! [`feasibility`] kernel (what planner bisection probes consume), the
 //! fully priced [`executor`] (timeline + Table-5 components, reserved for
-//! the cells that end up in tables/figures). On top of the kernel sits
+//! the cells that end up in tables/figures), and the [`timing`] kernel —
+//! `Engine::run`'s pricing arithmetic over the same streamed op sequence
+//! the feasibility probes use, bitwise-equal step times with no
+//! materialized trace or timeline. On top of the kernels sits
 //! [`symbolic`]: sampled-polynomial peak models that *solve* each sweep
-//! cell's context wall in closed form, collapsing the planner's per-cell
-//! probe count from O(log S) to O(samples + 2).
+//! cell's context wall in closed form (collapsing the planner's per-cell
+//! probe count from O(log S) to O(samples + 2)), and fitted step-time
+//! models ([`TimeModel`]) that answer throughput point queries in closed
+//! form under the same held-out drift contract.
 
 pub mod calibration;
 pub mod executor;
@@ -22,6 +27,7 @@ pub mod ops;
 pub mod refit;
 pub mod report;
 pub mod symbolic;
+pub mod timing;
 
 pub use calibration::Calibration;
 pub use executor::Engine;
@@ -29,4 +35,5 @@ pub use feasibility::{Feasibility, FeasibilityKernel, PeakProbe};
 pub use ops::{Category, Op, OpSink, TraceBuilder};
 pub use refit::{refit, MeasuredCell, Measurements, RefitField, RefitInfo};
 pub use report::{Components, StepReport};
-pub use symbolic::{PeakModel, PeakSample};
+pub use symbolic::{PeakModel, PeakSample, TimeModel, TimeSample};
+pub use timing::TimingKernel;

@@ -7,7 +7,9 @@
 //! `Vec<Op>` (the sink the full pricing engine consumes) is just one sink;
 //! the planner's feasibility probes stream the same emission sequence into
 //! [`crate::engine::FeasibilityKernel`] without ever materializing the
-//! trace.
+//! trace, and the symbolic pricer streams it into
+//! [`crate::engine::TimingKernel`] — full `Engine::run` pricing
+//! arithmetic, still no materialized trace.
 
 /// Time-accounting category (the columns of the paper's Table 5).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -1,5 +1,6 @@
 //! Engine output: per-step report with Table-5 component breakdown.
 
+use super::ops::Category;
 use crate::memory::MemoryTimeline;
 
 /// Time per Table-5 category, seconds.
@@ -14,6 +15,18 @@ pub struct Components {
 impl Components {
     pub fn total(&self) -> f64 {
         self.all_to_all + self.fa3_fwd + self.fa3_bwd + self.other
+    }
+
+    /// Attribute `dur` seconds to `cat`'s column. The one copy of the
+    /// category→column mapping, shared by the pricing engine and the
+    /// streamed timing kernel so their breakdowns cannot drift.
+    pub fn add(&mut self, cat: Category, dur: f64) {
+        match cat {
+            Category::AllToAll => self.all_to_all += dur,
+            Category::Fa3Fwd => self.fa3_fwd += dur,
+            Category::Fa3Bwd => self.fa3_bwd += dur,
+            Category::Other => self.other += dur,
+        }
     }
 }
 

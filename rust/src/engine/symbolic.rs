@@ -1,5 +1,5 @@
-//! Symbolic peak models: closed-form context walls from sampled
-//! polynomials.
+//! Symbolic peak *and step-time* models: closed-form context walls and
+//! near-free frontier pricing from sampled polynomials.
 //!
 //! Every schedule in the repo allocates buffers whose byte sizes are
 //! affine in the per-rank token count `k = floor(S / C)` — `x_bytes`,
@@ -33,7 +33,24 @@
 //!   128K-token lattice that shifts the predicted wall at most one step,
 //!   which the verification probes absorb.)
 //!
+//! **Step time has the same structure** (PR 7). In ample-headroom
+//! regimes the pressure penalties are exactly 1.0, so compute time is a
+//! degree-≤2 polynomial in `k` (attention FLOPs are quadratic in
+//! per-rank tokens, everything else linear) and all-to-all time is
+//! quadratic too (bytes affine in `S` times the affine message-size
+//! degradation). [`TimeModel`] fits the three components of a streamed
+//! [`TimingKernel`] run — compute, comm, exposed overlap — from 3
+//! samples per pricing family and predicts `step_time` in closed form.
+//! The same drift contract applies, with the *anchor* priced sim (the
+//! one full `Engine::run` each pricing family keeps) as the held-out
+//! check: families whose timing is genuinely non-polynomial (pressure
+//! penalties active near the wall, FPDT's rational stall term) are
+//! rejected at fit or anchor time and simply keep streamed-exact
+//! pricing — a rejected model never changes a reported number, it only
+//! disables the O(1) prediction tier.
+//!
 //! [`FeasibilityKernel`]: crate::engine::FeasibilityKernel
+//! [`TimingKernel`]: crate::engine::TimingKernel
 
 /// Relative drift tolerance for accepting a fitted polynomial: held-out
 /// samples must match bitwise or to within this relative error. Streamed
@@ -246,6 +263,65 @@ impl PeakModel {
     }
 }
 
+/// One streamed [`crate::engine::TimingKernel`] run decomposed at
+/// per-rank token count `k = floor(S / C)`: main-stream compute seconds
+/// (fa3_fwd + fa3_bwd + other), comm seconds (all_to_all, ring
+/// included), and the *exposed* offload-stream overrun (the amount the
+/// offload stream ran past the main stream — zero whenever overlap
+/// hides it). `step_time` is the kernel's own `clock.max(offload_clock)`
+/// and is carried for the fit's self-consistency check.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeSample {
+    pub k: u64,
+    pub compute: f64,
+    pub comm: f64,
+    pub exposed: f64,
+    pub step_time: f64,
+}
+
+/// Fitted step-time model for one *pricing* family (a `FamilyKey` plus
+/// micro-batch and pin — unlike peaks, step time moves with micro-batch,
+/// so the family is finer). Three degree-≤2 polynomials in `k`, one per
+/// component.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeModel {
+    compute: Poly,
+    comm: Poly,
+    exposed: Poly,
+}
+
+impl TimeModel {
+    /// Fit from exactly 3 equally-spaced clean samples (quadratic per
+    /// component). Each sample must be self-consistent — its components
+    /// must sum to its `step_time` within the drift contract (the two
+    /// sides differ only by f64 summation order on a clean run) — and
+    /// the component fits inherit [`Poly::fit`]'s shape rejections
+    /// (non-finite, decreasing, concave). There is **no** internal
+    /// holdout: the caller holds out its anchor `Engine::run` sim and
+    /// accepts the model only if [`TimeModel::predict_step`] reproduces
+    /// the anchor's `step_time` within [`DRIFT_REL_TOL`].
+    pub fn fit(samples: &[TimeSample]) -> Option<TimeModel> {
+        if samples.len() != 3 {
+            return None;
+        }
+        for s in samples {
+            if !drift_ok(s.compute + s.comm + s.exposed, s.step_time) {
+                return None;
+            }
+        }
+        let ks: Vec<u64> = samples.iter().map(|s| s.k).collect();
+        let compute = Poly::fit(&ks, &samples.iter().map(|s| s.compute).collect::<Vec<_>>())?;
+        let comm = Poly::fit(&ks, &samples.iter().map(|s| s.comm).collect::<Vec<_>>())?;
+        let exposed = Poly::fit(&ks, &samples.iter().map(|s| s.exposed).collect::<Vec<_>>())?;
+        Some(TimeModel { compute, comm, exposed })
+    }
+
+    /// Predicted step time at per-rank token count `k`, seconds.
+    pub fn predict_step(&self, k: u64) -> f64 {
+        self.compute.eval(k as f64) + self.comm.eval(k as f64) + self.exposed.eval(k as f64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -396,5 +472,62 @@ mod tests {
         assert_eq!(m.solve_wall(10.0, 1e18, 4, 8, 400), Some(400));
         // Constant peak above the limit: nothing fits.
         assert_eq!(m.solve_wall(9.0, 1e18, 4, 8, 400), None);
+    }
+
+    /// Samples of a polynomial step-time decomposition on a dyadic lattice:
+    /// compute(k) = 2k² + 4k + 8, comm(k) = k + 2, exposed(k) = c0.
+    fn time_samples(ks: &[u64], exposed: f64) -> Vec<TimeSample> {
+        ks.iter()
+            .map(|&k| {
+                let compute = 2.0 * (k * k) as f64 + 4.0 * k as f64 + 8.0;
+                let comm = k as f64 + 2.0;
+                TimeSample { k, compute, comm, exposed, step_time: compute + comm + exposed }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn time_fit_reproduces_quadratic_bitwise() {
+        let s = time_samples(&[16, 32, 48], 3.0);
+        let m = TimeModel::fit(&s).expect("quadratic time fit");
+        for k in [8u64, 16, 64, 100, 1024] {
+            let want = (2.0 * (k * k) as f64 + 4.0 * k as f64 + 8.0) + (k as f64 + 2.0) + 3.0;
+            assert_eq!(m.predict_step(k).to_bits(), want.to_bits(), "k={k}");
+        }
+        // A constant (zero) exposed component is a valid shape too.
+        let flat = time_samples(&[16, 32, 48], 0.0);
+        let m2 = TimeModel::fit(&flat).unwrap();
+        assert_eq!(m2.predict_step(64), (2.0 * 4096.0 + 4.0 * 64.0 + 8.0) + 66.0);
+    }
+
+    #[test]
+    fn time_fit_requires_exactly_three_clean_samples() {
+        assert!(TimeModel::fit(&time_samples(&[16, 32], 0.0)).is_none());
+        assert!(TimeModel::fit(&time_samples(&[16, 32, 48, 64], 0.0)).is_none());
+        // Unequal spacing.
+        assert!(TimeModel::fit(&time_samples(&[16, 32, 64], 0.0)).is_none());
+        // Decreasing component (step time must be nondecreasing in k).
+        let mut dec = time_samples(&[16, 32, 48], 0.0);
+        dec[2].comm = 0.0;
+        dec[2].step_time = dec[2].compute + dec[2].comm + dec[2].exposed;
+        assert!(TimeModel::fit(&dec).is_none());
+        // Non-finite component.
+        let mut inf = time_samples(&[16, 32, 48], 0.0);
+        inf[1].compute = f64::INFINITY;
+        inf[1].step_time = f64::INFINITY;
+        assert!(TimeModel::fit(&inf).is_none());
+    }
+
+    #[test]
+    fn time_fit_rejects_inconsistent_decomposition() {
+        // A sample whose components do not sum to its step_time means the
+        // kernel run was not clean (truncated/penalized) → refuse to fit.
+        let mut s = time_samples(&[16, 32, 48], 0.0);
+        s[1].step_time *= 1.0 + 1e-6;
+        assert!(TimeModel::fit(&s).is_none());
+        // ULP-level summation noise is within the contract.
+        let mut ok = time_samples(&[16, 32, 48], 0.0);
+        ok[1].step_time *= 1.0 + 1e-13;
+        assert!(TimeModel::fit(&ok).is_some());
     }
 }

@@ -1,0 +1,325 @@
+//! The third streaming kernel: priced timing without a materialized
+//! trace.
+//!
+//! [`super::feasibility::FeasibilityKernel`] (PR 3) streams a schedule
+//! and answers *peaks only*; [`super::executor::Engine::run`] prices a
+//! materialized trace with the full Table-5 breakdown and a labelled
+//! timeline. [`TimingKernel`] is the missing combination the symbolic
+//! pricer needs: it consumes the same [`OpSink`] stream as a feasibility
+//! probe and accumulates the *same* per-stream clocks and component
+//! breakdown as `Engine::run` — per-op arithmetic identical by
+//! construction, so `step_time`/`components`/`peak_bytes`/`oom`/`failed`
+//! agree **bitwise** with a full run of the same ops (asserted by the
+//! unit tests below and the schedule-level prop test). What it skips is
+//! exactly the bulk: no `Vec<Op>`, no [`MemoryTimeline`] samples.
+//!
+//! Two exits:
+//! - [`TimingKernel::finish`] → a [`StepReport`] with an empty timeline
+//!   (the only documented difference from `Engine::run`): the planner's
+//!   cheap pricing path for cells whose family already has its anchor
+//!   sim.
+//! - [`TimingKernel::sample`] → a [`TimeSample`] splitting the clock
+//!   into compute / comm / exposed-overlap components at lattice point
+//!   `k`, the raw material [`super::symbolic::TimeModel`] fits.
+
+use super::calibration::Calibration;
+use super::feasibility::FeasibilityKernel;
+use super::ops::{Category, Op, OpSink};
+use super::report::{Components, StepReport};
+use super::symbolic::TimeSample;
+use crate::memory::MemoryTimeline;
+
+/// Streaming priced-timing kernel: memory accounting delegated to an
+/// embedded [`FeasibilityKernel`], pricing arithmetic mirrored from
+/// [`super::executor::Engine::run`] op for op.
+#[derive(Debug, Clone)]
+pub struct TimingKernel {
+    calib: Calibration,
+    /// HBM OOM threshold, bytes (headroom input to the pressure
+    /// penalties, exactly as the engine computes it).
+    hbm_limit: f64,
+    /// Persistent bytes charged before the step begins (echoed into the
+    /// report).
+    persistent: f64,
+    mem: FeasibilityKernel,
+    /// Main-stream clock, seconds.
+    clock: f64,
+    /// Offload-stream clock (`Offload { overlap: true }` transfers).
+    offload_clock: f64,
+    comps: Components,
+    /// The persistent set alone overflowed HBM: `Engine::run` answers
+    /// `StepReport::failed_oom()` before touching any op, and so do we.
+    persistent_failed: bool,
+}
+
+impl TimingKernel {
+    pub fn new(calib: Calibration, hbm_limit: f64, persistent: f64, host_ram: f64) -> Self {
+        let mem = FeasibilityKernel::new(hbm_limit, persistent, host_ram);
+        let persistent_failed = mem.is_done();
+        TimingKernel {
+            calib,
+            hbm_limit,
+            persistent,
+            mem,
+            clock: 0.0,
+            offload_clock: 0.0,
+            comps: Components::default(),
+            persistent_failed,
+        }
+    }
+
+    /// Finish streaming: the [`StepReport`] `Engine::run` would have
+    /// produced for the same ops, minus the memory timeline (empty —
+    /// streamed pricing never materializes samples).
+    pub fn finish(self) -> StepReport {
+        if self.persistent_failed {
+            return StepReport::failed_oom();
+        }
+        StepReport {
+            step_time: self.clock.max(self.offload_clock),
+            components: self.comps,
+            peak_bytes: self.mem.peak_allocated(),
+            persistent_bytes: self.persistent,
+            oom: self.mem.oom(),
+            failed: self.mem.failed(),
+            alloc_retries: self.mem.retries(),
+            timeline: MemoryTimeline::new(),
+        }
+    }
+
+    /// Finish streaming as a fit sample at lattice point `k` (= S/C for
+    /// the schedule that was streamed). `None` unless the run was clean:
+    /// an OOM/failed run has no meaningful decomposition to fit.
+    ///
+    /// `exposed` is computed from the two stream clocks directly —
+    /// *not* as `step_time - components.total()`, whose different f64
+    /// summation order could go spuriously negative and trip the
+    /// fitter's monotonicity rejection.
+    pub fn sample(self, k: u64) -> Option<TimeSample> {
+        if self.persistent_failed || self.mem.oom() || self.mem.failed().is_some() {
+            return None;
+        }
+        Some(TimeSample {
+            k,
+            compute: self.comps.fa3_fwd + self.comps.fa3_bwd + self.comps.other,
+            comm: self.comps.all_to_all,
+            exposed: (self.offload_clock - self.clock).max(0.0),
+            step_time: self.clock.max(self.offload_clock),
+        })
+    }
+}
+
+impl OpSink for TimingKernel {
+    fn emit(&mut self, op: Op) {
+        // `Engine::run` breaks out of its loop at the first failed
+        // Alloc/Free/Offload and prices nothing after it. Schedules
+        // polling `done()` only at loop granularity may still emit a few
+        // trailing ops — ignore them so the clocks match the engine's
+        // post-break state exactly.
+        if self.mem.is_done() {
+            return;
+        }
+        match op {
+            Op::Alloc { .. } | Op::Free { .. } => {
+                self.mem.step(op);
+            }
+            Op::Compute { cat, flops } => {
+                let headroom = self.hbm_limit - self.mem.allocated();
+                let dur = match cat {
+                    Category::Fa3Fwd => {
+                        flops / self.calib.fa3_fwd_flops * self.calib.compute_penalty(headroom)
+                    }
+                    Category::Fa3Bwd => flops / self.calib.fa3_bwd_flops,
+                    _ => flops / self.calib.fa3_fwd_flops,
+                };
+                self.clock += dur;
+                self.comps.add(cat, dur);
+            }
+            Op::Fixed { cat, secs } => {
+                self.clock += secs;
+                self.comps.add(cat, secs);
+            }
+            Op::AllToAll { bytes, intra, calls, s_tokens } => {
+                let headroom = self.hbm_limit - self.mem.allocated();
+                let bw = self.calib.a2a_eff(s_tokens, intra);
+                let dur = bytes / bw * self.calib.comm_penalty(headroom)
+                    + calls as f64 * self.calib.a2a_call_overhead;
+                self.clock += dur;
+                self.comps.add(Category::AllToAll, dur);
+            }
+            Op::Ring { steps, bytes_per_step, inter } => {
+                let bw = if inter {
+                    self.calib.ring_eff_inter_bps
+                } else {
+                    self.calib.ring_eff_bps
+                };
+                let alpha = if inter { 60e-6 } else { 20e-6 };
+                let dur = steps as f64 * (alpha + bytes_per_step / bw);
+                self.clock += dur;
+                self.comps.add(Category::AllToAll, dur);
+            }
+            Op::Offload { bytes, overlap } => {
+                // Occupancy first: a host-RAM breach stops execution
+                // before the transfer is priced, exactly like the engine.
+                if !self.mem.step(op) {
+                    return;
+                }
+                let dur = bytes.abs() / self.calib.pcie_eff_bps;
+                if overlap {
+                    self.offload_clock = self.offload_clock.max(self.clock) + dur;
+                } else {
+                    self.clock += dur;
+                    self.comps.add(Category::Other, dur);
+                }
+            }
+            Op::Snapshot { .. } => {} // timeline-only: nothing to price
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.mem.is_done()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::executor::Engine;
+    use crate::engine::ops::{TraceBuilder, MALFORMED_TRACE_FREE};
+
+    /// Run the same ops through `Engine::run` and a `TimingKernel`
+    /// (feeding *every* op — the emit guard must ignore post-failure
+    /// trailers) and assert the reports agree bitwise on every priced
+    /// field.
+    fn assert_bitwise(ops: &[Op], limit: f64, persistent: f64, host_ram: f64) -> StepReport {
+        let calib = Calibration::default();
+        let direct = Engine::new(calib.clone(), limit, persistent, host_ram).run(ops);
+        let mut kernel = TimingKernel::new(calib, limit, persistent, host_ram);
+        for op in ops {
+            kernel.emit(*op);
+        }
+        let streamed = kernel.finish();
+        assert_eq!(streamed.step_time.to_bits(), direct.step_time.to_bits());
+        let (sc, dc) = (&streamed.components, &direct.components);
+        assert_eq!(sc.all_to_all.to_bits(), dc.all_to_all.to_bits());
+        assert_eq!(sc.fa3_fwd.to_bits(), dc.fa3_fwd.to_bits());
+        assert_eq!(sc.fa3_bwd.to_bits(), dc.fa3_bwd.to_bits());
+        assert_eq!(sc.other.to_bits(), dc.other.to_bits());
+        assert_eq!(streamed.peak_bytes.to_bits(), direct.peak_bytes.to_bits());
+        assert_eq!(streamed.persistent_bytes.to_bits(), direct.persistent_bytes.to_bits());
+        assert_eq!(streamed.oom, direct.oom);
+        assert_eq!(streamed.failed, direct.failed);
+        assert_eq!(streamed.alloc_retries, direct.alloc_retries);
+        assert!(streamed.timeline.samples().is_empty(), "streamed pricing has no timeline");
+        streamed
+    }
+
+    #[test]
+    fn all_op_kinds_price_bitwise_like_the_engine() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 7.0 * 1024.0 * 1024.0);
+        b.fixed(Category::Fa3Fwd, 1.0);
+        b.compute(Category::Fa3Fwd, 696e12);
+        b.compute(Category::Fa3Bwd, 613e12);
+        b.compute(Category::Other, 1e12);
+        b.all_to_all(49.9e9, true, 4, 2e6);
+        b.ring(7, 1e9, true);
+        b.ring(7, 1e9, false);
+        b.offload(55e9, true); // offload stream
+        b.offload(3.0, false); // main stream
+        b.offload(-3.0, false);
+        b.snapshot("mid");
+        b.free(x);
+        let r = assert_bitwise(&b.finish(), 1e18, 1.0, f64::INFINITY);
+        assert!(r.failed.is_none() && !r.oom);
+        assert!(r.components.all_to_all > 0.0 && r.components.fa3_bwd > 0.0);
+    }
+
+    #[test]
+    fn oom_stops_pricing_and_matches_engine() {
+        let mut b = TraceBuilder::new();
+        b.fixed(Category::Fa3Fwd, 1.0);
+        b.alloc("big", 2e12);
+        b.fixed(Category::Other, 5.0); // after the OOM: never priced
+        let r = assert_bitwise(&b.finish(), 1e9, 1.0, f64::INFINITY);
+        assert!(r.oom);
+        assert_eq!(r.components.other, 0.0, "execution stops at the failure");
+    }
+
+    #[test]
+    fn malformed_free_fails_identically() {
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("x", 1.0);
+        b.free(x);
+        b.free(x);
+        b.fixed(Category::Other, 5.0);
+        let r = assert_bitwise(&b.finish(), 1e18, 1.0, f64::INFINITY);
+        assert_eq!(r.failed, Some(MALFORMED_TRACE_FREE));
+        assert_eq!(r.components.other, 0.0);
+    }
+
+    #[test]
+    fn overlap_offload_hides_behind_compute() {
+        let mut b = TraceBuilder::new();
+        b.offload(55e9, true); // 1s on the offload stream
+        b.fixed(Category::Fa3Fwd, 2.0);
+        let r = assert_bitwise(&b.finish(), 1e18, 1.0, f64::INFINITY);
+        assert!((r.step_time - 2.0).abs() < 1e-6, "hidden offload");
+        let mut b2 = TraceBuilder::new();
+        b2.offload(3.0 * 55e9, true); // 3s > compute
+        b2.fixed(Category::Fa3Fwd, 2.0);
+        let r2 = assert_bitwise(&b2.finish(), 1e18, 1.0, f64::INFINITY);
+        assert!((r2.step_time - 3.0).abs() < 1e-6, "outruns compute");
+    }
+
+    #[test]
+    fn host_ram_exhaustion_matches_engine() {
+        let mut b = TraceBuilder::new();
+        b.offload(10.0, false);
+        b.fixed(Category::Other, 5.0);
+        let r = assert_bitwise(&b.finish(), 1e18, 1.0, 5.0);
+        assert_eq!(r.failed, Some("host RAM exhausted"));
+        assert_eq!(r.components.other, 0.0, "breach stops pricing");
+    }
+
+    #[test]
+    fn persistent_overflow_is_failed_oom() {
+        let mut b = TraceBuilder::new();
+        b.fixed(Category::Fa3Fwd, 1.0);
+        let r = assert_bitwise(&b.finish(), 1e9, 2e9, f64::INFINITY);
+        assert!(r.oom);
+        assert!(r.step_time.is_infinite());
+    }
+
+    #[test]
+    fn pressure_penalty_prices_identically() {
+        let limit = 80.0 * 1024f64.powi(3);
+        let mut b = TraceBuilder::new();
+        let x = b.alloc("fill", limit - 2.0 * 1024f64.powi(3)); // 2 GiB left
+        b.compute(Category::Fa3Fwd, 696e12);
+        b.free(x);
+        let r = assert_bitwise(&b.finish(), limit, 1.0, f64::INFINITY);
+        assert!(r.components.fa3_fwd > 696e12 / Calibration::default().fa3_fwd_flops * 1.05);
+    }
+
+    #[test]
+    fn sample_splits_the_clock_and_rejects_dirty_runs() {
+        let calib = Calibration::default();
+        let mut b = TraceBuilder::over(TimingKernel::new(calib.clone(), 1e18, 1.0, f64::INFINITY));
+        b.fixed(Category::Fa3Fwd, 2.0);
+        b.all_to_all(49.9e9, true, 0, 0.0);
+        b.offload(4.0 * 55e9, true); // 4s offload vs ~3s main stream
+        let s = b.into_sink().sample(1 << 18).expect("clean run samples");
+        assert_eq!(s.k, 1 << 18);
+        assert!((s.compute - 2.0).abs() < 1e-9);
+        assert!(s.comm > 0.9 && s.comm < 1.1);
+        assert!(s.exposed > 0.0, "offload stream outran the main stream");
+        let total = s.compute + s.comm + s.exposed;
+        assert!((total - s.step_time).abs() <= 1e-9 * s.step_time, "decomposition sums");
+
+        // OOM run: no sample.
+        let mut kernel = TimingKernel::new(calib, 1e9, 1.0, f64::INFINITY);
+        kernel.emit(Op::Alloc { id: 0, bytes: 2e12, name: "big" });
+        assert!(kernel.sample(1).is_none());
+    }
+}

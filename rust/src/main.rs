@@ -14,7 +14,9 @@
 //!       [--compose] [--refit measurements.json] [--threads N]
 //!       [--feasibility-only] [--cold] [--json]
 //!       sweep every valid config, solve max trainable context, rank
-//!   repro frontier ...                                Pareto frontier only
+//!   repro frontier ... [--at-lengths 512K,2M]         Pareto frontier only;
+//!       --at-lengths re-prices the sweep at extra reference lengths on
+//!       the same warm session (near-free via fitted step-time models)
 //!   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
 //!       [--cache-budget 1G] [--keep-alive-timeout 5]
 //!       planner-service daemon: POST /v1/plan | /v1/walls | /v1/frontier
@@ -138,6 +140,10 @@ repro — Untied Ulysses (UPipe) reproduction
       --cold disables the symbolic solver and warm starts (probe-per-
       bisection reference path, identical results)
   repro frontier ...  same flags; print only the Pareto frontier
+      [--at-lengths 512K,2M]  re-price the sweep at extra reference
+      lengths on the same warm session (fitted step-time models + memos
+      make each extra length near-free); --json emits one deterministic
+      plan core per length plus combined accounting
   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
                    [--cache-budget 1G] [--keep-alive-timeout 5]
       planner-as-a-service daemon over one warm session: POST /v1/plan,
@@ -275,6 +281,10 @@ fn parse_plan_params(args: &Args) -> anyhow::Result<PlanParams> {
             .map_err(|e| anyhow::anyhow!("reading --refit {path}: {e}"))?;
         p.measurements = Some(MeasurementsSource { source: path, text });
     }
+    anyhow::ensure!(
+        !args.has("--at-lengths") || args.str("--at-lengths").is_some(),
+        "--at-lengths needs a comma-separated list of lengths"
+    );
     Ok(p)
 }
 
@@ -293,6 +303,44 @@ fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
     }
     let out = &reply.outcome;
     let json = args.has("--json");
+    if let Some(spec) = args.str("--at-lengths") {
+        // Re-price the sweep at extra reference lengths on the SAME warm
+        // session: the walls, fitted models and streamed-price memos from
+        // the base sweep carry over, so each extra length is near-free.
+        let mut lengths: Vec<u64> = Vec::new();
+        for tok in spec.split(',') {
+            let s = parse_tokens(tok.trim())
+                .ok_or_else(|| anyhow::anyhow!("bad --at-lengths entry `{tok}`"))?;
+            if s != params.reference_s && !lengths.contains(&s) {
+                lengths.push(s);
+            }
+        }
+        let mut rows = vec![(params.reference_s, std::sync::Arc::clone(out))];
+        for &s in &lengths {
+            let mut p2 = params.clone();
+            p2.reference_s = s;
+            let r = service.plan(&p2).map_err(anyhow::Error::msg)?;
+            for note in &r.warnings {
+                eprintln!("{note}");
+            }
+            rows.push((s, r.outcome));
+        }
+        if json {
+            let refs: Vec<(u64, &untied_ulysses::planner::PlanOutcome)> =
+                rows.iter().map(|(s, o)| (*s, o.as_ref())).collect();
+            println!("{}", planner_report::frontier_at_lengths_json(&refs).pretty());
+        } else {
+            for (_, o) in &rows {
+                if frontier_only {
+                    planner_report::frontier_table(o).print();
+                } else {
+                    planner_report::plan_table(o).print();
+                }
+                println!();
+            }
+        }
+        return Ok(());
+    }
     match (json, frontier_only) {
         (true, true) => println!("{}", planner_report::frontier_json(out).pretty()),
         (true, false) => println!("{}", planner_report::plan_json(out).pretty()),

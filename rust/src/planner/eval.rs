@@ -27,6 +27,22 @@
 //! whose samples fail the drift check fall back to warm-started
 //! bisection; `--cold` (`symbolic = false`, `warm_start = false`)
 //! restores the exact PR 3 probe-per-bisection behaviour end to end.
+//!
+//! Phase 2 is symbolic too. Each *pricing* family — a [`FamilyKey`] plus
+//! micro-batch and pinning, since step time moves with both — pays for
+//! exactly one full engine simulation: the **anchor** (the family's
+//! reference cell), which builds the family's trace, seeds the report
+//! memo, and drift-verifies a [`TimeModel`] fitted from three streamed
+//! [`crate::engine::TimingKernel`] samples at small lattice lengths.
+//! Every other cell of the family is priced by streaming the schedule
+//! through the timing kernel — the same pricing arithmetic *bitwise*,
+//! with no `Vec<Op>` and no timeline — so `priced_sims` collapses to one
+//! per family while rankings, throughputs and Pareto flags stay
+//! identical to `--cold` by construction, not by tolerance. The fitted
+//! models (`None` for drift-rejected families: pressure-penalized or
+//! FPDT-stalled step times are not polynomial) never change a reported
+//! number; they power the zero-work surfaces — warm `/v1/frontier`
+//! replies and [`throughput_at`] point queries.
 //! Both phases memoize results under hashed [`CellKey`]s in lock-striped
 //! maps, so replayed cells cost a hash lookup and the worker pool never
 //! serializes on a global mutex. The whole sweep prices against the
@@ -49,13 +65,14 @@ use std::time::Instant;
 
 use crate::config::presets::RunPreset;
 use crate::config::{ClusterConfig, CpMethod, ParallelConfig};
+use crate::engine::symbolic::drift_ok;
 use crate::engine::{
-    Calibration, Feasibility, PeakModel, PeakProbe, PeakSample, RefitInfo, StepReport,
+    Calibration, Feasibility, PeakModel, PeakProbe, PeakSample, RefitInfo, StepReport, TimeModel,
 };
 use crate::model::ModelDims;
 use crate::schedule::{
-    feasibility_with, method_seq_cap, peak_probe_with, simulate_cached, CellKey, FamilyKey,
-    Quantities, TraceCache,
+    feasibility_with, method_seq_cap, peak_probe_with, simulate_cached, timing_sample_with,
+    timing_with, CellKey, FamilyKey, Quantities, TraceCache,
 };
 use crate::util::fmt::GIB;
 use crate::util::pool::parallel_map;
@@ -159,11 +176,27 @@ pub struct PlanOutcome {
     /// or bisection probes under `--cold`).
     pub feasibility_probes: u64,
     /// Phase-2 fully priced simulations (0 in feasibility-only sweeps).
+    /// Under symbolic pricing this collapses to at most one *anchor* sim
+    /// per pricing family — the sim that builds the family's trace and
+    /// drift-verifies its fitted step-time model.
     pub priced_sims: u64,
+    /// Phase-2 cells priced by streaming the schedule through the timing
+    /// kernel instead of fully simulating — bitwise-identical step times
+    /// with no materialized trace or timeline (0 under `--cold` and in
+    /// feasibility-only sweeps). The three streamed fit samples behind
+    /// each fitted [`TimeModel`] are counted in neither this nor
+    /// `feasibility_probes` — they are fit overhead, not cell pricing.
+    pub modeled_prices: u64,
     /// Cell families whose sampled-polynomial model fit (walls solved in
     /// closed form) vs families that fell back to bisection.
     pub symbolic_models: u64,
     pub symbolic_fallbacks: u64,
+    /// Pricing families whose fitted step-time model passed the anchor
+    /// drift check vs families that fell back to streamed-exact pricing
+    /// (session-wide, like `symbolic_models`; a fallback never changes a
+    /// reported number — it only disables the O(1) prediction tier).
+    pub time_models: u64,
+    pub time_fallbacks: u64,
     /// Was this a walls-only sweep (no phase-2 pricing)?
     pub feasibility_only: bool,
     pub cache_hits: u64,
@@ -205,6 +238,15 @@ type WarmKey = CpMethod;
 /// (quantum, rounded cap) pins the granularity the wall was verified at.
 type WallKey = (FamilyKey, u64, bool, u64, u64);
 
+/// Pricing-family memo key: the cell family plus micro-batch and pinning.
+/// Peaks are micro-batch-invariant (identical per-micro-batch alloc/free
+/// cycles), but step *time* is not — every micro-batch adds a full
+/// compute/comm cycle — and pinning changes the host budget the offload
+/// stream prices against. Within one sweep the key identifies exactly one
+/// configuration; across session requests it is what lets a new sweep or
+/// point query reuse an already-anchored family.
+type TimeKey = (FamilyKey, u64, bool);
+
 /// Session-persistent evaluator state: every memo the sweep consults,
 /// owned by the caller instead of one `plan()` invocation. The one-shot
 /// [`plan`] wrapper builds a fresh set; the `PlannerService` session API
@@ -228,6 +270,10 @@ pub struct PlannerCaches {
     /// Fitted symbolic peak models per cell family (`None` = the family's
     /// samples failed the drift check; it bisects instead).
     models: StripedMap<FamilyKey, Option<PeakModel>>,
+    /// Fitted symbolic step-time models per pricing family (`None` = the
+    /// family's samples or anchor failed the drift check; its cells are
+    /// priced by streaming instead — same numbers, no O(1) prediction).
+    time_models: StripedMap<TimeKey, Option<TimeModel>>,
     /// Verified context walls (`None` = infeasible at one quantum).
     walls: StripedMap<WallKey, Option<u64>>,
 }
@@ -240,19 +286,22 @@ impl PlannerCaches {
             feas_memo: StripedMap::default(),
             report_memo: StripedMap::default(),
             models: StripedMap::default(),
+            time_models: StripedMap::default(),
             walls: StripedMap::default(),
         }
     }
 
     /// Entry counts for observability (`/v1/health`): traces, peak
-    /// probes, budgeted probes, priced reports, fitted models, walls.
-    pub fn sizes(&self) -> [usize; 6] {
+    /// probes, budgeted probes, priced reports, fitted peak models,
+    /// fitted step-time models, walls.
+    pub fn sizes(&self) -> [usize; 7] {
         [
             self.trace.len(),
             self.probe_memo.len(),
             self.feas_memo.len(),
             self.report_memo.len(),
             self.models.len(),
+            self.time_models.len(),
             self.walls.len(),
         ]
     }
@@ -264,12 +313,13 @@ impl PlannerCaches {
             + self.feas_memo.bytes()
             + self.report_memo.bytes()
             + self.models.bytes()
+            + self.time_models.bytes()
             + self.walls.bytes()
     }
 
     /// Per-tier observability snapshot (`/v1/health`'s byte sizes and
     /// eviction counts), in [`PlannerCaches::sizes`] order.
-    pub fn tiers(&self) -> [CacheTier; 6] {
+    pub fn tiers(&self) -> [CacheTier; 7] {
         [
             CacheTier {
                 name: "traces",
@@ -300,6 +350,12 @@ impl PlannerCaches {
                 entries: self.models.len(),
                 bytes: self.models.bytes(),
                 evictions: self.models.evicted(),
+            },
+            CacheTier {
+                name: "time_models",
+                entries: self.time_models.len(),
+                bytes: self.time_models.bytes(),
+                evictions: self.time_models.evicted(),
             },
             CacheTier {
                 name: "walls",
@@ -343,9 +399,10 @@ impl PlannerCaches {
         dropped
     }
 
-    /// Last-resort eviction of the precious tiers (fitted models, then
-    /// verified walls) — only reached when a budget is set below the
-    /// tiers' own floor after every bulk tier is already empty.
+    /// Last-resort eviction of the precious tiers (fitted peak models,
+    /// then fitted step-time models, then verified walls) — only reached
+    /// when a budget is set below the tiers' own floor after every bulk
+    /// tier is already empty.
     pub fn evict_precious_to_fit(&self, budget: usize, extra_bytes: usize) -> u64 {
         let excess = |c: &Self| (c.bytes() + extra_bytes).saturating_sub(budget);
         let mut dropped = 0u64;
@@ -354,6 +411,11 @@ impl PlannerCaches {
             return dropped;
         }
         dropped += self.models.evict_lru(self.models.bytes().saturating_sub(e));
+        let e = excess(self);
+        if e == 0 {
+            return dropped;
+        }
+        dropped += self.time_models.evict_lru(self.time_models.bytes().saturating_sub(e));
         let e = excess(self);
         if e == 0 {
             return dropped;
@@ -370,6 +432,7 @@ impl PlannerCaches {
         self.feas_memo.clear();
         self.report_memo.clear();
         self.models.clear();
+        self.time_models.clear();
         self.walls.clear();
     }
 }
@@ -400,7 +463,8 @@ pub fn plan(req: &PlanRequest) -> PlanOutcome {
 /// filling) the caller-owned session caches. All probe/simulation/cache
 /// counters in the returned [`PlanOutcome`] are per-call deltas — a fully
 /// warm replay reports zero everywhere — except `symbolic_models` /
-/// `symbolic_fallbacks`, which count the session's fitted families.
+/// `symbolic_fallbacks` and `time_models` / `time_fallbacks`, which count
+/// the session's fitted families.
 pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
     let t0 = Instant::now();
     // `--cold` (symbolic and warm_start both off) is a measurement
@@ -423,6 +487,7 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
     let gpus = req.cluster.total_gpus();
     let probes = AtomicU64::new(0);
     let priced = AtomicU64::new(0);
+    let modeled = AtomicU64::new(0);
     // Phase-specific memos, hashed keys + striped locks, owned by the
     // session. The symbolic probe memo is pin-agnostic (CellKey already
     // excludes pinning); the budgeted `--cold` memo and the pricing memo
@@ -431,6 +496,7 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
     let feas_memo = &caches.feas_memo;
     let report_memo = &caches.report_memo;
     let models = &caches.models;
+    let time_models = &caches.time_models;
     let warm: StripedMap<WarmKey, u64> = StripedMap::default();
     let quantum = req.quantum.max(1);
     let cap = (req.cap_s / quantum).max(1) * quantum;
@@ -490,15 +556,49 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
             PeakModel::fit(&[s123[0], s123[1], s123[2], s4])
         })
     };
-    // Phase 2 — final cells only: full pricing with timeline/components.
+    // Fit one pricing family's step-time model from three streamed
+    // timing-kernel samples at small lattice lengths (ample headroom:
+    // the regime where step time genuinely is polynomial in S/C). The
+    // anchor sim is the held-out drift check — `None` (unclean anchor,
+    // unclean samples, or drift) keeps the family on streamed-exact
+    // pricing, which changes nothing but the O(1) prediction tier.
+    let fit_time = |parallel: &ParallelConfig, anchor_s: u64, anchor: &StepReport| {
+        if anchor.oom || anchor.failed.is_some() {
+            return None;
+        }
+        let c = parallel.cp_degree.max(1);
+        let sample =
+            |i: u64| timing_sample_with(&preset_of(parallel, i * quantum), &calib, i * quantum / c);
+        let s123 = [sample(1)?, sample(2)?, sample(3)?];
+        let m = TimeModel::fit(&s123)?;
+        drift_ok(m.predict_step(anchor_s / c), anchor.step_time).then_some(m)
+    };
+    // Phase 2 — final cells only. `--cold` fully prices every cell
+    // (trace + timeline). Symbolic mode fully prices one *anchor* cell
+    // per pricing family — which also fits and drift-verifies the
+    // family's step-time model — and prices every other cell by
+    // streaming the schedule through the timing kernel: the same
+    // `Engine::run` arithmetic bitwise, no trace, no timeline.
     let price = |parallel: &ParallelConfig, s: u64| -> StepReport {
         let preset = preset_of(parallel, s);
         let key = (CellKey::new(&preset, &calib), parallel.pin_memory);
         if let Some(r) = report_memo.get(&key) {
             return r;
         }
+        let tkey: TimeKey = (key.0.family(), parallel.micro_batch, parallel.pin_memory);
+        if req.symbolic && time_models.get(&tkey).is_some() {
+            // Streamed-exact pricing, whether the family's model fitted
+            // (`Some`) or drift-rejected (`None`) — the values are
+            // `Engine::run` semantics either way.
+            let r = timing_with(&preset, &calib);
+            modeled.fetch_add(1, Ordering::Relaxed);
+            return report_memo.insert_weighed(key, r, 0);
+        }
         let r = simulate_cached(&preset, &calib, cache);
         priced.fetch_add(1, Ordering::Relaxed);
+        if req.symbolic {
+            time_models.insert(tkey, fit_time(parallel, s, &r));
+        }
         // The timeline vector dominates a report's footprint; declare it
         // so the service's byte budget can rank this tier honestly.
         let payload = r.timeline.samples().len()
@@ -571,17 +671,22 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         let mut ref_peak = None;
         let mut ref_tput = None;
         if !req.feasibility_only {
+            // Reference cell first: a pricing family's first priced cell
+            // is its anchor sim, and the reference length sits in ample
+            // headroom where step time is polynomial — anchoring at the
+            // near-wall max-context cell instead would drift-reject
+            // nearly every family (pressure penalties are not).
+            let rref = price(p, req.reference_s);
+            if ok(&rref) {
+                ref_peak = Some(rref.peak_bytes / GIB);
+                ref_tput = rref.tokens_per_sec_per_gpu(p.micro_batch * req.reference_s, gpus);
+            }
             if let Some(s) = max {
                 let r = price(p, s);
                 max_peak = Some(r.peak_bytes / GIB);
                 // Throughput counts every micro-batch's tokens over the
                 // whole (CP × TP) world.
                 max_tput = r.tokens_per_sec_per_gpu(p.micro_batch * s, gpus);
-            }
-            let rref = price(p, req.reference_s);
-            if ok(&rref) {
-                ref_peak = Some(rref.peak_bytes / GIB);
-                ref_tput = rref.tokens_per_sec_per_gpu(p.micro_batch * req.reference_s, gpus);
             }
         }
         ConfigPlan {
@@ -628,8 +733,13 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         Some(_) => (f + 1, fb),
         None => (f, fb + 1),
     });
+    let (tfit, tfall) = time_models.fold((0u64, 0u64), |(f, fb), _, m| match m {
+        Some(_) => (f + 1, fb),
+        None => (f, fb + 1),
+    });
     let n_probes = probes.load(Ordering::Relaxed);
     let n_priced = priced.load(Ordering::Relaxed);
+    let n_modeled = modeled.load(Ordering::Relaxed);
     PlanOutcome {
         model: req.model.clone(),
         cluster: req.cluster.clone(),
@@ -637,11 +747,14 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         quantum,
         configs: evaluated,
         refit: req.refit.clone(),
-        simulations: n_probes + n_priced,
+        simulations: n_probes + n_priced + n_modeled,
         feasibility_probes: n_probes,
         priced_sims: n_priced,
+        modeled_prices: n_modeled,
         symbolic_models: fitted,
         symbolic_fallbacks: fallbacks,
+        time_models: tfit,
+        time_fallbacks: tfall,
         feasibility_only: req.feasibility_only,
         // Per-call deltas: the session's trace cache outlives the request.
         cache_hits: cache.hits() - trace_hits0,
@@ -798,6 +911,149 @@ pub fn walls_at(req: &PlanRequest, seq: u64, caches: &PlannerCaches) -> WallsAtO
     }
 }
 
+/// One configuration's answer to a throughput point query
+/// ([`throughput_at`]).
+#[derive(Debug, Clone)]
+pub struct ThroughputAt {
+    pub parallel: ParallelConfig,
+    /// Step time at the queried length, seconds (`None` when the cell is
+    /// infeasible there).
+    pub step_time: Option<f64>,
+    /// Tokens/s/GPU at the queried length (`None` when infeasible).
+    pub tok_s_gpu: Option<f64>,
+    pub source: PriceSource,
+}
+
+/// Which tier priced a throughput point query's cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PriceSource {
+    /// A memoized priced report — this exact cell was priced before
+    /// (anchor sim or streamed): exact.
+    Report,
+    /// The family's fitted step-time polynomial, guarded by its peak
+    /// model's feasibility prediction: zero streamed work, exact up to
+    /// the drift contract (and the pressure penalties near the wall,
+    /// which the drift contract deliberately excludes from this tier's
+    /// fitted families).
+    Model,
+    /// A streamed timing-kernel run — exact `Engine::run` semantics,
+    /// memoized under the cell's key for next time.
+    Stream,
+}
+
+impl PriceSource {
+    pub fn label(&self) -> &'static str {
+        match self {
+            PriceSource::Report => "report",
+            PriceSource::Model => "model",
+            PriceSource::Stream => "stream",
+        }
+    }
+}
+
+/// A throughput point query's full answer (one row per configuration).
+#[derive(Debug, Clone)]
+pub struct ThroughputAtOutcome {
+    pub model: ModelDims,
+    pub cluster: ClusterConfig,
+    /// The queried sequence length, verbatim — throughput queries price
+    /// at the *exact* length, no lattice rounding (step time is defined
+    /// everywhere; only walls live on the search lattice).
+    pub seq: u64,
+    pub quantum: u64,
+    pub cells: Vec<ThroughputAt>,
+    /// Streamed timing-kernel runs this query cost (0 once the session
+    /// has reports or fitted models covering every cell at this length).
+    pub streamed: u64,
+    pub from_reports: u64,
+    pub from_models: u64,
+    pub from_streams: u64,
+}
+
+/// Throughput point query: step time and tokens/s/GPU at sequence length
+/// `seq` for every configuration in the request's sweep space — the
+/// pricing counterpart of [`walls_at`]. Three answer tiers, cheapest
+/// sufficient first: a memoized priced report (exact), the family's
+/// fitted step-time model guarded by its peak model's feasibility
+/// prediction (zero streamed work), or a streamed timing-kernel run
+/// (exact `Engine::run` semantics, no trace or timeline, memoized for
+/// next time). After a full priced sweep on the same model/calibration,
+/// the sweep's own lengths answer entirely from tier 1 and fresh lengths
+/// answer from tier 2 wherever the family's model fitted.
+pub fn throughput_at(req: &PlanRequest, seq: u64, caches: &PlannerCaches) -> ThroughputAtOutcome {
+    let space = enumerate_space(&req.model, &req.cluster, &req.dims);
+    let calib = req.calibration.clone();
+    let gpus = req.cluster.total_gpus();
+    let streamed = AtomicU64::new(0);
+    let preset_of = |parallel: &ParallelConfig, s: u64| RunPreset {
+        model: req.model.clone(),
+        cluster: req.cluster.clone(),
+        parallel: parallel.clone(),
+        seq_len: s,
+    };
+    let cells = parallel_map(&space, req.threads, |_, p| {
+        let preset = preset_of(p, seq);
+        let key = (CellKey::new(&preset, &calib), p.pin_memory);
+        let cell = |r: &StepReport, source: PriceSource| ThroughputAt {
+            parallel: p.clone(),
+            step_time: (!r.oom && r.failed.is_none()).then_some(r.step_time),
+            tok_s_gpu: r.tokens_per_sec_per_gpu(p.micro_batch * seq, gpus),
+            source,
+        };
+        if let Some(r) = caches.report_memo.get(&key) {
+            return cell(&r, PriceSource::Report);
+        }
+        let fam = key.0.family();
+        let tkey: TimeKey = (fam, p.micro_batch, p.pin_memory);
+        if let (Some(Some(tm)), Some(pm)) =
+            (caches.time_models.get(&tkey), caches.models.get(&fam).flatten())
+        {
+            let c = p.cp_degree.max(1);
+            let qd = Quantities::new(&preset);
+            let beyond = method_seq_cap(p.method).is_some_and(|mc| seq > mc);
+            let feasible = !beyond
+                && pm.predict_feasible(seq / c, qd.hbm_limit, qd.host_ram_for_offload());
+            let (st, tput) = if feasible {
+                let st = tm.predict_step(seq / c);
+                (Some(st), Some((p.micro_batch * seq) as f64 / (st * gpus as f64)))
+            } else {
+                (None, None)
+            };
+            return ThroughputAt {
+                parallel: p.clone(),
+                step_time: st,
+                tok_s_gpu: tput,
+                source: PriceSource::Model,
+            };
+        }
+        // Cold tier: one streamed timing run, memoized under the cell key
+        // (weightless: no timeline rides along).
+        let r = timing_with(&preset, &calib);
+        streamed.fetch_add(1, Ordering::Relaxed);
+        let r = caches.report_memo.insert_weighed(key, r, 0);
+        cell(&r, PriceSource::Stream)
+    });
+    let mut from = [0u64; 3];
+    for c in &cells {
+        match c.source {
+            PriceSource::Report => from[0] += 1,
+            PriceSource::Model => from[1] += 1,
+            PriceSource::Stream => from[2] += 1,
+        }
+    }
+    ThroughputAtOutcome {
+        model: req.model.clone(),
+        cluster: req.cluster.clone(),
+        seq,
+        quantum: req.quantum.max(1),
+        streamed: streamed.load(Ordering::Relaxed),
+        from_reports: from[0],
+        from_models: from[1],
+        from_streams: from[2],
+        cells,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -914,7 +1170,11 @@ mod tests {
         // cache must have hits, and the memos must have collapsed replays.
         assert!(out.cache_hits > 0, "no trace-cache hits");
         assert!(out.simulations > 0);
-        assert_eq!(out.simulations, out.feasibility_probes + out.priced_sims);
+        assert_eq!(
+            out.simulations,
+            out.feasibility_probes + out.priced_sims + out.modeled_prices
+        );
+        assert!(out.modeled_prices > 0, "symbolic pricing never streamed");
         assert!(out.priced_sims >= out.cache_misses);
         assert!(out.refit.is_none(), "no refit requested");
     }
@@ -953,8 +1213,25 @@ mod tests {
             cold.feasibility_probes,
             sym.feasibility_probes
         );
-        // Pricing work is identical — the phases are independent.
-        assert_eq!(sym.priced_sims, cold.priced_sims);
+        // Pricing collapses too: at most one anchor sim per pricing
+        // family, every other cell streamed through the timing kernel —
+        // with results asserted bitwise-identical above.
+        assert_eq!(cold.modeled_prices, 0, "--cold must never stream prices");
+        assert_eq!(cold.time_models + cold.time_fallbacks, 0, "--cold fit time models");
+        assert!(sym.modeled_prices > 0, "symbolic pricing never streamed");
+        assert!(sym.time_models > 0, "no step-time models fitted");
+        assert!(
+            sym.priced_sims <= sym.time_models + sym.time_fallbacks,
+            "more than one anchor sim per pricing family: {} anchors, {} families",
+            sym.priced_sims,
+            sym.time_models + sym.time_fallbacks
+        );
+        assert!(
+            sym.priced_sims < cold.priced_sims,
+            "pricing did not collapse: {} vs {}",
+            sym.priced_sims,
+            cold.priced_sims
+        );
     }
 
     #[test]
@@ -998,6 +1275,7 @@ mod tests {
 
         assert!(walls.feasibility_only && !full.feasibility_only);
         assert_eq!(walls.priced_sims, 0, "phase 2 must not run");
+        assert_eq!(walls.modeled_prices, 0, "no streamed prices either");
         assert_eq!(walls.cache_misses, 0, "no traces built for pricing");
         assert_eq!(walls.configs.len(), full.configs.len());
         // Same walls for every configuration (matched by layout — the
@@ -1080,6 +1358,7 @@ mod tests {
         let warm = plan_with(&req, &caches);
         assert_eq!(warm.feasibility_probes, 0, "verified walls must be memoized");
         assert_eq!(warm.priced_sims, 0, "priced reports must be memoized");
+        assert_eq!(warm.modeled_prices, 0, "streamed prices must be memoized");
         assert_eq!(warm.cache_misses, 0, "no new traces on a warm replay");
         assert_configs_bitwise_equal(&warm, &cold);
         let one_shot = plan(&req);
@@ -1087,9 +1366,10 @@ mod tests {
         // Cache observability: the session actually accumulated state.
         let sizes = caches.sizes();
         assert!(sizes.iter().any(|&n| n > 0), "caches stayed empty: {sizes:?}");
-        assert!(sizes[5] > 0, "no verified walls memoized");
+        assert!(sizes[6] > 0, "no verified walls memoized");
+        assert!(sizes[5] > 0, "no step-time models memoized");
         caches.clear();
-        assert_eq!(caches.sizes(), [0; 6]);
+        assert_eq!(caches.sizes(), [0; 7]);
         // A cleared session re-evaluates and still agrees.
         let refilled = plan_with(&req, &caches);
         assert!(refilled.feasibility_probes > 0);
@@ -1127,6 +1407,60 @@ mod tests {
         for (a, b) in cold_q.cells.iter().zip(&warm_q.cells) {
             assert_eq!(a.parallel, b.parallel);
             assert_eq!(a.feasible, b.feasible, "{:?}", a.parallel);
+        }
+    }
+
+    #[test]
+    fn throughput_at_answers_from_memos_and_models_after_a_sweep() {
+        let caches = PlannerCaches::new();
+        let mut req = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 2;
+        // The sweep runs first: it anchors and fits the step-time models
+        // and memoizes every reference-cell report.
+        let out = plan_with(&req, &caches);
+        assert!(out.time_models > 0, "sweep fitted no step-time models");
+        // Tier 1: the sweep's own reference length answers entirely from
+        // memoized reports, bitwise equal to the planned throughput.
+        let q0 = throughput_at(&req, req.reference_s, &caches);
+        assert_eq!(q0.streamed, 0, "warm reference query must not stream");
+        assert_eq!(q0.from_reports, q0.cells.len() as u64);
+        for cell in &q0.cells {
+            let planned = out.configs.iter().find(|c| c.parallel == cell.parallel).unwrap();
+            assert_eq!(
+                cell.tok_s_gpu.map(f64::to_bits),
+                planned.ref_tok_s_gpu.map(f64::to_bits),
+                "{:?}",
+                cell.parallel
+            );
+        }
+        // Tiers 2/3: a length the sweep never priced. Fitted families
+        // answer from the polynomial with zero streamed work; the rest
+        // stream exactly once and memoize.
+        let fresh = (1 << 20) + (1 << 19);
+        let q1 = throughput_at(&req, fresh, &caches);
+        assert!(q1.from_models > 0, "no cell answered from a fitted model");
+        assert_eq!(q1.streamed, q1.from_streams, "stream accounting drifted");
+        for cell in q1.cells.iter().filter(|c| c.source == PriceSource::Model) {
+            if let Some(st) = cell.step_time {
+                assert!(st > 0.0, "{:?}", cell.parallel);
+                assert!(cell.tok_s_gpu.unwrap() > 0.0, "{:?}", cell.parallel);
+            }
+        }
+        // Streamed answers memoize: the requery streams nothing, the
+        // model tier is unchanged, and every value is bitwise stable.
+        let q2 = throughput_at(&req, fresh, &caches);
+        assert_eq!(q2.streamed, 0, "streamed prices must be memoized");
+        assert_eq!(q2.from_models, q1.from_models);
+        for (a, b) in q1.cells.iter().zip(&q2.cells) {
+            assert_eq!(a.parallel, b.parallel);
+            assert_eq!(
+                a.tok_s_gpu.map(f64::to_bits),
+                b.tok_s_gpu.map(f64::to_bits),
+                "{:?}",
+                a.parallel
+            );
         }
     }
 

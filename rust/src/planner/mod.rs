@@ -28,17 +28,20 @@
 //! All evaluator memos live in a caller-owned [`PlannerCaches`]: [`plan`]
 //! is the one-shot wrapper (fresh caches per call), [`plan_with`] the
 //! session entry point [`crate::service::PlannerService`] keeps warm
-//! across requests, and [`walls_at`] answers point capacity queries from
+//! across requests, [`walls_at`] answers point capacity queries from
 //! a warm session's verified walls / fitted models with zero streamed
-//! probes.
+//! probes, and [`throughput_at`] is its pricing-side counterpart —
+//! step time and throughput at an arbitrary length from memoized
+//! reports, fitted step-time models, or one streamed timing pass.
 
 pub mod eval;
 pub mod search;
 pub mod space;
 
 pub use eval::{
-    plan, plan_with, walls_at, CacheTier, ConfigPlan, PlanOutcome, PlanRequest, PlannerCaches,
-    WallAt, WallSource, WallsAtOutcome,
+    plan, plan_with, throughput_at, walls_at, CacheTier, ConfigPlan, PlanOutcome, PlanRequest,
+    PlannerCaches, PriceSource, ThroughputAt, ThroughputAtOutcome, WallAt, WallSource,
+    WallsAtOutcome,
 };
 pub use search::{bisect_max, bisect_max_from, pareto_front};
 pub use space::{enumerate_space, SweepDims};

@@ -1,5 +1,6 @@
 //! Planner output rendering: the ranked plan table, the Pareto-frontier
-//! table, the walls-only table for `--feasibility-only` sweeps, and
+//! table, the walls-only table for `--feasibility-only` sweeps, the
+//! multi-length frontier artifact for `repro frontier --at-lengths`, and
 //! machine-readable JSON for CI artifacts / downstream tooling. Surfaces
 //! every sweep dimension (AC mode, micro-batch, TP) and, for `--refit`
 //! runs, the calibration provenance.
@@ -54,13 +55,14 @@ fn config_cells(rank: usize, c: &ConfigPlan) -> Vec<String> {
 
 fn add_notes(t: &mut Table, out: &PlanOutcome) {
     t.note(&format!(
-        "ref = {}; search granularity {}; {} sims ({} probes + {} priced), \
+        "ref = {}; search granularity {}; {} sims ({} probes + {} priced + {} modeled), \
          trace cache {}/{} hits",
         tokens(out.reference_s),
         tokens(out.quantum),
         out.simulations,
         out.feasibility_probes,
         out.priced_sims,
+        out.modeled_prices,
         out.cache_hits,
         out.cache_hits + out.cache_misses
     ));
@@ -70,6 +72,13 @@ fn add_notes(t: &mut Table, out: &PlanOutcome) {
         t.note(&format!(
             "walls solved symbolically for {} cell families ({} fell back to bisection)",
             out.symbolic_models, out.symbolic_fallbacks
+        ));
+    }
+    if out.time_models + out.time_fallbacks > 0 {
+        t.note(&format!(
+            "step times fitted symbolically for {} pricing families \
+             ({} fell back to streamed pricing)",
+            out.time_models, out.time_fallbacks
         ));
     }
     if out.feasibility_only {
@@ -258,8 +267,11 @@ fn accounting_pairs(out: &PlanOutcome) -> Vec<(&'static str, Json)> {
         ("simulations", Json::int(out.simulations)),
         ("feasibility_probes", Json::int(out.feasibility_probes)),
         ("priced_sims", Json::int(out.priced_sims)),
+        ("modeled_prices", Json::int(out.modeled_prices)),
         ("symbolic_models", Json::int(out.symbolic_models)),
         ("symbolic_fallbacks", Json::int(out.symbolic_fallbacks)),
+        ("time_models", Json::int(out.time_models)),
+        ("time_fallbacks", Json::int(out.time_fallbacks)),
         ("trace_cache", cache),
         ("wall_s", Json::Num(out.wall_s)),
     ]
@@ -301,6 +313,47 @@ pub fn frontier_result_json(out: &PlanOutcome) -> Json {
         return plan_result_json(out);
     }
     Json::obj(core_pairs(out, out.frontier().into_iter().map(config_json).collect()))
+}
+
+/// The `repro frontier --at-lengths` artifact: one deterministic plan
+/// core per requested reference length, re-priced on the same warm
+/// session. The request's own reference length is always the first row,
+/// so CI can strip the plan artifact's accounting and byte-compare that
+/// row's `result` against it. `accounting` sums the per-row search cost
+/// (priced/modeled are per-run deltas; the time-model counts are the
+/// session-wide tally after the last row, not a sum).
+pub fn frontier_at_lengths_json(rows: &[(u64, &PlanOutcome)]) -> Json {
+    let sums = |f: fn(&PlanOutcome) -> u64| rows.iter().map(|&(_, o)| f(o)).sum::<u64>();
+    let last = rows.last().map(|(_, o)| *o);
+    Json::obj(vec![
+        (
+            "lengths",
+            Json::Arr(rows.iter().map(|(s, _)| Json::int(*s)).collect()),
+        ),
+        (
+            "rows",
+            Json::Arr(
+                rows.iter()
+                    .map(|(s, out)| {
+                        Json::obj(vec![
+                            ("reference_s", Json::int(*s)),
+                            ("result", plan_result_json(out)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "accounting",
+            Json::obj(vec![
+                ("feasibility_probes", Json::int(sums(|o| o.feasibility_probes))),
+                ("priced_sims", Json::int(sums(|o| o.priced_sims))),
+                ("modeled_prices", Json::int(sums(|o| o.modeled_prices))),
+                ("time_models", Json::int(last.map_or(0, |o| o.time_models))),
+                ("time_fallbacks", Json::int(last.map_or(0, |o| o.time_fallbacks))),
+            ]),
+        ),
+    ])
 }
 
 /// A point capacity query's answer — the `result` of `/v1/walls` with
@@ -423,6 +476,7 @@ mod tests {
         let j = plan_json(&out).render();
         assert!(j.contains("\"feasibility_only\":true"));
         assert!(j.contains("\"priced_sims\":0"));
+        assert!(j.contains("\"modeled_prices\":0"));
         assert!(j.contains("\"max_context\":"));
         assert!(j.contains("\"ref_tok_s_per_gpu\":null"));
     }
@@ -433,10 +487,37 @@ mod tests {
         let j = plan_json(&out).render();
         assert!(j.contains("\"feasibility_probes\":"));
         assert!(j.contains("\"symbolic_models\":"));
+        assert!(j.contains("\"modeled_prices\":"));
+        assert!(j.contains("\"time_models\":"));
+        assert!(j.contains("\"time_fallbacks\":"));
         assert!(j.contains("\"feasibility_only\":false"));
         let t = plan_table(&out).render();
         assert!(t.contains("walls solved symbolically"), "{t}");
+        assert!(t.contains("step times fitted symbolically"), "{t}");
         assert!(t.contains("probes"), "{t}");
+    }
+
+    #[test]
+    fn at_lengths_rows_embed_the_plan_core() {
+        use crate::planner::{plan_with, PlannerCaches};
+        let caches = PlannerCaches::new();
+        let mut req = small_req();
+        let base = plan_with(&req, &caches);
+        req.reference_s = 2 << 20;
+        let extra = plan_with(&req, &caches);
+        let rows = [(1u64 << 20, &base), (2u64 << 20, &extra)];
+        let j = frontier_at_lengths_json(&rows);
+        let rendered = j.render();
+        assert!(rendered.contains("\"lengths\":[1048576,2097152]"), "{rendered}");
+        // The reference row's result is exactly the plan artifact's core.
+        let row0 = j.get("rows").and_then(|r| match r {
+            Json::Arr(v) => v.first(),
+            _ => None,
+        });
+        let result = row0.and_then(|r| r.get("result")).unwrap();
+        assert_eq!(result.render(), plan_result_json(&base).render());
+        assert!(rendered.contains("\"accounting\""), "{rendered}");
+        assert!(rendered.contains("\"modeled_prices\":"), "{rendered}");
     }
 
     #[test]

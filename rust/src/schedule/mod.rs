@@ -13,12 +13,15 @@
 //! every trace uniformly.
 //!
 //! Every schedule emits into a generic [`OpSink`], so one emission path
-//! serves two evaluation phases: [`feasibility_with`] streams the ops
+//! serves every evaluation phase: [`feasibility_with`] streams the ops
 //! straight into the peak-only [`FeasibilityKernel`] (the planner's
-//! bisection probes — no `Vec<Op>` is ever materialized), while
-//! [`simulate_with`] / [`simulate_cached`] collect and fully price a trace
-//! (timeline + Table-5 components) for the cells that end up in tables and
-//! figures. [`TraceCache`] memoizes priced traces under hashed [`CellKey`]s
+//! bisection probes — no `Vec<Op>` is ever materialized),
+//! [`timing_with`] streams them into the priced [`TimingKernel`]
+//! (bitwise `Engine::run` step times, still no `Vec<Op>` and no
+//! timeline — the symbolic pricer's workhorse), while [`simulate_with`]
+//! / [`simulate_cached`] collect and fully price a trace (timeline +
+//! Table-5 components) for the cells that end up in tables and figures.
+//! [`TraceCache`] memoizes priced traces under hashed [`CellKey`]s
 //! in a lock-striped map, so pin variants and report replays skip straight
 //! to pricing without serializing the worker pool on one global mutex.
 //! The cache is owned by whoever scopes the evaluation — a one-shot
@@ -44,7 +47,7 @@ use crate::config::presets::RunPreset;
 use crate::config::CpMethod;
 use crate::engine::{
     Calibration, Engine, Feasibility, FeasibilityKernel, Op, OpSink, PeakProbe, StepReport,
-    TraceBuilder,
+    TimeSample, TimingKernel, TraceBuilder,
 };
 use crate::util::stripe::{fx_hash_one, StripedMap};
 
@@ -133,6 +136,48 @@ pub fn peak_probe_with(p: &RunPreset, calib: &Calibration) -> PeakProbe {
         probe.failed = Some(msg);
     }
     probe
+}
+
+/// Priced-streaming evaluation: stream the preset's schedule straight
+/// into the [`TimingKernel`] — the full `Engine::run` pricing arithmetic
+/// (clocks, penalties, Table-5 component breakdown) with no `Vec<Op>`
+/// and no timeline. Agrees **bitwise** with [`simulate_with`] on
+/// `step_time`, every component, `peak_bytes`, `oom` and `failed` (the
+/// trace-invariant prop test enforces this); the report's timeline is
+/// empty, which is the entire savings.
+pub fn timing_with(p: &RunPreset, calib: &Calibration) -> StepReport {
+    let q = Quantities::new(p);
+    let mut kernel = TimingKernel::new(
+        calib.clone(),
+        q.hbm_limit,
+        q.persistent_bytes(calib),
+        q.host_ram_for_offload(),
+    );
+    stream_trace_with(p, calib, &mut kernel);
+    let mut r = kernel.finish();
+    if let Some(msg) = method_failure(p) {
+        r.failed = Some(msg);
+    }
+    r
+}
+
+/// One [`TimeSample`] for the symbolic step-time fit: stream the preset
+/// into the timing kernel and decompose its clocks at per-rank token
+/// count `k`. `None` unless the run is clean (no OOM, no failure — a
+/// truncated stream under-prices, so it is never a valid sample).
+pub fn timing_sample_with(p: &RunPreset, calib: &Calibration, k: u64) -> Option<TimeSample> {
+    if method_failure(p).is_some() {
+        return None;
+    }
+    let q = Quantities::new(p);
+    let mut kernel = TimingKernel::new(
+        calib.clone(),
+        q.hbm_limit,
+        q.persistent_bytes(calib),
+        q.host_ram_for_offload(),
+    );
+    stream_trace_with(p, calib, &mut kernel);
+    kernel.sample(k)
 }
 
 /// Hard sequence-length ceiling a method imposes regardless of memory
@@ -671,15 +716,57 @@ mod tests {
         true
     }
 
+    /// Timing-kernel invariants for one configuration: the streamed
+    /// [`timing_with`] report must equal the collected-and-priced
+    /// [`simulate_with`] report **bitwise** on `step_time`, all four
+    /// Table-5 components, `peak_bytes`, `oom` and `failed` (with an
+    /// empty timeline — that absence is the kernel's entire savings),
+    /// and step time must be monotone nondecreasing in S within the
+    /// divisibility class on clean runs (longer sequences never price
+    /// faster: FLOPs, comm bytes and pressure penalties all grow with S).
+    fn timing_invariants_hold(p: &RunPreset, cal: &Calibration, direct: &StepReport) -> bool {
+        let timed = timing_with(p, cal);
+        if timed.step_time.to_bits() != direct.step_time.to_bits()
+            || timed.components.all_to_all.to_bits() != direct.components.all_to_all.to_bits()
+            || timed.components.fa3_fwd.to_bits() != direct.components.fa3_fwd.to_bits()
+            || timed.components.fa3_bwd.to_bits() != direct.components.fa3_bwd.to_bits()
+            || timed.components.other.to_bits() != direct.components.other.to_bits()
+            || timed.peak_bytes.to_bits() != direct.peak_bytes.to_bits()
+            || timed.oom != direct.oom
+            || timed.failed != direct.failed
+            || !timed.timeline.samples().is_empty()
+        {
+            return false;
+        }
+        let clean = |r: &StepReport| !r.oom && r.failed.is_none();
+        let base = 1u64 << 18; // one residue class: multiple of every swept C
+        let steps: Vec<StepReport> = (1..=4)
+            .map(|i| {
+                let mut p2 = p.clone();
+                p2.seq_len = i * base;
+                timing_with(&p2, cal)
+            })
+            .collect();
+        for w in steps.windows(2) {
+            if clean(&w[0]) && clean(&w[1]) && w[1].step_time < w[0].step_time {
+                return false;
+            }
+        }
+        true
+    }
+
     #[test]
     fn prop_traces_balanced_nonnegative_and_peak_stable_under_replay() {
         // Every method × S × AC mode × micro-batch × TP: the trace must
         // have balanced Alloc/Free pairs and non-negative bytes, its peak
         // must be invariant when replayed through the trace cache, the
         // streaming FeasibilityKernel must agree *bitwise* with the priced
-        // engine on peak_bytes, oom and the failure value, and the
-        // symbolic wall solver's invariants (monotone polynomial peaks,
-        // pin-agnostic probes) must hold — see `symbolic_invariants_hold`.
+        // engine on peak_bytes, oom and the failure value, the streamed
+        // TimingKernel must agree *bitwise* with it on step_time and every
+        // component (with monotone step times in S — see
+        // `timing_invariants_hold`), and the symbolic wall solver's
+        // invariants (monotone polynomial peaks, pin-agnostic probes) must
+        // hold — see `symbolic_invariants_hold`.
         let methods = [
             CpMethod::NativePyTorch,
             CpMethod::Ring,
@@ -740,6 +827,7 @@ mod tests {
                     && direct.peak_bytes == replay1.peak_bytes
                     && replay1.peak_bytes == replay2.peak_bytes
                     && direct.oom == replay2.oom
+                    && timing_invariants_hold(&p, &cal, &direct)
                     && symbolic_invariants_hold(&p, &cal)
             },
         );

@@ -18,7 +18,7 @@
 //! |--------------------|-------------------------------|-------------------|
 //! | `POST /v1/plan`    | plan params                   | ranked plan       |
 //! | `POST /v1/walls`   | plan params (+ `"at"`)        | walls sweep / point query / batch curve |
-//! | `POST /v1/frontier`| plan params                   | Pareto frontier   |
+//! | `POST /v1/frontier`| plan params                   | Pareto frontier (+ envelope `accounting`: zeros when memo-warm) |
 //! | `POST /v1/refit`   | `{"measurements": {...}}`     | refit provenance  |
 //! | `GET  /v1/health`  | —                             | status, per-endpoint p50/p95, per-tier cache bytes + evictions |
 //!
@@ -395,7 +395,26 @@ fn plan_endpoint(service: &PlannerService, body: &[u8], frontier: bool) -> (u16,
             } else {
                 ("plan", planner_report::plan_result_json(&reply.outcome))
             };
-            (200, wire::envelope(kind, params.canonical(), &reply.warnings, result))
+            let mut resp = wire::envelope(kind, params.canonical(), &reply.warnings, result);
+            if frontier {
+                // Additive envelope field (api_version 1): what this
+                // request actually ran. The deterministic `result` never
+                // carries accounting, so a memo hit reports zeros while
+                // the frontier bytes stay identical to the cold reply.
+                let o = &reply.outcome;
+                let pick = |v: u64| if reply.memo_hit { 0 } else { v };
+                let acct = Json::obj(vec![
+                    ("feasibility_probes", Json::int(pick(o.feasibility_probes))),
+                    ("priced_sims", Json::int(pick(o.priced_sims))),
+                    ("modeled_prices", Json::int(pick(o.modeled_prices))),
+                    ("time_models", Json::int(pick(o.time_models))),
+                    ("time_fallbacks", Json::int(pick(o.time_fallbacks))),
+                ]);
+                if let Json::Obj(pairs) = &mut resp {
+                    pairs.push(("accounting".to_string(), acct));
+                }
+            }
+            (200, resp)
         }
         Err(e) => (400, wire::error_envelope("bad_request", &e)),
     }
@@ -498,6 +517,7 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
                 ("refits", Json::int(st.refits)),
                 ("probes_streamed", Json::int(st.probes_streamed)),
                 ("sims_priced", Json::int(st.sims_priced)),
+                ("prices_modeled", Json::int(st.prices_modeled)),
                 ("cache_evictions", Json::int(st.cache_evictions)),
                 ("entries_evicted", Json::int(st.entries_evicted)),
             ]),
@@ -511,7 +531,8 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
                 ("budgeted_probes", Json::int(sizes[2] as u64)),
                 ("priced_reports", Json::int(sizes[3] as u64)),
                 ("models", Json::int(sizes[4] as u64)),
-                ("walls", Json::int(sizes[5] as u64)),
+                ("time_models", Json::int(sizes[5] as u64)),
+                ("walls", Json::int(sizes[6] as u64)),
             ]),
         ),
         ("cache_bytes", Json::obj(tier_bytes)),
@@ -771,10 +792,14 @@ mod tests {
         assert_eq!(st3, 200, "{walls}");
         assert!(walls.contains("\"kind\": \"walls_at\""));
         assert!(walls.contains("\"probes\": 0"), "{walls}");
-        // Frontier shares the plan memo (same canonical request).
+        // Frontier shares the plan memo (same canonical request) and its
+        // envelope accounting reports a memo-warm reply as zeros.
         let (st4, frontier) = post(addr, "/v1/frontier", body);
         assert_eq!(st4, 200);
         assert!(frontier.contains("\"kind\": \"frontier\""));
+        assert!(frontier.contains("\"accounting\""), "{frontier}");
+        assert!(frontier.contains("\"priced_sims\": 0"), "{frontier}");
+        assert!(frontier.contains("\"modeled_prices\": 0"), "{frontier}");
         // Health: status, memo hit-rate, latency percentiles, cache sizes.
         let (st5, health) =
             request(addr, "GET /v1/health HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");

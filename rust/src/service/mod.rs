@@ -64,6 +64,9 @@ pub struct ServiceStats {
     pub probes_streamed: u64,
     /// Fully priced simulations across all requests (memo hits excluded).
     pub sims_priced: u64,
+    /// Streamed timing-kernel prices across all requests (memo hits
+    /// excluded) — phase-2 cells answered without a full simulation.
+    pub prices_modeled: u64,
     /// Times the byte-budget valve ran and evicted at least one entry.
     pub cache_evictions: u64,
     /// Total entries dropped by the valve across every tier.
@@ -99,6 +102,7 @@ pub struct PlannerService {
     refits: AtomicU64,
     probes_streamed: AtomicU64,
     sims_priced: AtomicU64,
+    prices_modeled: AtomicU64,
     cache_evictions: AtomicU64,
     entries_evicted: AtomicU64,
 }
@@ -127,6 +131,7 @@ impl PlannerService {
             refits: AtomicU64::new(0),
             probes_streamed: AtomicU64::new(0),
             sims_priced: AtomicU64::new(0),
+            prices_modeled: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
             entries_evicted: AtomicU64::new(0),
         }
@@ -194,6 +199,7 @@ impl PlannerService {
         }
         self.probes_streamed.fetch_add(out.feasibility_probes, Ordering::Relaxed);
         self.sims_priced.fetch_add(out.priced_sims, Ordering::Relaxed);
+        self.prices_modeled.fetch_add(out.modeled_prices, Ordering::Relaxed);
         // First writer wins on a racing key; both callers get the
         // canonical entry either way. The entry's weight is its heap
         // payload: the key bytes, the per-config rows, and the notes.
@@ -278,6 +284,7 @@ impl PlannerService {
             refits: self.refits.load(Ordering::Relaxed),
             probes_streamed: self.probes_streamed.load(Ordering::Relaxed),
             sims_priced: self.sims_priced.load(Ordering::Relaxed),
+            prices_modeled: self.prices_modeled.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             entries_evicted: self.entries_evicted.load(Ordering::Relaxed),
         }
@@ -445,6 +452,7 @@ mod tests {
         assert!(by_name("traces").evictions + by_name("priced_reports").evictions > 0);
         assert_eq!(by_name("walls").evictions, 0, "verified walls are precious");
         assert_eq!(by_name("models").evictions, 0, "fitted models are precious");
+        assert_eq!(by_name("time_models").evictions, 0, "step-time models are precious");
         assert!(by_name("walls").entries > 0, "walls survive the valve");
         // Eviction under budget leaves verified walls intact: a warm
         // point query still answers every cell from tier 1, probe-free.

@@ -775,8 +775,11 @@ mod tests {
             simulations: 999, // accounting: must NOT appear in the result
             feasibility_probes: 999,
             priced_sims: 999,
+            modeled_prices: 999,
             symbolic_models: 9,
             symbolic_fallbacks: 9,
+            time_models: 9,
+            time_fallbacks: 9,
             feasibility_only: false,
             cache_hits: 9,
             cache_misses: 9,

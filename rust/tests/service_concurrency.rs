@@ -107,15 +107,18 @@ fn interleaved_requests_match_one_shot_bitwise_and_memos_hit() {
     let hits_before = st.plan_memo_hits;
     let probes_before = st.probes_streamed;
     let sims_before = st.sims_priced;
+    let modeled_before = st.prices_modeled;
 
     // A repeated identical request: memo-hit counter strictly increases,
-    // zero new probes, zero new priced sims, bitwise-identical bytes.
+    // zero new probes, zero new priced sims, zero new streamed prices,
+    // bitwise-identical bytes.
     let again = service.plan(&all[1]).expect("repeat");
     assert!(again.memo_hit);
     let st2 = service.stats();
     assert!(st2.plan_memo_hits > hits_before, "memo hits must strictly increase");
     assert_eq!(st2.probes_streamed, probes_before);
     assert_eq!(st2.sims_priced, sims_before);
+    assert_eq!(st2.prices_modeled, modeled_before);
     assert_eq!(plan_result_json(&again.outcome).render(), baselines[1]);
 
     // And the warm point query stays probe-free after the storm.

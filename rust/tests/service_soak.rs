@@ -135,6 +135,7 @@ fn soak_bounded_caches_serve_identical_bytes() {
     );
     assert_eq!(by_name("walls").evictions, 0, "verified walls were evicted");
     assert_eq!(by_name("models").evictions, 0, "fitted models were evicted");
+    assert_eq!(by_name("time_models").evictions, 0, "step-time models were evicted");
     assert!(by_name("walls").entries > 0);
     // Eviction left the verified walls intact: a warm point query on the
     // first shape still answers entirely from tier 1, probe-free.
