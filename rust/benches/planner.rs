@@ -2,8 +2,9 @@
 //! (configs/sec, sims/sec), the symbolic walls-only sweep (walls/sec: the
 //! `--feasibility-only` path the multi-node frontiers run on), the
 //! planner-service warm path (warm_requests/sec: repeated identical
-//! requests answered from one session's plan memo), plus the two
-//! evaluation phases in isolation (streamed feasibility probes/sec vs
+//! requests answered from one session's plan memo), the fleet placement
+//! sweep (placements/sec with dominance pruning doing its job), plus the
+//! two evaluation phases in isolation (streamed feasibility probes/sec vs
 //! fully priced sims/sec), emitted to `BENCH_planner.json` so future PRs
 //! have a perf trajectory to compare against and CI can gate each phase
 //! independently.
@@ -12,10 +13,12 @@ use std::io::{Read, Write};
 use std::net::TcpStream;
 
 use untied_ulysses::config::presets::llama_single_node;
-use untied_ulysses::config::{ClusterConfig, CpMethod};
+use untied_ulysses::config::{ClusterConfig, CpMethod, FleetSpec};
 use untied_ulysses::engine::Calibration;
 use untied_ulysses::model::ModelDims;
-use untied_ulysses::planner::{enumerate_space, plan, PlanRequest, SweepDims};
+use untied_ulysses::planner::{
+    enumerate_space, place, plan, PlacementRequest, PlanRequest, SweepDims,
+};
 use untied_ulysses::schedule::{feasibility_with, simulate_with};
 use untied_ulysses::service::{http, PlanParams, PlannerService};
 use untied_ulysses::util::bench::Bench;
@@ -161,6 +164,34 @@ fn main() {
     handle.stop();
     println!("  service warm HTTP keep-alive: {:.0} requests/s", http_warm.per_sec());
 
+    // Fleet placement sweep: three 1-node pools — two identical H100
+    // pools plus an H200 pool. Dominance prunes both H100 shapes before
+    // any probe (identical hardware ties break by enumeration order, and
+    // the H200 dominates outright), so each iteration prices exactly one
+    // shape plus the whole enumerate/prune/rank machinery. Gated as
+    // placements_per_sec; shapes_pruned rides along as a reported field.
+    let fleet = FleetSpec::parse(
+        r#"{"pools":[{"name":"east","device":"h100","nodes":1},
+                     {"name":"west","device":"h100","nodes":1},
+                     {"name":"lab","device":"h200","nodes":1}]}"#,
+        "bench fleet",
+    )
+    .expect("bench fleet");
+    let mut preq = PlacementRequest::new(ModelDims::llama3_8b(), fleet);
+    preq.quantum = 512 * 1024;
+    preq.cap_s = 16 << 20;
+    let place_out = place(&preq);
+    assert_eq!(place_out.shapes_pruned, 2, "both H100 shapes are dominated");
+    assert_eq!(place_out.placements.len(), 1, "one ranked shape survives");
+    let placed = Bench::new("planner/place_3pool_fleet").budget_ms(2500).run(|| place(&preq));
+    println!(
+        "  placement: {} shapes ({} pruned before any probe) in {:.3}s ({:.1} shapes/s)",
+        place_out.shapes_total,
+        place_out.shapes_pruned,
+        placed.mean.as_secs_f64(),
+        place_out.shapes_total as f64 / placed.mean.as_secs_f64()
+    );
+
     let bench_enum = Bench::new("planner/enumerate_space").budget_ms(200);
     let enum_dims = SweepDims { compositions: true, ..SweepDims::default() };
     let enumerate = bench_enum.run(|| enumerate_space(&req.model, &req.cluster, &enum_dims));
@@ -206,6 +237,11 @@ fn main() {
         ("warm_http_requests_per_sec", Json::Num(http_warm.per_sec())),
         ("feasibility_probes_per_sec", Json::Num(feas.per_sec())),
         ("priced_sims_per_sec", Json::Num(priced.per_sec())),
+        (
+            "placements_per_sec",
+            Json::Num(place_out.shapes_total as f64 / placed.mean.as_secs_f64()),
+        ),
+        ("shapes_pruned", Json::int(place_out.shapes_pruned)),
         ("enumerate_per_sec", Json::Num(enumerate.per_sec())),
     ]);
     let rendered = json.pretty() + "\n";

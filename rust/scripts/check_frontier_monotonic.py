@@ -1,21 +1,49 @@
 #!/usr/bin/env python3
-"""Sanity-check multi-node feasibility frontiers: the best achievable
-context wall must be monotone non-decreasing in cluster size (more
-aggregate HBM and smaller per-rank sequence shards can only move memory
-walls outward).
+"""Sanity-check planner artifacts against hardware monotonicity.
 
-Usage: check_frontier_monotonic.py <plan1.json> <plan2.json> [...]
+Two modes, one invariant: more hardware can only move capacity outward.
+
+Frontier mode (the original gate):
+
+    check_frontier_monotonic.py <plan1.json> <plan2.json> [...]
 
 Arguments are planner JSON artifacts (`repro plan --json` or
 `repro plan --feasibility-only --json`) ordered by increasing GPU count.
 Fails if the GPU counts are not strictly increasing, if any sweep is
 empty, or if a larger cluster's best wall drops below a smaller one's.
-Capped walls (max_context_capped) count at their reported lower bound,
-which keeps the check conservative.
+
+Dominance mode (the fleet-placement gate):
+
+    check_frontier_monotonic.py --placement <placement.json>
+
+The argument is a `repro place --json` / `/v1/placement` artifact. Every
+shape carries its per-rank hardware (the `hardware` object) and grid;
+whenever shape A dominates shape B — same (nodes, gpus_per_node), every
+hardware dimension >= B's — A's best wall must be >= B's. This is the
+exact relation the planner's dominance pruning relies on, checked on
+real evaluated output, so a model change that breaks the relation fails
+CI instead of silently making pruning lossy. The gate also re-derives
+every `pruned_by` edge from the hardware objects and fails if a recorded
+dominator does not actually dominate. Run it on a `--no-prune` artifact
+to compare walls for every dominated shape (pruned shapes in a pruning
+artifact carry no plan, so only provenance is checkable there).
+
+Capped walls (max_context_capped / `>=` labels) count at their reported
+lower bound, which keeps both checks conservative.
 """
 
 import json
 import sys
+
+HW_DIMS = (
+    "hbm_gib",
+    "hbm_usable_frac",
+    "host_ram_gib",
+    "nvlink_gbps",
+    "ib_gbps",
+    "pcie_gbps",
+    "compute_scale",
+)
 
 
 def best_wall(path: str) -> tuple[int, int]:
@@ -28,12 +56,9 @@ def best_wall(path: str) -> tuple[int, int]:
     return int(doc.get("gpus") or 0), int(max(walls))
 
 
-def main() -> int:
-    if len(sys.argv) < 3:
-        print(__doc__)
-        return 2
-    points = [best_wall(p) for p in sys.argv[1:]]
-    for (path, (gpus, wall)) in zip(sys.argv[1:], points):
+def frontier_mode(paths: list[str]) -> int:
+    points = [best_wall(p) for p in paths]
+    for (path, (gpus, wall)) in zip(paths, points):
         print(f"{path}: {gpus} GPUs -> best wall {wall} tokens ({wall >> 20}M)")
     ok = True
     for (g0, w0), (g1, w1) in zip(points, points[1:]):
@@ -49,6 +74,78 @@ def main() -> int:
     if ok:
         print("multi-node frontier monotonic in node count OK")
     return 0 if ok else 1
+
+
+def dominates(a: dict, b: dict) -> bool:
+    """A >= B in every per-rank hardware dimension at the same grid,
+    strictly greater in at least one (identical hardware is handled by
+    the caller: equal shapes trivially satisfy wall >= wall)."""
+    if (a["nodes"], a["gpus_per_node"]) != (b["nodes"], b["gpus_per_node"]):
+        return False
+    ha, hb = a["hardware"], b["hardware"]
+    if any(ha[d] < hb[d] for d in HW_DIMS):
+        return False
+    return any(ha[d] > hb[d] for d in HW_DIMS) or ha == hb
+
+
+def placement_mode(path: str) -> int:
+    with open(path) as f:
+        doc = json.load(f)
+    shapes = list(doc.get("placements") or []) + list(doc.get("pruned") or [])
+    if not shapes:
+        raise SystemExit(f"FAIL: {path} has no shapes")
+    for s in shapes:
+        missing = [d for d in HW_DIMS if d not in (s.get("hardware") or {})]
+        if missing:
+            raise SystemExit(f"FAIL: shape {s.get('label')} lacks hardware dims {missing}")
+    by_label = {s["label"]: s for s in shapes}
+    ok = True
+    compared = 0
+    for a in shapes:
+        for b in shapes:
+            if a is b or not dominates(a, b):
+                continue
+            wa, wb = a.get("best_wall"), b.get("best_wall")
+            if wa is None or wb is None:
+                continue  # pruned-without-plan: provenance-only below
+            compared += 1
+            if wa < wb:
+                print(
+                    f"FAIL: {a['label']} dominates {b['label']} in every hardware "
+                    f"dimension but walls invert ({wa} < {wb} tokens) — dominance "
+                    f"pruning would be lossy"
+                )
+                ok = False
+    for p in doc.get("pruned") or []:
+        dom_label = p.get("pruned_by")
+        dom = by_label.get(dom_label)
+        if dom is None:
+            print(f"FAIL: {p['label']} pruned by unknown shape `{dom_label}`")
+            ok = False
+        elif not dominates(dom, p):
+            print(
+                f"FAIL: {p['label']} records dominator {dom_label}, but the "
+                f"hardware objects do not dominate"
+            )
+            ok = False
+    n_pruned = len(doc.get("pruned") or [])
+    print(
+        f"{path}: {len(shapes)} shapes, {n_pruned} dominated, "
+        f"{compared} wall comparisons across dominating pairs"
+    )
+    if ok:
+        print("fleet placement dominance OK")
+    return 0 if ok else 1
+
+
+def main() -> int:
+    args = sys.argv[1:]
+    if len(args) == 2 and args[0] == "--placement":
+        return placement_mode(args[1])
+    if len(args) < 2 or args[0].startswith("--"):
+        print(__doc__)
+        return 2
+    return frontier_mode(args)
 
 
 if __name__ == "__main__":

@@ -23,6 +23,9 @@ Gated metrics — each phase of the two-phase evaluator fails independently:
                               hit + response framing, no TCP handshake)
 - feasibility_probes_per_sec (phase 1: streamed peak-only probes)
 - priced_sims_per_sec        (phase 2: trace build + full pricing)
+- placements_per_sec         (fleet placement sweep: shapes disposed of per
+                              second — enumerate + dominance pruning + one
+                              priced sweep on the surviving shape)
 
 A metric missing from the *previous* artifact resets its baseline (first
 run after the metric landed); missing from the *current* file fails — the
@@ -41,6 +44,7 @@ GATED = (
     "warm_http_requests_per_sec",
     "feasibility_probes_per_sec",
     "priced_sims_per_sec",
+    "placements_per_sec",
 )
 REPORTED = GATED + (
     "sims_per_sec",
@@ -49,6 +53,7 @@ REPORTED = GATED + (
     "feasibility_probes_per_plan",
     "symbolic_models",
     "symbolic_fallbacks",
+    "shapes_pruned",
 )
 
 

@@ -1,7 +1,31 @@
 //! Node topology: rank → node placement and link selection between ranks.
+//!
+//! Two construction paths: [`Topology::from_cluster`] keeps the original
+//! homogeneous model (every node identical, O(1) rank math), and
+//! [`Topology::from_fleet`] generalizes it to heterogeneous fleets —
+//! each rank maps to a node in a device pool, intra-node links run at
+//! that pool's NVLink generation, and inter-node links resolve per pair
+//! (the slower endpoint's NIC bounds the transfer).
 
 use super::link::{Link, LinkKind};
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, DeviceSpec, FleetSpec};
+
+/// Per-pool link rates of a heterogeneous topology.
+#[derive(Debug, Clone)]
+struct PoolLinks {
+    nvlink: Link,
+    ib: Link,
+    pcie: Link,
+}
+
+/// Heterogeneous rank map: global rank → (node, pool) plus per-pool
+/// links. Nodes number globally across pools in declaration order.
+#[derive(Debug, Clone)]
+struct FleetMap {
+    /// rank → (global node index, pool index)
+    ranks: Vec<(u64, usize)>,
+    pools: Vec<PoolLinks>,
+}
 
 #[derive(Debug, Clone)]
 pub struct Topology {
@@ -10,6 +34,9 @@ pub struct Topology {
     nvlink: Link,
     ib: Link,
     pcie: Link,
+    /// Present when built from a fleet; `None` keeps the homogeneous
+    /// fast path bit-identical to the original model.
+    fleet: Option<FleetMap>,
 }
 
 impl Topology {
@@ -20,23 +47,74 @@ impl Topology {
             nvlink: Link::nvlink(c.nvlink_bps),
             ib: Link::infiniband(c.ib_bps),
             pcie: Link::pcie(c.pcie_bps),
+            fleet: None,
+        }
+    }
+
+    /// A whole fleet as one topology: ranks number pool by pool in
+    /// declaration order, nodes globally. `gpus_per_node` reports the
+    /// first pool's width (callers needing per-rank truth use
+    /// [`Topology::node_of`] / [`Topology::link_between`], which consult
+    /// the per-rank table).
+    pub fn from_fleet(f: &FleetSpec) -> Self {
+        let mut ranks = Vec::new();
+        let mut pools = Vec::new();
+        let mut node = 0u64;
+        for p in &f.pools {
+            pools.push(PoolLinks {
+                nvlink: Link::nvlink(p.device.nvlink_bps),
+                ib: Link::infiniband(p.device.ib_bps),
+                pcie: Link::pcie(p.device.pcie_bps),
+            });
+            for _ in 0..p.nodes {
+                for _ in 0..p.device.gpus_per_node {
+                    ranks.push((node, pools.len() - 1));
+                }
+                node += 1;
+            }
+        }
+        let first = &f.pools[0].device;
+        Topology {
+            nodes: node,
+            gpus_per_node: first.gpus_per_node,
+            nvlink: Link::nvlink(first.nvlink_bps),
+            ib: Link::infiniband(first.ib_bps),
+            pcie: Link::pcie(first.pcie_bps),
+            fleet: Some(FleetMap { ranks, pools }),
         }
     }
 
     pub fn total_gpus(&self) -> u64 {
-        self.nodes * self.gpus_per_node
+        match &self.fleet {
+            Some(f) => f.ranks.len() as u64,
+            None => self.nodes * self.gpus_per_node,
+        }
     }
 
     pub fn node_of(&self, rank: u64) -> u64 {
-        rank / self.gpus_per_node
+        match &self.fleet {
+            Some(f) => f.ranks[rank as usize].0,
+            None => rank / self.gpus_per_node,
+        }
     }
 
-    /// Link connecting two ranks.
+    /// Link connecting two ranks: same node → that node's NVLink
+    /// generation; different nodes → InfiniBand at the slower endpoint's
+    /// NIC rate (a cross-pool pair cannot beat its weaker member).
     pub fn link_between(&self, a: u64, b: u64) -> Link {
-        if self.node_of(a) == self.node_of(b) {
-            self.nvlink
+        let Some(f) = &self.fleet else {
+            return if self.node_of(a) == self.node_of(b) { self.nvlink } else { self.ib };
+        };
+        let (na, pa) = f.ranks[a as usize];
+        let (nb, pb) = f.ranks[b as usize];
+        if na == nb {
+            return f.pools[pa].nvlink;
+        }
+        let (ia, ib) = (f.pools[pa].ib, f.pools[pb].ib);
+        if ia.bandwidth <= ib.bandwidth {
+            ia
         } else {
-            self.ib
+            ib
         }
     }
 
@@ -48,17 +126,42 @@ impl Topology {
         }
     }
 
-    /// Are all ranks of a group on one node (⇒ collectives run on NVLink)?
+    /// The offload link of one rank's node (per-pool PCIe generation).
+    pub fn pcie_of(&self, rank: u64) -> Link {
+        match &self.fleet {
+            Some(f) => f.pools[f.ranks[rank as usize].1].pcie,
+            None => self.pcie,
+        }
+    }
+
+    /// The device spec of one rank's pool within `fleet` (placement
+    /// reporting; panics if `rank` is out of range).
+    pub fn device_of<'a>(&self, fleet: &'a FleetSpec, rank: u64) -> &'a DeviceSpec {
+        match &self.fleet {
+            Some(f) => &fleet.pools[f.ranks[rank as usize].1].device,
+            None => &fleet.pools[0].device,
+        }
+    }
+
+    /// Are all ranks of a group on one node (⇒ collectives run on
+    /// NVLink)? Every member must match the *first* rank's node — not
+    /// just its predecessor — so strided groups like `[0, 8, 1]` can
+    /// never sneak an NVLink rate for what includes an IB hop.
     pub fn group_intra_node(&self, ranks: &[u64]) -> bool {
-        ranks
-            .windows(2)
-            .all(|w| self.node_of(w[0]) == self.node_of(w[1]))
+        match ranks.split_first() {
+            None => true,
+            Some((first, rest)) => {
+                let node = self.node_of(*first);
+                rest.iter().all(|&r| self.node_of(r) == node)
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::FleetSpec;
 
     #[test]
     fn placement_and_links() {
@@ -75,5 +178,55 @@ mod tests {
         let t = Topology::from_cluster(&ClusterConfig::h100_2nodes());
         assert!(t.group_intra_node(&[0, 1, 2, 3, 4, 5, 6, 7]));
         assert!(!t.group_intra_node(&[6, 7, 8]));
+        assert!(t.group_intra_node(&[]));
+        assert!(t.group_intra_node(&[9]));
+    }
+
+    #[test]
+    fn strided_group_cannot_fake_intra_node() {
+        // Regression: the old pairwise windows(2) scan compared only
+        // neighbours; a strided CP group visiting another node and
+        // coming back must still be inter-node.
+        let t = Topology::from_cluster(&ClusterConfig::h100_2nodes());
+        assert!(!t.group_intra_node(&[0, 8, 1]));
+        assert!(!t.group_intra_node(&[0, 1, 8, 9]));
+        assert!(t.group_intra_node(&[3, 0, 7, 1]), "order within one node is free");
+    }
+
+    fn two_pool_fleet() -> FleetSpec {
+        FleetSpec::parse(
+            r#"{"pools": [
+                {"name": "h100", "device": "h100", "nodes": 2},
+                {"name": "b200", "device": "b200", "nodes": 1}
+            ]}"#,
+            "test",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn fleet_topology_maps_ranks_across_pools() {
+        let f = two_pool_fleet();
+        let t = Topology::from_fleet(&f);
+        assert_eq!(t.total_gpus(), 24);
+        assert_eq!(t.nodes, 3);
+        // Ranks 0..16 are the H100 pool's two nodes, 16..24 the B200 node.
+        assert_eq!(t.node_of(15), 1);
+        assert_eq!(t.node_of(16), 2);
+        assert_eq!(t.device_of(&f, 0).name, "H100");
+        assert_eq!(t.device_of(&f, 16).name, "B200");
+        // Intra-node links run at the pool's own NVLink generation.
+        assert_eq!(t.link_between(0, 1).bandwidth, 900.0e9);
+        assert_eq!(t.link_between(16, 17).bandwidth, 1800.0e9);
+        // A cross-pool pair is IB at the slower endpoint's NIC.
+        let x = t.link_between(0, 16);
+        assert_eq!(x.kind, LinkKind::InfiniBand);
+        assert_eq!(x.bandwidth, 50.0e9, "H100's 400 Gb/s NIC bounds the pair");
+        // Same-pool inter-node keeps the pool's rate.
+        assert_eq!(t.link_between(0, 8).bandwidth, 50.0e9);
+        assert_eq!(t.pcie_of(16).kind, LinkKind::Pcie);
+        // Strided groups across the pool boundary are inter-node.
+        assert!(!t.group_intra_node(&[0, 16, 1]));
+        assert!(t.group_intra_node(&[16, 18, 17]));
     }
 }

@@ -21,6 +21,11 @@ pub struct ClusterConfig {
     pub pcie_bps: f64,
     /// Host RAM per node, bytes (1.9 TiB in the paper's nodes).
     pub host_ram_bytes: f64,
+    /// Per-GPU compute throughput relative to an H100 (the calibration's
+    /// anchor device): 1.0 for H100/H200 (same GH100 die), ~2.25 for
+    /// B200. Scales the calibration's kernel rates via
+    /// `Calibration::scaled_for`.
+    pub compute_scale: f64,
 }
 
 impl ClusterConfig {
@@ -36,6 +41,7 @@ impl ClusterConfig {
             ib_bps: 50.0e9, // 400 Gb/s
             pcie_bps: 55.0e9,
             host_ram_bytes: 1.9 * 1024f64.powi(4),
+            compute_scale: 1.0,
         }
     }
 
@@ -46,12 +52,21 @@ impl ClusterConfig {
     }
 
     /// `n` H100 GPUs on one node (e.g. the Fig. 6 ablation's 4×H100).
-    pub fn h100_gpus(n: u64) -> Self {
-        ClusterConfig {
+    /// Validated like [`Self::h100_cluster`]: an NVLink node holds 1–8
+    /// GPUs, so `n = 0` and `n > 8` are errors instead of silently
+    /// modeling an impossible single-node machine.
+    pub fn h100_gpus(n: u64) -> Result<Self, String> {
+        if n == 0 {
+            return Err("cluster needs at least one GPU".into());
+        }
+        if n > 8 {
+            return Err(format!("one NVLink node holds at most 8 GPUs (got {n})"));
+        }
+        Ok(ClusterConfig {
             name: "nxH100",
             gpus_per_node: n,
             ..Self::h100_node()
-        }
+        })
     }
 
     /// A cluster of `total` H100s: up to 8 on one NVLink node, beyond that
@@ -62,7 +77,7 @@ impl ClusterConfig {
             return Err("cluster needs at least one GPU".into());
         }
         if total <= 8 {
-            return Ok(if total == 8 { Self::h100_node() } else { Self::h100_gpus(total) });
+            return if total == 8 { Ok(Self::h100_node()) } else { Self::h100_gpus(total) };
         }
         if total % 8 != 0 {
             return Err(format!("multi-node clusters are whole 8-GPU nodes (got {total} GPUs)"));
@@ -81,6 +96,48 @@ impl ClusterConfig {
     /// OOM threshold per GPU in bytes.
     pub fn hbm_limit(&self) -> f64 {
         self.hbm_bytes * self.hbm_usable_frac
+    }
+
+    /// 64-bit fingerprint of the *per-rank* hardware: HBM, host RAM,
+    /// link generations, and compute scale — deliberately excluding the
+    /// shape (`nodes`/`gpus_per_node`, which cache keys carry separately)
+    /// and the display name. Two fleet pools with identical devices hash
+    /// equal here, which is what lets `FamilyKey`/`TimeKey` share fitted
+    /// symbolic models across cluster shapes; any hardware difference
+    /// (an H200's HBM, a B200's NVLink) changes the keys and keeps
+    /// memo tiers from aliasing.
+    pub fn hardware_fingerprint(&self) -> u64 {
+        // Exhaustive destructure: adding a hardware field without
+        // extending the hash is a compile error.
+        let ClusterConfig {
+            name: _,
+            nodes: _,
+            gpus_per_node: _,
+            hbm_bytes,
+            hbm_usable_frac,
+            nvlink_bps,
+            ib_bps,
+            pcie_bps,
+            host_ram_bytes,
+            compute_scale,
+        } = self;
+        let fields = [
+            hbm_bytes,
+            hbm_usable_frac,
+            nvlink_bps,
+            ib_bps,
+            pcie_bps,
+            host_ram_bytes,
+            compute_scale,
+        ];
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for f in fields {
+            for b in f.to_bits().to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
     }
 }
 
@@ -101,7 +158,28 @@ mod tests {
 
     #[test]
     fn ablation_cluster() {
-        assert_eq!(ClusterConfig::h100_gpus(4).total_gpus(), 4);
+        assert_eq!(ClusterConfig::h100_gpus(4).unwrap().total_gpus(), 4);
+        // The whole-node rule: no zero-GPU nodes, no >8-GPU NVLink nodes
+        // (16 GPUs on one node would silently model NVLink for what is an
+        // IB hop on real hardware).
+        assert!(ClusterConfig::h100_gpus(0).is_err());
+        assert!(ClusterConfig::h100_gpus(16).is_err());
+        assert_eq!(ClusterConfig::h100_gpus(8).unwrap().gpus_per_node, 8);
+    }
+
+    #[test]
+    fn hardware_fingerprint_ignores_shape_but_not_hardware() {
+        let one = ClusterConfig::h100_node();
+        let two = ClusterConfig::h100_2nodes();
+        assert_eq!(one.hardware_fingerprint(), two.hardware_fingerprint());
+        let four = ClusterConfig::h100_gpus(4).unwrap();
+        assert_eq!(one.hardware_fingerprint(), four.hardware_fingerprint());
+        let mut h200ish = ClusterConfig::h100_node();
+        h200ish.hbm_bytes = 141.0e9;
+        assert_ne!(one.hardware_fingerprint(), h200ish.hardware_fingerprint());
+        let mut faster = ClusterConfig::h100_node();
+        faster.compute_scale = 2.25;
+        assert_ne!(one.hardware_fingerprint(), faster.hardware_fingerprint());
     }
 
     #[test]

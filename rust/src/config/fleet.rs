@@ -1,0 +1,442 @@
+//! Heterogeneous fleet description: named device pools (H100/H200/B200
+//! generations, or custom hardware) that the placement sweep turns into
+//! candidate cluster shapes.
+//!
+//! A [`FleetSpec`] is what `repro place --fleet fleet.json` and the
+//! `/v1/placement` endpoint parse: a list of [`FleetPool`]s, each a
+//! homogeneous island of `nodes` identical machines built from one
+//! [`DeviceSpec`]. Placement evaluates a training job against every
+//! viable shape *within* a pool (a job never straddles pools — mixed-
+//! generation collectives run at the slowest member's rate and no
+//! scheduler places that way on purpose), so heterogeneity lives
+//! *across* candidates, exactly where the planner's dominance pruning
+//! and hardware-fingerprint model sharing can exploit it.
+//!
+//! JSON schema (strict — unknown fields are errors, like the wire
+//! protocol):
+//!
+//! ```json
+//! {
+//!   "pools": [
+//!     {"name": "east-h100", "device": "h100", "nodes": 4},
+//!     {"name": "new-h200", "device": "h200", "nodes": 2},
+//!     {"name": "lab", "device": {"base": "b200", "hbm_gib": 192,
+//!       "nvlink_gbps": 1800, "ib_gbps": 100, "pcie_gbps": 55,
+//!       "host_ram_gib": 2560, "gpus_per_node": 8,
+//!       "compute_scale": 2.25, "name": "B200-lab"}, "nodes": 1}
+//!   ]
+//! }
+//! ```
+//!
+//! Memory fields are GiB, link fields GB/s (1e9 bytes/s) — the units the
+//! vendor datasheets quote.
+
+use crate::config::ClusterConfig;
+use crate::util::fmt::GIB;
+use crate::util::json::Json;
+
+/// One device generation's per-rank hardware: everything
+/// [`ClusterConfig`] carries except the shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Display name ("H100", "H200", "B200", or a custom label).
+    pub name: String,
+    pub gpus_per_node: u64,
+    pub hbm_bytes: f64,
+    pub hbm_usable_frac: f64,
+    pub nvlink_bps: f64,
+    pub ib_bps: f64,
+    pub pcie_bps: f64,
+    pub host_ram_bytes: f64,
+    /// Per-GPU compute relative to H100 (see
+    /// [`ClusterConfig::compute_scale`]).
+    pub compute_scale: f64,
+}
+
+impl DeviceSpec {
+    /// The paper's testbed device: 8×H100-80GB NVLink nodes, 400 Gb/s IB
+    /// — bit-identical hardware to [`ClusterConfig::h100_node`], so H100
+    /// fleet pools alias the baseline planner's cache entries.
+    pub fn h100() -> Self {
+        Self::from_cluster("H100", &ClusterConfig::h100_node())
+    }
+
+    /// H200: the same GH100 die with 141 GiB HBM3e and roomier hosts —
+    /// strictly ≥ H100 in every dimension, which is what makes the
+    /// two-pool example fleet exercise dominance pruning.
+    pub fn h200() -> Self {
+        DeviceSpec {
+            name: "H200".to_string(),
+            hbm_bytes: 141.0 * GIB,
+            host_ram_bytes: 2048.0 * GIB,
+            ..Self::h100()
+        }
+    }
+
+    /// B200: 192 GiB HBM3e, 5th-gen NVLink (1.8 TB/s), 800 Gb/s IB,
+    /// ~2.25× H100 compute.
+    pub fn b200() -> Self {
+        DeviceSpec {
+            name: "B200".to_string(),
+            hbm_bytes: 192.0 * GIB,
+            nvlink_bps: 1800.0e9,
+            ib_bps: 100.0e9,
+            host_ram_bytes: 2560.0 * GIB,
+            compute_scale: 2.25,
+            ..Self::h100()
+        }
+    }
+
+    /// Preset lookup by case-insensitive name.
+    pub fn by_name(name: &str) -> Option<DeviceSpec> {
+        match name.to_ascii_lowercase().as_str() {
+            "h100" => Some(Self::h100()),
+            "h200" => Some(Self::h200()),
+            "b200" => Some(Self::b200()),
+            _ => None,
+        }
+    }
+
+    /// The per-rank hardware of an existing cluster, under a new label.
+    pub fn from_cluster(name: &str, c: &ClusterConfig) -> Self {
+        DeviceSpec {
+            name: name.to_string(),
+            gpus_per_node: c.gpus_per_node,
+            hbm_bytes: c.hbm_bytes,
+            hbm_usable_frac: c.hbm_usable_frac,
+            nvlink_bps: c.nvlink_bps,
+            ib_bps: c.ib_bps,
+            pcie_bps: c.pcie_bps,
+            host_ram_bytes: c.host_ram_bytes,
+            compute_scale: c.compute_scale,
+        }
+    }
+
+    /// A cluster of `nodes` machines of this device (`gpus` per node —
+    /// callers pass `self.gpus_per_node` except for sub-node single-node
+    /// shapes). The `&'static str` cluster name is the device *kind*
+    /// label; pool names ride alongside in placement results.
+    pub fn cluster(&self, nodes: u64, gpus: u64) -> ClusterConfig {
+        ClusterConfig {
+            name: self.kind_label(),
+            nodes,
+            gpus_per_node: gpus,
+            hbm_bytes: self.hbm_bytes,
+            hbm_usable_frac: self.hbm_usable_frac,
+            nvlink_bps: self.nvlink_bps,
+            ib_bps: self.ib_bps,
+            pcie_bps: self.pcie_bps,
+            host_ram_bytes: self.host_ram_bytes,
+            compute_scale: self.compute_scale,
+        }
+    }
+
+    fn kind_label(&self) -> &'static str {
+        match self.name.as_str() {
+            "H100" => "H100",
+            "H200" => "H200",
+            "B200" => "B200",
+            _ => "custom",
+        }
+    }
+
+    /// Shape-free hardware fingerprint (see
+    /// [`ClusterConfig::hardware_fingerprint`]).
+    pub fn hardware_fingerprint(&self) -> u64 {
+        self.cluster(1, self.gpus_per_node).hardware_fingerprint()
+    }
+
+    fn validate(&self) -> Result<(), String> {
+        if self.gpus_per_node == 0 || self.gpus_per_node > 8 {
+            return Err(format!(
+                "device `{}`: gpus_per_node must be 1..=8 (one NVLink node), got {}",
+                self.name, self.gpus_per_node
+            ));
+        }
+        let positive = [
+            ("hbm_gib", self.hbm_bytes),
+            ("nvlink_gbps", self.nvlink_bps),
+            ("ib_gbps", self.ib_bps),
+            ("pcie_gbps", self.pcie_bps),
+            ("host_ram_gib", self.host_ram_bytes),
+            ("compute_scale", self.compute_scale),
+        ];
+        for (what, v) in positive {
+            if !(v > 0.0 && v.is_finite()) {
+                return Err(format!("device `{}`: {what} must be a positive number", self.name));
+            }
+        }
+        if !(self.hbm_usable_frac > 0.0 && self.hbm_usable_frac <= 1.0) {
+            return Err(format!("device `{}`: hbm_usable_frac must be in (0, 1]", self.name));
+        }
+        Ok(())
+    }
+}
+
+/// Device fields a fleet JSON may set (besides `base`); unknown fields
+/// are errors.
+const DEVICE_FIELDS: [&str; 9] = [
+    "base",
+    "name",
+    "gpus_per_node",
+    "hbm_gib",
+    "hbm_usable_frac",
+    "nvlink_gbps",
+    "ib_gbps",
+    "pcie_gbps",
+    "host_ram_gib",
+];
+
+fn device_from_json(v: &Json) -> Result<DeviceSpec, String> {
+    match v {
+        Json::Str(name) => DeviceSpec::by_name(name)
+            .ok_or_else(|| format!("unknown device preset `{name}` (h100|h200|b200)")),
+        Json::Obj(pairs) => {
+            for (k, _) in pairs {
+                if !DEVICE_FIELDS.contains(&k.as_str()) && k != "compute_scale" {
+                    return Err(format!("unknown device field `{k}`"));
+                }
+            }
+            let mut d = match v.get("base") {
+                None => DeviceSpec::h100(),
+                Some(b) => {
+                    let name = b.as_str().ok_or("device `base` must be a preset name")?;
+                    DeviceSpec::by_name(name)
+                        .ok_or_else(|| format!("unknown device preset `{name}` (h100|h200|b200)"))?
+                }
+            };
+            if let Some(n) = v.get("name") {
+                d.name = n.as_str().ok_or("device `name` must be a string")?.to_string();
+            }
+            if let Some(g) = v.get("gpus_per_node") {
+                d.gpus_per_node =
+                    g.as_u64().ok_or("device `gpus_per_node` must be a whole number")?;
+            }
+            let mut num = |key: &str, dst: &mut f64, scale: f64| -> Result<(), String> {
+                if let Some(x) = v.get(key) {
+                    *dst = x.as_f64().ok_or_else(|| format!("device `{key}` must be a number"))?
+                        * scale;
+                }
+                Ok(())
+            };
+            num("hbm_gib", &mut d.hbm_bytes, GIB)?;
+            num("hbm_usable_frac", &mut d.hbm_usable_frac, 1.0)?;
+            num("nvlink_gbps", &mut d.nvlink_bps, 1e9)?;
+            num("ib_gbps", &mut d.ib_bps, 1e9)?;
+            num("pcie_gbps", &mut d.pcie_bps, 1e9)?;
+            num("host_ram_gib", &mut d.host_ram_bytes, GIB)?;
+            num("compute_scale", &mut d.compute_scale, 1.0)?;
+            Ok(d)
+        }
+        _ => Err("`device` must be a preset name or a device object".to_string()),
+    }
+}
+
+/// One homogeneous pool of a fleet: `nodes` identical machines.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetPool {
+    pub name: String,
+    pub device: DeviceSpec,
+    pub nodes: u64,
+}
+
+/// A heterogeneous fleet: the placement sweep's input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetSpec {
+    pub pools: Vec<FleetPool>,
+}
+
+impl FleetSpec {
+    /// Parse and validate a fleet document (see the module docs for the
+    /// schema). Strict like the wire protocol: unknown fields error.
+    pub fn parse(text: &str, source: &str) -> Result<FleetSpec, String> {
+        let j = Json::parse(text).map_err(|e| format!("{source}: {e}"))?;
+        Self::from_json(&j).map_err(|e| format!("{source}: {e}"))
+    }
+
+    pub fn from_json(j: &Json) -> Result<FleetSpec, String> {
+        let Json::Obj(top) = j else {
+            return Err("fleet must be a JSON object".to_string());
+        };
+        for (k, _) in top {
+            if k != "pools" {
+                return Err(format!("unknown fleet field `{k}`"));
+            }
+        }
+        let pools_j = j
+            .get("pools")
+            .and_then(Json::as_arr)
+            .ok_or("fleet needs a `pools` array")?;
+        if pools_j.is_empty() {
+            return Err("fleet needs at least one pool".to_string());
+        }
+        let mut pools = Vec::with_capacity(pools_j.len());
+        for (i, p) in pools_j.iter().enumerate() {
+            let Json::Obj(pairs) = p else {
+                return Err(format!("pool {i} must be an object"));
+            };
+            for (k, _) in pairs {
+                if !["name", "device", "nodes"].contains(&k.as_str()) {
+                    return Err(format!("pool {i}: unknown field `{k}`"));
+                }
+            }
+            let name = match p.get("name") {
+                None => format!("pool{i}"),
+                Some(n) => n
+                    .as_str()
+                    .ok_or_else(|| format!("pool {i}: `name` must be a string"))?
+                    .to_string(),
+            };
+            let device = device_from_json(
+                p.get("device").ok_or_else(|| format!("pool `{name}`: missing `device`"))?,
+            )
+            .map_err(|e| format!("pool `{name}`: {e}"))?;
+            device.validate().map_err(|e| format!("pool `{name}`: {e}"))?;
+            let nodes = p
+                .get("nodes")
+                .ok_or_else(|| format!("pool `{name}`: missing `nodes`"))?
+                .as_u64()
+                .ok_or_else(|| format!("pool `{name}`: `nodes` must be a whole number"))?;
+            if nodes == 0 {
+                return Err(format!("pool `{name}`: needs at least one node"));
+            }
+            pools.push(FleetPool { name, device, nodes });
+        }
+        let mut names: Vec<&str> = pools.iter().map(|p| p.name.as_str()).collect();
+        names.sort_unstable();
+        if names.windows(2).any(|w| w[0] == w[1]) {
+            return Err("pool names must be unique".to_string());
+        }
+        Ok(FleetSpec { pools })
+    }
+
+    /// Canonical echo of the fleet (fixed field order, bytes-per-field
+    /// units normalized back to the schema's GiB / GB/s) — part of the
+    /// `/v1/placement` canonical request, so equal fleets render equal
+    /// bytes and key the service's placement memo.
+    pub fn canonical(&self) -> Json {
+        Json::obj(vec![(
+            "pools",
+            Json::Arr(
+                self.pools
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("name", Json::string(&p.name)),
+                            (
+                                "device",
+                                Json::obj(vec![
+                                    ("name", Json::string(&p.device.name)),
+                                    ("gpus_per_node", Json::int(p.device.gpus_per_node)),
+                                    ("hbm_gib", Json::Num(p.device.hbm_bytes / GIB)),
+                                    ("hbm_usable_frac", Json::Num(p.device.hbm_usable_frac)),
+                                    ("nvlink_gbps", Json::Num(p.device.nvlink_bps / 1e9)),
+                                    ("ib_gbps", Json::Num(p.device.ib_bps / 1e9)),
+                                    ("pcie_gbps", Json::Num(p.device.pcie_bps / 1e9)),
+                                    ("host_ram_gib", Json::Num(p.device.host_ram_bytes / GIB)),
+                                    ("compute_scale", Json::Num(p.device.compute_scale)),
+                                ]),
+                            ),
+                            ("nodes", Json::int(p.nodes)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.pools.iter().map(|p| p.nodes * p.device.gpus_per_node).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_and_dominance_ordering() {
+        let h100 = DeviceSpec::h100();
+        let h200 = DeviceSpec::h200();
+        let b200 = DeviceSpec::b200();
+        // H100 hardware is bit-identical to the paper testbed: the
+        // cross-shape reuse story depends on it.
+        assert_eq!(
+            h100.hardware_fingerprint(),
+            ClusterConfig::h100_node().hardware_fingerprint()
+        );
+        // H200 ≥ H100 in every dimension (the dominance-pruning example);
+        // B200 ≥ H200.
+        assert!(h200.hbm_bytes > h100.hbm_bytes);
+        assert!(h200.host_ram_bytes > h100.host_ram_bytes);
+        assert_eq!(h200.nvlink_bps, h100.nvlink_bps);
+        assert!(b200.hbm_bytes > h200.hbm_bytes);
+        assert!(b200.nvlink_bps > h200.nvlink_bps);
+        assert!(b200.compute_scale > 1.0);
+        assert_ne!(h100.hardware_fingerprint(), h200.hardware_fingerprint());
+        assert!(DeviceSpec::by_name("H200").is_some(), "case-insensitive");
+        assert!(DeviceSpec::by_name("mi300").is_none());
+    }
+
+    #[test]
+    fn parse_pools_with_presets_and_overrides() {
+        let f = FleetSpec::parse(
+            r#"{"pools": [
+                {"name": "east", "device": "h100", "nodes": 4},
+                {"name": "lab", "device": {"base": "h200", "host_ram_gib": 4096,
+                    "name": "H200-big"}, "nodes": 1}
+            ]}"#,
+            "test.json",
+        )
+        .unwrap();
+        assert_eq!(f.pools.len(), 2);
+        assert_eq!(f.pools[0].device.name, "H100");
+        assert_eq!(f.pools[0].nodes, 4);
+        assert_eq!(f.pools[1].device.name, "H200-big");
+        assert_eq!(f.pools[1].device.host_ram_bytes, 4096.0 * GIB);
+        assert_eq!(f.pools[1].device.hbm_bytes, DeviceSpec::h200().hbm_bytes, "base kept");
+        assert_eq!(f.total_gpus(), 40);
+        // Canonical echo is stable bytes and round-trips our parser.
+        let c = f.canonical().render();
+        assert_eq!(Json::parse(&c).unwrap().render(), c);
+    }
+
+    #[test]
+    fn parse_rejects_bad_fleets() {
+        let bad = [
+            (r#"{"pools": []}"#, "at least one pool"),
+            (r#"{"pools": [{"name":"a","device":"h100"}]}"#, "missing `nodes`"),
+            (r#"{"pools": [{"name":"a","device":"mi300","nodes":1}]}"#, "unknown device preset"),
+            (
+                r#"{"pools": [{"name":"a","device":"h100","nodes":1},
+                    {"name":"a","device":"h200","nodes":1}]}"#,
+                "unique",
+            ),
+            (r#"{"pools": [{"name":"a","device":{"hbm_gib":-1},"nodes":1}]}"#, "positive"),
+            (
+                r#"{"pools": [{"name":"a","device":{"gpus_per_node":16},"nodes":1}]}"#,
+                "1..=8",
+            ),
+            (r#"{"pools": [{"name":"a","device":"h100","nodes":1,"x":1}]}"#, "unknown field"),
+            (r#"{"fleet": 1}"#, "unknown fleet field"),
+        ];
+        for (text, want) in bad {
+            let err = FleetSpec::parse(text, "t").unwrap_err();
+            assert!(err.contains(want), "`{text}` -> {err}");
+        }
+    }
+
+    #[test]
+    fn device_cluster_carries_hardware() {
+        let c = DeviceSpec::b200().cluster(2, 8);
+        assert_eq!(c.name, "B200");
+        assert_eq!(c.total_gpus(), 16);
+        assert_eq!(c.nvlink_bps, 1800.0e9);
+        assert_eq!(c.compute_scale, 2.25);
+        // Shape never enters the hardware fingerprint.
+        assert_eq!(
+            c.hardware_fingerprint(),
+            DeviceSpec::b200().cluster(1, 4).hardware_fingerprint()
+        );
+    }
+}

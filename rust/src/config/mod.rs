@@ -1,8 +1,11 @@
-//! Configuration: cluster hardware, parallelism layout, run presets.
+//! Configuration: cluster hardware, heterogeneous fleets, parallelism
+//! layout, run presets.
 
 pub mod cluster;
+pub mod fleet;
 pub mod parallel;
 pub mod presets;
 
 pub use cluster::ClusterConfig;
+pub use fleet::{DeviceSpec, FleetPool, FleetSpec};
 pub use parallel::{AcMode, CpMethod, ParallelConfig};

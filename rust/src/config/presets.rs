@@ -99,7 +99,7 @@ pub fn llama_two_node(method: CpMethod, seq_len: u64) -> RunPreset {
 pub fn llama_ablation(u: u32) -> RunPreset {
     RunPreset {
         model: ModelDims::llama3_8b(),
-        cluster: ClusterConfig::h100_gpus(4),
+        cluster: ClusterConfig::h100_gpus(4).expect("4 GPUs fit one node"),
         parallel: ParallelConfig::new(CpMethod::Upipe { u, gqa_schedule: true }, 4),
         seq_len: crate::util::fmt::parse_tokens("512K").unwrap(),
     }

@@ -206,6 +206,39 @@ impl Calibration {
         h
     }
 
+    /// Project the H100 fit onto a different device generation by scaling
+    /// the rate constants that physically track the hardware: kernel
+    /// FLOP rates (and the inverse "other" rate) by the device's compute
+    /// scale, intra-node effective bandwidths by the NVLink generation
+    /// ratio, inter-node rates by the IB ratio, offload by the PCIe
+    /// ratio. Structural constants (pressure slopes, per-call overheads,
+    /// memory bytes) are left untouched — they are properties of the
+    /// software stack, not the link generation. When every ratio is 1.0
+    /// (any H100-hardware pool, whatever its shape) the result is a
+    /// bit-identical clone, so its [`Calibration::fingerprint`] — and
+    /// therefore every cache key derived from it — aliases the baseline
+    /// fit on purpose: that is what makes cross-shape model reuse free.
+    pub fn scaled_for(&self, cluster: &crate::config::ClusterConfig) -> Calibration {
+        let h100 = crate::config::ClusterConfig::h100_node();
+        let compute = cluster.compute_scale;
+        let nvlink = cluster.nvlink_bps / h100.nvlink_bps;
+        let ib = cluster.ib_bps / h100.ib_bps;
+        let pcie = cluster.pcie_bps / h100.pcie_bps;
+        let mut c = self.clone();
+        if compute == 1.0 && nvlink == 1.0 && ib == 1.0 && pcie == 1.0 {
+            return c;
+        }
+        c.fa3_fwd_flops *= compute;
+        c.fa3_bwd_flops *= compute;
+        c.other_rate /= compute; // seconds per unit: faster device, smaller
+        c.a2a_eff0_bps *= nvlink;
+        c.ring_eff_bps *= nvlink;
+        c.a2a_eff_inter_bps *= ib;
+        c.ring_eff_inter_bps *= ib;
+        c.pcie_eff_bps *= pcie;
+        c
+    }
+
     fn pressure_x(&self, headroom_bytes: f64) -> f64 {
         let h = headroom_bytes / GIB;
         ((self.pressure_h0_gib - h) / self.pressure_h0_gib).clamp(0.0, 1.0)
@@ -253,6 +286,34 @@ mod tests {
         assert_eq!(a.fingerprint(), b.fingerprint());
         b.other_rate *= 1.0 + 1e-12;
         assert_ne!(a.fingerprint(), b.fingerprint(), "bit-exact sensitivity");
+    }
+
+    #[test]
+    fn scaled_for_is_identity_on_h100_hardware() {
+        use crate::config::ClusterConfig;
+        let base = Calibration::default();
+        // Any H100-hardware shape — whole node, sub-node, multi-node —
+        // keeps the exact fingerprint: fleet pools of H100s alias the
+        // baseline fit's cache entries by construction.
+        for c in [
+            ClusterConfig::h100_node(),
+            ClusterConfig::h100_2nodes(),
+            ClusterConfig::h100_gpus(4).unwrap(),
+        ] {
+            assert_eq!(base.scaled_for(&c).fingerprint(), base.fingerprint(), "{}", c.name);
+        }
+        // A different device generation scales the rates and re-keys.
+        let mut b200ish = ClusterConfig::h100_node();
+        b200ish.compute_scale = 2.25;
+        b200ish.nvlink_bps = 1800.0e9;
+        let scaled = base.scaled_for(&b200ish);
+        assert_ne!(scaled.fingerprint(), base.fingerprint());
+        assert!((scaled.fa3_fwd_flops - 2.25 * base.fa3_fwd_flops).abs() < 1.0);
+        assert!((scaled.ring_eff_bps - 2.0 * base.ring_eff_bps).abs() < 1.0);
+        assert!(scaled.other_rate < base.other_rate, "faster device, cheaper 'other'");
+        // Structural constants are untouched.
+        assert_eq!(scaled.pressure_h0_gib, base.pressure_h0_gib);
+        assert_eq!(scaled.bytes_per_param_fsdp, base.bytes_per_param_fsdp);
     }
 
     #[test]

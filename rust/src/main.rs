@@ -17,11 +17,16 @@
 //!   repro frontier ... [--at-lengths 512K,2M]         Pareto frontier only;
 //!       --at-lengths re-prices the sweep at extra reference lengths on
 //!       the same warm session (near-free via fitted step-time models)
+//!   repro place --fleet fleet.json [--no-prune] [--json] ...
+//!       sweep a heterogeneous fleet's cluster shapes as one more planner
+//!       dimension: dominated shapes skipped before any probe, model fits
+//!       shared across identical hardware, shapes ranked by context wall
 //!   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
 //!       [--cache-budget 1G] [--keep-alive-timeout 5]
 //!       planner-service daemon: POST /v1/plan | /v1/walls | /v1/frontier
-//!       | /v1/refit, GET /v1/health — persistent cross-request caches
-//!       under a tiered-LRU byte budget, HTTP/1.1 keep-alive
+//!       | /v1/refit | /v1/placement, GET /v1/health | /metrics —
+//!       persistent cross-request caches under a tiered-LRU byte budget,
+//!       HTTP/1.1 keep-alive
 //! Functional runtime (needs `make artifacts`):
 //!   repro parity        distributed UPipe vs monolithic logits check
 //!   repro train N       N training steps of the SMALL model (AOT step)
@@ -105,6 +110,7 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
         "compose" => cmd_compose()?,
         "plan" => cmd_plan(rest, false)?,
         "frontier" => cmd_plan(rest, true)?,
+        "place" => cmd_place(rest)?,
         "serve-plan" => cmd_serve_plan(rest)?,
         "simulate" => cmd_simulate(rest)?,
         "parity" => cmd_parity()?,
@@ -144,12 +150,29 @@ repro — Untied Ulysses (UPipe) reproduction
       lengths on the same warm session (fitted step-time models + memos
       make each extra length near-free); --json emits one deterministic
       plan core per length plus combined accounting
+  repro place --fleet fleet.json [--model llama3-8b] [--seq 1M]
+              [--quantum 128K] [--cap 32M] [--ac ao,gpu] [--mb 1,2]
+              [--tp 1,2] [--paper] [--compose] [--refit measurements.json]
+              [--threads N] [--feasibility-only] [--no-prune] [--json]
+      sweep every cluster shape a heterogeneous fleet offers (per-pool
+      power-of-two node slices x full nodes) and rank them by max
+      trainable context, then reference throughput, then GPU count.
+      Shapes dominated in every per-rank hardware dimension at the same
+      grid are skipped before any probe (--no-prune evaluates them too —
+      the ranked placements are identical either way), and peak/step-time
+      model fits are shared across shapes with identical hardware, so
+      duplicate pools re-fit nothing. The fleet file is a
+      {\"pools\": [{\"name\", \"device\"|per-device fields, \"nodes\",
+      \"gpus_per_node\"}]} JSON document (devices: h100, h200, b200);
+      see examples/fleet_h100_h200.json
   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
                    [--cache-budget 1G] [--keep-alive-timeout 5]
       planner-as-a-service daemon over one warm session: POST /v1/plan,
       /v1/walls (add \"at\" for a point query, or \"at\": [s1, s2, ...]
-      for a whole capacity curve), /v1/frontier, /v1/refit;
-      GET /v1/health. Persistent cross-request caches under a byte
+      for a whole capacity curve), /v1/frontier, /v1/refit, /v1/placement
+      (a fleet placement sweep — same dialect, `fleet` instead of `gpus`);
+      GET /v1/health, /metrics (Prometheus text exposition of the health
+      counters). Persistent cross-request caches under a byte
       budget (tiered LRU: bulky trace/report tiers evict first, verified
       walls and fitted models last; 0 = unbounded): a repeated request
       is served from memos byte-for-byte, and a warm walls query streams
@@ -350,6 +373,44 @@ fn cmd_plan(rest: &[String], frontier_only: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fleet placement sweep: the cluster itself as a planner dimension.
+/// Like `cmd_plan`, a thin client of the same service type the daemon
+/// runs — the params are exactly what a `/v1/placement` client POSTs.
+fn cmd_place(rest: &[String]) -> anyhow::Result<()> {
+    use untied_ulysses::config::FleetSpec;
+    use untied_ulysses::report::planner as planner_report;
+    use untied_ulysses::service::{PlacementParams, PlannerService};
+
+    let args = Args::new(rest);
+    anyhow::ensure!(
+        args.str("--gpus").is_none(),
+        "--gpus is not a placement flag — the fleet's pools size the shapes"
+    );
+    anyhow::ensure!(
+        !args.has("--cold"),
+        "--cold is not a placement flag: placement always plans symbolically"
+    );
+    let path = args.str("--fleet").ok_or_else(|| {
+        anyhow::anyhow!("--fleet fleet.json is required (see examples/fleet_h100_h200.json)")
+    })?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading --fleet {path}: {e}"))?;
+    let fleet = FleetSpec::parse(&text, &path).map_err(anyhow::Error::msg)?;
+    let plan = parse_plan_params(&args)?;
+    let params = PlacementParams { fleet, plan, prune: !args.has("--no-prune") };
+    let service = PlannerService::new();
+    let reply = service.place(&params).map_err(anyhow::Error::msg)?;
+    for note in &reply.warnings {
+        eprintln!("{note}");
+    }
+    if args.has("--json") {
+        println!("{}", planner_report::placement_json(&reply.outcome).pretty());
+    } else {
+        planner_report::placement_table(&reply.outcome).print();
+    }
+    Ok(())
+}
+
 fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
     use untied_ulysses::service::{http, PlannerService};
     use untied_ulysses::util::fmt::gib;
@@ -376,8 +437,8 @@ fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
     let handle = http::serve(service, &format!("{bind}:{port}"), opts)?;
     println!("repro planner service listening on http://{}", handle.addr());
     println!(
-        "  POST /v1/plan | /v1/walls | /v1/frontier | /v1/refit   GET /v1/health   \
-         (api_version {})",
+        "  POST /v1/plan | /v1/walls | /v1/frontier | /v1/refit | /v1/placement   \
+         GET /v1/health | /metrics   (api_version {})",
         untied_ulysses::service::API_VERSION
     );
     if budget == usize::MAX {

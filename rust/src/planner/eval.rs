@@ -79,7 +79,8 @@ use crate::util::pool::parallel_map;
 use crate::util::stripe::StripedMap;
 
 use super::search::{bisect_max_from, pareto_front};
-use super::space::{enumerate_space, SweepDims};
+use super::space::{enumerate_shapes, enumerate_space, ClusterShape, SweepDims};
+use crate::config::FleetSpec;
 
 /// What to sweep and how hard to search.
 #[derive(Debug, Clone)]
@@ -1054,6 +1055,291 @@ pub fn throughput_at(req: &PlanRequest, seq: u64, caches: &PlannerCaches) -> Thr
     }
 }
 
+/// Fleet placement request: which fleet to sweep and the job every
+/// candidate cluster shape is evaluated against. The cluster stops being
+/// a fixed input and becomes a sweep dimension — [`place_with`] expands
+/// the fleet into shapes ([`enumerate_shapes`]), prunes dominated ones,
+/// and runs the ordinary planner on each survivor.
+#[derive(Debug, Clone)]
+pub struct PlacementRequest {
+    pub fleet: FleetSpec,
+    pub model: ModelDims,
+    pub reference_s: u64,
+    pub quantum: u64,
+    pub cap_s: u64,
+    pub dims: SweepDims,
+    /// Baseline calibration (measured on the paper's H100 testbed, or a
+    /// `--refit`). Each shape prices against
+    /// [`Calibration::scaled_for`]`(&shape.cluster)`, so H100 pools keep
+    /// the exact baseline (and its cache entries) while faster hardware
+    /// re-keys under a scaled fingerprint.
+    pub calibration: Calibration,
+    pub refit: Option<RefitInfo>,
+    /// Worker threads for the shape-parallel sweep (0 = auto). Each
+    /// shape's *inner* sweep runs at `threads = 1` — per-shape probe and
+    /// anchor accounting stays deterministic — and parallelism comes
+    /// from evaluating shapes concurrently on the shared caches.
+    pub threads: usize,
+    /// Skip dominated shapes before any probe (the default); `--no-prune`
+    /// evaluates every shape. The ranked `placements` are identical
+    /// either way by construction — only the `pruned` section's shapes
+    /// switch between "skipped with provenance" and "evaluated".
+    pub prune: bool,
+    /// Walls-only placement: each shape's sweep skips phase-2 pricing.
+    pub feasibility_only: bool,
+}
+
+impl PlacementRequest {
+    pub fn new(model: ModelDims, fleet: FleetSpec) -> Self {
+        PlacementRequest {
+            fleet,
+            model,
+            reference_s: 1 << 20,
+            quantum: 128 * 1024,
+            cap_s: 32 << 20,
+            dims: SweepDims::default(),
+            calibration: Calibration::default(),
+            refit: None,
+            threads: 0,
+            prune: true,
+            feasibility_only: false,
+        }
+    }
+}
+
+/// One fleet shape's placement verdict: the shape, its dominance status,
+/// and (when evaluated) the full plan the job would run under.
+#[derive(Debug, Clone)]
+pub struct ShapePlacement {
+    pub pool: String,
+    pub device: String,
+    pub cluster: ClusterConfig,
+    /// `Some(label)` when another shape dominates this one (the first
+    /// dominator in enumeration order). Dominance is computed in both
+    /// modes; pruning only decides whether the shape still gets a plan.
+    pub pruned_by: Option<String>,
+    /// The shape's ranked sweep; `None` exactly when the shape was
+    /// dominance-pruned before evaluation.
+    pub plan: Option<PlanOutcome>,
+}
+
+impl ShapePlacement {
+    pub fn gpus(&self) -> u64 {
+        self.cluster.total_gpus()
+    }
+
+    /// Stable display / provenance label: `pool/nodes×gpus_per_node`.
+    pub fn label(&self) -> String {
+        format!("{}/{}x{}", self.pool, self.cluster.nodes, self.cluster.gpus_per_node)
+    }
+
+    /// The shape's best trainable context (its top-ranked config's wall).
+    pub fn best_wall(&self) -> Option<u64> {
+        self.plan.as_ref()?.best()?.max_context
+    }
+
+    /// The shape's best config's reference-length throughput (step-time
+    /// rank proxy: more tokens/s/GPU = shorter step).
+    pub fn best_ref_tput(&self) -> Option<f64> {
+        self.plan.as_ref()?.best()?.ref_tok_s_gpu
+    }
+}
+
+/// The fleet-wide answer: shapes ranked best-first plus the sweep's
+/// reuse/pruning accounting.
+#[derive(Debug, Clone)]
+pub struct PlacementOutcome {
+    pub model: ModelDims,
+    pub fleet: FleetSpec,
+    pub reference_s: u64,
+    pub quantum: u64,
+    /// Non-dominated shapes, each fully evaluated, ranked by best
+    /// context wall, then reference throughput, then fewer GPUs.
+    /// Identical bytes with pruning on or off.
+    pub placements: Vec<ShapePlacement>,
+    /// Dominated shapes in enumeration order, each naming its dominator;
+    /// `plan` is `None` under pruning and populated under `--no-prune`.
+    pub pruned: Vec<ShapePlacement>,
+    pub shapes_total: u64,
+    /// Shapes skipped before any probe. 0 under `--no-prune` even though
+    /// `pruned` still records dominance provenance.
+    pub shapes_pruned: u64,
+    /// Evaluated shapes whose whole sweep ran zero streamed probes and
+    /// zero priced sims — answered entirely by fits and memos shared
+    /// from identical-hardware shapes (or a warm session).
+    pub shapes_reused: u64,
+    /// Distinct (hardware fingerprint, nodes, gpus_per_node) triples
+    /// among the evaluated shapes — the unit model fits are keyed by.
+    pub distinct_hardware: u64,
+    /// Peak-model / step-time-model entries resident in the session
+    /// caches after the sweep (fitted + drift-rejected). Anchor sims are
+    /// bounded by `pricing_families`: one anchor per family, shared
+    /// across every shape of identical hardware.
+    pub peak_families: u64,
+    pub pricing_families: u64,
+    /// Per-call accounting summed over every evaluated shape.
+    pub simulations: u64,
+    pub feasibility_probes: u64,
+    pub anchor_sims: u64,
+    pub modeled_prices: u64,
+    pub refit: Option<RefitInfo>,
+    pub prune: bool,
+    pub feasibility_only: bool,
+    pub wall_s: f64,
+}
+
+impl PlacementOutcome {
+    /// The top-ranked shape (the "where should I run this" answer).
+    pub fn best(&self) -> Option<&ShapePlacement> {
+        self.placements.first()
+    }
+}
+
+/// Hardware dominance at equal shape: `a` dominates `b` when both slice
+/// the same (nodes, gpus_per_node) grid and every per-rank hardware
+/// dimension of `a` is ≥ `b`'s — any schedule feasible on `b` is then
+/// feasible on `a` and runs at least as fast, so `b`'s best wall and
+/// step time cannot beat `a`'s and probing `b` is wasted work. Shapes
+/// with bitwise-identical hardware (duplicate pools of one device) tie;
+/// enumeration order breaks the tie so exactly one survives. The
+/// relation is a strict partial order, so every maximal shape survives
+/// a full-set scan and pruning is lossless on the final ranking.
+fn dominates(a: &ClusterShape, b: &ClusterShape, ia: usize, ib: usize) -> bool {
+    let (ca, cb) = (&a.cluster, &b.cluster);
+    if ca.nodes != cb.nodes || ca.gpus_per_node != cb.gpus_per_node {
+        return false;
+    }
+    // Raw fields, not derived budgets: conservative against any future
+    // change in how a dimension enters feasibility or pricing.
+    let dims = [
+        (ca.hbm_bytes, cb.hbm_bytes),
+        (ca.hbm_usable_frac, cb.hbm_usable_frac),
+        (ca.host_ram_bytes, cb.host_ram_bytes),
+        (ca.nvlink_bps, cb.nvlink_bps),
+        (ca.ib_bps, cb.ib_bps),
+        (ca.pcie_bps, cb.pcie_bps),
+        (ca.compute_scale, cb.compute_scale),
+    ];
+    if dims.iter().any(|(x, y)| x < y) {
+        return false;
+    }
+    let strictly = dims.iter().any(|(x, y)| x > y);
+    strictly || ia < ib
+}
+
+/// One-shot placement sweep with fresh caches (the CLI path).
+pub fn place(req: &PlacementRequest) -> PlacementOutcome {
+    place_with(req, &PlannerCaches::new())
+}
+
+/// Sweep every viable cluster shape of the fleet, consulting (and
+/// filling) the caller-owned session caches shared across shapes: a
+/// shape whose per-rank hardware and node count match an already-swept
+/// shape — a different pool of the same device, or a warm session —
+/// replays from memos and re-fits nothing.
+pub fn place_with(req: &PlacementRequest, caches: &PlannerCaches) -> PlacementOutcome {
+    let t0 = Instant::now();
+    let shapes = enumerate_shapes(&req.fleet);
+    // Full-set dominance scan: shape `j` is pruned when ANY other shape
+    // dominates it. The dominator may appear later in declaration order
+    // (an H100 pool listed before the H200 pool that dominates it), so a
+    // sequential kept-only scan would be wrong; scanning the full set
+    // keeps the surviving set = the partial order's maximal elements,
+    // independent of pool order.
+    let dominator: Vec<Option<usize>> = (0..shapes.len())
+        .map(|j| (0..shapes.len()).find(|&i| i != j && dominates(&shapes[i], &shapes[j], i, j)))
+        .collect();
+    let plan_req = |shape: &ClusterShape| -> PlanRequest {
+        let mut r = PlanRequest::new(req.model.clone(), shape.cluster.clone());
+        r.reference_s = req.reference_s;
+        r.quantum = req.quantum;
+        r.cap_s = req.cap_s;
+        r.dims = req.dims.clone();
+        r.calibration = req.calibration.scaled_for(&shape.cluster);
+        r.refit = req.refit.clone();
+        r.threads = 1;
+        r.feasibility_only = req.feasibility_only;
+        r
+    };
+    let todo: Vec<usize> =
+        (0..shapes.len()).filter(|&j| !req.prune || dominator[j].is_none()).collect();
+    let plans =
+        parallel_map(&todo, req.threads, |_, &j| (j, plan_with(&plan_req(&shapes[j]), caches)));
+
+    let mut by_index: Vec<Option<PlanOutcome>> = vec![None; shapes.len()];
+    let (mut probes, mut anchors, mut modeled, mut sims) = (0u64, 0u64, 0u64, 0u64);
+    let mut reused = 0u64;
+    let mut hw = std::collections::HashSet::new();
+    for (j, p) in plans {
+        hw.insert((
+            shapes[j].cluster.hardware_fingerprint(),
+            shapes[j].cluster.nodes,
+            shapes[j].cluster.gpus_per_node,
+        ));
+        probes += p.feasibility_probes;
+        anchors += p.priced_sims;
+        modeled += p.modeled_prices;
+        sims += p.simulations;
+        if p.simulations == 0 {
+            reused += 1;
+        }
+        by_index[j] = Some(p);
+    }
+
+    let mut placements = Vec::new();
+    let mut pruned = Vec::new();
+    for (j, shape) in shapes.iter().enumerate() {
+        let sp = ShapePlacement {
+            pool: shape.pool.clone(),
+            device: shape.device.clone(),
+            cluster: shape.cluster.clone(),
+            pruned_by: dominator[j].map(|i| {
+                format!(
+                    "{}/{}x{}",
+                    shapes[i].pool, shapes[i].cluster.nodes, shapes[i].cluster.gpus_per_node
+                )
+            }),
+            plan: by_index[j].take(),
+        };
+        if dominator[j].is_some() {
+            pruned.push(sp);
+        } else {
+            placements.push(sp);
+        }
+    }
+    // Rank: longest trainable context first, then reference throughput
+    // (shortest step), then fewer GPUs (cheapest allocation); the stable
+    // sort keeps enumeration order on exact ties.
+    placements.sort_by(|a, b| {
+        let by_wall = b.best_wall().unwrap_or(0).cmp(&a.best_wall().unwrap_or(0));
+        let (ta, tb) = (a.best_ref_tput().unwrap_or(0.0), b.best_ref_tput().unwrap_or(0.0));
+        by_wall.then(tb.total_cmp(&ta)).then(a.gpus().cmp(&b.gpus()))
+    });
+
+    PlacementOutcome {
+        model: req.model.clone(),
+        fleet: req.fleet.clone(),
+        reference_s: req.reference_s,
+        quantum: req.quantum.max(1),
+        shapes_total: shapes.len() as u64,
+        shapes_pruned: if req.prune { pruned.len() as u64 } else { 0 },
+        shapes_reused: reused,
+        distinct_hardware: hw.len() as u64,
+        peak_families: caches.models.len() as u64,
+        pricing_families: caches.time_models.len() as u64,
+        placements,
+        pruned,
+        simulations: sims,
+        feasibility_probes: probes,
+        anchor_sims: anchors,
+        modeled_prices: modeled,
+        refit: req.refit.clone(),
+        prune: req.prune,
+        feasibility_only: req.feasibility_only,
+        wall_s: t0.elapsed().as_secs_f64(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1512,5 +1798,154 @@ mod tests {
         assert!(tput(&fast) > 1.3 * tput(&base), "faster rates -> more tokens/s");
         // Memory walls are rate-independent: the top max context agrees.
         assert_eq!(base.best().unwrap().max_context, fast.best().unwrap().max_context);
+    }
+
+    fn placement_req(fleet_json: &str) -> PlacementRequest {
+        let fleet = FleetSpec::parse(fleet_json, "test").unwrap();
+        let mut req = PlacementRequest::new(ModelDims::llama3_8b(), fleet);
+        req.quantum = 1 << 20;
+        req.cap_s = 8 << 20;
+        req.threads = 1; // deterministic per-shape accounting
+        req.dims = SweepDims::paper();
+        req
+    }
+
+    #[test]
+    fn placement_pruning_is_lossless_on_heterogeneous_fleet() {
+        // The tentpole acceptance gate: on a ≥3-shape heterogeneous
+        // fleet, the pruned sweep's final ranking is *bitwise* identical
+        // to `--no-prune` — each run on its own fresh caches, so the
+        // equivalence is real work agreeing, not a memo replay.
+        let fleet = r#"{"pools": [
+            {"name": "old-h100", "device": "h100", "nodes": 2},
+            {"name": "new-h200", "device": "h200", "nodes": 1}
+        ]}"#;
+        let req = placement_req(fleet);
+        let pruned_run = place(&req);
+        let mut no_prune = placement_req(fleet);
+        no_prune.prune = false;
+        let full_run = place(&no_prune);
+
+        // Shapes: h100 1+2 nodes, h200 1 node. The 1-node H100 slice is
+        // dominated by the 1-node H200 (same grid, ≥ everywhere, more
+        // HBM + host RAM) — and the dominator appears *later* in pool
+        // order, which is exactly what a sequential kept-only scan
+        // would miss.
+        assert_eq!(pruned_run.shapes_total, 3);
+        assert_eq!(pruned_run.shapes_pruned, 1);
+        assert_eq!(full_run.shapes_pruned, 0, "--no-prune skips nothing");
+        assert_eq!(pruned_run.pruned.len(), 1);
+        let skipped = &pruned_run.pruned[0];
+        assert_eq!(skipped.label(), "old-h100/1x8");
+        assert_eq!(skipped.pruned_by.as_deref(), Some("new-h200/1x8"));
+        assert!(skipped.plan.is_none(), "pruned before any probe");
+
+        // Identical ranked placements, bitwise: same shapes in the same
+        // order, every per-config field agreeing to the bit.
+        assert_eq!(pruned_run.placements.len(), full_run.placements.len());
+        for (a, b) in pruned_run.placements.iter().zip(&full_run.placements) {
+            assert_eq!(a.label(), b.label());
+            assert_configs_bitwise_equal(a.plan.as_ref().unwrap(), b.plan.as_ref().unwrap());
+        }
+
+        // Pruning is *safe*: the evaluated dominated shape can't beat
+        // its dominator on either ranking axis.
+        let evaluated = &full_run.pruned[0];
+        let dominator = full_run
+            .placements
+            .iter()
+            .find(|p| p.label() == "new-h200/1x8")
+            .unwrap();
+        assert!(evaluated.plan.is_some(), "--no-prune evaluates dominated shapes");
+        assert!(evaluated.best_wall().unwrap_or(0) <= dominator.best_wall().unwrap_or(0));
+        assert!(
+            evaluated.best_ref_tput().unwrap_or(0.0)
+                <= dominator.best_ref_tput().unwrap_or(0.0) + 1e-12
+        );
+
+        // Reuse accounting: one anchor per pricing family, never more.
+        assert!(pruned_run.anchor_sims >= 1);
+        assert!(pruned_run.anchor_sims <= pruned_run.pricing_families);
+        assert_eq!(pruned_run.distinct_hardware, 2, "h200/1, h100/2 survive");
+        // The pruned run did strictly less work than the exhaustive one.
+        assert!(pruned_run.simulations < full_run.simulations);
+        // Ranking axes: walls descend, GPUs break exact ties.
+        let walls: Vec<u64> =
+            pruned_run.placements.iter().map(|p| p.best_wall().unwrap_or(0)).collect();
+        assert!(walls.windows(2).all(|w| w[0] >= w[1]), "walls not ranked: {walls:?}");
+    }
+
+    #[test]
+    fn duplicate_hardware_pool_refits_nothing() {
+        // Cross-shape model reuse: two pools of bitwise-identical
+        // hardware share every cache key, so the second pool's shape
+        // replays entirely from the first's fits — zero probes, zero
+        // anchors, zero streamed prices.
+        let fleet = r#"{"pools": [
+            {"name": "east", "device": "h100", "nodes": 1},
+            {"name": "west", "device": "h100", "nodes": 1}
+        ]}"#;
+        let mut req = placement_req(fleet);
+        req.prune = false; // evaluate the duplicate instead of pruning it
+        let out = place(&req);
+        assert_eq!(out.shapes_total, 2);
+        assert_eq!(out.distinct_hardware, 1);
+        assert_eq!(out.shapes_reused, 1, "the duplicate shape re-fit nothing");
+        let west = out.placements.iter().find(|p| p.pool == "west").unwrap();
+        let w = west.plan.as_ref().unwrap();
+        assert_eq!(w.simulations, 0, "duplicate hardware must replay from memos");
+        assert_eq!(w.feasibility_probes, 0);
+        assert_eq!(w.priced_sims, 0);
+        // Anchors stay at O(distinct hardware × pricing families): one
+        // shape's worth, despite two shapes swept.
+        assert!(out.anchor_sims <= out.pricing_families);
+        let east = out.placements.iter().find(|p| p.pool == "east").unwrap();
+        assert_eq!(out.anchor_sims, east.plan.as_ref().unwrap().priced_sims);
+        assert_configs_bitwise_equal(east.plan.as_ref().unwrap(), w);
+
+        // With pruning on, the identical-hardware tie breaks by
+        // enumeration order: exactly one survives, skipped pre-probe.
+        req.prune = true;
+        let pruned_run = place(&req);
+        assert_eq!(pruned_run.shapes_pruned, 1);
+        assert_eq!(pruned_run.pruned[0].pool, "west");
+        assert_eq!(pruned_run.pruned[0].pruned_by.as_deref(), Some("east/1x8"));
+    }
+
+    #[test]
+    fn placement_scales_calibration_to_the_shape_hardware() {
+        // A B200 pool prices against the compute/link-scaled calibration:
+        // same model, same shape, strictly more tokens/s than H100 —
+        // while H100 pools keep the baseline calibration fingerprint
+        // (their cells alias the homogeneous planner's cache entries).
+        let fleet = r#"{"pools": [
+            {"name": "h100", "device": "h100", "nodes": 1},
+            {"name": "b200", "device": "b200", "nodes": 1}
+        ]}"#;
+        let req = placement_req(fleet);
+        let out = place(&req);
+        // B200 ≥ H100 in every dimension at the same 1×8 grid, so the
+        // H100 shape is pruned and B200 wins the ranking outright.
+        assert_eq!(out.shapes_pruned, 1);
+        assert_eq!(out.best().unwrap().device, "B200");
+        let mut no_prune = placement_req(fleet);
+        no_prune.prune = false;
+        let full = place(&no_prune);
+        let tput = |pool: &str| {
+            let all: Vec<&ShapePlacement> =
+                full.placements.iter().chain(&full.pruned).collect();
+            all.iter().find(|p| p.pool == pool).unwrap().best_ref_tput().unwrap()
+        };
+        assert!(
+            tput("b200") > 1.5 * tput("h100"),
+            "B200 compute scale must show up in step time: {} vs {}",
+            tput("b200"),
+            tput("h100")
+        );
+        assert!(
+            full.best().unwrap().best_wall().unwrap()
+                >= full.pruned[0].best_wall().unwrap(),
+            "dominance gate: more HBM can't shrink the wall"
+        );
     }
 }

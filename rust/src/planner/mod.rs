@@ -20,6 +20,16 @@
 //!   `feasibility_only` skips pricing entirely, making multi-node
 //!   walls-only frontier sweeps (N×8 H100) near-free.
 //!
+//! Since the fleet-placement work the *cluster itself* is a sweep
+//! dimension: [`space::enumerate_shapes`] expands a heterogeneous
+//! [`crate::config::FleetSpec`] into candidate shapes, and
+//! [`eval::place_with`] evaluates a job against every non-dominated
+//! shape — dominated shapes (≤ another shape in every per-rank hardware
+//! dimension at the same grid) are skipped before any probe, and model
+//! fits are shared across shapes of identical hardware via the
+//! [`crate::config::ClusterConfig::hardware_fingerprint`] in every cache
+//! key. Driven by `repro place --fleet` and `/v1/placement`.
+//!
 //! Driven by `repro plan` / `repro frontier` (`--json` for machine-readable
 //! output, `--feasibility-only` for walls-only sweeps, `--cold` for the
 //! probe-per-bisection reference path) and rendered by
@@ -39,9 +49,9 @@ pub mod search;
 pub mod space;
 
 pub use eval::{
-    plan, plan_with, throughput_at, walls_at, CacheTier, ConfigPlan, PlanOutcome, PlanRequest,
-    PlannerCaches, PriceSource, ThroughputAt, ThroughputAtOutcome, WallAt, WallSource,
-    WallsAtOutcome,
+    place, place_with, plan, plan_with, throughput_at, walls_at, CacheTier, ConfigPlan,
+    PlacementOutcome, PlacementRequest, PlanOutcome, PlanRequest, PlannerCaches, PriceSource,
+    ShapePlacement, ThroughputAt, ThroughputAtOutcome, WallAt, WallSource, WallsAtOutcome,
 };
 pub use search::{bisect_max, bisect_max_from, pareto_front};
-pub use space::{enumerate_space, SweepDims};
+pub use space::{enumerate_shapes, enumerate_space, ClusterShape, SweepDims};

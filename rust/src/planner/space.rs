@@ -8,7 +8,7 @@
 //! node, ring across the rest; TP subdividing the node).
 
 use crate::config::parallel::{divisors, factor_pairs};
-use crate::config::{AcMode, ClusterConfig, CpMethod, ParallelConfig};
+use crate::config::{AcMode, ClusterConfig, CpMethod, FleetSpec, ParallelConfig};
 use crate::model::ModelDims;
 
 /// FPDT sequence-chunk counts swept (the paper evaluates π = 16).
@@ -154,6 +154,51 @@ pub fn enumerate_space(
     out
 }
 
+/// One placement candidate: a homogeneous slice of one fleet pool,
+/// evaluated by the planner as an ordinary cluster. The pool and device
+/// names ride along for reporting; neither enters any cache key.
+#[derive(Debug, Clone)]
+pub struct ClusterShape {
+    pub pool: String,
+    pub device: String,
+    pub cluster: ClusterConfig,
+}
+
+impl ClusterShape {
+    pub fn gpus(&self) -> u64 {
+        self.cluster.total_gpus()
+    }
+}
+
+/// Expand a fleet into candidate cluster shapes: per pool, every
+/// power-of-two node count up to the pool's size plus the full pool —
+/// the allocation granularities a scheduler actually hands out. Order is
+/// deterministic (pools in declaration order, node counts ascending), so
+/// placement results are stable bytes. Shapes of identical hardware at
+/// the same node count (a 4-node slice of an 8-node pool vs a 4-node
+/// pool of the same device) intentionally produce identical cache keys:
+/// the second one re-fits nothing.
+pub fn enumerate_shapes(fleet: &FleetSpec) -> Vec<ClusterShape> {
+    let mut out = Vec::new();
+    for pool in &fleet.pools {
+        let mut counts: Vec<u64> = Vec::new();
+        let mut n = 1u64;
+        while n < pool.nodes {
+            counts.push(n);
+            n *= 2;
+        }
+        counts.push(pool.nodes);
+        for nodes in counts {
+            out.push(ClusterShape {
+                pool: pool.name.clone(),
+                device: pool.device.name.clone(),
+                cluster: pool.device.cluster(nodes, pool.device.gpus_per_node),
+            });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -262,6 +307,40 @@ mod tests {
                 assert_eq!(p.ac_mode, AcMode::AcOffload, "{p:?}");
             }
         }
+    }
+
+    #[test]
+    fn shapes_enumerate_power_of_two_slices_per_pool() {
+        let fleet = FleetSpec::parse(
+            r#"{"pools": [
+                {"name": "big-h100", "device": "h100", "nodes": 6},
+                {"name": "new-h200", "device": "h200", "nodes": 2}
+            ]}"#,
+            "test",
+        )
+        .unwrap();
+        let shapes = enumerate_shapes(&fleet);
+        let rows: Vec<(String, u64)> =
+            shapes.iter().map(|s| (s.pool.clone(), s.cluster.nodes)).collect();
+        assert_eq!(
+            rows,
+            vec![
+                ("big-h100".to_string(), 1),
+                ("big-h100".to_string(), 2),
+                ("big-h100".to_string(), 4),
+                ("big-h100".to_string(), 6),
+                ("new-h200".to_string(), 1),
+                ("new-h200".to_string(), 2),
+            ]
+        );
+        // H100 slices carry the paper testbed's exact hardware: their
+        // cache keys alias the homogeneous planner's on purpose.
+        assert_eq!(
+            shapes[0].cluster.hardware_fingerprint(),
+            ClusterConfig::h100_node().hardware_fingerprint()
+        );
+        assert_eq!(shapes[4].device, "H200");
+        assert!(shapes[4].cluster.hbm_bytes > shapes[0].cluster.hbm_bytes);
     }
 
     #[test]

@@ -6,8 +6,8 @@
 //! runs, the calibration provenance.
 
 use crate::engine::RefitInfo;
-use crate::planner::{ConfigPlan, PlanOutcome, WallsAtOutcome};
-use crate::util::fmt::tokens;
+use crate::planner::{ConfigPlan, PlacementOutcome, PlanOutcome, ShapePlacement, WallsAtOutcome};
+use crate::util::fmt::{tokens, GIB};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -356,6 +356,165 @@ pub fn frontier_at_lengths_json(rows: &[(u64, &PlanOutcome)]) -> Json {
     ])
 }
 
+const PLACEMENT_HEADER: [&str; 9] =
+    ["#", "Pool", "Device", "Nodes", "GPUs", "MaxCtx", "Method", "tok/s@ref", "Pruned by"];
+
+fn shape_cells(rank: Option<usize>, sp: &ShapePlacement) -> Vec<String> {
+    let best = sp.plan.as_ref().and_then(|p| p.best());
+    let wall = match (sp.best_wall(), best) {
+        (Some(s), Some(b)) if b.hit_cap => format!(">={}", tokens(s)),
+        (Some(s), _) => tokens(s),
+        _ => "-".into(),
+    };
+    vec![
+        rank.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+        sp.pool.clone(),
+        sp.device.clone(),
+        sp.cluster.nodes.to_string(),
+        sp.gpus().to_string(),
+        wall,
+        best.map(|b| b.parallel.method.label().to_string()).unwrap_or_else(|| "-".into()),
+        fmt_opt(sp.best_ref_tput(), 0),
+        sp.pruned_by.clone().unwrap_or_default(),
+    ]
+}
+
+/// The `repro place` output: fleet shapes ranked best-first, with the
+/// dominated shapes listed below the survivors (unranked; their MaxCtx
+/// column is `-` when pruning skipped their evaluation).
+pub fn placement_table(out: &PlacementOutcome) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Placement — {} across {} fleet shapes, ranked by max trainable context",
+            out.model.name, out.shapes_total
+        ),
+        &PLACEMENT_HEADER,
+    );
+    for (i, sp) in out.placements.iter().enumerate() {
+        t.row(shape_cells(Some(i + 1), sp));
+    }
+    for sp in &out.pruned {
+        t.row(shape_cells(None, sp));
+    }
+    t.note(&format!(
+        "{} shapes: {} ranked, {} dominated ({} skipped before any probe)",
+        out.shapes_total,
+        out.placements.len(),
+        out.pruned.len(),
+        out.shapes_pruned
+    ));
+    t.note(&format!(
+        "{} sims ({} probes + {} anchors + {} modeled); {} of {} evaluated shapes \
+         replayed entirely from shared fits",
+        out.simulations,
+        out.feasibility_probes,
+        out.anchor_sims,
+        out.modeled_prices,
+        out.shapes_reused,
+        out.shapes_total - out.shapes_pruned
+    ));
+    t.note(&format!(
+        "model fits shared across shapes: {} distinct hardware grids, {} peak families, \
+         {} pricing families",
+        out.distinct_hardware, out.peak_families, out.pricing_families
+    ));
+    if out.feasibility_only {
+        t.note("feasibility-only placement: per-shape pricing skipped (walls only)");
+    }
+    t
+}
+
+/// One fleet shape's JSON: identity, per-rank hardware (the fields the
+/// CI dominance gate compares, in the fleet schema's GiB / GB/s units),
+/// the best-config summary the ranking sorted on, and — when the shape
+/// was evaluated — its full deterministic plan core.
+fn shape_json(sp: &ShapePlacement) -> Json {
+    let c = &sp.cluster;
+    let best = sp.plan.as_ref().and_then(|p| p.best());
+    Json::obj(vec![
+        ("pool", Json::string(&sp.pool)),
+        ("device", Json::string(&sp.device)),
+        ("label", Json::string(&sp.label())),
+        ("nodes", Json::int(c.nodes)),
+        ("gpus_per_node", Json::int(c.gpus_per_node)),
+        ("gpus", Json::int(c.total_gpus())),
+        (
+            "hardware",
+            Json::obj(vec![
+                ("hbm_gib", Json::Num(c.hbm_bytes / GIB)),
+                ("hbm_usable_frac", Json::Num(c.hbm_usable_frac)),
+                ("nvlink_gbps", Json::Num(c.nvlink_bps / 1e9)),
+                ("ib_gbps", Json::Num(c.ib_bps / 1e9)),
+                ("pcie_gbps", Json::Num(c.pcie_bps / 1e9)),
+                ("host_ram_gib", Json::Num(c.host_ram_bytes / GIB)),
+                ("compute_scale", Json::Num(c.compute_scale)),
+            ]),
+        ),
+        ("best_wall", sp.best_wall().map(Json::int).unwrap_or(Json::Null)),
+        (
+            "best_wall_label",
+            sp.best_wall().map(|s| Json::string(&tokens(s))).unwrap_or(Json::Null),
+        ),
+        (
+            "best_method",
+            best.map(|b| Json::string(b.parallel.method.label())).unwrap_or(Json::Null),
+        ),
+        ("best_ref_tok_s_per_gpu", num_or_null(sp.best_ref_tput())),
+        ("pruned_by", sp.pruned_by.as_deref().map(Json::string).unwrap_or(Json::Null)),
+        (
+            "plan",
+            sp.plan
+                .as_ref()
+                .map(|p| Json::obj(core_pairs(p, p.configs.iter().map(config_json).collect())))
+                .unwrap_or(Json::Null),
+        ),
+    ])
+}
+
+/// The deterministic placement core — the `result` of `/v1/placement`.
+/// Everything here must replay byte-for-byte on a warm session: shape
+/// ranking, per-shape hardware, full plan cores, and the dominance
+/// provenance (which is a pure function of the fleet, not of the run).
+fn placement_core_pairs(out: &PlacementOutcome) -> Vec<(&'static str, Json)> {
+    vec![
+        ("model", Json::string(out.model.name)),
+        ("reference_s", Json::int(out.reference_s)),
+        ("quantum", Json::int(out.quantum)),
+        ("feasibility_only", Json::Bool(out.feasibility_only)),
+        ("prune", Json::Bool(out.prune)),
+        ("refit", out.refit.as_ref().map(refit_json).unwrap_or(Json::Null)),
+        ("fleet", out.fleet.canonical()),
+        ("placements", Json::Arr(out.placements.iter().map(shape_json).collect())),
+        ("pruned", Json::Arr(out.pruned.iter().map(shape_json).collect())),
+        ("shapes_total", Json::int(out.shapes_total)),
+        ("shapes_pruned", Json::int(out.shapes_pruned)),
+    ]
+}
+
+/// The deterministic placement core alone (the service `result`).
+pub fn placement_result_json(out: &PlacementOutcome) -> Json {
+    Json::obj(placement_core_pairs(out))
+}
+
+/// Machine-readable placement (`repro place --json`): the deterministic
+/// core plus this run's reuse/pruning accounting — what the CI dominance
+/// gate and the bench diff consume.
+pub fn placement_json(out: &PlacementOutcome) -> Json {
+    let mut pairs = placement_core_pairs(out);
+    pairs.extend(vec![
+        ("shapes_reused", Json::int(out.shapes_reused)),
+        ("distinct_hardware", Json::int(out.distinct_hardware)),
+        ("peak_families", Json::int(out.peak_families)),
+        ("pricing_families", Json::int(out.pricing_families)),
+        ("simulations", Json::int(out.simulations)),
+        ("feasibility_probes", Json::int(out.feasibility_probes)),
+        ("anchor_sims", Json::int(out.anchor_sims)),
+        ("modeled_prices", Json::int(out.modeled_prices)),
+        ("wall_s", Json::Num(out.wall_s)),
+    ]);
+    Json::obj(pairs)
+}
+
 /// A point capacity query's answer — the `result` of `/v1/walls` with
 /// `"at"`. `probes` is part of the payload on purpose: "zero streamed
 /// probes on a warm session" is the service's observable contract, and
@@ -593,5 +752,49 @@ mod tests {
         assert!(t.contains("calibration refit from bench.json"));
         assert!(t.contains("WARNING: refit kept defaults for a2a_eff0_bps"));
         assert!(t.contains("refit anchor ran under memory pressure"));
+    }
+
+    #[test]
+    fn placement_rendering_carries_hardware_and_provenance() {
+        use crate::config::FleetSpec;
+        use crate::planner::{place, PlacementRequest};
+        let fleet = FleetSpec::parse(
+            r#"{"pools": [
+                {"name": "old-h100", "device": "h100", "nodes": 1},
+                {"name": "new-h200", "device": "h200", "nodes": 1}
+            ]}"#,
+            "test",
+        )
+        .unwrap();
+        let mut req = PlacementRequest::new(ModelDims::llama3_8b(), fleet);
+        req.quantum = 1 << 20;
+        req.cap_s = 4 << 20;
+        req.threads = 1;
+        req.dims = SweepDims::paper();
+        let out = place(&req);
+
+        let t = placement_table(&out).render();
+        assert!(t.contains("new-h200"), "{t}");
+        assert!(t.contains("Pruned by"), "{t}");
+        assert!(t.contains("skipped before any probe"), "{t}");
+        assert!(t.contains("pricing families"), "{t}");
+
+        // The CLI artifact: hardware fields for the dominance gate,
+        // dominance provenance, plan cores, and reuse accounting.
+        let j = placement_json(&out).render();
+        assert!(j.contains("\"hbm_gib\":141"), "H200 hardware in artifact: {j}");
+        assert!(j.contains("\"pruned_by\":\"new-h200/1x8\""), "{j}");
+        assert!(j.contains("\"shapes_pruned\":1"), "{j}");
+        assert!(j.contains("\"anchor_sims\":"), "{j}");
+        assert!(j.contains("\"fleet\":{\"pools\":"), "{j}");
+        assert!(j.contains("\"configs\":"), "plan cores ride along: {j}");
+
+        // The service core carries no run accounting and the pruned
+        // shape's plan is null (skipped before any probe).
+        let core = placement_result_json(&out).render();
+        assert!(!core.contains("\"wall_s\""), "{core}");
+        assert!(!core.contains("\"anchor_sims\""), "{core}");
+        assert!(core.contains("\"plan\":null"), "{core}");
+        assert!(j.starts_with(&core[..core.len() - 1]), "core must prefix the full JSON");
     }
 }

@@ -235,7 +235,12 @@ fn run_trace(p: &RunPreset, calib: &Calibration, trace: &[Op]) -> StepReport {
 /// fingerprint: refit experiments build modified variants that keep the
 /// name), cluster shape, layout and S, the AC/micro-batch/TP dims, and the
 /// calibration fingerprint (refit calibrations change emitted op durations
-/// and byte sizes, so they must not alias the default fit's traces). Note
+/// and byte sizes, so they must not alias the default fit's traces), plus
+/// the cluster's per-rank hardware fingerprint (HBM/host-RAM budgets reach
+/// the probes through `Quantities`, so an H200's roomier walls must not
+/// alias an H100's — while fleet pools of *identical* hardware hash equal
+/// and share every memo tier across cluster shapes, which is what keeps
+/// placement sweeps at O(distinct hardware × families) anchor work). Note
 /// `pin_memory` is deliberately absent — pinning changes pricing (host-RAM
 /// budget), not trace structure, so pin variants share one trace; pricing
 /// memos append it separately.
@@ -251,6 +256,7 @@ pub struct CellKey {
     gpus_per_node: u64,
     model_fp: u64,
     cal_fp: u64,
+    hw_fp: u64,
 }
 
 impl CellKey {
@@ -270,6 +276,7 @@ impl CellKey {
             // the symbolic solver collapses probes to O(1) per cell.
             model_fp: fx_hash_one(&p.model),
             cal_fp: calib.fingerprint(),
+            hw_fp: p.cluster.hardware_fingerprint(),
         }
     }
 
@@ -290,13 +297,17 @@ impl CellKey {
             gpus_per_node: self.gpus_per_node,
             model_fp: self.model_fp,
             cal_fp: self.cal_fp,
+            hw_fp: self.hw_fp,
         }
     }
 }
 
 /// Hashed key for a family of sweep cells sharing one symbolic peak
 /// model: [`CellKey`] minus `seq_len` and `micro_batch` (see
-/// [`CellKey::family`] for why those collapse).
+/// [`CellKey::family`] for why those collapse). The hardware fingerprint
+/// stays: fitted models are exact only for the budgets and link rates
+/// they were sampled under, and keeping it here is also what *shares*
+/// fits across fleet shapes of identical hardware.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct FamilyKey {
     method: CpMethod,
@@ -307,6 +318,7 @@ pub struct FamilyKey {
     gpus_per_node: u64,
     model_fp: u64,
     cal_fp: u64,
+    hw_fp: u64,
 }
 
 /// Thread-safe memo of built op traces, keyed by hashed [`CellKey`]s in a
@@ -515,6 +527,19 @@ mod tests {
         let mut cal2 = cal.clone();
         cal2.other_rate *= 1.5;
         assert_ne!(CellKey::new(&base, &cal2), k0);
+        // Hardware variants re-key: an H200's HBM budget reaches the
+        // probe via Quantities, so it must not alias H100 entries…
+        let mut hw = base.clone();
+        hw.cluster.hbm_bytes *= 141.0 / 80.0;
+        assert_ne!(CellKey::new(&hw, &cal), k0);
+        let mut ram = base.clone();
+        ram.cluster.host_ram_bytes *= 2.0;
+        assert_ne!(CellKey::new(&ram, &cal), k0);
+        // …while identical hardware under a different display name (a
+        // fleet pool of the paper's device) aliases on purpose.
+        let mut renamed = base.clone();
+        renamed.cluster.name = "H100";
+        assert_eq!(CellKey::new(&renamed, &cal), k0);
     }
 
     #[test]
@@ -629,6 +654,16 @@ mod tests {
         assert_ne!(fam(&tp), f0, "TP reshards the buffers");
         let other = llama_single_node(CpMethod::Ring, 1 << 20);
         assert_ne!(fam(&other), f0);
+        // Per-rank hardware changes the fitted polynomial's budgets and
+        // rates: it must split the family…
+        let mut hw = base.clone();
+        hw.cluster.hbm_bytes *= 141.0 / 80.0;
+        assert_ne!(fam(&hw), f0, "an H200's walls are not an H100's");
+        // …but a same-hardware pool shares fits across fleet shapes.
+        use crate::config::DeviceSpec;
+        let mut pool = base.clone();
+        pool.cluster = DeviceSpec::h100().cluster(1, 8);
+        assert_eq!(fam(&pool), f0, "identical hardware re-fits nothing");
     }
 
     #[test]

@@ -20,7 +20,9 @@
 //! | `POST /v1/walls`   | plan params (+ `"at"`)        | walls sweep / point query / batch curve |
 //! | `POST /v1/frontier`| plan params                   | Pareto frontier (+ envelope `accounting`: zeros when memo-warm) |
 //! | `POST /v1/refit`   | `{"measurements": {...}}`     | refit provenance  |
+//! | `POST /v1/placement`| placement params (`fleet` + plan fields) | ranked fleet placements (+ envelope `accounting`: zeros when memo-warm) |
 //! | `GET  /v1/health`  | —                             | status, per-endpoint p50/p95, per-tier cache bytes + evictions |
+//! | `GET  /metrics`    | —                             | the health counters as Prometheus text exposition (`text/plain`) |
 //!
 //! Every error is a structured JSON envelope (`error.code` /
 //! `error.message`) with a matching status code; handler panics are
@@ -39,7 +41,9 @@ use crate::report::planner as planner_report;
 use crate::util::json::Json;
 use crate::util::pool::{default_threads, JobQueue};
 
-use super::wire::{self, AtQuery, PlanParams, RefitParams, WallsParams, API_VERSION};
+use super::wire::{
+    self, AtQuery, PlacementParams, PlanParams, RefitParams, WallsParams, API_VERSION,
+};
 use super::PlannerService;
 
 /// Request-size ceilings: a header block or body beyond these is refused
@@ -87,13 +91,16 @@ impl Default for ServeOptions {
 }
 
 /// Endpoint identities for the latency/hit-rate stats (index = slot).
-const ENDPOINTS: [&str; 6] = ["plan", "walls", "frontier", "refit", "health", "other"];
+const ENDPOINTS: [&str; 8] =
+    ["plan", "walls", "frontier", "refit", "placement", "health", "metrics", "other"];
 const EP_PLAN: usize = 0;
 const EP_WALLS: usize = 1;
 const EP_FRONTIER: usize = 2;
 const EP_REFIT: usize = 3;
-const EP_HEALTH: usize = 4;
-const EP_OTHER: usize = 5;
+const EP_PLACEMENT: usize = 4;
+const EP_HEALTH: usize = 5;
+const EP_METRICS: usize = 6;
+const EP_OTHER: usize = 7;
 
 /// Per-endpoint request accounting, `coordinator::server::ServerStats`
 /// style: served/error counts plus latency percentiles.
@@ -116,7 +123,7 @@ impl EndpointAgg {
 }
 
 struct HttpStats {
-    endpoints: [Mutex<EndpointAgg>; 6],
+    endpoints: [Mutex<EndpointAgg>; 8],
     /// Connections accepted and handed to a worker.
     connections: AtomicU64,
     /// Requests served on an already-used connection — the keep-alive
@@ -252,7 +259,7 @@ pub fn serve(
                             "overloaded",
                             "request queue is full; retry later",
                         );
-                        write_response(&mut stream, 503, &body, false);
+                        write_response(&mut stream, 503, &Payload::Json(body), false);
                         continue;
                     }
                     q.push(stream);
@@ -261,6 +268,14 @@ pub fn serve(
         }))
     };
     Ok(ServeHandle { addr: bound, stop, queue, accept, workers })
+}
+
+/// A response body with its content type: every API endpoint answers a
+/// JSON envelope; `GET /metrics` answers the Prometheus text exposition
+/// format, which scrapers require as `text/plain`.
+enum Payload {
+    Json(Json),
+    Text(String),
 }
 
 struct HttpError {
@@ -327,7 +342,7 @@ fn handle_connection(
                 // them under "other" so /v1/health still sees the errors.
                 stats.record(EP_OTHER, false, 0.0);
                 let body = wire::error_envelope(e.code, &e.message);
-                write_response(&mut stream, e.status, &body, false);
+                write_response(&mut stream, e.status, &Payload::Json(body), false);
                 break;
             }
         }
@@ -335,7 +350,16 @@ fn handle_connection(
 }
 
 fn known_path(path: &str) -> bool {
-    ["/v1/plan", "/v1/walls", "/v1/frontier", "/v1/refit", "/v1/health"].contains(&path)
+    [
+        "/v1/plan",
+        "/v1/walls",
+        "/v1/frontier",
+        "/v1/refit",
+        "/v1/placement",
+        "/v1/health",
+        "/metrics",
+    ]
+    .contains(&path)
 }
 
 fn route(
@@ -344,30 +368,40 @@ fn route(
     method: &str,
     path: &str,
     body: &[u8],
-) -> (usize, (u16, Json)) {
+) -> (usize, (u16, Payload)) {
     match (method, path) {
-        ("GET", "/v1/health") => (EP_HEALTH, (200, health_json(service, stats))),
+        ("GET", "/v1/health") => {
+            (EP_HEALTH, (200, Payload::Json(health_json(service, stats))))
+        }
+        ("GET", "/metrics") => {
+            (EP_METRICS, (200, Payload::Text(metrics_text(service, stats))))
+        }
         ("POST", "/v1/plan") => (EP_PLAN, guarded(|| plan_endpoint(service, body, false))),
         ("POST", "/v1/frontier") => (EP_FRONTIER, guarded(|| plan_endpoint(service, body, true))),
         ("POST", "/v1/walls") => (EP_WALLS, guarded(|| walls_endpoint(service, body))),
         ("POST", "/v1/refit") => (EP_REFIT, guarded(|| refit_endpoint(service, body))),
+        ("POST", "/v1/placement") => {
+            (EP_PLACEMENT, guarded(|| placement_endpoint(service, body)))
+        }
         (_, p) if known_path(p) => {
             let msg = format!("{method} not supported on {p}");
-            (EP_OTHER, (405, wire::error_envelope("method_not_allowed", &msg)))
+            (EP_OTHER, (405, Payload::Json(wire::error_envelope("method_not_allowed", &msg))))
         }
         (_, p) => {
             let msg = format!("no such endpoint `{p}` (api_version {API_VERSION})");
-            (EP_OTHER, (404, wire::error_envelope("not_found", &msg)))
+            (EP_OTHER, (404, Payload::Json(wire::error_envelope("not_found", &msg))))
         }
     }
 }
 
-/// Run a handler with a panic firewall: a panicking request answers 500
-/// and the daemon lives on.
-fn guarded(f: impl FnOnce() -> (u16, Json)) -> (u16, Json) {
+/// Run a JSON handler with a panic firewall: a panicking request answers
+/// 500 and the daemon lives on.
+fn guarded(f: impl FnOnce() -> (u16, Json)) -> (u16, Payload) {
     match catch_unwind(AssertUnwindSafe(f)) {
-        Ok(resp) => resp,
-        Err(_) => (500, wire::error_envelope("internal", "request handler panicked")),
+        Ok((status, body)) => (status, Payload::Json(body)),
+        Err(_) => {
+            (500, Payload::Json(wire::error_envelope("internal", "request handler panicked")))
+        }
     }
 }
 
@@ -477,6 +511,38 @@ fn refit_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json) {
     }
 }
 
+fn placement_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json) {
+    let params = match parse_body(body).and_then(|j| PlacementParams::from_json(&j)) {
+        Ok(p) => p,
+        Err(e) => return (400, wire::error_envelope("bad_request", &e)),
+    };
+    match service.place(&params) {
+        Ok(reply) => {
+            let result = planner_report::placement_result_json(&reply.outcome);
+            let mut resp =
+                wire::envelope("placement", params.canonical(), &reply.warnings, result);
+            // Additive envelope field (api_version 1), mirroring the
+            // frontier endpoint: what this request actually ran. A memo
+            // hit reports zeros while the ranked placements stay
+            // byte-identical to the cold reply.
+            let o = &reply.outcome;
+            let pick = |v: u64| if reply.memo_hit { 0 } else { v };
+            let acct = Json::obj(vec![
+                ("shapes_reused", Json::int(pick(o.shapes_reused))),
+                ("distinct_hardware", Json::int(pick(o.distinct_hardware))),
+                ("feasibility_probes", Json::int(pick(o.feasibility_probes))),
+                ("anchor_sims", Json::int(pick(o.anchor_sims))),
+                ("modeled_prices", Json::int(pick(o.modeled_prices))),
+            ]);
+            if let Json::Obj(pairs) = &mut resp {
+                pairs.push(("accounting".to_string(), acct));
+            }
+            (200, resp)
+        }
+        Err(e) => (400, wire::error_envelope("bad_request", &e)),
+    }
+}
+
 fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
     let st = service.stats();
     let sizes = service.caches().sizes();
@@ -485,11 +551,15 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
         ("budget", Json::int(service.cache_budget() as u64)),
         ("total", Json::int(service.cache_bytes() as u64)),
         ("plans", Json::int(service.plan_memo_bytes() as u64)),
+        ("placements", Json::int(service.placement_memo_bytes() as u64)),
     ];
     for t in &tiers {
         tier_bytes.push((t.name, Json::int(t.bytes as u64)));
     }
-    let mut tier_evictions = vec![("plans", Json::int(service.plan_memo_evictions()))];
+    let mut tier_evictions = vec![
+        ("plans", Json::int(service.plan_memo_evictions())),
+        ("placements", Json::int(service.placement_memo_evictions())),
+    ];
     for t in &tiers {
         tier_evictions.push((t.name, Json::int(t.evictions)));
     }
@@ -513,6 +583,9 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
             Json::obj(vec![
                 ("plan_requests", Json::int(st.plan_requests)),
                 ("plan_memo_hits", Json::int(st.plan_memo_hits)),
+                ("placement_requests", Json::int(st.placement_requests)),
+                ("placement_memo_hits", Json::int(st.placement_memo_hits)),
+                ("shapes_pruned", Json::int(st.shapes_pruned)),
                 ("point_queries", Json::int(st.point_queries)),
                 ("refits", Json::int(st.refits)),
                 ("probes_streamed", Json::int(st.probes_streamed)),
@@ -526,6 +599,7 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
             "caches",
             Json::obj(vec![
                 ("plans", Json::int(service.plan_memo_len() as u64)),
+                ("placements", Json::int(service.placement_memo_len() as u64)),
                 ("traces", Json::int(sizes[0] as u64)),
                 ("peak_probes", Json::int(sizes[1] as u64)),
                 ("budgeted_probes", Json::int(sizes[2] as u64)),
@@ -538,6 +612,145 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
         ("cache_bytes", Json::obj(tier_bytes)),
         ("evictions", Json::obj(tier_evictions)),
     ])
+}
+
+/// `GET /metrics`: the `/v1/health` counters in the Prometheus text
+/// exposition format, so a scrape job needs no JSON relabeling. Families
+/// mirror the health document — per-endpoint served/error counts and
+/// latency quantiles, service counters, and per-tier cache bytes /
+/// entries / evictions — under a stable `repro_` prefix.
+fn metrics_text(service: &PlannerService, stats: &HttpStats) -> String {
+    let mut out = String::new();
+    let mut family = |name: &str, kind: &str, help: &str, rows: &[(String, String)]| {
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        for (labels, value) in rows {
+            out.push_str(&format!("{name}{labels} {value}\n"));
+        }
+    };
+    let (mut served, mut errors, mut latency) = (Vec::new(), Vec::new(), Vec::new());
+    for (i, name) in ENDPOINTS.iter().enumerate() {
+        let agg = stats.endpoints[i].lock().unwrap();
+        served.push((format!("{{endpoint=\"{name}\"}}"), agg.served.to_string()));
+        errors.push((format!("{{endpoint=\"{name}\"}}"), agg.errors.to_string()));
+        for (q, label) in [(0.5, "0.5"), (0.95, "0.95")] {
+            latency.push((
+                format!("{{endpoint=\"{name}\",quantile=\"{label}\"}}"),
+                format!("{}", agg.percentile(q)),
+            ));
+        }
+    }
+    family("repro_http_requests_total", "counter", "Requests served, by endpoint.", &served);
+    family("repro_http_request_errors_total", "counter", "Error responses, by endpoint.", &errors);
+    family(
+        "repro_http_request_latency_ms",
+        "gauge",
+        "Request latency quantiles over the recent window, by endpoint.",
+        &latency,
+    );
+    let scalar = |v: u64| vec![(String::new(), v.to_string())];
+    family(
+        "repro_http_connections_total",
+        "counter",
+        "Connections accepted and handed to a worker.",
+        &scalar(stats.connections.load(Ordering::Relaxed)),
+    );
+    family(
+        "repro_http_keepalive_reuses_total",
+        "counter",
+        "Requests served on an already-used connection.",
+        &scalar(stats.keepalive_reuses.load(Ordering::Relaxed)),
+    );
+    family(
+        "repro_uptime_seconds",
+        "gauge",
+        "Seconds since the daemon started.",
+        &[(String::new(), format!("{}", stats.started.elapsed().as_secs_f64()))],
+    );
+    let st = service.stats();
+    for (name, help, v) in [
+        ("repro_plan_requests_total", "Plan/walls/frontier sweeps requested.", st.plan_requests),
+        (
+            "repro_plan_memo_hits_total",
+            "Sweeps answered from the whole-plan memo.",
+            st.plan_memo_hits,
+        ),
+        (
+            "repro_placement_requests_total",
+            "Fleet placement sweeps requested.",
+            st.placement_requests,
+        ),
+        (
+            "repro_placement_memo_hits_total",
+            "Placements answered from the whole-placement memo.",
+            st.placement_memo_hits,
+        ),
+        (
+            "repro_shapes_pruned_total",
+            "Fleet shapes skipped before any probe by dominance pruning.",
+            st.shapes_pruned,
+        ),
+        ("repro_point_queries_total", "Point capacity queries answered.", st.point_queries),
+        ("repro_refits_total", "Calibration refits fitted.", st.refits),
+        ("repro_probes_streamed_total", "Feasibility probes streamed.", st.probes_streamed),
+        ("repro_sims_priced_total", "Anchor simulations priced.", st.sims_priced),
+        (
+            "repro_prices_modeled_total",
+            "Prices answered from fitted step-time models.",
+            st.prices_modeled,
+        ),
+        ("repro_cache_evictions_total", "Pressure-valve eviction passes.", st.cache_evictions),
+        (
+            "repro_cache_entries_evicted_total",
+            "Entries dropped by the pressure valve.",
+            st.entries_evicted,
+        ),
+    ] {
+        family(name, "counter", help, &scalar(v));
+    }
+    let tiers = service.caches().tiers();
+    let tier_row = |tier: &str, v: u64| (format!("{{tier=\"{tier}\"}}"), v.to_string());
+    let mut bytes = vec![
+        tier_row("plans", service.plan_memo_bytes() as u64),
+        tier_row("placements", service.placement_memo_bytes() as u64),
+    ];
+    let mut entries = vec![
+        tier_row("plans", service.plan_memo_len() as u64),
+        tier_row("placements", service.placement_memo_len() as u64),
+    ];
+    let mut evictions = vec![
+        tier_row("plans", service.plan_memo_evictions()),
+        tier_row("placements", service.placement_memo_evictions()),
+    ];
+    for t in &tiers {
+        bytes.push(tier_row(t.name, t.bytes as u64));
+        entries.push(tier_row(t.name, t.entries as u64));
+        evictions.push(tier_row(t.name, t.evictions));
+    }
+    family("repro_cache_bytes", "gauge", "Approximate resident bytes, by cache tier.", &bytes);
+    family("repro_cache_entries", "gauge", "Resident entries, by cache tier.", &entries);
+    family(
+        "repro_cache_tier_evictions_total",
+        "counter",
+        "Entries evicted, by cache tier.",
+        &evictions,
+    );
+    family(
+        "repro_cache_budget_bytes",
+        "gauge",
+        "Configured cache byte budget (0 = unbounded).",
+        &scalar(if service.cache_budget() == usize::MAX {
+            0
+        } else {
+            service.cache_budget() as u64
+        }),
+    );
+    family(
+        "repro_cache_total_bytes",
+        "gauge",
+        "Approximate resident bytes across every tier plus the request memos.",
+        &scalar(service.cache_bytes() as u64),
+    );
+    out
 }
 
 fn find_subslice(hay: &[u8], needle: &[u8]) -> Option<usize> {
@@ -670,7 +883,7 @@ fn read_request(
     Ok(Some(Request { method, path, body, close }))
 }
 
-fn write_response(stream: &mut TcpStream, status: u16, body: &Json, keep_alive: bool) {
+fn write_response(stream: &mut TcpStream, status: u16, body: &Payload, keep_alive: bool) {
     let reason = match status {
         200 => "OK",
         400 => "Bad Request",
@@ -683,9 +896,13 @@ fn write_response(stream: &mut TcpStream, status: u16, body: &Json, keep_alive: 
         _ => "Error",
     };
     let connection = if keep_alive { "keep-alive" } else { "close" };
-    let payload = body.pretty() + "\n";
+    let (content_type, payload) = match body {
+        Payload::Json(j) => ("application/json", j.pretty() + "\n"),
+        // Prometheus text exposition format, version 0.0.4.
+        Payload::Text(t) => ("text/plain; version=0.0.4", t.clone()),
+    };
     let head = format!(
-        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
          Content-Length: {}\r\nConnection: {connection}\r\n\r\n",
         payload.len()
     );
@@ -968,6 +1185,78 @@ mod tests {
         let (so, eo) = post(addr, "/v1/walls", &format!("{{\"at\":[{}]}}", over.join(",")));
         assert_eq!(so, 400);
         assert!(eo.contains("at most 256"), "{eo}");
+        handle.stop();
+    }
+
+    #[test]
+    fn placement_endpoint_serves_ranked_fleet_and_memoizes() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = handle.addr();
+        let body = r#"{"model":"llama3-8b","paper":true,"quantum":"1M","cap":"8M","threads":2,
+            "feasibility_only":true,
+            "fleet":{"pools":[{"name":"east","device":"h100","nodes":1},
+                              {"name":"lab","device":"h200","nodes":1}]}}"#;
+        let (st, first) = post(addr, "/v1/placement", body);
+        assert_eq!(st, 200, "{first}");
+        assert!(first.contains("\"kind\": \"placement\""), "{first}");
+        assert!(first.contains("\"placements\""), "{first}");
+        assert!(first.contains("\"pruned_by\": \"lab/1x8\""), "{first}");
+        assert!(first.contains("\"shapes_pruned\": 1"), "{first}");
+        assert!(first.contains("\"accounting\""), "{first}");
+        // Warm replay: identical request, byte-identical ranked result,
+        // zeroed accounting (nothing ran).
+        let (st2, second) = post(addr, "/v1/placement", body);
+        assert_eq!(st2, 200);
+        let result_of = |resp: &str| resp.split("\"accounting\"").next().unwrap().to_string();
+        assert_eq!(result_of(&first), result_of(&second));
+        assert!(second.contains("\"feasibility_probes\": 0"), "{second}");
+        // Structured errors: a plan-only field is rejected loudly.
+        let (se, ee) = post(addr, "/v1/placement", r#"{"gpus":8}"#);
+        assert_eq!(se, 400);
+        assert!(ee.contains("not a placement field"), "{ee}");
+        // Health sees the placement counters (the 400 never reached the
+        // service, so only the two routed requests count).
+        let (_, health) =
+            request(addr, "GET /v1/health HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert!(health.contains("\"placement_requests\": 2"), "{health}");
+        assert!(health.contains("\"placement_memo_hits\": 1"), "{health}");
+        assert!(health.contains("\"shapes_pruned\": 1"), "{health}");
+        handle.stop();
+    }
+
+    #[test]
+    fn metrics_endpoint_exports_prometheus_text() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = handle.addr();
+        let (st, _) = post(addr, "/v1/plan", WARM_BODY);
+        assert_eq!(st, 200);
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        s.read_to_string(&mut resp).unwrap();
+        let status: u16 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert_eq!(status, 200, "{resp}");
+        assert!(resp.contains("Content-Type: text/plain"), "{resp}");
+        let body = resp.split("\r\n\r\n").nth(1).unwrap_or("");
+        assert!(body.contains("# TYPE repro_http_requests_total counter"), "{body}");
+        assert!(body.contains("repro_http_requests_total{endpoint=\"plan\"} 1"), "{body}");
+        assert!(
+            body.contains("repro_http_request_latency_ms{endpoint=\"plan\",quantile=\"0.95\"}"),
+            "{body}"
+        );
+        assert!(body.contains("repro_plan_requests_total 1"), "{body}");
+        assert!(body.contains("repro_placement_requests_total 0"), "{body}");
+        assert!(body.contains("repro_shapes_pruned_total 0"), "{body}");
+        assert!(body.contains("repro_cache_bytes{tier=\"walls\"}"), "{body}");
+        assert!(body.contains("repro_cache_bytes{tier=\"placements\"}"), "{body}");
+        assert!(body.contains("repro_cache_tier_evictions_total{tier=\"plans\"}"), "{body}");
+        assert!(body.contains("repro_http_keepalive_reuses_total"), "{body}");
+        // GET-only: a POST to the scrape path is a structured 405.
+        let (sm, em) = post(addr, "/metrics", "{}");
+        assert_eq!(sm, 405);
+        assert!(em.contains("method_not_allowed"), "{em}");
         handle.stop();
     }
 

@@ -30,16 +30,28 @@ use std::sync::Arc;
 
 use crate::engine::{Calibration, Measurements, RefitInfo};
 use crate::model::ModelDims;
-use crate::planner::{plan_with, walls_at, PlanOutcome, PlannerCaches, WallsAtOutcome};
+use crate::planner::{
+    place_with, plan_with, walls_at, PlacementOutcome, PlanOutcome, PlannerCaches, WallsAtOutcome,
+};
 use crate::util::stripe::StripedMap;
 
-pub use wire::{MeasurementsSource, PlanParams, RefitParams, WallsParams, API_VERSION};
+pub use wire::{
+    MeasurementsSource, PlacementParams, PlanParams, RefitParams, WallsParams, API_VERSION,
+};
 
 /// One plan request's answer: the (possibly memoized) outcome plus the
 /// request's deterministic notes. `memo_hit` is observability, never part
 /// of the wire result — repeated requests must serialize identically.
 pub struct PlanReply {
     pub outcome: Arc<PlanOutcome>,
+    pub memo_hit: bool,
+    pub warnings: Vec<String>,
+}
+
+/// A placement request's answer: the (possibly memoized) fleet-wide
+/// outcome plus the request's deterministic notes.
+pub struct PlacementReply {
+    pub outcome: Arc<PlacementOutcome>,
     pub memo_hit: bool,
     pub warnings: Vec<String>,
 }
@@ -58,6 +70,11 @@ pub struct RefitReply {
 pub struct ServiceStats {
     pub plan_requests: u64,
     pub plan_memo_hits: u64,
+    pub placement_requests: u64,
+    pub placement_memo_hits: u64,
+    /// Fleet shapes skipped before any probe by dominance pruning,
+    /// summed across placement requests (memo hits excluded).
+    pub shapes_pruned: u64,
     pub point_queries: u64,
     pub refits: u64,
     /// Streamed kernel probes across all requests (memo hits excluded).
@@ -86,6 +103,12 @@ struct PlanMemoEntry {
     warnings: Vec<String>,
 }
 
+/// One memoized placement, mirroring [`PlanMemoEntry`].
+struct PlacementMemoEntry {
+    outcome: Arc<PlacementOutcome>,
+    warnings: Vec<String>,
+}
+
 pub struct PlannerService {
     caches: PlannerCaches,
     /// Whole-plan memo keyed by the canonical request bytes — exact for
@@ -93,11 +116,17 @@ pub struct PlannerService {
     /// fingerprint (see `PlanParams::canonical`). A repeated request is
     /// one lookup.
     plans: StripedMap<String, Arc<PlanMemoEntry>>,
+    /// Whole-placement memo, keyed like `plans` by canonical request
+    /// bytes (which embed the fleet's canonical form).
+    placements: StripedMap<String, Arc<PlacementMemoEntry>>,
     /// Byte budget for every cache tier combined (`usize::MAX` =
     /// unbounded); see [`PlannerService::enforce_budget`].
     cache_budget: usize,
     plan_requests: AtomicU64,
     plan_memo_hits: AtomicU64,
+    placement_requests: AtomicU64,
+    placement_memo_hits: AtomicU64,
+    shapes_pruned: AtomicU64,
     point_queries: AtomicU64,
     refits: AtomicU64,
     probes_streamed: AtomicU64,
@@ -124,9 +153,13 @@ impl PlannerService {
         PlannerService {
             caches: PlannerCaches::new(),
             plans: StripedMap::default(),
+            placements: StripedMap::default(),
             cache_budget,
             plan_requests: AtomicU64::new(0),
             plan_memo_hits: AtomicU64::new(0),
+            placement_requests: AtomicU64::new(0),
+            placement_memo_hits: AtomicU64::new(0),
+            shapes_pruned: AtomicU64::new(0),
             point_queries: AtomicU64::new(0),
             refits: AtomicU64::new(0),
             probes_streamed: AtomicU64::new(0),
@@ -149,16 +182,21 @@ impl PlannerService {
     /// the budget is the steady-state bound between requests.
     fn enforce_budget(&self) {
         let budget = self.cache_budget;
-        if self.caches.bytes() + self.plans.bytes() <= budget {
+        let memos = |s: &Self| s.plans.bytes() + s.placements.bytes();
+        if self.caches.bytes() + memos(self) <= budget {
             return;
         }
-        let mut dropped = self.caches.evict_bulk_to_fit(budget, self.plans.bytes());
-        if self.caches.bytes() + self.plans.bytes() > budget {
-            let keep = budget.saturating_sub(self.caches.bytes());
+        let mut dropped = self.caches.evict_bulk_to_fit(budget, memos(self));
+        if self.caches.bytes() + memos(self) > budget {
+            let keep = budget.saturating_sub(self.caches.bytes() + self.placements.bytes());
             dropped += self.plans.evict_lru(keep);
         }
-        if self.caches.bytes() + self.plans.bytes() > budget {
-            dropped += self.caches.evict_precious_to_fit(budget, self.plans.bytes());
+        if self.caches.bytes() + memos(self) > budget {
+            let keep = budget.saturating_sub(self.caches.bytes() + self.plans.bytes());
+            dropped += self.placements.evict_lru(keep);
+        }
+        if self.caches.bytes() + memos(self) > budget {
+            dropped += self.caches.evict_precious_to_fit(budget, memos(self));
         }
         if dropped > 0 {
             self.cache_evictions.fetch_add(1, Ordering::Relaxed);
@@ -212,6 +250,63 @@ impl PlannerService {
             payload,
         );
         let reply = PlanReply {
+            outcome: Arc::clone(&entry.outcome),
+            memo_hit: false,
+            warnings: entry.warnings.clone(),
+        };
+        self.enforce_budget();
+        Ok(reply)
+    }
+
+    /// Fleet placement sweep (`POST /v1/placement`, and the CLI's
+    /// `repro place`). Memoized like [`PlannerService::plan`] on the
+    /// canonical request bytes — a warm replay returns the identical
+    /// outcome without enumerating a single shape. On a miss the
+    /// evaluator runs against the session caches, so model fits laid
+    /// down by earlier plan or placement requests on the same hardware
+    /// are reused across requests, not just across shapes.
+    pub fn place(&self, params: &PlacementParams) -> Result<PlacementReply, String> {
+        self.placement_requests.fetch_add(1, Ordering::Relaxed);
+        let key = params.canonical().render();
+        if let Some(hit) = self.placements.get(&key) {
+            self.placement_memo_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(PlacementReply {
+                outcome: Arc::clone(&hit.outcome),
+                memo_hit: true,
+                warnings: hit.warnings.clone(),
+            });
+        }
+        let (req, warnings) = params.to_request()?;
+        let out = place_with(&req, &self.caches);
+        if out.placements.iter().all(|sp| sp.plan.as_ref().map_or(true, |p| p.configs.is_empty())) {
+            return Err(format!(
+                "no valid configurations on any fleet shape: the requested sweep dims \
+                 (tp {:?}, mb {:?}) fit {} on none of the {} candidate shapes",
+                req.dims.tp_degrees,
+                req.dims.micro_batches,
+                req.model.name,
+                out.shapes_total
+            ));
+        }
+        self.probes_streamed.fetch_add(out.feasibility_probes, Ordering::Relaxed);
+        self.sims_priced.fetch_add(out.anchor_sims, Ordering::Relaxed);
+        self.prices_modeled.fetch_add(out.modeled_prices, Ordering::Relaxed);
+        self.shapes_pruned.fetch_add(out.shapes_pruned, Ordering::Relaxed);
+        let rows: usize = out
+            .placements
+            .iter()
+            .filter_map(|sp| sp.plan.as_ref())
+            .map(|p| p.configs.len())
+            .sum();
+        let payload = key.len()
+            + rows * std::mem::size_of::<crate::planner::ConfigPlan>()
+            + warnings.iter().map(String::len).sum::<usize>();
+        let entry = self.placements.insert_weighed(
+            key,
+            Arc::new(PlacementMemoEntry { outcome: Arc::new(out), warnings }),
+            payload,
+        );
+        let reply = PlacementReply {
             outcome: Arc::clone(&entry.outcome),
             memo_hit: false,
             warnings: entry.warnings.clone(),
@@ -280,6 +375,9 @@ impl PlannerService {
         ServiceStats {
             plan_requests: self.plan_requests.load(Ordering::Relaxed),
             plan_memo_hits: self.plan_memo_hits.load(Ordering::Relaxed),
+            placement_requests: self.placement_requests.load(Ordering::Relaxed),
+            placement_memo_hits: self.placement_memo_hits.load(Ordering::Relaxed),
+            shapes_pruned: self.shapes_pruned.load(Ordering::Relaxed),
             point_queries: self.point_queries.load(Ordering::Relaxed),
             refits: self.refits.load(Ordering::Relaxed),
             probes_streamed: self.probes_streamed.load(Ordering::Relaxed),
@@ -310,11 +408,26 @@ impl PlannerService {
         self.plans.evicted()
     }
 
-    /// Approximate resident bytes across every tier plus the plan memo —
-    /// the quantity [`PlannerService::cache_budget`] bounds between
-    /// requests.
+    /// Memoized whole-placement count.
+    pub fn placement_memo_len(&self) -> usize {
+        self.placements.len()
+    }
+
+    /// Approximate resident bytes of the whole-placement memo.
+    pub fn placement_memo_bytes(&self) -> usize {
+        self.placements.bytes()
+    }
+
+    /// Entries the valve has dropped from the whole-placement memo.
+    pub fn placement_memo_evictions(&self) -> u64 {
+        self.placements.evicted()
+    }
+
+    /// Approximate resident bytes across every tier plus the plan and
+    /// placement memos — the quantity [`PlannerService::cache_budget`]
+    /// bounds between requests.
     pub fn cache_bytes(&self) -> usize {
-        self.caches.bytes() + self.plans.bytes()
+        self.caches.bytes() + self.plans.bytes() + self.placements.bytes()
     }
 
     /// The configured byte budget (`usize::MAX` = unbounded).
@@ -329,6 +442,7 @@ impl PlannerService {
     pub fn clear_caches(&self) {
         self.caches.clear();
         self.plans.clear();
+        self.placements.clear();
     }
 
     /// The session's baseline calibration fingerprint (what cache keys
@@ -411,6 +525,39 @@ mod tests {
         assert_eq!(service.plan_memo_len(), 0);
         let again = service.plan(&p).unwrap();
         assert!(!again.memo_hit);
+    }
+
+    #[test]
+    fn placement_requests_memoize_and_replay_byte_identically() {
+        use crate::util::json::Json;
+        let service = PlannerService::new();
+        let body = r#"{"model":"llama3-8b","paper":true,"quantum":"1M","cap":"8M","threads":1,
+            "fleet":{"pools":[{"name":"east","device":"h100","nodes":1},
+                              {"name":"lab","device":"h200","nodes":1}]}}"#;
+        let p = PlacementParams::from_json(&Json::parse(body).unwrap()).unwrap();
+        let first = service.place(&p).unwrap();
+        assert!(!first.memo_hit);
+        assert_eq!(first.outcome.shapes_pruned, 1, "east/1x8 is dominated by the H200 pool");
+        let second = service.place(&p).unwrap();
+        assert!(second.memo_hit, "identical request must hit the placement memo");
+        assert!(Arc::ptr_eq(&first.outcome, &second.outcome));
+        let a = planner_report::placement_result_json(&first.outcome).render();
+        assert_eq!(a, planner_report::placement_result_json(&second.outcome).render());
+        let st = service.stats();
+        assert_eq!(st.placement_requests, 2);
+        assert_eq!(st.placement_memo_hits, 1);
+        assert_eq!(st.shapes_pruned, 1, "memo hits do not re-count pruning");
+        assert_eq!(st.plan_requests, 0, "placement does not ride the plan path");
+        assert!(st.probes_streamed > 0);
+        assert_eq!(service.placement_memo_len(), 1);
+        assert!(service.placement_memo_bytes() > 0);
+        // Eviction keeps the session usable, and a cold re-run of the
+        // same request serializes to the same bytes.
+        service.clear_caches();
+        assert_eq!(service.placement_memo_len(), 0);
+        let again = service.place(&p).unwrap();
+        assert!(!again.memo_hit);
+        assert_eq!(planner_report::placement_result_json(&again.outcome).render(), a);
     }
 
     #[test]

@@ -17,10 +17,10 @@
 //! accounting lives in `/v1/health`, never in results).
 
 use crate::config::presets::RunPreset;
-use crate::config::{AcMode, ClusterConfig, CpMethod, ParallelConfig};
+use crate::config::{AcMode, ClusterConfig, CpMethod, FleetSpec, ParallelConfig};
 use crate::engine::{refit, Calibration, Measurements, RefitInfo};
 use crate::model::ModelDims;
-use crate::planner::{PlanRequest, SweepDims};
+use crate::planner::{PlacementRequest, PlanRequest, SweepDims};
 use crate::schedule::{simulate, Quantities};
 use crate::util::fmt::{parse_tokens, tokens, GIB};
 use crate::util::json::Json;
@@ -390,6 +390,76 @@ impl WallsParams {
     }
 }
 
+/// `/v1/placement` parameters: the job's plan fields plus the fleet to
+/// place it on. Two plan fields are deliberately *not* placement fields:
+/// `gpus` (the fleet's pools size the candidate shapes) and `cold`
+/// (placement always plans symbolically — the `--cold` reference path is
+/// a single-cluster measurement switch).
+#[derive(Debug, Clone)]
+pub struct PlacementParams {
+    pub fleet: FleetSpec,
+    pub plan: PlanParams,
+    /// Skip dominated shapes before any probe (default true); the ranked
+    /// placements are identical either way.
+    pub prune: bool,
+}
+
+impl PlacementParams {
+    pub fn from_json(j: &Json) -> Result<PlacementParams, String> {
+        if j.get("gpus").is_some() {
+            return Err(
+                "`gpus` is not a placement field — the fleet's pools size the shapes".to_string()
+            );
+        }
+        if j.get("cold").is_some() {
+            return Err(
+                "`cold` is not a placement field — placement always plans symbolically"
+                    .to_string(),
+            );
+        }
+        let plan = PlanParams::from_json_with(j, &["fleet", "prune"])?;
+        let fleet_j = j
+            .get("fleet")
+            .ok_or_else(|| "missing `fleet` (a {\"pools\": [...]} object)".to_string())?;
+        let fleet = FleetSpec::from_json(fleet_j).map_err(|e| format!("fleet: {e}"))?;
+        let prune = match j.get("prune") {
+            None => true,
+            Some(v) => v.as_bool().ok_or_else(|| "`prune` must be true or false".to_string())?,
+        };
+        Ok(PlacementParams { fleet, plan, prune })
+    }
+
+    /// Canonical echo: the plan canonical minus the non-placement fields,
+    /// plus `prune` and the fleet's canonical form — equal fleets render
+    /// equal bytes, so the session placement memo keys correctly.
+    pub fn canonical(&self) -> Json {
+        let mut c = self.plan.canonical();
+        if let Json::Obj(pairs) = &mut c {
+            pairs.retain(|(k, _)| k != "gpus" && k != "cold");
+            pairs.push(("prune".to_string(), Json::Bool(self.prune)));
+            pairs.push(("fleet".to_string(), self.fleet.canonical()));
+        }
+        c
+    }
+
+    /// Convert to the evaluator's placement request (reusing the plan
+    /// validation — lattice bounds, sweep lists, refit build — wholesale).
+    pub fn to_request(&self) -> Result<(PlacementRequest, Vec<String>), String> {
+        let (p, warnings) = self.plan.to_request()?;
+        let mut req = PlacementRequest::new(p.model, self.fleet.clone());
+        req.reference_s = p.reference_s;
+        req.quantum = p.quantum;
+        req.cap_s = p.cap_s;
+        req.dims = p.dims;
+        req.calibration = p.calibration;
+        req.refit = p.refit;
+        req.threads = p.threads;
+        req.prune = self.prune;
+        req.feasibility_only = p.feasibility_only;
+        Ok((req, warnings))
+    }
+}
+
 /// `/v1/refit` parameters: fit a calibration from measurements without
 /// planning. The model comes from the measurements file itself.
 #[derive(Debug, Clone)]
@@ -678,6 +748,45 @@ mod tests {
         let bad = Json::parse(r#"{"at":[true]}"#).unwrap();
         let err = WallsParams::from_json(&bad).unwrap_err();
         assert!(err.contains("bad `at` entry"), "{err}");
+    }
+
+    #[test]
+    fn parse_placement_params_and_canonical() {
+        let body = r#"{"model":"llama3-8b","paper":true,"quantum":"1M","cap":"4M",
+            "fleet":{"pools":[{"name":"east","device":"h100","nodes":2},
+                              {"name":"lab","device":"h200","nodes":1}]}}"#;
+        let p = PlacementParams::from_json(&Json::parse(body).unwrap()).unwrap();
+        assert_eq!(p.fleet.pools.len(), 2);
+        assert!(p.prune, "pruning defaults on");
+        let c = p.canonical().render();
+        assert!(!c.contains("\"gpus\""), "gpus is not a placement input: {c}");
+        assert!(!c.contains("\"cold\""), "{c}");
+        assert!(c.contains("\"prune\":true"), "{c}");
+        assert!(c.contains("\"fleet\":{\"pools\":["), "{c}");
+        // An explicit prune:true spells the same canonical bytes — the
+        // placement memo must not split on default-vs-explicit.
+        let explicit = body.replacen("{\"model\"", "{\"prune\":true,\"model\"", 1);
+        let q = PlacementParams::from_json(&Json::parse(&explicit).unwrap()).unwrap();
+        assert_eq!(q.canonical().render(), c);
+
+        let (req, warnings) = p.to_request().unwrap();
+        assert!(warnings.is_empty());
+        assert!(req.prune);
+        assert_eq!(req.quantum, 1 << 20);
+        assert_eq!(req.cap_s, 4 << 20);
+        assert_eq!(req.fleet.total_gpus(), 24);
+
+        // Non-placement and malformed fields fail loudly.
+        for (bad, want) in [
+            (r#"{"gpus":8,"fleet":{"pools":[{"device":"h100","nodes":1}]}}"#, "not a placement"),
+            (r#"{"cold":true,"fleet":{"pools":[{"device":"h100","nodes":1}]}}"#, "not a placement"),
+            (r#"{"model":"llama3-8b"}"#, "missing `fleet`"),
+            (r#"{"fleet":{"pools":[]}}"#, "at least one pool"),
+            (r#"{"fleet":{"pools":[{"device":"h100","nodes":1}]},"prune":"yes"}"#, "true or false"),
+        ] {
+            let err = PlacementParams::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert!(err.contains(want), "`{bad}` -> {err}");
+        }
     }
 
     #[test]
