@@ -135,7 +135,14 @@ fn main() {
     // Sustained keep-alive HTTP path: the same warm request over ONE
     // persistent connection through the real daemon — wire parse +
     // memo hit + response framing per iteration, no TCP handshake.
-    // Gated as warm_http_requests_per_sec.
+    // Gated as warm_http_requests_per_sec. The failpoint layer must be
+    // compiled in but disarmed here: diff_bench.py gating this number
+    // is the proof that the fault-injection sites cost nothing on the
+    // hot path (a single relaxed atomic load each).
+    assert!(
+        !untied_ulysses::util::failpoint::enabled(),
+        "bench must run with failpoints disarmed"
+    );
     let http_service = std::sync::Arc::new(PlannerService::new());
     let handle = http::serve(
         std::sync::Arc::clone(&http_service),

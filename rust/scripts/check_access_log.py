@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Validate a serve-plan JSONL access log and cross-check it against a
+`/metrics` scrape.
+
+Schema: every line must parse as JSON and carry exactly the documented
+fields — ts_ms, endpoint, status, ms, bytes, memo (hit|miss|none),
+shed, deadline, quarantined, keep — with the right types.
+
+Cross-check: for each endpoint, the number of non-shed log lines must
+equal `repro_http_requests_total{endpoint="..."}` from the scrape.
+Shed lines (queue-full / draining refusals) are excluded — they are
+answered from the accept loop and never reach the request counters.
+The `metrics` endpoint itself is allowed one extra log line: the scrape
+that produced the metrics file is logged after its own text rendered.
+
+Usage: check_access_log.py <access.jsonl> [--metrics metrics.txt]
+"""
+
+import argparse
+import json
+import re
+import sys
+from collections import Counter
+
+SCHEMA = {
+    "ts_ms": int,
+    "endpoint": str,
+    "status": int,
+    "ms": (int, float),
+    "bytes": int,
+    "memo": str,
+    "shed": bool,
+    "deadline": bool,
+    "quarantined": bool,
+    "keep": bool,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("log")
+    ap.add_argument("--metrics", help="a /metrics text scrape to cross-check against")
+    args = ap.parse_args()
+
+    counts: Counter = Counter()
+    sheds = 0
+    with open(args.log) as f:
+        for lineno, raw in enumerate(f, 1):
+            raw = raw.strip()
+            if not raw:
+                continue
+            try:
+                line = json.loads(raw)
+            except ValueError as e:
+                print(f"FAIL: line {lineno} is not JSON ({e}): {raw[:200]}")
+                return 1
+            if set(line) != set(SCHEMA):
+                print(f"FAIL: line {lineno} fields {sorted(line)} != {sorted(SCHEMA)}")
+                return 1
+            for key, want in SCHEMA.items():
+                # bool is an int subclass: check it first and exactly.
+                ok = (
+                    isinstance(line[key], bool)
+                    if want is bool
+                    else not isinstance(line[key], bool) and isinstance(line[key], want)
+                )
+                if not ok:
+                    print(f"FAIL: line {lineno} field `{key}` = {line[key]!r}: wrong type")
+                    return 1
+            if line["memo"] not in ("hit", "miss", "none"):
+                print(f"FAIL: line {lineno} memo {line['memo']!r}")
+                return 1
+            if not 100 <= line["status"] <= 599:
+                print(f"FAIL: line {lineno} status {line['status']}")
+                return 1
+            if line["shed"]:
+                sheds += 1
+            else:
+                counts[line["endpoint"]] += 1
+
+    total = sum(counts.values())
+    print(f"{total + sheds} access-log lines valid ({total} served, {sheds} shed)")
+    if not args.metrics:
+        return 0
+
+    metric: Counter = Counter()
+    pat = re.compile(r'^repro_http_requests_total\{endpoint="(\w+)"\}\s+(\d+)$')
+    with open(args.metrics) as f:
+        for raw in f:
+            m = pat.match(raw.strip())
+            if m:
+                metric[m.group(1)] = int(m.group(2))
+    if not metric:
+        print("FAIL: no repro_http_requests_total counters in the metrics scrape")
+        return 1
+    ok = True
+    for ep in sorted(set(counts) | set(metric)):
+        logged, scraped = counts[ep], metric[ep]
+        slack = 1 if ep == "metrics" else 0
+        if not scraped <= logged <= scraped + slack:
+            print(f"FAIL: endpoint `{ep}`: {logged} log lines vs {scraped} in /metrics")
+            ok = False
+    if ok:
+        print(f"access log agrees with /metrics across {len(set(counts) | set(metric))} endpoints")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,6 +3,14 @@
 `/v1/plan` response for the same preset.
 
 Usage: diff_service_plan.py <cli_plan.json> <service_response.json>
+       diff_service_plan.py <cli_plan.json> <http://host:port/v1/plan>
+           [--body JSON] [--retries N]
+
+The second argument is either a saved response file or the live
+endpoint; with a URL the script POSTs `--body` (default: the 8x-H100
+llama3-8b preset) itself, retrying transient connection resets
+`--retries` times with backoff so a daemon mid-accept-loop hiccup does
+not fail the lane.
 
 The service's `result` is the CLI plan JSON minus run accounting
 (`simulations`, `feasibility_probes`, `priced_sims`, `symbolic_models`,
@@ -13,8 +21,12 @@ ranking, same floats. Exits non-zero on any divergence — this is the CI
 gate that the daemon and the CLI can never drift apart.
 """
 
+import argparse
 import json
 import sys
+import time
+import urllib.error
+import urllib.request
 
 ACCOUNTING = (
     "simulations",
@@ -26,13 +38,42 @@ ACCOUNTING = (
     "wall_s",
 )
 
+DEFAULT_BODY = '{"model":"llama3-8b","gpus":8}'
+
+
+def fetch(url: str, body: str, retries: int):
+    delay = 0.2
+    for attempt in range(1, retries + 1):
+        try:
+            req = urllib.request.Request(
+                url, data=body.encode(), headers={"Content-Type": "application/json"}
+            )
+            with urllib.request.urlopen(req, timeout=60) as r:
+                return json.loads(r.read().decode())
+        except urllib.error.HTTPError as e:
+            # A structured 4xx/5xx envelope is a real answer, not a
+            # transient reset: surface it for the divergence report.
+            return json.loads(e.read().decode())
+        except (urllib.error.URLError, OSError, ValueError) as e:
+            if attempt == retries:
+                raise
+            print(f"attempt {attempt}/{retries} failed ({e}); retrying")
+            time.sleep(delay)
+            delay = min(delay * 2, 2.0)
+
 
 def main() -> int:
-    if len(sys.argv) != 3:
-        print(__doc__)
-        return 2
-    cli = json.load(open(sys.argv[1]))
-    resp = json.load(open(sys.argv[2]))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("cli_plan")
+    ap.add_argument("service", help="response file, or the /v1/plan URL to POST")
+    ap.add_argument("--body", default=DEFAULT_BODY)
+    ap.add_argument("--retries", type=int, default=1)
+    args = ap.parse_args()
+    cli = json.load(open(args.cli_plan))
+    if args.service.startswith(("http://", "https://")):
+        resp = fetch(args.service, args.body, max(1, args.retries))
+    else:
+        resp = json.load(open(args.service))
     if resp.get("api_version") != 1:
         print(f"FAIL: service response api_version {resp.get('api_version')!r} != 1")
         return 1

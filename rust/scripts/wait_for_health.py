@@ -1,0 +1,49 @@
+#!/usr/bin/env python3
+"""Poll a serve-plan daemon's `/v1/health` until it answers 200 with
+`"status": "ok"`, retrying with exponential backoff. Replaces the CI
+fixed-sleep `for i in $(seq ...); do curl ...; sleep ...` boot loops:
+fast when the daemon is fast, patient when the runner is slow, and a
+loud non-zero exit when the daemon never comes up.
+
+Usage: wait_for_health.py <health_url> [--retries N] [--backoff SECONDS]
+
+`--backoff` is the first delay; it doubles per attempt, capped at 2s.
+"""
+
+import argparse
+import json
+import sys
+import time
+import urllib.error
+import urllib.request
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("url", help="e.g. http://127.0.0.1:8077/v1/health")
+    ap.add_argument("--retries", type=int, default=40)
+    ap.add_argument("--backoff", type=float, default=0.1)
+    args = ap.parse_args()
+    delay = args.backoff
+    last = "no attempt made"
+    for attempt in range(1, args.retries + 1):
+        try:
+            with urllib.request.urlopen(args.url, timeout=5) as r:
+                body = r.read().decode()
+                if r.status == 200 and json.loads(body).get("status") == "ok":
+                    print(f"healthy after {attempt} attempt(s)")
+                    return 0
+                last = f"status {r.status}"
+        except (urllib.error.URLError, OSError, ValueError) as e:
+            last = str(e)
+        time.sleep(delay)
+        delay = min(delay * 2, 2.0)
+    print(
+        f"FAIL: {args.url} not healthy after {args.retries} attempts (last: {last})",
+        file=sys.stderr,
+    )
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -22,11 +22,13 @@
 //!       dimension: dominated shapes skipped before any probe, model fits
 //!       shared across identical hardware, shapes ranked by context wall
 //!   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
-//!       [--cache-budget 1G] [--keep-alive-timeout 5]
+//!       [--cache-budget 1G] [--keep-alive-timeout 5] [--request-timeout 0]
+//!       [--drain-timeout 30] [--access-log access.jsonl]
 //!       planner-service daemon: POST /v1/plan | /v1/walls | /v1/frontier
 //!       | /v1/refit | /v1/placement, GET /v1/health | /metrics —
 //!       persistent cross-request caches under a tiered-LRU byte budget,
-//!       HTTP/1.1 keep-alive
+//!       HTTP/1.1 keep-alive, request deadlines (504, nothing partial
+//!       published), SIGTERM graceful drain, JSONL access logs
 //! Functional runtime (needs `make artifacts`):
 //!   repro parity        distributed UPipe vs monolithic logits check
 //!   repro train N       N training steps of the SMALL model (AOT step)
@@ -167,6 +169,8 @@ repro — Untied Ulysses (UPipe) reproduction
       see examples/fleet_h100_h200.json
   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
                    [--cache-budget 1G] [--keep-alive-timeout 5]
+                   [--request-timeout 0] [--drain-timeout 30]
+                   [--access-log access.jsonl]
       planner-as-a-service daemon over one warm session: POST /v1/plan,
       /v1/walls (add \"at\" for a point query, or \"at\": [s1, s2, ...]
       for a whole capacity curve), /v1/frontier, /v1/refit, /v1/placement
@@ -178,7 +182,16 @@ repro — Untied Ulysses (UPipe) reproduction
       is served from memos byte-for-byte, and a warm walls query streams
       zero probes. HTTP/1.1 keep-alive with pipelining
       (--keep-alive-timeout seconds idle, 0 = one-shot connections).
-      api_version 1; see README and docs/OPERATIONS.md.
+      --request-timeout N answers 504 deadline_exceeded after N seconds
+      of evaluation (partial accounting in the envelope, no partial
+      state published; 0 = no deadline); clients may tighten per request
+      with \"deadline_ms\". SIGTERM drains gracefully: new connections
+      answer 503 `draining`, in-flight requests get up to
+      --drain-timeout seconds, then a final stats JSON line prints and
+      the process exits 0 on a clean drain. --access-log appends one
+      JSON line per request. REPRO_FAILPOINTS=site=policy;... arms
+      deterministic fault injection (testing only). api_version 1; see
+      README and docs/OPERATIONS.md.
   repro compose       UPipe x FPDT composition study (paper §5.3.2)
   repro parity
   repro train [steps=100]
@@ -411,10 +424,29 @@ fn cmd_place(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Set by the C signal handler on SIGTERM; the serve-plan poll loop
+/// notices and starts a graceful drain. A relaxed atomic store is
+/// async-signal-safe.
+static TERM: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+extern "C" fn on_sigterm(_sig: i32) {
+    TERM.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+}
+
+const SIGTERM: i32 = 15;
+
 fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
     use untied_ulysses::service::{http, PlannerService};
+    use untied_ulysses::util::failpoint;
     use untied_ulysses::util::fmt::gib;
 
+    // A malformed REPRO_FAILPOINTS spec refuses to start — a daemon
+    // running a fault schedule it did not understand is worse than none.
+    failpoint::init_from_env().map_err(anyhow::Error::msg)?;
     let args = Args::new(rest);
     let port = args.u64("--port")?.unwrap_or(8077);
     anyhow::ensure!(port <= u16::MAX as u64, "bad --port {port}");
@@ -428,13 +460,21 @@ fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
     };
     // Seconds of keep-alive idle window; 0 disables keep-alive.
     let keep_alive = args.u64("--keep-alive-timeout")?.unwrap_or(5);
+    // Seconds before an in-flight evaluation answers 504; 0 = no deadline.
+    let request_timeout = args.u64("--request-timeout")?.unwrap_or(0);
+    // Seconds SIGTERM waits for in-flight requests before detaching them.
+    let drain_timeout = args.u64("--drain-timeout")?.unwrap_or(30);
+    let access_log = args.str("--access-log").map(std::path::PathBuf::from);
     let opts = http::ServeOptions {
         threads,
         keep_alive_timeout: std::time::Duration::from_secs(keep_alive),
+        access_log: access_log.clone(),
         ..http::ServeOptions::default()
     };
-    let service = std::sync::Arc::new(PlannerService::with_budget(budget));
-    let handle = http::serve(service, &format!("{bind}:{port}"), opts)?;
+    let timeout = (request_timeout > 0).then(|| std::time::Duration::from_secs(request_timeout));
+    let service =
+        std::sync::Arc::new(PlannerService::with_budget(budget).with_request_timeout(timeout));
+    let handle = http::serve(std::sync::Arc::clone(&service), &format!("{bind}:{port}"), opts)?;
     println!("repro planner service listening on http://{}", handle.addr());
     println!(
         "  POST /v1/plan | /v1/walls | /v1/frontier | /v1/refit | /v1/placement   \
@@ -454,9 +494,52 @@ fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
     } else {
         println!("  keep-alive: {keep_alive}s idle timeout");
     }
+    if request_timeout > 0 {
+        println!(
+            "  request timeout: {request_timeout}s (504 deadline_exceeded; \
+             no partial state published)"
+        );
+    }
+    if let Some(p) = &access_log {
+        println!("  access log: {} (JSONL, one line per request)", p.display());
+    }
+    if failpoint::enabled() {
+        println!("  failpoints: armed from REPRO_FAILPOINTS (testing only)");
+    }
     use std::io::Write;
     std::io::stdout().flush().ok();
-    handle.join();
+    // Graceful lifecycle: instead of joining forever, poll a SIGTERM
+    // flag so `kill -TERM` drains (finish in-flight requests, refuse new
+    // connections with 503 `draining`) and exits 0 within roughly
+    // --drain-timeout.
+    unsafe { signal(SIGTERM, on_sigterm) };
+    while !TERM.load(std::sync::atomic::Ordering::Relaxed) {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    eprintln!("SIGTERM: draining (up to {drain_timeout}s for in-flight requests)");
+    let d = handle.drain(std::time::Duration::from_secs(drain_timeout));
+    let s = service.stats();
+    println!(
+        "{{\"event\":\"shutdown\",\"drained\":{},\"in_flight_at_deadline\":{},\
+         \"drain_refusals\":{},\"plan_requests\":{},\"plan_memo_hits\":{},\
+         \"placement_requests\":{},\"point_queries\":{},\"probes_streamed\":{},\
+         \"cells_quarantined\":{}}}",
+        d.drained,
+        d.in_flight_at_deadline,
+        d.refused,
+        s.plan_requests,
+        s.plan_memo_hits,
+        s.placement_requests,
+        s.point_queries,
+        s.probes_streamed,
+        s.cells_quarantined
+    );
+    std::io::stdout().flush().ok();
+    anyhow::ensure!(
+        d.drained,
+        "drain timeout: {} requests still in flight",
+        d.in_flight_at_deadline
+    );
     Ok(())
 }
 

@@ -74,6 +74,8 @@ use crate::schedule::{
     feasibility_with, method_seq_cap, peak_probe_with, simulate_cached, timing_sample_with,
     timing_with, CellKey, FamilyKey, Quantities, TraceCache,
 };
+use crate::util::cancel::CancelToken;
+use crate::util::failpoint;
 use crate::util::fmt::GIB;
 use crate::util::pool::parallel_map;
 use crate::util::stripe::StripedMap;
@@ -115,6 +117,12 @@ pub struct PlanRequest {
     /// Walls only: skip all reference-length/max-context pricing
     /// (phase 2). Throughput, peak-GiB and Pareto fields stay `None`.
     pub feasibility_only: bool,
+    /// Cooperative deadline, checked between cells. An expired token
+    /// makes remaining cells return empty placeholders, suppresses every
+    /// memo insert for cells evaluated after expiry (all-or-nothing:
+    /// nothing partial is ever published), and sets
+    /// [`PlanOutcome::cancelled`]. The default never cancels.
+    pub cancel: CancelToken,
 }
 
 impl PlanRequest {
@@ -132,6 +140,7 @@ impl PlanRequest {
             warm_start: true,
             symbolic: true,
             feasibility_only: false,
+            cancel: CancelToken::none(),
         }
     }
 }
@@ -200,6 +209,11 @@ pub struct PlanOutcome {
     pub time_fallbacks: u64,
     /// Was this a walls-only sweep (no phase-2 pricing)?
     pub feasibility_only: bool,
+    /// The request's deadline expired before the sweep finished: some
+    /// configs are empty placeholders, nothing was memoized after
+    /// expiry, and the caller must not publish or serialize this
+    /// outcome as a plan (the service answers a structured 504).
+    pub cancelled: bool,
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub wall_s: f64,
@@ -516,6 +530,7 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         match probe_memo.get(&key) {
             Some(p) => p,
             None => {
+                failpoint::fire_or_panic("planner.probe");
                 let p = peak_probe_with(&preset, &calib);
                 probes.fetch_add(1, Ordering::Relaxed);
                 probe_memo.insert(key, p)
@@ -542,6 +557,7 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
     // The last sample is always held out; `None` (unclean samples or
     // drift) sends the family back to bisection.
     let fit_model = |parallel: &ParallelConfig| -> Option<PeakModel> {
+        failpoint::fire_or_panic("planner.fit");
         let c = parallel.cp_degree.max(1);
         let sample = |i: u64| -> Option<PeakSample> {
             let pr = probe(parallel, i * quantum);
@@ -586,6 +602,7 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         if let Some(r) = report_memo.get(&key) {
             return r;
         }
+        failpoint::fire_or_panic("planner.price");
         let tkey: TimeKey = (key.0.family(), parallel.micro_batch, parallel.pin_memory);
         if req.symbolic && time_models.get(&tkey).is_some() {
             // Streamed-exact pricing, whether the family's model fitted
@@ -609,6 +626,21 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
     let ok = |r: &StepReport| !r.oom && r.failed.is_none();
 
     let mut evaluated = parallel_map(&space, req.threads, |_, p| {
+        // Cooperative deadline check between cells: past expiry the
+        // remaining cells return empty placeholders and publish nothing
+        // — the caller sees `cancelled` and never serializes them.
+        if req.cancel.is_cancelled() {
+            return ConfigPlan {
+                parallel: p.clone(),
+                max_context: None,
+                hit_cap: false,
+                max_ctx_peak_gib: None,
+                max_ctx_tok_s_gpu: None,
+                ref_peak_gib: None,
+                ref_tok_s_gpu: None,
+                pareto: false,
+            };
+        }
         let wkey: WarmKey = p.method;
         let fam = CellKey::new(&preset_of(p, quantum), &calib).family();
         let wall_key: WallKey = (fam, p.micro_batch, p.pin_memory, quantum, cap);
@@ -659,10 +691,14 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
             let hint = if req.warm_start { warm.get(&wkey) } else { None };
             bisect_max_from(quantum, cap, hint, |s| feasible(p, s))
         };
-        if memoized_wall.is_none() {
+        // All-or-nothing publication: a deadline that expired while this
+        // cell evaluated suppresses its memo inserts too, so a 504 can
+        // never leave freshly-written session state behind.
+        let expired = req.cancel.is_cancelled();
+        if memoized_wall.is_none() && !expired {
             caches.walls.insert(wall_key, max);
         }
-        if req.warm_start {
+        if req.warm_start && !expired {
             // First finisher seeds the family; later fallback cells
             // gallop from it. An infeasible family still seeds the
             // bottom of the range.
@@ -671,7 +707,7 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         let (mut max_peak, mut max_tput) = (None, None);
         let mut ref_peak = None;
         let mut ref_tput = None;
-        if !req.feasibility_only {
+        if !req.feasibility_only && !expired {
             // Reference cell first: a pricing family's first priced cell
             // is its anchor sim, and the reference length sits in ample
             // headroom where step time is polynomial — anchoring at the
@@ -757,6 +793,7 @@ pub fn plan_with(req: &PlanRequest, caches: &PlannerCaches) -> PlanOutcome {
         time_models: tfit,
         time_fallbacks: tfall,
         feasibility_only: req.feasibility_only,
+        cancelled: req.cancel.is_cancelled(),
         // Per-call deltas: the session's trace cache outlives the request.
         cache_hits: cache.hits() - trace_hits0,
         cache_misses: cache.misses() - trace_misses0,
@@ -818,6 +855,10 @@ pub struct WallsAtOutcome {
     pub from_walls: u64,
     pub from_models: u64,
     pub from_probes: u64,
+    /// The request's deadline expired before every cell answered: cold
+    /// cells were skipped without probing (and memoized nothing), so the
+    /// caller must answer a structured 504 instead of serializing this.
+    pub cancelled: bool,
 }
 
 /// Point capacity query: "is sequence length `seq` trainable?" for every
@@ -876,12 +917,18 @@ pub fn walls_at(req: &PlanRequest, seq: u64, caches: &PlannerCaches) -> WallsAtO
                 && m.predict_feasible(s_lat / c, qd.hbm_limit, qd.host_ram_for_offload());
             return cell(ok, predicted, WallSource::Model);
         }
-        // Cold tier: one streamed probe, memoized under its CellKey.
+        // Cold tier: one streamed probe, memoized under its CellKey. An
+        // expired deadline skips the probe (and the memo insert) — the
+        // placeholder row is never serialized, the service answers 504.
+        if req.cancel.is_cancelled() {
+            return cell(false, predicted, WallSource::Probe);
+        }
         let preset = preset_of(p, s_lat);
         let key = CellKey::new(&preset, &calib);
         let pr = match caches.probe_memo.get(&key) {
             Some(pr) => pr,
             None => {
+                failpoint::fire_or_panic("planner.probe");
                 probes.fetch_add(1, Ordering::Relaxed);
                 caches.probe_memo.insert(key, peak_probe_with(&preset, &calib))
             }
@@ -908,6 +955,7 @@ pub fn walls_at(req: &PlanRequest, seq: u64, caches: &PlannerCaches) -> WallsAtO
         from_walls: from[0],
         from_models: from[1],
         from_probes: from[2],
+        cancelled: req.cancel.is_cancelled(),
         cells,
     }
 }
@@ -1087,6 +1135,9 @@ pub struct PlacementRequest {
     pub prune: bool,
     /// Walls-only placement: each shape's sweep skips phase-2 pricing.
     pub feasibility_only: bool,
+    /// Cooperative deadline, copied into every shape's inner
+    /// [`PlanRequest`]; see [`PlanRequest::cancel`].
+    pub cancel: CancelToken,
 }
 
 impl PlacementRequest {
@@ -1103,6 +1154,7 @@ impl PlacementRequest {
             threads: 0,
             prune: true,
             feasibility_only: false,
+            cancel: CancelToken::none(),
         }
     }
 }
@@ -1185,6 +1237,9 @@ pub struct PlacementOutcome {
     pub refit: Option<RefitInfo>,
     pub prune: bool,
     pub feasibility_only: bool,
+    /// The request's deadline expired before every shape finished; see
+    /// [`PlanOutcome::cancelled`].
+    pub cancelled: bool,
     pub wall_s: f64,
 }
 
@@ -1259,6 +1314,7 @@ pub fn place_with(req: &PlacementRequest, caches: &PlannerCaches) -> PlacementOu
         r.refit = req.refit.clone();
         r.threads = 1;
         r.feasibility_only = req.feasibility_only;
+        r.cancel = req.cancel;
         r
     };
     let todo: Vec<usize> =
@@ -1336,6 +1392,7 @@ pub fn place_with(req: &PlacementRequest, caches: &PlannerCaches) -> PlacementOu
         refit: req.refit.clone(),
         prune: req.prune,
         feasibility_only: req.feasibility_only,
+        cancelled: req.cancel.is_cancelled(),
         wall_s: t0.elapsed().as_secs_f64(),
     }
 }

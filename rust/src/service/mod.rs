@@ -25,19 +25,85 @@
 pub mod http;
 pub mod wire;
 
+use std::collections::HashMap;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::engine::{Calibration, Measurements, RefitInfo};
 use crate::model::ModelDims;
 use crate::planner::{
     place_with, plan_with, walls_at, PlacementOutcome, PlanOutcome, PlannerCaches, WallsAtOutcome,
 };
+use crate::util::cancel::CancelToken;
+use crate::util::failpoint;
 use crate::util::stripe::StripedMap;
 
 pub use wire::{
     MeasurementsSource, PlacementParams, PlanParams, RefitParams, WallsParams, API_VERSION,
 };
+
+/// Typed service failure: what went wrong, in a shape the HTTP layer can
+/// map to a status code (400 / 504 / 503 / 500) and the CLI can print.
+/// `Display` renders the same human-readable strings the service has
+/// always returned, so error text stays wire-stable.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The request could not be validated or evaluated (the historical
+    /// `Err(String)` paths, verbatim).
+    BadRequest(String),
+    /// The request's deadline expired mid-evaluation. Carries partial
+    /// accounting — the work the request ran before expiry — and
+    /// guarantees nothing reached any memo tier after the deadline
+    /// passed (inserts are all-or-nothing per tier).
+    DeadlineExceeded { probes_streamed: u64, sims_priced: u64, prices_modeled: u64 },
+    /// A prior evaluation of this exact request panicked; the cell is
+    /// tombstoned. Retry after the bounded backoff instead of poisoning
+    /// a worker again.
+    Quarantined { retry_after_s: u64 },
+    /// A service-boundary failure (e.g. an injected memo-insert fault):
+    /// the request computed but could not publish; nothing partial was
+    /// left behind.
+    Internal(String),
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::BadRequest(m) | ServiceError::Internal(m) => f.write_str(m),
+            ServiceError::DeadlineExceeded { probes_streamed, sims_priced, prices_modeled } => {
+                write!(
+                    f,
+                    "deadline exceeded before evaluation finished \
+                     (ran {probes_streamed} probes, {sims_priced} priced sims, \
+                     {prices_modeled} modeled prices; no partial state was published)"
+                )
+            }
+            ServiceError::Quarantined { retry_after_s } => write!(
+                f,
+                "request is quarantined after a prior evaluation panic; \
+                 retry after {retry_after_s}s"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
+
+impl From<String> for ServiceError {
+    fn from(m: String) -> Self {
+        ServiceError::BadRequest(m)
+    }
+}
+
+/// A quarantined cell's tombstone: requests for this canonical key are
+/// refused until `until`, with exponentially growing (bounded) backoff
+/// per consecutive panic.
+struct Tombstone {
+    until: Instant,
+    strikes: u32,
+}
 
 /// One plan request's answer: the (possibly memoized) outcome plus the
 /// request's deterministic notes. `memo_hit` is observability, never part
@@ -88,6 +154,9 @@ pub struct ServiceStats {
     pub cache_evictions: u64,
     /// Total entries dropped by the valve across every tier.
     pub entries_evicted: u64,
+    /// Canonical request cells currently tombstoned after an evaluation
+    /// panic (active quarantine entries at snapshot time).
+    pub cells_quarantined: u64,
 }
 
 /// A long-lived planner session: persistent cross-request caches behind
@@ -122,6 +191,14 @@ pub struct PlannerService {
     /// Byte budget for every cache tier combined (`usize::MAX` =
     /// unbounded); see [`PlannerService::enforce_budget`].
     cache_budget: usize,
+    /// Server-wide evaluation deadline applied to every request (`None`
+    /// = unbounded). A per-request `deadline_ms` tightens but never
+    /// loosens this.
+    request_timeout: Option<Duration>,
+    /// Panic tombstones keyed by canonical request bytes: a cell whose
+    /// evaluation panicked answers `Quarantined` (bounded retry-after)
+    /// instead of poisoning another worker, until its tombstone lapses.
+    quarantine: Mutex<HashMap<String, Tombstone>>,
     plan_requests: AtomicU64,
     plan_memo_hits: AtomicU64,
     placement_requests: AtomicU64,
@@ -142,6 +219,10 @@ pub struct PlannerService {
 /// it with `--cache-budget`.
 pub const DEFAULT_CACHE_BUDGET: usize = 1 << 30;
 
+/// Ceiling on a quarantine tombstone's retry-after: backoff doubles per
+/// consecutive panic (1s, 2s, 4s, ...) but never exceeds this.
+pub const MAX_QUARANTINE_SECS: u64 = 60;
+
 impl PlannerService {
     pub fn new() -> Self {
         Self::with_budget(DEFAULT_CACHE_BUDGET)
@@ -155,6 +236,8 @@ impl PlannerService {
             plans: StripedMap::default(),
             placements: StripedMap::default(),
             cache_budget,
+            request_timeout: None,
+            quarantine: Mutex::new(HashMap::new()),
             plan_requests: AtomicU64::new(0),
             plan_memo_hits: AtomicU64::new(0),
             placement_requests: AtomicU64::new(0),
@@ -168,6 +251,71 @@ impl PlannerService {
             cache_evictions: AtomicU64::new(0),
             entries_evicted: AtomicU64::new(0),
         }
+    }
+
+    /// Apply a server-wide evaluation deadline to every subsequent
+    /// request (`None` = unbounded). The `repro serve-plan` CLI wires
+    /// `--request-timeout` through this.
+    pub fn with_request_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.request_timeout = timeout;
+        self
+    }
+
+    /// The cancel token for one request: the tighter of the server-wide
+    /// timeout and the request's own `deadline_ms`.
+    fn token_for(&self, deadline_ms: Option<u64>) -> CancelToken {
+        let server = match self.request_timeout {
+            Some(t) => CancelToken::with_deadline(t),
+            None => CancelToken::none(),
+        };
+        let client = match deadline_ms {
+            Some(ms) => CancelToken::with_deadline(Duration::from_millis(ms)),
+            None => CancelToken::none(),
+        };
+        CancelToken::earliest(server, client)
+    }
+
+    /// Refuse a request whose canonical cell carries an active panic
+    /// tombstone. A lapsed tombstone lets the retry through (strikes are
+    /// kept, so a repeat panic backs off longer).
+    fn quarantine_check(&self, key: &str) -> Result<(), ServiceError> {
+        let q = self.quarantine.lock().unwrap();
+        if let Some(t) = q.get(key) {
+            let now = Instant::now();
+            if now < t.until {
+                let retry_after_s = (t.until - now).as_secs() + 1;
+                return Err(ServiceError::Quarantined { retry_after_s });
+            }
+        }
+        Ok(())
+    }
+
+    /// Record an evaluation panic for `key`: backoff doubles per
+    /// consecutive strike, bounded at [`MAX_QUARANTINE_SECS`].
+    fn quarantine_strike(&self, key: &str) {
+        let mut q = self.quarantine.lock().unwrap();
+        let now = Instant::now();
+        let t = q.entry(key.to_string()).or_insert(Tombstone { until: now, strikes: 0 });
+        t.strikes = t.strikes.saturating_add(1);
+        let secs = if t.strikes >= 7 {
+            MAX_QUARANTINE_SECS
+        } else {
+            (1u64 << (t.strikes - 1)).min(MAX_QUARANTINE_SECS)
+        };
+        t.until = now + Duration::from_secs(secs);
+    }
+
+    /// A clean recompute heals the cell: drop its tombstone (and strike
+    /// history) entirely.
+    fn quarantine_clear(&self, key: &str) {
+        self.quarantine.lock().unwrap().remove(key);
+    }
+
+    /// Active panic tombstones right now (surfaced by `/v1/health` as
+    /// `cells_quarantined`).
+    pub fn cells_quarantined(&self) -> u64 {
+        let now = Instant::now();
+        self.quarantine.lock().unwrap().values().filter(|t| t.until > now).count() as u64
     }
 
     /// The size-aware pressure valve, called at the end of every request
@@ -211,7 +359,15 @@ impl PlannerService {
     /// against the session caches, reusing whatever earlier requests left
     /// behind. A memoized key implies the params validated when first
     /// computed, so the hit path skips `to_request` entirely.
-    pub fn plan(&self, params: &PlanParams) -> Result<PlanReply, String> {
+    ///
+    /// Failure modes beyond validation: an expired deadline answers
+    /// [`ServiceError::DeadlineExceeded`] *before* any counter or memo
+    /// insert for the partial work (the evaluator already refused to
+    /// publish to its tiers); an evaluation panic records a quarantine
+    /// strike and re-raises, so the caller's firewall sees the original
+    /// panic while subsequent identical requests get
+    /// [`ServiceError::Quarantined`] until the tombstone lapses.
+    pub fn plan(&self, params: &PlanParams) -> Result<PlanReply, ServiceError> {
         self.plan_requests.fetch_add(1, Ordering::Relaxed);
         let key = params.canonical().render();
         if let Some(hit) = self.plans.get(&key) {
@@ -222,10 +378,30 @@ impl PlannerService {
                 warnings: hit.warnings.clone(),
             });
         }
-        let (req, warnings) = params.to_request()?;
-        let out = plan_with(&req, &self.caches);
+        self.quarantine_check(&key)?;
+        let (mut req, warnings) = params.to_request()?;
+        req.cancel = self.token_for(params.deadline_ms);
+        let out = match catch_unwind(AssertUnwindSafe(|| plan_with(&req, &self.caches))) {
+            Ok(out) => out,
+            Err(payload) => {
+                self.quarantine_strike(&key);
+                resume_unwind(payload);
+            }
+        };
+        self.quarantine_clear(&key);
+        if out.cancelled {
+            // Cells evaluated *before* expiry did publish to their tiers
+            // (they were complete); run the valve so the budget invariant
+            // holds, then answer with partial accounting only.
+            self.enforce_budget();
+            return Err(ServiceError::DeadlineExceeded {
+                probes_streamed: out.feasibility_probes,
+                sims_priced: out.priced_sims,
+                prices_modeled: out.modeled_prices,
+            });
+        }
         if out.configs.is_empty() {
-            return Err(format!(
+            return Err(ServiceError::BadRequest(format!(
                 "no valid configurations: the requested sweep dims (tp {:?}, mb {:?}, ac {:?}) \
                  fit neither {} nor the {}-GPU cluster",
                 req.dims.tp_degrees,
@@ -233,11 +409,18 @@ impl PlannerService {
                 req.dims.ac_modes.iter().map(|a| a.label()).collect::<Vec<_>>(),
                 req.model.name,
                 req.cluster.total_gpus()
-            ));
+            )));
         }
         self.probes_streamed.fetch_add(out.feasibility_probes, Ordering::Relaxed);
         self.sims_priced.fetch_add(out.priced_sims, Ordering::Relaxed);
         self.prices_modeled.fetch_add(out.modeled_prices, Ordering::Relaxed);
+        if let Err(e) = failpoint::fire("service.memo_insert") {
+            // The sweep ran but the answer cannot publish: keep the memo
+            // all-or-nothing (no entry at all) and still run the valve so
+            // the budget invariant holds between requests.
+            self.enforce_budget();
+            return Err(ServiceError::Internal(e));
+        }
         // First writer wins on a racing key; both callers get the
         // canonical entry either way. The entry's weight is its heap
         // payload: the key bytes, the per-config rows, and the notes.
@@ -265,7 +448,7 @@ impl PlannerService {
     /// evaluator runs against the session caches, so model fits laid
     /// down by earlier plan or placement requests on the same hardware
     /// are reused across requests, not just across shapes.
-    pub fn place(&self, params: &PlacementParams) -> Result<PlacementReply, String> {
+    pub fn place(&self, params: &PlacementParams) -> Result<PlacementReply, ServiceError> {
         self.placement_requests.fetch_add(1, Ordering::Relaxed);
         let key = params.canonical().render();
         if let Some(hit) = self.placements.get(&key) {
@@ -276,17 +459,34 @@ impl PlannerService {
                 warnings: hit.warnings.clone(),
             });
         }
-        let (req, warnings) = params.to_request()?;
-        let out = place_with(&req, &self.caches);
+        self.quarantine_check(&key)?;
+        let (mut req, warnings) = params.to_request()?;
+        req.cancel = self.token_for(params.plan.deadline_ms);
+        let out = match catch_unwind(AssertUnwindSafe(|| place_with(&req, &self.caches))) {
+            Ok(out) => out,
+            Err(payload) => {
+                self.quarantine_strike(&key);
+                resume_unwind(payload);
+            }
+        };
+        self.quarantine_clear(&key);
+        if out.cancelled {
+            self.enforce_budget();
+            return Err(ServiceError::DeadlineExceeded {
+                probes_streamed: out.feasibility_probes,
+                sims_priced: out.anchor_sims,
+                prices_modeled: out.modeled_prices,
+            });
+        }
         if out.placements.iter().all(|sp| sp.plan.as_ref().map_or(true, |p| p.configs.is_empty())) {
-            return Err(format!(
+            return Err(ServiceError::BadRequest(format!(
                 "no valid configurations on any fleet shape: the requested sweep dims \
                  (tp {:?}, mb {:?}) fit {} on none of the {} candidate shapes",
                 req.dims.tp_degrees,
                 req.dims.micro_batches,
                 req.model.name,
                 out.shapes_total
-            ));
+            )));
         }
         self.probes_streamed.fetch_add(out.feasibility_probes, Ordering::Relaxed);
         self.sims_priced.fetch_add(out.anchor_sims, Ordering::Relaxed);
@@ -301,6 +501,10 @@ impl PlannerService {
         let payload = key.len()
             + rows * std::mem::size_of::<crate::planner::ConfigPlan>()
             + warnings.iter().map(String::len).sum::<usize>();
+        if let Err(e) = failpoint::fire("service.memo_insert") {
+            self.enforce_budget();
+            return Err(ServiceError::Internal(e));
+        }
         let entry = self.placements.insert_weighed(
             key,
             Arc::new(PlacementMemoEntry { outcome: Arc::new(out), warnings }),
@@ -317,7 +521,7 @@ impl PlannerService {
 
     /// Walls-only sweep (`POST /v1/walls` without `"at"`): the plan
     /// endpoint with pricing forced off.
-    pub fn walls_sweep(&self, params: &PlanParams) -> Result<PlanReply, String> {
+    pub fn walls_sweep(&self, params: &PlanParams) -> Result<PlanReply, ServiceError> {
         let mut p = params.clone();
         p.feasibility_only = true;
         self.plan(&p)
@@ -331,7 +535,7 @@ impl PlannerService {
         &self,
         params: &PlanParams,
         at: u64,
-    ) -> Result<(WallsAtOutcome, Vec<String>), String> {
+    ) -> Result<(WallsAtOutcome, Vec<String>), ServiceError> {
         let (mut outs, warnings) = self.walls_batch(params, &[at])?;
         Ok((outs.pop().expect("one point per query"), warnings))
     }
@@ -345,12 +549,35 @@ impl PlannerService {
         &self,
         params: &PlanParams,
         ats: &[u64],
-    ) -> Result<(Vec<WallsAtOutcome>, Vec<String>), String> {
-        let (req, warnings) = params.to_request()?;
+    ) -> Result<(Vec<WallsAtOutcome>, Vec<String>), ServiceError> {
+        let (mut req, warnings) = params.to_request()?;
+        req.cancel = self.token_for(params.deadline_ms);
+        let plan_key = params.canonical().render();
         let mut outs = Vec::with_capacity(ats.len());
+        let mut probes_before_expiry = 0u64;
         for &at in ats {
             self.point_queries.fetch_add(1, Ordering::Relaxed);
-            let q = walls_at(&req, at, &self.caches);
+            // Each point quarantines independently: a panic at one
+            // sequence length must not fence off the whole curve.
+            let key = format!("{plan_key}@{at}");
+            self.quarantine_check(&key)?;
+            let q = match catch_unwind(AssertUnwindSafe(|| walls_at(&req, at, &self.caches))) {
+                Ok(q) => q,
+                Err(payload) => {
+                    self.quarantine_strike(&key);
+                    resume_unwind(payload);
+                }
+            };
+            self.quarantine_clear(&key);
+            if q.cancelled {
+                self.enforce_budget();
+                return Err(ServiceError::DeadlineExceeded {
+                    probes_streamed: probes_before_expiry + q.probes,
+                    sims_priced: 0,
+                    prices_modeled: 0,
+                });
+            }
+            probes_before_expiry += q.probes;
             self.probes_streamed.fetch_add(q.probes, Ordering::Relaxed);
             outs.push(q);
         }
@@ -362,7 +589,7 @@ impl PlannerService {
     /// (`POST /v1/refit`). The model comes from the measurements payload;
     /// the returned fingerprint is what a follow-up plan request carrying
     /// the same measurements will key its caches under.
-    pub fn refit(&self, params: &RefitParams) -> Result<RefitReply, String> {
+    pub fn refit(&self, params: &RefitParams) -> Result<RefitReply, ServiceError> {
         self.refits.fetch_add(1, Ordering::Relaxed);
         let m = Measurements::parse(&params.measurements.text, &params.measurements.source)?;
         let model = ModelDims::by_name(&m.model)
@@ -385,6 +612,7 @@ impl PlannerService {
             prices_modeled: self.prices_modeled.load(Ordering::Relaxed),
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             entries_evicted: self.entries_evicted.load(Ordering::Relaxed),
+            cells_quarantined: self.cells_quarantined(),
         }
     }
 
@@ -561,20 +789,59 @@ mod tests {
     }
 
     #[test]
-    fn service_errors_are_typed_strings() {
+    fn service_errors_are_typed() {
         let service = PlannerService::new();
         let mut p = small_params();
         p.model = "nope".into();
         let err = service.plan(&p).unwrap_err();
-        assert!(err.contains("unknown model"), "{err}");
+        assert!(matches!(err, ServiceError::BadRequest(_)), "{err}");
+        assert!(err.to_string().contains("unknown model"), "{err}");
         let mut p = small_params();
         p.gpus = 12; // not 1..=8 and not a whole number of 8-GPU nodes
         assert!(service.plan(&p).is_err());
         let bad = RefitParams {
             measurements: MeasurementsSource { source: "t".into(), text: "{]".into() },
         };
-        assert!(service.refit(&bad).is_err());
+        assert!(matches!(service.refit(&bad).unwrap_err(), ServiceError::BadRequest(_)));
     }
+
+    #[test]
+    fn expired_deadline_answers_504_and_publishes_nothing() {
+        let service = PlannerService::new();
+        let mut p = small_params();
+        // deadline_ms: 0 is the deterministic already-expired token — the
+        // evaluator answers placeholders for every cell and publishes to
+        // no tier.
+        p.deadline_ms = Some(0);
+        let err = service.plan(&p).unwrap_err();
+        assert!(
+            matches!(err, ServiceError::DeadlineExceeded { probes_streamed: 0, .. }),
+            "an instantly expired sweep runs zero probes: {err}"
+        );
+        assert_eq!(service.plan_memo_len(), 0, "cancelled request must not memoize");
+        let walls_entries = service
+            .caches()
+            .tiers()
+            .iter()
+            .find(|t| t.name == "walls")
+            .map_or(0, |t| t.entries);
+        assert_eq!(walls_entries, 0, "cancelled request must not publish verified walls");
+        // The identical request (deadline_ms is outside the canonical
+        // key) recomputes cold — no partial state survived — then warms.
+        p.deadline_ms = None;
+        assert!(!service.plan(&p).unwrap().memo_hit, "no partial state may satisfy a retry");
+        assert!(service.plan(&p).unwrap().memo_hit);
+        // Batch point queries cancel the same way, publishing nothing.
+        let mut p = small_params();
+        p.deadline_ms = Some(0);
+        let err = service.walls_batch(&p, &[1 << 20, 2 << 20]).unwrap_err();
+        assert!(matches!(err, ServiceError::DeadlineExceeded { .. }), "{err}");
+    }
+
+    // Consumable-failpoint tests (panic quarantine, memo-insert fault)
+    // live in `tests/service_faults.rs`: arming `panic(1)`/`err(1)` on a
+    // production site is process-global, and a concurrent unrelated
+    // sweep in this binary could consume the charge.
 
     #[test]
     fn budget_evicts_bulk_tiers_but_never_walls_or_models() {

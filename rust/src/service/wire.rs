@@ -65,11 +65,17 @@ pub struct PlanParams {
     pub threads: usize,
     /// Optional Table-5-style measurements: plan with a refit calibration.
     pub measurements: Option<MeasurementsSource>,
+    /// Per-request deadline, milliseconds (additive in api_version 1).
+    /// Like `threads`, never part of the canonical echo: a deadline
+    /// cannot change result bytes — it only decides whether the request
+    /// finishes (200) or answers a structured 504 — so deadline variants
+    /// share memos and a memo hit still answers instantly.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Top-level fields `/v1/plan` accepts (walls adds `"at"` via
 /// [`PlanParams::from_json_with`]).
-const PLAN_FIELDS: [&str; 15] = [
+const PLAN_FIELDS: [&str; 16] = [
     "api_version",
     "model",
     "gpus",
@@ -85,6 +91,7 @@ const PLAN_FIELDS: [&str; 15] = [
     "feasibility_only",
     "threads",
     "measurements",
+    "deadline_ms",
 ];
 
 impl PlanParams {
@@ -106,6 +113,7 @@ impl PlanParams {
             feasibility_only: false,
             threads: 0,
             measurements: None,
+            deadline_ms: None,
         }
     }
 
@@ -192,6 +200,15 @@ impl PlanParams {
             let t = v.as_u64().ok_or_else(|| "`threads` must be a whole number".to_string())?;
             p.threads = t.min(1024) as usize;
         }
+        if let Some(v) = j.get("deadline_ms") {
+            // 0 is legal and deterministic: the deadline is already
+            // expired, so any request that must compute answers 504
+            // (memo hits still answer — they publish nothing new).
+            let d = v
+                .as_u64()
+                .ok_or_else(|| "`deadline_ms` must be a whole number of milliseconds".to_string())?;
+            p.deadline_ms = Some(d);
+        }
         if let Some(m) = j.get("measurements") {
             if !matches!(m, Json::Obj(_)) {
                 return Err("`measurements` must be a measurements object".to_string());
@@ -207,7 +224,8 @@ impl PlanParams {
     /// spelling per request — equal requests render equal bytes, which is
     /// both the response's `request` field and the session's plan-memo
     /// key. Measurements appear as a content fingerprint, not the full
-    /// payload.
+    /// payload; `threads` and `deadline_ms` are excluded — neither can
+    /// change result bytes, so their variants share one memo entry.
     pub fn canonical(&self) -> Json {
         let mut p = self.clone();
         p.normalize();
@@ -890,6 +908,7 @@ mod tests {
             time_models: 9,
             time_fallbacks: 9,
             feasibility_only: false,
+            cancelled: false,
             cache_hits: 9,
             cache_misses: 9,
             wall_s: 123.456,

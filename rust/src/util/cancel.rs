@@ -1,0 +1,91 @@
+//! Cooperative cancellation for evaluator loops: a [`CancelToken`] is a
+//! deadline carried by value through `plan_with` / `walls_at` /
+//! `place_with`, checked between cells (never mid-kernel — cells are
+//! short, so cancellation latency is one cell's evaluation). A request
+//! that observes its token expired stops computing, **publishes nothing
+//! to any memo tier**, and reports `cancelled` so the service can
+//! answer a structured 504 with partial accounting.
+
+use std::time::{Duration, Instant};
+
+/// A by-value deadline. `none()` never cancels — the default for every
+/// request — so the evaluator checks cost one branch on the happy path.
+#[derive(Clone, Copy, Debug)]
+pub struct CancelToken {
+    deadline: Option<Instant>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::none()
+    }
+}
+
+impl CancelToken {
+    /// A token that never expires.
+    pub fn none() -> Self {
+        CancelToken { deadline: None }
+    }
+
+    /// Expire this long from now. `Duration::ZERO` is already expired —
+    /// the deterministic "immediate 504" used by tests.
+    pub fn with_deadline(timeout: Duration) -> Self {
+        CancelToken { deadline: Some(Instant::now() + timeout) }
+    }
+
+    /// Whether the deadline has passed.
+    pub fn is_cancelled(&self) -> bool {
+        self.deadline.is_some_and(|d| Instant::now() >= d)
+    }
+
+    /// Time left before expiry (`None` = unbounded).
+    pub fn remaining(&self) -> Option<Duration> {
+        self.deadline.map(|d| d.saturating_duration_since(Instant::now()))
+    }
+
+    /// The tighter of two tokens: a per-request `deadline_ms` combines
+    /// with the server-wide `--request-timeout` by taking whichever
+    /// expires first.
+    pub fn earliest(a: CancelToken, b: CancelToken) -> CancelToken {
+        match (a.deadline, b.deadline) {
+            (Some(x), Some(y)) => CancelToken { deadline: Some(x.min(y)) },
+            (Some(x), None) | (None, Some(x)) => CancelToken { deadline: Some(x) },
+            (None, None) => CancelToken::none(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_cancels() {
+        assert!(!CancelToken::none().is_cancelled());
+        assert!(CancelToken::none().remaining().is_none());
+    }
+
+    #[test]
+    fn zero_deadline_is_already_expired() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        assert!(t.is_cancelled());
+        assert_eq!(t.remaining(), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn generous_deadline_is_live() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert!(!t.is_cancelled());
+        assert!(t.remaining().unwrap() > Duration::from_secs(3000));
+    }
+
+    #[test]
+    fn earliest_picks_the_tighter_deadline() {
+        let slack = CancelToken::with_deadline(Duration::from_secs(3600));
+        let tight = CancelToken::with_deadline(Duration::ZERO);
+        assert!(CancelToken::earliest(slack, tight).is_cancelled());
+        assert!(CancelToken::earliest(tight, slack).is_cancelled());
+        assert!(!CancelToken::earliest(slack, CancelToken::none()).is_cancelled());
+        assert!(!CancelToken::earliest(CancelToken::none(), CancelToken::none()).is_cancelled());
+    }
+}

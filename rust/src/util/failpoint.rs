@@ -1,0 +1,316 @@
+//! Deterministic failpoints: named fault-injection sites planted at the
+//! evaluator/cache/IO boundaries (streamed probe, model fit, pricing
+//! sim, memo insert, socket write) so tests can prove the service
+//! degrades predictably — and recovers byte-identically — under
+//! injected faults.
+//!
+//! The registry is **zero-cost when disabled**: every [`fire`] call is
+//! one relaxed atomic load until something configures a site, so the
+//! layer can stay compiled into release builds (the bench suite gates
+//! exactly this: `warm_http_requests_per_sec` with failpoints present
+//! but off).
+//!
+//! Per-site policies, written `site=policy` and joined with `;`:
+//!
+//! | policy          | behavior at the site                               |
+//! |-----------------|----------------------------------------------------|
+//! | `off`           | no-op                                              |
+//! | `err(n)`        | fail the next `n` passages, then disarm            |
+//! | `panic(n)`      | panic on the next `n` passages, then disarm        |
+//! | `delay(ms)`     | sleep `ms` on every passage (slow-path injection)   |
+//! | `flaky(seed,p)` | fail each passage with probability `p`% drawn from  |
+//! |                 | a per-site PRNG seeded with `seed` — a *seeded      |
+//! |                 | schedule*: deterministic given seed and call order  |
+//!
+//! Activation: `REPRO_FAILPOINTS="planner.probe=err(2);http.write=delay(5)"`
+//! in the environment (read once by [`init_from_env`], which the CLI
+//! daemon calls at startup) or programmatically via [`configure`] /
+//! [`set`] from tests. At sites inside infallible evaluator closures,
+//! [`fire_or_panic`] escalates an injected error to a panic — the
+//! service-level firewall catches it, quarantines the cell, and the
+//! request answers a structured 500.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use super::rng::Rng;
+
+/// Fast-path gate: `false` means no site anywhere is armed and every
+/// [`fire`] is a single relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// What a site does when execution passes through it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Policy {
+    Off,
+    /// Fail the next `n` passages with an injected error, then disarm.
+    Err(u64),
+    /// Panic on the next `n` passages, then disarm.
+    Panic(u64),
+    /// Sleep this many milliseconds on every passage.
+    Delay(u64),
+    /// Seeded schedule: fail each passage with probability `percent`%
+    /// drawn from a PRNG seeded with `seed` (deterministic given seed
+    /// and call order).
+    Flaky { seed: u64, percent: u64 },
+}
+
+struct SiteState {
+    policy: Policy,
+    /// Per-site deterministic stream for `Flaky` draws.
+    rng: Rng,
+    /// Times the policy actually fired (injected an error, panic, or
+    /// delay) — test assertions read this via [`triggered`].
+    triggered: u64,
+}
+
+fn registry() -> MutexGuard<'static, HashMap<String, SiteState>> {
+    static REGISTRY: OnceLock<Mutex<HashMap<String, SiteState>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap()
+}
+
+/// Arm one site. `Policy::Off` disarms it (the registry entry stays so
+/// its `triggered` count survives for assertions).
+pub fn set(site: &str, policy: Policy) {
+    let mut reg = registry();
+    let seed = match &policy {
+        Policy::Flaky { seed, .. } => *seed,
+        _ => 0,
+    };
+    let entry = reg.entry(site.to_string()).or_insert_with(|| SiteState {
+        policy: Policy::Off,
+        rng: Rng::new(seed),
+        triggered: 0,
+    });
+    if let Policy::Flaky { seed, .. } = &policy {
+        entry.rng = Rng::new(*seed);
+    }
+    entry.policy = policy;
+    // Arming any site opens the fast-path gate; it closes again only on
+    // `clear_all` — a disarmed-by-decrement site just takes the (cheap)
+    // slow path to a no-op.
+    if reg.values().any(|s| s.policy != Policy::Off) {
+        ENABLED.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Parse and apply a spec: `site=policy[;site=policy...]`. Unknown
+/// policies are loud errors — a typo must not silently disable a fault
+/// schedule a test depends on.
+pub fn configure(spec: &str) -> Result<(), String> {
+    for part in spec.split(';') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (site, policy) = part
+            .split_once('=')
+            .ok_or_else(|| format!("failpoint spec `{part}` is not site=policy"))?;
+        set(site.trim(), parse_policy(policy.trim())?);
+    }
+    Ok(())
+}
+
+fn parse_policy(s: &str) -> Result<Policy, String> {
+    let (head, arg) = match s.split_once('(') {
+        Some((h, rest)) => {
+            let inner = rest
+                .strip_suffix(')')
+                .ok_or_else(|| format!("failpoint policy `{s}` is missing `)`"))?;
+            (h, Some(inner))
+        }
+        None => (s, None),
+    };
+    let num = |a: Option<&str>, default: u64| -> Result<u64, String> {
+        match a {
+            None => Ok(default),
+            Some(v) => {
+                v.trim().parse().map_err(|_| format!("failpoint policy `{s}`: bad number"))
+            }
+        }
+    };
+    match head {
+        "off" => Ok(Policy::Off),
+        "err" => Ok(Policy::Err(num(arg, 1)?)),
+        "panic" => Ok(Policy::Panic(num(arg, 1)?)),
+        "delay" => Ok(Policy::Delay(num(arg, 1)?)),
+        "flaky" => {
+            let inner = arg.ok_or_else(|| format!("failpoint policy `{s}` needs (seed,pct)"))?;
+            let (a, b) = inner
+                .split_once(',')
+                .ok_or_else(|| format!("failpoint policy `{s}` needs (seed,pct)"))?;
+            Ok(Policy::Flaky { seed: num(Some(a), 0)?, percent: num(Some(b), 0)?.min(100) })
+        }
+        _ => Err(format!("unknown failpoint policy `{s}`")),
+    }
+}
+
+/// Disarm every site, reset counters, and close the fast-path gate.
+pub fn clear_all() {
+    let mut reg = registry();
+    reg.clear();
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Read `REPRO_FAILPOINTS` once at daemon startup. A malformed spec is
+/// returned as an error so the CLI can refuse to start with a fault
+/// schedule it did not understand.
+pub fn init_from_env() -> Result<(), String> {
+    match std::env::var("REPRO_FAILPOINTS") {
+        Ok(spec) if !spec.trim().is_empty() => configure(&spec),
+        _ => Ok(()),
+    }
+}
+
+/// Whether any site has ever been armed this process (the gate is open).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// How many times `site`'s policy actually fired.
+pub fn triggered(site: &str) -> u64 {
+    if !enabled() {
+        return 0;
+    }
+    registry().get(site).map_or(0, |s| s.triggered)
+}
+
+enum Action {
+    Pass,
+    Fail,
+    Panic,
+    Sleep(Duration),
+}
+
+fn evaluate(site: &str) -> Action {
+    let mut reg = registry();
+    let Some(state) = reg.get_mut(site) else { return Action::Pass };
+    match state.policy {
+        Policy::Off => Action::Pass,
+        Policy::Err(n) => {
+            state.policy = if n > 1 { Policy::Err(n - 1) } else { Policy::Off };
+            state.triggered += 1;
+            Action::Fail
+        }
+        Policy::Panic(n) => {
+            state.policy = if n > 1 { Policy::Panic(n - 1) } else { Policy::Off };
+            state.triggered += 1;
+            Action::Panic
+        }
+        Policy::Delay(ms) => {
+            state.triggered += 1;
+            Action::Sleep(Duration::from_millis(ms))
+        }
+        Policy::Flaky { percent, .. } => {
+            if state.rng.below(100) < percent {
+                state.triggered += 1;
+                Action::Fail
+            } else {
+                Action::Pass
+            }
+        }
+    }
+}
+
+/// Pass through the site named `site`. `Ok(())` when disarmed (the
+/// common case: one relaxed load); an armed `err`/`flaky` policy
+/// returns the injected error, `delay` sleeps, `panic` panics. The
+/// registry lock is released before sleeping or panicking.
+pub fn fire(site: &str) -> Result<(), String> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return Ok(());
+    }
+    match evaluate(site) {
+        Action::Pass => Ok(()),
+        Action::Fail => Err(format!("failpoint `{site}`: injected error")),
+        Action::Panic => panic!("failpoint `{site}`: injected panic"),
+        Action::Sleep(d) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+    }
+}
+
+/// [`fire`] for infallible contexts (evaluator closures that return
+/// plain values): an injected *error* escalates to a panic too, so the
+/// service-level firewall is the single recovery path for both.
+pub fn fire_or_panic(site: &str) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Err(e) = fire(site) {
+        panic!("{e}");
+    }
+}
+
+/// Failpoint state is process-global; every test that arms a site (in
+/// this module, the service layer, or the HTTP layer — they share one
+/// test binary) funnels through this lock so arming in one test never
+/// leaks into another running concurrently.
+#[cfg(test)]
+pub(crate) fn test_serial() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disarmed_sites_pass_and_report_zero() {
+        let _g = test_serial();
+        clear_all();
+        assert!(!enabled());
+        assert!(fire("nowhere").is_ok());
+        assert_eq!(triggered("nowhere"), 0);
+    }
+
+    #[test]
+    fn err_policy_fires_n_times_then_disarms() {
+        let _g = test_serial();
+        clear_all();
+        set("t.err", Policy::Err(2));
+        assert!(enabled());
+        assert!(fire("t.err").is_err());
+        assert!(fire("t.err").is_err());
+        assert!(fire("t.err").is_ok(), "err(2) disarms after two firings");
+        assert_eq!(triggered("t.err"), 2);
+        clear_all();
+    }
+
+    #[test]
+    fn spec_round_trip_and_bad_specs_are_loud() {
+        let _g = test_serial();
+        clear_all();
+        configure("a.b=err(1); c.d = delay(0) ;;e.f=flaky(7,50)").unwrap();
+        assert!(fire("a.b").is_err());
+        assert!(fire("a.b").is_ok());
+        assert!(fire("c.d").is_ok(), "delay(0) sleeps zero and passes");
+        assert_eq!(triggered("c.d"), 1);
+        // flaky(seed,50): deterministic stream — same seed, same verdicts.
+        let first: Vec<bool> = (0..16).map(|_| fire("e.f").is_err()).collect();
+        set("e.f", Policy::Flaky { seed: 7, percent: 50 });
+        let second: Vec<bool> = (0..16).map(|_| fire("e.f").is_err()).collect();
+        assert_eq!(first, second, "seeded schedule replays identically");
+        assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+        assert!(configure("a=b=c").is_err());
+        assert!(configure("x.y=explode").is_err());
+        assert!(configure("x.y=err(two)").is_err());
+        clear_all();
+    }
+
+    #[test]
+    fn panic_policy_panics_and_disarms() {
+        let _g = test_serial();
+        clear_all();
+        set("t.panic", Policy::Panic(1));
+        let caught = std::panic::catch_unwind(|| fire_or_panic("t.panic"));
+        assert!(caught.is_err(), "panic(1) must panic");
+        fire_or_panic("t.panic"); // disarmed: passes
+        assert_eq!(triggered("t.panic"), 1);
+        clear_all();
+    }
+}

@@ -3,6 +3,8 @@
 //! emission, the bench harness and the worker pool live here).
 
 pub mod bench;
+pub mod cancel;
+pub mod failpoint;
 pub mod fmt;
 pub mod json;
 pub mod pool;

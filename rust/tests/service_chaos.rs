@@ -1,0 +1,294 @@
+//! Chaos soak for the planner daemon: the PR-6 soak's request mix
+//! replayed over real HTTP while a seeded fault schedule injects
+//! evaluator errors, handler panics, memo-insert failures, socket write
+//! faults, slow-loris connections, and mid-request disconnects. The
+//! properties under test are the fault-tolerance contract:
+//!
+//! - the daemon survives every fault (health answers at the end);
+//! - the cache byte budget holds between requests no matter which
+//!   request died mid-flight;
+//! - panicked cells are quarantined (bounded count) and recover once
+//!   the faults stop;
+//! - any 200 answered during or after the chaos is byte-identical to a
+//!   fault-free reference session — injected faults never publish a
+//!   wrong value.
+//!
+//! Iteration count comes from `CHAOS_ITERS` (default 40; CI runs a
+//! bounded pass) so one binary serves both a quick gate and a longer
+//! local soak.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use untied_ulysses::service::http::{serve, ServeOptions};
+use untied_ulysses::service::PlannerService;
+use untied_ulysses::util::failpoint;
+use untied_ulysses::util::rng::Rng;
+
+/// Small on purpose (matches the PR-6 soak): the valve must work under
+/// fault traffic too.
+const BUDGET: usize = 4 << 20;
+
+/// The request mix: four plan shapes plus a batch walls curve and a
+/// point query, all on the same llama3-8b/8-GPU session.
+fn plan_bodies() -> Vec<String> {
+    let mut out = Vec::new();
+    for (cap, feas) in [("8M", "true"), ("6M", "true"), ("4M", "true"), ("8M", "false")] {
+        out.push(format!(
+            "{{\"model\":\"llama3-8b\",\"gpus\":8,\"quantum\":\"1M\",\"cap\":\"{cap}\",\
+             \"feasibility_only\":{feas},\"threads\":2}}"
+        ));
+    }
+    out
+}
+
+fn walls_bodies() -> Vec<String> {
+    vec![
+        "{\"model\":\"llama3-8b\",\"gpus\":8,\"quantum\":\"1M\",\"cap\":\"8M\",\
+         \"feasibility_only\":true,\"threads\":2,\"at\":[\"2M\",\"4M\"]}"
+            .into(),
+        "{\"model\":\"llama3-8b\",\"gpus\":8,\"quantum\":\"1M\",\"cap\":\"6M\",\
+         \"feasibility_only\":true,\"threads\":2,\"at\":\"3M\"}"
+            .into(),
+    ]
+}
+
+/// One-shot POST; returns `(status, body)`, or `None` when the daemon's
+/// reply was cut off (an injected `http.write` fault truncates exactly
+/// one response — the *connection* dies, the daemon must not).
+fn post(addr: SocketAddr, path: &str, body: &str) -> Option<(u16, String)> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    s.write_all(raw.as_bytes()).ok()?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).ok()?;
+    let status: u16 = resp.split_whitespace().nth(1)?.parse().ok()?;
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Some((status, body))
+}
+
+fn get(addr: SocketAddr, path: &str) -> Option<(u16, String)> {
+    let mut s = TcpStream::connect(addr).ok()?;
+    s.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let raw = format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+    s.write_all(raw.as_bytes()).ok()?;
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).ok()?;
+    let status: u16 = resp.split_whitespace().nth(1)?.parse().ok()?;
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    Some((status, body))
+}
+
+/// A client that sends half a request head, stalls briefly, and hangs
+/// up. The daemon must answer-or-close without wedging a worker.
+fn slow_loris(addr: SocketAddr) {
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = s.write_all(b"POST /v1/plan HTTP/1.1\r\nHost: t\r\nContent-Le");
+        std::thread::sleep(Duration::from_millis(50));
+    } // dropped: EOF mid-head
+}
+
+/// A client that declares a body and disconnects halfway through it.
+fn mid_body_disconnect(addr: SocketAddr) {
+    if let Ok(mut s) = TcpStream::connect(addr) {
+        let _ = s.write_all(
+            b"POST /v1/plan HTTP/1.1\r\nHost: t\r\nContent-Length: 64\r\n\r\n{\"model\":",
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    } // dropped: EOF mid-body
+}
+
+#[test]
+fn chaos_soak_daemon_survives_faults_and_stays_deterministic() {
+    let iters: u64 = std::env::var("CHAOS_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(40);
+    let plan_bodies = plan_bodies();
+    let walls_bodies = walls_bodies();
+
+    // Phase 1 — fault-free reference daemon: the golden bytes every 200
+    // during the chaos run must reproduce.
+    let mut goldens: HashMap<String, String> = HashMap::new();
+    {
+        let service = Arc::new(PlannerService::with_budget(BUDGET));
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = handle.addr();
+        for b in plan_bodies.iter() {
+            let (st, body) = post(addr, "/v1/plan", b).expect("reference plan reply");
+            assert_eq!(st, 200, "reference plan failed: {body}");
+            goldens.insert(b.clone(), body);
+        }
+        for b in walls_bodies.iter() {
+            let (st, body) = post(addr, "/v1/walls", b).expect("reference walls reply");
+            assert_eq!(st, 200, "reference walls failed: {body}");
+            goldens.insert(b.clone(), body);
+        }
+        handle.stop();
+    }
+
+    // Phase 2 — chaos daemon: same mix, seeded fault schedule.
+    failpoint::clear_all();
+    let service = Arc::new(PlannerService::with_budget(BUDGET));
+    let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = handle.addr();
+    let mut rng = Rng::new(0xC4A05);
+    let mut served_200 = 0u64;
+    let mut faulted = 0u64;
+
+    // Deterministic opening move — one injected panic — so the run
+    // always exercises the quarantine path no matter what the seeded
+    // draws below pick.
+    failpoint::set("planner.probe", failpoint::Policy::Panic(1));
+    let (st, body) = post(addr, "/v1/plan", &plan_bodies[0]).expect("panic reply");
+    assert_eq!(st, 500, "{body}");
+    assert!(body.contains("\"code\": \"internal\""), "{body}");
+    failpoint::clear_all();
+    let (st, body) = post(addr, "/v1/plan", &plan_bodies[0]).expect("quarantined reply");
+    assert_eq!(st, 503, "{body}");
+    assert!(body.contains("\"code\": \"quarantined\""), "{body}");
+    assert_eq!(service.cells_quarantined(), 1);
+    faulted += 2;
+
+    for i in 0..iters {
+        // Re-draw the fault schedule each iteration (cleared first so
+        // schedules never stack unpredictably).
+        failpoint::clear_all();
+        match rng.below(8) {
+            0 => failpoint::configure(&format!("planner.probe=flaky({i},30)")).unwrap(),
+            1 => failpoint::set("planner.price", failpoint::Policy::Err(2)),
+            2 => failpoint::set("planner.probe", failpoint::Policy::Panic(1)),
+            3 => failpoint::set("service.memo_insert", failpoint::Policy::Err(1)),
+            4 => failpoint::set("http.write", failpoint::Policy::Err(1)),
+            5 => failpoint::set("planner.probe", failpoint::Policy::Delay(1)),
+            _ => {} // fault-free iteration
+        }
+        match rng.below(10) {
+            0 => slow_loris(addr),
+            1 => mid_body_disconnect(addr),
+            2 => {
+                // A deadline tight enough to expire mid-evaluation: the
+                // answer is 200 (memo hit beat the clock) or a 504 that
+                // published nothing.
+                let b = rng.choice(&plan_bodies);
+                let with_deadline = format!("{},\"deadline_ms\":1}}", &b[..b.len() - 1]);
+                if let Some((st, body)) = post(addr, "/v1/plan", &with_deadline) {
+                    // 200 (memo beat the clock), 504 (expired), or the
+                    // iteration's armed fault got there first (500/503).
+                    assert!(
+                        st == 200 || st == 504 || st == 500 || st == 503,
+                        "iteration {i}: {st} {body}"
+                    );
+                    if st == 200 {
+                        // `deadline_ms` is excluded from the canonical
+                        // key, so the bytes match the plain request.
+                        assert_eq!(&body, goldens.get(b.as_str()).unwrap());
+                    }
+                }
+            }
+            3..=4 => {
+                let b = rng.choice(&walls_bodies);
+                match post(addr, "/v1/walls", b) {
+                    Some((200, body)) => {
+                        served_200 += 1;
+                        assert_eq!(
+                            &body,
+                            goldens.get(b.as_str()).unwrap(),
+                            "iteration {i}: walls bytes drifted under faults"
+                        );
+                    }
+                    Some((st, body)) => {
+                        faulted += 1;
+                        assert!(
+                            st == 500 || st == 503,
+                            "iteration {i}: unexpected walls status {st}: {body}"
+                        );
+                    }
+                    None => faulted += 1, // write fault cut the reply
+                }
+            }
+            _ => {
+                let b = rng.choice(&plan_bodies);
+                match post(addr, "/v1/plan", b) {
+                    Some((200, body)) => {
+                        served_200 += 1;
+                        assert_eq!(
+                            &body,
+                            goldens.get(b.as_str()).unwrap(),
+                            "iteration {i}: plan bytes drifted under faults"
+                        );
+                    }
+                    Some((st, body)) => {
+                        faulted += 1;
+                        assert!(
+                            st == 500 || st == 503,
+                            "iteration {i}: unexpected plan status {st}: {body}"
+                        );
+                    }
+                    None => faulted += 1,
+                }
+            }
+        }
+        // The budget valve held no matter how the request ended.
+        assert!(
+            service.cache_bytes() <= BUDGET,
+            "iteration {i}: {} bytes over the {BUDGET}-byte budget",
+            service.cache_bytes()
+        );
+        // Quarantine stays bounded: at most one tombstone per distinct
+        // canonical cell in the mix.
+        let q = service.cells_quarantined();
+        assert!(q <= 10, "iteration {i}: {q} cells quarantined");
+    }
+    failpoint::clear_all();
+
+    // Recovery: with faults gone, every quarantined cell must come back
+    // (strikes in this run are small, so retry-after is seconds).
+    let t0 = Instant::now();
+    for b in plan_bodies.iter().chain(walls_bodies.iter()) {
+        let path = if b.contains("\"at\"") { "/v1/walls" } else { "/v1/plan" };
+        loop {
+            match post(addr, path, b) {
+                Some((200, body)) => {
+                    assert_eq!(
+                        &body,
+                        goldens.get(b.as_str()).unwrap(),
+                        "post-chaos reply drifted from the fault-free reference"
+                    );
+                    break;
+                }
+                Some((503, _)) => {
+                    assert!(
+                        t0.elapsed() < Duration::from_secs(120),
+                        "quarantine never lifted for {b}"
+                    );
+                    std::thread::sleep(Duration::from_millis(500));
+                }
+                other => panic!("post-chaos reply for {b}: {other:?}"),
+            }
+        }
+    }
+    assert_eq!(service.cells_quarantined(), 0, "quarantine did not fully recover");
+
+    // The daemon is alive and its counters are sane.
+    let (st, health) = get(addr, "/v1/health").expect("final health");
+    assert_eq!(st, 200);
+    assert!(health.contains("\"cells_quarantined\": 0"), "{health}");
+    let (st, metrics) = get(addr, "/metrics").expect("final metrics");
+    assert_eq!(st, 200);
+    assert!(metrics.contains("repro_cells_quarantined 0"), "{metrics}");
+    handle.stop();
+    // The soak exercised both sides of the contract (the deterministic
+    // preamble guarantees `faulted`; the recovery loop guarantees warm
+    // 200s even if every randomized draw faulted).
+    println!("chaos soak: {served_200} healthy replies, {faulted} faulted, {iters} iterations");
+    assert!(faulted >= 2, "chaos run never injected a visible fault");
+}

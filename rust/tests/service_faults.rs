@@ -1,0 +1,134 @@
+//! Consumable-failpoint fault tests for the planner service, isolated
+//! in their own process: arming `panic(1)` / `err(1)` on a production
+//! site (`planner.probe`, `service.memo_insert`) is process-global, so
+//! these tests must not share a binary with unrelated concurrent sweeps
+//! that could consume the charge before the intended request reaches
+//! the site. Within this binary the tests serialize through a local
+//! gate for the same reason.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use untied_ulysses::service::http::{serve, ServeOptions};
+use untied_ulysses::service::wire;
+use untied_ulysses::service::{PlanParams, PlannerService, ServiceError, MAX_QUARANTINE_SECS};
+use untied_ulysses::util::failpoint::{self, Policy};
+
+fn serial() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    // A failed assertion in one test must not cascade as poison panics
+    // in the others — the first failure is the one worth reading.
+    let gate = GATE.get_or_init(|| Mutex::new(()));
+    gate.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn small_params() -> PlanParams {
+    let mut p = PlanParams::defaults("llama3-8b", 8);
+    p.quantum = 1 << 20;
+    p.cap_s = 8 << 20;
+    p.threads = 2;
+    p.feasibility_only = true;
+    p
+}
+
+const WARM_BODY: &str = r#"{"model":"llama3-8b","gpus":8,"quantum":"1M","cap":"8M",
+                   "feasibility_only":true,"threads":2}"#;
+
+fn roundtrip(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let status: u16 = resp.split_whitespace().nth(1).unwrap().parse().unwrap();
+    let body = resp.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (status, body)
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    let raw = format!(
+        "POST {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\
+         Content-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    roundtrip(addr, &raw)
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+    roundtrip(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"))
+}
+
+#[test]
+fn panicking_cell_is_quarantined_with_bounded_retry() {
+    let _g = serial();
+    failpoint::clear_all();
+    let service = PlannerService::new();
+    let p = small_params();
+    failpoint::set("planner.probe", Policy::Panic(1));
+    let caught = catch_unwind(AssertUnwindSafe(|| service.plan(&p)));
+    assert!(caught.is_err(), "the injected panic re-raises after the strike is recorded");
+    failpoint::clear_all();
+    assert_eq!(service.cells_quarantined(), 1);
+    assert_eq!(service.stats().cells_quarantined, 1);
+    match service.plan(&p).unwrap_err() {
+        ServiceError::Quarantined { retry_after_s } => {
+            assert!(retry_after_s <= MAX_QUARANTINE_SECS + 1, "bounded: {retry_after_s}s")
+        }
+        other => panic!("expected Quarantined, got {other}"),
+    }
+    // First strike backs off 1s; after the tombstone lapses, a clean
+    // recompute heals the cell and drops the strike history.
+    std::thread::sleep(Duration::from_millis(1100));
+    assert!(!service.plan(&p).unwrap().memo_hit);
+    assert_eq!(service.cells_quarantined(), 0, "clean recompute clears the tombstone");
+}
+
+#[test]
+fn injected_memo_insert_fault_is_internal_and_leaves_no_entry() {
+    let _g = serial();
+    failpoint::clear_all();
+    let service = PlannerService::new();
+    let p = small_params();
+    failpoint::set("service.memo_insert", Policy::Err(1));
+    let err = service.plan(&p).unwrap_err();
+    assert!(matches!(err, ServiceError::Internal(_)), "{err}");
+    assert!(err.to_string().contains("service.memo_insert"), "{err}");
+    assert_eq!(service.plan_memo_len(), 0, "failed publish is all-or-nothing");
+    assert_eq!(failpoint::triggered("service.memo_insert"), 1);
+    // Disarmed after one shot: the retry computes (warm, from the
+    // session caches the first attempt legitimately populated) and
+    // publishes.
+    assert!(!service.plan(&p).unwrap().memo_hit);
+    assert_eq!(service.plan_memo_len(), 1);
+    failpoint::clear_all();
+}
+
+#[test]
+fn http_panic_answers_golden_500_then_quarantined_503() {
+    let _g = serial();
+    failpoint::clear_all();
+    let service = Arc::new(PlannerService::new());
+    let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+    let addr = handle.addr();
+    // The panic firewall's 500 envelope, byte-stable (built here
+    // independently of the handler — clients pin these bytes).
+    failpoint::set("planner.probe", Policy::Panic(1));
+    let (st, body) = post(addr, "/v1/plan", WARM_BODY);
+    assert_eq!(st, 500, "{body}");
+    let golden = wire::error_envelope("internal", "request handler panicked").pretty() + "\n";
+    assert_eq!(body, golden);
+    failpoint::clear_all();
+    // The panicked cell is quarantined: the identical request answers
+    // 503 with a bounded retry-after, no recompute, and the health
+    // gauge shows the active tombstone.
+    let (st, body) = post(addr, "/v1/plan", WARM_BODY);
+    assert_eq!(st, 503, "{body}");
+    assert!(body.contains("\"code\": \"quarantined\""), "{body}");
+    assert!(body.contains("\"retry_after_s\""), "{body}");
+    let (st, health) = get(addr, "/v1/health");
+    assert_eq!(st, 200);
+    assert!(health.contains("\"cells_quarantined\": 1"), "{health}");
+    handle.stop();
+}
