@@ -3,15 +3,18 @@
 //! `--feasibility-only` path the multi-node frontiers run on), the
 //! planner-service warm path (warm_requests/sec: repeated identical
 //! requests answered from one session's plan memo), the fleet placement
-//! sweep (placements/sec with dominance pruning doing its job), plus the
-//! two evaluation phases in isolation (streamed feasibility probes/sec vs
-//! fully priced sims/sec), emitted to `BENCH_planner.json` so future PRs
-//! have a perf trajectory to compare against and CI can gate each phase
+//! sweep (placements/sec with dominance pruning doing its job), the two
+//! evaluation phases in isolation (streamed feasibility probes/sec vs
+//! fully priced sims/sec), plus online-calibration ingestion
+//! (observations/sec: telemetry inversion + MAD gate + drift check, no
+//! epoch publish), emitted to `BENCH_planner.json` so future PRs have a
+//! perf trajectory to compare against and CI can gate each phase
 //! independently.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
+use untied_ulysses::calib::{Observation, OnlineCalibrator, OnlineConfig};
 use untied_ulysses::config::presets::llama_single_node;
 use untied_ulysses::config::{ClusterConfig, CpMethod, FleetSpec};
 use untied_ulysses::engine::Calibration;
@@ -222,6 +225,42 @@ fn main() {
         feas.per_sec() / priced.per_sec()
     );
 
+    // Online-calibration ingestion: a pre-parsed three-method telemetry
+    // batch folded into one long-lived calibrator per iteration —
+    // inversion against the cached structural profile, the MAD gate, EW
+    // folds, and the drift check. drift_threshold = +inf pins the
+    // steady-state path: no epoch ever publishes, so every iteration
+    // does identical work. Gated as observations_per_sec.
+    let mut telemetry_batch: Vec<Observation> = Vec::new();
+    for (method, name) in [
+        (CpMethod::Ulysses, "ulysses"),
+        (CpMethod::Upipe { u: 8, gqa_schedule: true }, "upipe"),
+        (CpMethod::Ring, "ring"),
+    ] {
+        let r = simulate_with(&llama_single_node(method, 1 << 20), &cal);
+        assert!(!r.oom && r.failed.is_none(), "bench telemetry cell must run");
+        let line = format!(
+            r#"{{"method":"{name}","model":"llama3-8b","gpus":8,"seq":"1M","all_to_all":{},"attn_fwd":{},"attn_bwd":{},"other":{}}}"#,
+            r.components.all_to_all, r.components.fa3_fwd, r.components.fa3_bwd, r.components.other
+        );
+        let j = Json::parse(&line).expect("bench telemetry json");
+        telemetry_batch.push(Observation::from_json(&j).expect("bench telemetry record"));
+    }
+    let mut obs_cal = OnlineCalibrator::new(
+        cal.clone(),
+        OnlineConfig { drift_threshold: f64::INFINITY, ..OnlineConfig::default() },
+    );
+    // Warm the structural-profile cache: the bench measures steady-state
+    // ingestion, not the one-time trace capture.
+    let warm_ingest = obs_cal.ingest(&telemetry_batch);
+    assert_eq!(warm_ingest.accepted, 3, "every telemetry record must be invertible");
+    let observe = Bench::new("planner/observe_ingest_3_records")
+        .budget_ms(400)
+        .run(|| obs_cal.ingest(&telemetry_batch));
+    assert_eq!(obs_cal.epoch(), 0, "infinite threshold must never publish");
+    let observations_per_sec = telemetry_batch.len() as f64 * observe.per_sec();
+    println!("  observe ingest: {observations_per_sec:.0} observations/s (no epoch publish)");
+
     let json = Json::obj(vec![
         ("bench", Json::string("planner")),
         ("model", Json::string(req.model.name)),
@@ -244,6 +283,7 @@ fn main() {
         ("warm_http_requests_per_sec", Json::Num(http_warm.per_sec())),
         ("feasibility_probes_per_sec", Json::Num(feas.per_sec())),
         ("priced_sims_per_sec", Json::Num(priced.per_sec())),
+        ("observations_per_sec", Json::Num(observations_per_sec)),
         (
             "placements_per_sec",
             Json::Num(place_out.shapes_total as f64 / placed.mean.as_secs_f64()),

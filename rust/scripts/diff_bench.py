@@ -26,6 +26,9 @@ Gated metrics — each phase of the two-phase evaluator fails independently:
 - placements_per_sec         (fleet placement sweep: shapes disposed of per
                               second — enumerate + dominance pruning + one
                               priced sweep on the surviving shape)
+- observations_per_sec       (online-calibration ingest: telemetry records
+                              inverted, MAD-gated and drift-checked per
+                              second, steady state with no epoch publish)
 
 A metric missing from the *previous* artifact resets its baseline (first
 run after the metric landed); missing from the *current* file fails — the
@@ -45,6 +48,7 @@ GATED = (
     "feasibility_probes_per_sec",
     "priced_sims_per_sec",
     "placements_per_sec",
+    "observations_per_sec",
 )
 REPORTED = GATED + (
     "sims_per_sec",

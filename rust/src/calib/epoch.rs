@@ -1,0 +1,174 @@
+//! Calibration epochs: versioned provenance for online refits.
+//!
+//! Epoch 0 is the calibration the service booted with. Every publish
+//! bumps the epoch by one and records `RefitInfo`-style provenance —
+//! old → new per constant, with the observation count behind each
+//! update — so `/v1/calibration` can show the full chain from boot to
+//! the active constants. Fingerprints are
+//! [`crate::engine::Calibration::fingerprint`] values rendered as 16
+//! hex digits, matching the cache keys they invalidate.
+
+use super::invert::FitConstant;
+use crate::engine::Calibration;
+use crate::util::json::Json;
+
+/// Render a calibration fingerprint the way cache diagnostics do.
+pub fn fingerprint_hex(fp: u64) -> String {
+    format!("{fp:016x}")
+}
+
+/// One constant's old → new update inside a published epoch.
+#[derive(Debug, Clone)]
+pub struct EpochField {
+    pub constant: FitConstant,
+    pub old: f64,
+    pub new: f64,
+    /// Accepted observations folded into the estimate at publish time.
+    pub observations: u64,
+}
+
+impl EpochField {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("constant", Json::string(self.constant.name())),
+            ("old", Json::Num(self.old)),
+            ("new", Json::Num(self.new)),
+            ("observations", Json::int(self.observations)),
+        ])
+    }
+}
+
+/// Provenance for one published epoch.
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    /// The epoch this publish created (1, 2, ...).
+    pub epoch: u64,
+    /// Fingerprint of the calibration this epoch replaced.
+    pub old_fingerprint: u64,
+    /// Fingerprint of the calibration this epoch activated.
+    pub new_fingerprint: u64,
+    /// Constants the publish moved: every sufficiently-observed constant
+    /// whose estimate differed from the active value (the publish is
+    /// *triggered* by one crossing the drift threshold, but adopts all of
+    /// them so post-publish drift collapses to zero). Untouched constants
+    /// are not listed.
+    pub fields: Vec<EpochField>,
+}
+
+impl EpochRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::int(self.epoch)),
+            ("old_fingerprint", Json::string(&fingerprint_hex(self.old_fingerprint))),
+            ("new_fingerprint", Json::string(&fingerprint_hex(self.new_fingerprint))),
+            ("fields", Json::Arr(self.fields.iter().map(EpochField::to_json).collect())),
+        ])
+    }
+}
+
+/// Current drift of one fitted constant: the EW estimate from accepted
+/// telemetry vs. the active calibration's value.
+#[derive(Debug, Clone)]
+pub struct DriftEntry {
+    pub constant: FitConstant,
+    /// Value in the active calibration.
+    pub active: f64,
+    /// Exponentially-weighted estimate from accepted observations.
+    pub estimate: f64,
+    /// `|estimate - active| / |active|`.
+    pub rel_drift: f64,
+    /// Accepted observations behind the estimate.
+    pub observations: u64,
+}
+
+impl DriftEntry {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("constant", Json::string(self.constant.name())),
+            ("active", Json::Num(self.active)),
+            ("estimate", Json::Num(self.estimate)),
+            ("rel_drift", Json::Num(self.rel_drift)),
+            ("observations", Json::int(self.observations)),
+        ])
+    }
+}
+
+/// Everything `/v1/calibration` reports: the active epoch and constants,
+/// the live drift vector, and the provenance chain.
+#[derive(Debug, Clone)]
+pub struct CalibrationSnapshot {
+    pub epoch: u64,
+    pub fingerprint: u64,
+    pub constants: Vec<(&'static str, f64)>,
+    pub drift: Vec<DriftEntry>,
+    pub history: Vec<EpochRecord>,
+}
+
+impl CalibrationSnapshot {
+    pub fn capture(
+        epoch: u64,
+        active: &Calibration,
+        drift: Vec<DriftEntry>,
+        history: &[EpochRecord],
+    ) -> Self {
+        CalibrationSnapshot {
+            epoch,
+            fingerprint: active.fingerprint(),
+            constants: active.fields().to_vec(),
+            drift,
+            history: history.to_vec(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("epoch", Json::int(self.epoch)),
+            ("fingerprint", Json::string(&fingerprint_hex(self.fingerprint))),
+            (
+                "constants",
+                Json::Obj(
+                    self.constants.iter().map(|(n, v)| (n.to_string(), Json::Num(*v))).collect(),
+                ),
+            ),
+            ("drift", Json::Arr(self.drift.iter().map(DriftEntry::to_json).collect())),
+            ("history", Json::Arr(self.history.iter().map(EpochRecord::to_json).collect())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_renders_deterministically() {
+        let cal = Calibration::default();
+        let drift = vec![DriftEntry {
+            constant: FitConstant::OtherRate,
+            active: 1.0e-12,
+            estimate: 1.1e-12,
+            rel_drift: 0.1,
+            observations: 5,
+        }];
+        let history = vec![EpochRecord {
+            epoch: 1,
+            old_fingerprint: 0xdead_beef,
+            new_fingerprint: cal.fingerprint(),
+            fields: vec![EpochField {
+                constant: FitConstant::OtherRate,
+                old: 1.0e-12,
+                new: 1.1e-12,
+                observations: 5,
+            }],
+        }];
+        let snap = CalibrationSnapshot::capture(1, &cal, drift, &history);
+        let text = snap.to_json().render();
+        assert_eq!(text, snap.to_json().render(), "render is deterministic");
+        assert!(text.contains("\"epoch\":1"));
+        assert!(text.contains(&fingerprint_hex(cal.fingerprint())));
+        assert!(text.contains("\"old_fingerprint\":\"00000000deadbeef\""));
+        assert!(text.contains("\"fa3_fwd_flops\""), "all constants listed");
+        assert!(text.contains("\"rel_drift\""));
+        assert_eq!(snap.constants.len(), 27, "every calibration field present");
+    }
+}

@@ -1,0 +1,484 @@
+//! Per-method rate inversion against *structural* trace quantities.
+//!
+//! `engine/refit.rs` inverts the DS-Ulysses anchor with closed-form
+//! volume/FLOP formulas that are only valid for the Ulysses schedule.
+//! This module generalizes the inversion to every [`CpMethod`] the trace
+//! builder knows, without hand-deriving a formula per method: it streams
+//! the method's actual op emission into a [`StructSink`] and collects the
+//! exact quantities the pricing kernels charge against —
+//!
+//! - attention FLOPs per category (`Compute { Fa3Fwd / Fa3Bwd }`),
+//! - message-size-weighted all-to-all volume and call counts,
+//! - ring exchange bytes and per-step launch floors,
+//! - non-overlapped PCIe traffic,
+//! - per-category `Fixed` seconds.
+//!
+//! `Fixed` seconds are emitted by schedules *from* the calibration (bulk
+//! "other" work, FPDT stalls), so a second pass streams the same trace
+//! with the target constant doubled: the difference isolates the
+//! constant's exact (linear) contribution, and the remainder is the
+//! calibration-independent floor. An observed component time then inverts
+//! to a rate by subtracting the floor and dividing the structural
+//! quantity — identical arithmetic to `refit.rs` for Ulysses (pinned by a
+//! test below) and correct by construction for UPipe, Ring and FPDT.
+
+use super::telemetry::Observation;
+use crate::config::presets::RunPreset;
+use crate::config::CpMethod;
+use crate::engine::{Calibration, Category, Op, OpSink};
+use crate::schedule::stream_trace_with;
+use crate::util::fmt::GIB;
+
+/// The calibration constants the online path refits: the rates that
+/// physically track the hardware (the same set `Calibration::scaled_for`
+/// rescales across device generations). Structural constants (pressure
+/// shape, message-size slope, framework bases) stay at their fitted
+/// values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum FitConstant {
+    Fa3FwdFlops,
+    Fa3BwdFlops,
+    A2aEff0Bps,
+    RingEffBps,
+    FpdtStallPerToken,
+    OtherRate,
+}
+
+impl FitConstant {
+    pub const ALL: [FitConstant; 6] = [
+        FitConstant::Fa3FwdFlops,
+        FitConstant::Fa3BwdFlops,
+        FitConstant::A2aEff0Bps,
+        FitConstant::RingEffBps,
+        FitConstant::FpdtStallPerToken,
+        FitConstant::OtherRate,
+    ];
+
+    /// The `Calibration` field name (provenance / drift vectors use these).
+    pub fn name(self) -> &'static str {
+        match self {
+            FitConstant::Fa3FwdFlops => "fa3_fwd_flops",
+            FitConstant::Fa3BwdFlops => "fa3_bwd_flops",
+            FitConstant::A2aEff0Bps => "a2a_eff0_bps",
+            FitConstant::RingEffBps => "ring_eff_bps",
+            FitConstant::FpdtStallPerToken => "fpdt_stall_per_token",
+            FitConstant::OtherRate => "other_rate",
+        }
+    }
+
+    pub fn get(self, c: &Calibration) -> f64 {
+        match self {
+            FitConstant::Fa3FwdFlops => c.fa3_fwd_flops,
+            FitConstant::Fa3BwdFlops => c.fa3_bwd_flops,
+            FitConstant::A2aEff0Bps => c.a2a_eff0_bps,
+            FitConstant::RingEffBps => c.ring_eff_bps,
+            FitConstant::FpdtStallPerToken => c.fpdt_stall_per_token,
+            FitConstant::OtherRate => c.other_rate,
+        }
+    }
+
+    pub fn set(self, c: &mut Calibration, v: f64) {
+        match self {
+            FitConstant::Fa3FwdFlops => c.fa3_fwd_flops = v,
+            FitConstant::Fa3BwdFlops => c.fa3_bwd_flops = v,
+            FitConstant::A2aEff0Bps => c.a2a_eff0_bps = v,
+            FitConstant::RingEffBps => c.ring_eff_bps = v,
+            FitConstant::FpdtStallPerToken => c.fpdt_stall_per_token = v,
+            FitConstant::OtherRate => c.other_rate = v,
+        }
+    }
+}
+
+/// Ring per-step launch floors, mirrored from the pricing kernels
+/// (`engine/timing.rs` / `engine/executor.rs` price
+/// `steps * (alpha + bytes/bw)` with these alphas).
+const RING_ALPHA_INTRA: f64 = 20e-6;
+const RING_ALPHA_INTER: f64 = 60e-6;
+
+const CAT_A2A: usize = 0;
+const CAT_FWD: usize = 1;
+const CAT_BWD: usize = 2;
+const CAT_OTHER: usize = 3;
+
+fn cat_idx(cat: Category) -> usize {
+    match cat {
+        Category::AllToAll => CAT_A2A,
+        Category::Fa3Fwd => CAT_FWD,
+        Category::Fa3Bwd => CAT_BWD,
+        Category::Other => CAT_OTHER,
+    }
+}
+
+/// Structural accumulator: everything the pricing kernels would charge,
+/// grouped by what it divides by (a rate) versus what it adds (a floor).
+#[derive(Debug, Clone, Default)]
+pub struct StructSink {
+    /// `a2a_eff` divides the per-op bytes by a message-size-degraded
+    /// bandwidth, so bytes accumulate pre-weighted by `(1 + slope·s_M)`
+    /// at the *base* slope (the slope itself is not refit online).
+    msg_slope: f64,
+    pub fwd_flops: f64,
+    pub bwd_flops: f64,
+    pub other_flops: f64,
+    pub a2a_bytes: f64,
+    pub a2a_weighted_bytes: f64,
+    pub a2a_inter_bytes: f64,
+    pub a2a_calls: u64,
+    pub ring_bytes: f64,
+    pub ring_inter_bytes: f64,
+    pub ring_alpha_secs: f64,
+    pub offload_main_bytes: f64,
+    /// Per-category `Fixed` seconds (indexed by `cat_idx`).
+    pub fixed: [f64; 4],
+}
+
+impl OpSink for StructSink {
+    fn emit(&mut self, op: Op) {
+        match op {
+            Op::Compute { cat, flops } => match cat {
+                Category::Fa3Fwd => self.fwd_flops += flops,
+                Category::Fa3Bwd => self.bwd_flops += flops,
+                _ => self.other_flops += flops,
+            },
+            Op::Fixed { cat, secs } => self.fixed[cat_idx(cat)] += secs,
+            Op::AllToAll { bytes, intra, calls, s_tokens } => {
+                if intra {
+                    let s_m = s_tokens / (1024.0 * 1024.0);
+                    self.a2a_bytes += bytes;
+                    self.a2a_weighted_bytes += bytes * (1.0 + self.msg_slope * s_m);
+                } else {
+                    self.a2a_inter_bytes += bytes;
+                }
+                self.a2a_calls += calls;
+            }
+            Op::Ring { steps, bytes_per_step, inter } => {
+                let alpha = if inter { RING_ALPHA_INTER } else { RING_ALPHA_INTRA };
+                if inter {
+                    self.ring_inter_bytes += steps as f64 * bytes_per_step;
+                } else {
+                    self.ring_bytes += steps as f64 * bytes_per_step;
+                }
+                self.ring_alpha_secs += steps as f64 * alpha;
+            }
+            Op::Offload { bytes, overlap } => {
+                // Overlapped offload rides the offload stream — it shows
+                // in step time, never in the Table-5 components telemetry
+                // reports, so only the main-stream transfers matter here.
+                if !overlap {
+                    self.offload_main_bytes += bytes.abs();
+                }
+            }
+            Op::Alloc { .. } | Op::Free { .. } | Op::Snapshot { .. } => {}
+        }
+    }
+}
+
+/// A method's structural quantities plus the sensitivity slopes of its
+/// `Fixed` seconds with respect to the fitted constants.
+#[derive(Debug, Clone)]
+pub struct StructuralProfile {
+    pub sink: StructSink,
+    /// d(fixed Other secs) / d(`other_rate`) — the exact per-token unit
+    /// count the schedule's bulk-"other" emission multiplies the rate by.
+    pub other_rate_slope: f64,
+    /// d(fixed Other secs) / d(`fpdt_stall_per_token`) — zero for
+    /// non-FPDT methods.
+    pub stall_slope: f64,
+}
+
+fn stream_struct(p: &RunPreset, calib: &Calibration) -> StructSink {
+    let mut sink = StructSink { msg_slope: calib.a2a_msg_slope, ..StructSink::default() };
+    stream_trace_with(p, calib, &mut sink);
+    sink
+}
+
+/// Capture the structural profile of `p`'s schedule against `base`.
+/// Streams the trace once at `base` and once per sensitivity slope with
+/// the target constant doubled (the dependencies are linear — bulk
+/// "other" is `fixed·L + rate·units`, the FPDT stall is
+/// `per_token·tokens/(1+s_M/amortization)` — so one difference recovers
+/// the exact slope).
+pub fn capture_profile(p: &RunPreset, base: &Calibration) -> Result<StructuralProfile, String> {
+    let s0 = stream_struct(p, base);
+    if s0.a2a_inter_bytes > 0.0 || s0.ring_inter_bytes > 0.0 {
+        return Err(format!(
+            "{} telemetry crosses nodes; online inversion handles single-node records only",
+            p.parallel.method.label()
+        ));
+    }
+    let mut pr = base.clone();
+    pr.other_rate *= 2.0;
+    let s1 = stream_struct(p, &pr);
+    let other_rate_slope = (s1.fixed[CAT_OTHER] - s0.fixed[CAT_OTHER]) / base.other_rate;
+    let stall_slope = match p.parallel.method {
+        CpMethod::Fpdt { .. } | CpMethod::UpipeFpdt { .. } => {
+            let mut ps = base.clone();
+            ps.fpdt_stall_per_token *= 2.0;
+            let s2 = stream_struct(p, &ps);
+            (s2.fixed[CAT_OTHER] - s0.fixed[CAT_OTHER]) / base.fpdt_stall_per_token
+        }
+        _ => 0.0,
+    };
+    Ok(StructuralProfile { sink: s0, other_rate_slope, stall_slope })
+}
+
+fn positive(rate: f64) -> Option<f64> {
+    (rate.is_finite() && rate > 0.0).then_some(rate)
+}
+
+/// Invert one observation's component times into fitted-rate samples.
+///
+/// `base` is the active calibration (its values price the floors being
+/// subtracted); `est` looks up the calibrator's current running estimate
+/// for a constant (falling back to `base` when none exists yet) — the
+/// "other" inversion needs the attention-forward and `other_rate`
+/// estimates to strip cross-constant terms.
+///
+/// Returns the `(constant, rate)` samples plus human-readable skip notes
+/// for components that sat at or below their modelled floors.
+pub fn invert_observation(
+    profile: &StructuralProfile,
+    base: &Calibration,
+    est: impl Fn(FitConstant) -> f64,
+    obs: &Observation,
+) -> (Vec<(FitConstant, f64)>, Vec<String>) {
+    let s = &profile.sink;
+    let mut out = Vec::new();
+    let mut skips = Vec::new();
+    let skip = |component: &str| {
+        format!(
+            "{} {}@{}: `{}` at or below the modelled overhead floor",
+            obs.label,
+            obs.model.name,
+            crate::util::fmt::tokens(obs.seq),
+            component
+        )
+    };
+    // Pressured samples de-penalize with the base pressure model before
+    // inversion, so memory-pressure stalls don't corrupt the clean rates.
+    let headroom = obs.headroom_gib.map(|h| h * GIB);
+    let compute_pen = headroom.map_or(1.0, |h| base.compute_penalty(h));
+    let comm_pen = headroom.map_or(1.0, |h| base.comm_penalty(h));
+
+    if let Some(t) = obs.attn_fwd {
+        let net = t / compute_pen - s.fixed[CAT_FWD];
+        match (net > 0.0, positive(s.fwd_flops / net)) {
+            (true, Some(r)) => out.push((FitConstant::Fa3FwdFlops, r)),
+            _ => skips.push(skip("attn_fwd")),
+        }
+    }
+    if let Some(t) = obs.attn_bwd {
+        let net = t - s.fixed[CAT_BWD];
+        match (net > 0.0, positive(s.bwd_flops / net)) {
+            (true, Some(r)) => out.push((FitConstant::Fa3BwdFlops, r)),
+            _ => skips.push(skip("attn_bwd")),
+        }
+    }
+    if let Some(t) = obs.all_to_all {
+        let net = t / comm_pen
+            - s.fixed[CAT_A2A]
+            - s.ring_alpha_secs
+            - s.a2a_calls as f64 * base.a2a_call_overhead;
+        if s.a2a_bytes > 0.0 && s.ring_bytes == 0.0 {
+            match (net > 0.0, positive(s.a2a_weighted_bytes / net)) {
+                (true, Some(r)) => out.push((FitConstant::A2aEff0Bps, r)),
+                _ => skips.push(skip("all_to_all")),
+            }
+        } else if s.ring_bytes > 0.0 && s.a2a_bytes == 0.0 {
+            match (net > 0.0, positive(s.ring_bytes / net)) {
+                (true, Some(r)) => out.push((FitConstant::RingEffBps, r)),
+                _ => skips.push(skip("all_to_all")),
+            }
+        } else {
+            skips.push(format!(
+                "{} {}@{}: `all_to_all` mixes a2a and ring volume; not invertible",
+                obs.label,
+                obs.model.name,
+                crate::util::fmt::tokens(obs.seq)
+            ));
+        }
+    }
+    if let Some(t) = obs.other {
+        // The calibration-independent floor: measured Fixed seconds minus
+        // the parts the fitted constants contributed at their base values.
+        let floor = s.fixed[CAT_OTHER]
+            - profile.other_rate_slope * base.other_rate
+            - profile.stall_slope * base.fpdt_stall_per_token;
+        let pre = s.other_flops / est(FitConstant::Fa3FwdFlops)
+            + s.offload_main_bytes / base.pcie_eff_bps
+            + floor;
+        if profile.stall_slope > 0.0 {
+            // FPDT: `other` observations target the stall constant, using
+            // the running `other_rate` estimate for the bulk term.
+            let net = t - pre - profile.other_rate_slope * est(FitConstant::OtherRate);
+            match (net > 0.0, positive(net / profile.stall_slope)) {
+                (true, Some(r)) => out.push((FitConstant::FpdtStallPerToken, r)),
+                _ => skips.push(skip("other")),
+            }
+        } else if profile.other_rate_slope > 0.0 {
+            let net = t - pre;
+            match (net > 0.0, positive(net / profile.other_rate_slope)) {
+                (true, Some(r)) => out.push((FitConstant::OtherRate, r)),
+                _ => skips.push(skip("other")),
+            }
+        } else {
+            skips.push(skip("other"));
+        }
+    }
+    (out, skips)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::llama_single_node;
+    use crate::engine::TimingKernel;
+    use crate::model::ModelDims;
+
+    fn obs(method: &str, seq: u64) -> Observation {
+        let j = crate::util::json::Json::parse(&format!(
+            r#"{{"method": "{method}", "model": "llama3-8b", "gpus": 8, "seq": {seq}}}"#
+        ))
+        .unwrap();
+        Observation::from_json(&j).unwrap()
+    }
+
+    /// The structural profile of the Ulysses schedule must match the
+    /// closed forms `engine/refit.rs` inverts with (the same quantities
+    /// its trace-pinning test asserts).
+    #[test]
+    fn ulysses_profile_matches_refit_closed_forms() {
+        let s = 1u64 << 20;
+        let base = Calibration::default();
+        let o = obs("ulysses", s);
+        let p = capture_profile(&o.preset(), &base).unwrap();
+        let dims = ModelDims::llama3_8b();
+        let (l, c) = (dims.n_layers as f64, 8.0);
+
+        let f_layer = crate::model::flops::attn_fwd(&dims, s) / (l * c);
+        assert!((p.sink.fwd_flops - 2.0 * l * f_layer).abs() / p.sink.fwd_flops < 1e-9);
+        assert!(p.sink.bwd_flops > p.sink.fwd_flops, "bwd factor > 2x fwd passes");
+
+        let q_b = 2.0 * (s as f64 / c) * dims.q_width() as f64;
+        let kv_b = 2.0 * (s as f64 / c) * dims.kv_width() as f64;
+        let vol = 2.0 * l * (q_b + 2.0 * kv_b + q_b) * (c - 1.0) / c;
+        let s_m = s as f64 / (1024.0 * 1024.0);
+        let weighted = vol * (1.0 + base.a2a_msg_slope * s_m);
+        assert!((p.sink.a2a_weighted_bytes - weighted).abs() / weighted < 1e-9);
+        assert_eq!(p.sink.a2a_calls, 8 * dims.n_layers);
+        assert_eq!(p.sink.ring_bytes, 0.0);
+
+        // Bulk "other": fixed·L floor + rate·(S·d_model·L/C) slope.
+        let units = s as f64 * dims.d_model as f64 * l / c;
+        assert!((p.other_rate_slope - units).abs() / units < 1e-9);
+        let floor = p.sink.fixed[CAT_OTHER] - p.other_rate_slope * base.other_rate;
+        let expect_floor = base.other_fixed_per_layer * l;
+        assert!((floor - expect_floor).abs() / expect_floor < 1e-9);
+        assert_eq!(p.stall_slope, 0.0);
+    }
+
+    /// End-to-end inversion roundtrip: price a method's trace under a
+    /// perturbed "true" calibration, feed the component times back as an
+    /// observation, and require the inverted rates to recover the true
+    /// constants (the profile was captured at the *default* calibration —
+    /// the floors subtract exactly).
+    #[test]
+    fn inversion_roundtrips_per_method() {
+        let base = Calibration::default();
+        let mut truth = base.clone();
+        truth.fa3_fwd_flops *= 0.93;
+        truth.fa3_bwd_flops *= 1.07;
+        truth.a2a_eff0_bps *= 1.11;
+        truth.ring_eff_bps *= 0.89;
+        truth.fpdt_stall_per_token *= 1.23;
+        truth.other_rate *= 1.17;
+
+        for method in ["ulysses", "upipe", "ring", "fpdt"] {
+            let mut o = obs(method, 1 << 20);
+            let preset = o.preset();
+            // Price the schedule under the true calibration with
+            // effectively unlimited HBM: unpressured components, exactly
+            // what clean telemetry reports.
+            let mut kernel = TimingKernel::new(truth.clone(), 1e18, 0.0, f64::INFINITY);
+            stream_trace_with(&preset, &truth, &mut kernel);
+            let report = kernel.finish();
+            assert!(report.failed.is_none() && !report.oom, "{method}");
+            o.attn_fwd = Some(report.components.fa3_fwd);
+            o.attn_bwd = Some(report.components.fa3_bwd);
+            o.all_to_all = Some(report.components.all_to_all);
+            o.other = Some(report.components.other);
+
+            let profile = capture_profile(&preset, &base).unwrap();
+            // The cross-constant estimates the "other" inversion consumes
+            // are exact here (as they are online once those constants have
+            // been observed).
+            let (samples, skips) =
+                invert_observation(&profile, &base, |c| c.get(&truth), &o);
+            assert!(skips.is_empty(), "{method}: {skips:?}");
+            assert!(samples.len() >= 3, "{method}: {samples:?}");
+            for (c, rate) in samples {
+                let want = c.get(&truth);
+                let rel = (rate - want).abs() / want;
+                assert!(rel < 1e-6, "{method} {}: {rate} vs {want} (rel {rel:.2e})", c.name());
+            }
+        }
+    }
+
+    /// A time at or below the overhead floor must skip, not produce a
+    /// garbage (negative/infinite) rate.
+    #[test]
+    fn floor_times_skip_instead_of_inverting() {
+        let base = Calibration::default();
+        let mut o = obs("ulysses", 1 << 20);
+        let profile = capture_profile(&o.preset(), &base).unwrap();
+        // Below the 8L call-overhead floor.
+        o.all_to_all = Some(0.5 * 8.0 * 32.0 * base.a2a_call_overhead);
+        // Below the fixed·L floor.
+        o.other = Some(0.5 * base.other_fixed_per_layer * 32.0);
+        let (samples, skips) = invert_observation(&profile, &base, |c| c.get(&base), &o);
+        assert!(samples.is_empty(), "{samples:?}");
+        assert_eq!(skips.len(), 2, "{skips:?}");
+        assert!(skips[0].contains("overhead floor"));
+    }
+
+    /// Pressured telemetry de-penalizes with the base pressure model: a
+    /// sample tagged with low headroom inverts to the same rate as the
+    /// unpressured sample whose time is `penalty`× smaller.
+    #[test]
+    fn headroom_tag_depenalizes_before_inversion() {
+        let base = Calibration::default();
+        let o_clean = {
+            let mut o = obs("ulysses", 1 << 20);
+            o.all_to_all = Some(4.0);
+            o.attn_fwd = Some(80.0);
+            o
+        };
+        let headroom_gib = 2.0;
+        let o_pressured = {
+            let mut o = o_clean.clone();
+            o.headroom_gib = Some(headroom_gib);
+            o.all_to_all = Some(4.0 * base.comm_penalty(headroom_gib * GIB));
+            o.attn_fwd = Some(80.0 * base.compute_penalty(headroom_gib * GIB));
+            o
+        };
+        let profile = capture_profile(&o_clean.preset(), &base).unwrap();
+        let est = |c: FitConstant| c.get(&base);
+        let (clean, _) = invert_observation(&profile, &base, est, &o_clean);
+        let (pressured, _) = invert_observation(&profile, &base, est, &o_pressured);
+        assert_eq!(clean.len(), 2);
+        for ((ca, ra), (cb, rb)) in clean.iter().zip(pressured.iter()) {
+            assert_eq!(ca, cb);
+            assert!((ra - rb).abs() / ra < 1e-12, "{}: {ra} vs {rb}", ca.name());
+        }
+    }
+
+    #[test]
+    fn two_node_profiles_are_rejected() {
+        let base = Calibration::default();
+        let p = crate::config::presets::llama_two_node(CpMethod::Ulysses, 1 << 20);
+        let err = capture_profile(&p, &base).unwrap_err();
+        assert!(err.contains("single-node"), "{err}");
+        // And the single-node path stays fine for the same method.
+        assert!(capture_profile(&llama_single_node(CpMethod::Ulysses, 1 << 20), &base).is_ok());
+    }
+}

@@ -1,0 +1,44 @@
+//! Online calibration: telemetry-driven refit with drift detection and
+//! surgical memo invalidation.
+//!
+//! `--refit` (see [`crate::engine::refit`]) is a one-shot batch inversion
+//! of the DS-Ulysses anchor. This subsystem turns calibration into a
+//! *live, versioned* object instead:
+//!
+//! - [`telemetry`] ingests per-method measurement records (Ulysses, UPipe,
+//!   Ring and FPDT step-component times, optionally tagged with the HBM
+//!   headroom they ran under so pressured samples de-penalize before
+//!   inversion) through bounded per-method ring buffers with a MAD outlier
+//!   gate.
+//! - [`invert`] generalizes the rate inversion per [`crate::config::CpMethod`]:
+//!   instead of the Ulysses-only closed forms in `engine/refit.rs`, it
+//!   streams the method's *actual* op trace into a structural sink
+//!   (volumes, calls, FLOPs, fixed floors) and inverts each fitted
+//!   constant against those exact quantities — correct by construction
+//!   for every schedule the trace builder knows.
+//! - [`online`] folds accepted observations into exponentially-weighted
+//!   rate estimates, tracks per-constant drift against the active
+//!   [`crate::engine::Calibration`], and publishes a new **calibration
+//!   epoch** (with full old→new provenance) only when drift exceeds a
+//!   configurable relative threshold.
+//! - [`epoch`] carries the provenance chain and renders the
+//!   `/v1/calibration` snapshot.
+//!
+//! On epoch publish the service drops exactly the memo entries keyed on
+//! the stale `Calibration::fingerprint()` (see
+//! `PlannerCaches::invalidate_fingerprint`); entries under other
+//! fingerprints — e.g. other fleet hardware pools — survive untouched.
+//!
+//! Everything here is deterministic: no wall-clock, epoch ids are
+//! sequence numbers, and replaying the same telemetry yields a
+//! byte-identical `/v1/calibration` snapshot.
+
+pub mod epoch;
+pub mod invert;
+pub mod online;
+pub mod telemetry;
+
+pub use epoch::{CalibrationSnapshot, DriftEntry, EpochField, EpochRecord};
+pub use invert::{capture_profile, invert_observation, FitConstant, StructuralProfile};
+pub use online::{IngestReport, OnlineCalibrator, OnlineConfig, PublishedEpoch};
+pub use telemetry::{Observation, TelemetryStore, OBSERVATION_FIELDS};

@@ -1,0 +1,433 @@
+//! The online calibrator: fold accepted telemetry into exponentially-
+//! weighted rate estimates, track drift against the active
+//! [`Calibration`], and publish a new epoch when drift crosses the
+//! threshold.
+//!
+//! Determinism: ingestion is strictly in record order, estimates are
+//! plain f64 folds, epoch ids are sequence numbers, and every map is a
+//! `BTreeMap` — replaying the same telemetry against a fresh calibrator
+//! reproduces the exact epoch chain, byte for byte.
+
+use std::collections::BTreeMap;
+
+use super::epoch::{CalibrationSnapshot, DriftEntry, EpochField, EpochRecord};
+use super::invert::{capture_profile, invert_observation, FitConstant, StructuralProfile};
+use super::telemetry::{Observation, TelemetryStore};
+use crate::engine::Calibration;
+
+/// Knobs for the online refit loop. The defaults publish conservatively:
+/// a constant must have at least [`Self::min_count`] accepted samples
+/// *and* its EW estimate must sit ≥ [`Self::drift_threshold`] (relative)
+/// away from the active value before an epoch goes out.
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Relative drift that triggers an epoch publish (default 5%).
+    pub drift_threshold: f64,
+    /// EW fold weight for each new accepted sample (default 0.25).
+    pub ew_alpha: f64,
+    /// Ring-buffer depth per (method, constant) stream (default 64).
+    pub buffer_capacity: usize,
+    /// MAD gate width in robust standard deviations (default 4).
+    pub mad_k: f64,
+    /// Accepted samples a constant needs before it may publish (default 4).
+    pub min_count: u64,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            drift_threshold: 0.05,
+            ew_alpha: 0.25,
+            buffer_capacity: 64,
+            mad_k: 4.0,
+            min_count: 4,
+        }
+    }
+}
+
+/// A freshly published epoch, returned to the caller so the service can
+/// invalidate the stale fingerprint's memo entries.
+#[derive(Debug, Clone)]
+pub struct PublishedEpoch {
+    pub epoch: u64,
+    pub old_fingerprint: u64,
+    pub new_fingerprint: u64,
+    pub fields: Vec<EpochField>,
+}
+
+/// Result of one `ingest` call (one `/v1/observe` batch or one telemetry
+/// file line in the CLI).
+#[derive(Debug, Clone)]
+pub struct IngestReport {
+    /// Records that contributed at least one admitted rate sample.
+    pub accepted: u64,
+    /// Records that contributed none (floor skips, MAD rejections, or no
+    /// invertible component).
+    pub rejected: u64,
+    /// Post-ingest drift vector (constants with at least one sample).
+    pub drift: Vec<DriftEntry>,
+    /// Set when this batch pushed some constant across the threshold.
+    pub published: Option<PublishedEpoch>,
+    /// Bounded reject/skip diagnostics (first [`IngestReport::MAX_NOTES`]).
+    pub notes: Vec<String>,
+}
+
+impl IngestReport {
+    pub const MAX_NOTES: usize = 8;
+}
+
+/// Provenance history depth kept for `/v1/calibration` (older epochs
+/// fall off the front; the epoch counter itself never resets).
+const MAX_HISTORY: usize = 16;
+
+/// Structural profiles cached per run shape (label, method param, model,
+/// gpus, seq). Capped; profiles are cheap to rebuild but not free (two
+/// trace streams each).
+const MAX_PROFILES: usize = 64;
+
+type ProfileKey = (&'static str, u32, &'static str, u64, u64);
+
+/// Live calibration state: the active constants, the telemetry buffers,
+/// the EW estimates and the epoch provenance chain.
+#[derive(Debug)]
+pub struct OnlineCalibrator {
+    config: OnlineConfig,
+    active: Calibration,
+    epoch: u64,
+    store: TelemetryStore,
+    /// EW estimate and accepted-sample count per fitted constant.
+    estimates: BTreeMap<FitConstant, (f64, u64)>,
+    /// Structural profiles are captured against `active` (their fixed
+    /// floors embed its values), so this cache clears on every publish.
+    profiles: BTreeMap<ProfileKey, StructuralProfile>,
+    history: Vec<EpochRecord>,
+}
+
+impl OnlineCalibrator {
+    pub fn new(active: Calibration, config: OnlineConfig) -> Self {
+        let store = TelemetryStore::new(config.buffer_capacity, config.mad_k);
+        OnlineCalibrator {
+            config,
+            active,
+            epoch: 0,
+            store,
+            estimates: BTreeMap::new(),
+            profiles: BTreeMap::new(),
+            history: Vec::new(),
+        }
+    }
+
+    pub fn active(&self) -> &Calibration {
+        &self.active
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.active.fingerprint()
+    }
+
+    pub fn store(&self) -> &TelemetryStore {
+        &self.store
+    }
+
+    /// Ingest a batch of observations in order: invert each against the
+    /// active calibration, gate the rate samples, fold survivors into the
+    /// EW estimates, then publish an epoch if drift crossed the threshold.
+    pub fn ingest(&mut self, observations: &[Observation]) -> IngestReport {
+        let mut accepted = 0u64;
+        let mut rejected = 0u64;
+        let mut notes: Vec<String> = Vec::new();
+        let mut note = |notes: &mut Vec<String>, n: String| {
+            if notes.len() < IngestReport::MAX_NOTES {
+                notes.push(n);
+            }
+        };
+        for obs in observations {
+            let key = obs.profile_key();
+            if !self.profiles.contains_key(&key) {
+                match capture_profile(&obs.preset(), &self.active) {
+                    Ok(p) => {
+                        if self.profiles.len() >= MAX_PROFILES {
+                            self.profiles.pop_first();
+                        }
+                        self.profiles.insert(key, p);
+                    }
+                    Err(e) => {
+                        rejected += 1;
+                        note(&mut notes, format!("{} {}: {e}", obs.label, obs.model.name));
+                        continue;
+                    }
+                }
+            }
+            let profile = &self.profiles[&key];
+            // Estimates-so-far snapshot: the inversion of `other` needs the
+            // current fa3_fwd / other_rate estimates, falling back to the
+            // active calibration for constants with no samples yet.
+            let est_now = self.estimates.clone();
+            let active = self.active.clone();
+            let est = |c: FitConstant| est_now.get(&c).map_or(c.get(&active), |(v, _)| *v);
+            let (samples, skips) = invert_observation(profile, &self.active, est, obs);
+            for s in skips {
+                note(&mut notes, s);
+            }
+            let mut admitted = 0u64;
+            for (constant, rate) in samples {
+                match self.store.admit(obs.label, constant, rate) {
+                    Ok(()) => {
+                        admitted += 1;
+                        let slot = self.estimates.entry(constant).or_insert((rate, 0));
+                        if slot.1 > 0 {
+                            slot.0 = self.config.ew_alpha * rate
+                                + (1.0 - self.config.ew_alpha) * slot.0;
+                        }
+                        slot.1 += 1;
+                    }
+                    Err(e) => note(&mut notes, e),
+                }
+            }
+            if admitted > 0 {
+                accepted += 1;
+            } else {
+                rejected += 1;
+            }
+        }
+        let published = self.maybe_publish();
+        IngestReport { accepted, rejected, drift: self.drift(), published, notes }
+    }
+
+    /// Current drift vector: one entry per constant with accepted samples,
+    /// in `FitConstant::ALL` order.
+    pub fn drift(&self) -> Vec<DriftEntry> {
+        FitConstant::ALL
+            .iter()
+            .filter_map(|&c| {
+                let &(estimate, count) = self.estimates.get(&c)?;
+                let active = c.get(&self.active);
+                Some(DriftEntry {
+                    constant: c,
+                    active,
+                    estimate,
+                    rel_drift: (estimate - active).abs() / active.abs().max(f64::MIN_POSITIVE),
+                    observations: count,
+                })
+            })
+            .collect()
+    }
+
+    /// Publish when any sufficiently-observed constant drifted past the
+    /// threshold. The new calibration adopts the EW estimate of *every*
+    /// constant with `min_count` samples (not only the trigger), so the
+    /// drift vector collapses to ~0 and the same telemetry cannot
+    /// republish; structural constants are untouched.
+    fn maybe_publish(&mut self) -> Option<PublishedEpoch> {
+        let trigger = self.drift().iter().any(|d| {
+            d.observations >= self.config.min_count && d.rel_drift >= self.config.drift_threshold
+        });
+        if !trigger {
+            return None;
+        }
+        let old_fingerprint = self.active.fingerprint();
+        let mut next = self.active.clone();
+        let mut fields = Vec::new();
+        for &c in &FitConstant::ALL {
+            if let Some(&(estimate, count)) = self.estimates.get(&c) {
+                let old = c.get(&self.active);
+                if count >= self.config.min_count && estimate != old {
+                    c.set(&mut next, estimate);
+                    fields.push(EpochField { constant: c, old, new: estimate, observations: count });
+                }
+            }
+        }
+        if fields.is_empty() {
+            return None;
+        }
+        self.epoch += 1;
+        let new_fingerprint = next.fingerprint();
+        self.active = next;
+        // Profiles embed the replaced calibration's floors; rebuild lazily.
+        self.profiles.clear();
+        let record = EpochRecord {
+            epoch: self.epoch,
+            old_fingerprint,
+            new_fingerprint,
+            fields: fields.clone(),
+        };
+        self.history.push(record);
+        if self.history.len() > MAX_HISTORY {
+            self.history.remove(0);
+        }
+        Some(PublishedEpoch { epoch: self.epoch, old_fingerprint, new_fingerprint, fields })
+    }
+
+    /// The `/v1/calibration` snapshot: active epoch + constants, live
+    /// drift, provenance chain.
+    pub fn snapshot(&self) -> CalibrationSnapshot {
+        CalibrationSnapshot::capture(self.epoch, &self.active, self.drift(), &self.history)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::TimingKernel;
+    use crate::schedule::stream_trace_with;
+    use crate::util::json::Json;
+
+    /// Parse a telemetry record, then fill its component times from the
+    /// step a `truth` calibration actually prices for that run shape.
+    fn measured(line: &str, truth: &Calibration) -> Observation {
+        let mut o = Observation::from_json(&Json::parse(line).unwrap()).unwrap();
+        let mut kernel = TimingKernel::new(truth.clone(), 1e18, 0.0, f64::INFINITY);
+        stream_trace_with(&o.preset(), truth, &mut kernel);
+        let r = kernel.finish();
+        assert!(r.failed.is_none() && !r.oom);
+        o.attn_fwd = Some(r.components.fa3_fwd);
+        o.attn_bwd = Some(r.components.fa3_bwd);
+        o.all_to_all = Some(r.components.all_to_all);
+        o.other = Some(r.components.other);
+        o
+    }
+
+    fn drifted_truth() -> Calibration {
+        let mut t = Calibration::default();
+        t.fa3_fwd_flops *= 0.9;
+        t.fa3_bwd_flops *= 1.1;
+        t.a2a_eff0_bps *= 0.85;
+        t.other_rate *= 1.2;
+        t
+    }
+
+    const LINES: [&str; 3] = [
+        r#"{"method": "ulysses", "model": "llama3-8b", "gpus": 8, "seq": 1048576}"#,
+        r#"{"method": "upipe", "model": "llama3-8b", "gpus": 8, "seq": 1048576}"#,
+        r#"{"method": "ring", "model": "llama3-8b", "gpus": 8, "seq": 1048576}"#,
+    ];
+
+    fn telemetry(truth: &Calibration, repeats: usize) -> Vec<Observation> {
+        let mut v = Vec::new();
+        for _ in 0..repeats {
+            for line in LINES {
+                v.push(measured(line, truth));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn drifted_telemetry_publishes_an_epoch_that_matches_truth() {
+        let truth = drifted_truth();
+        let mut cal = OnlineCalibrator::new(Calibration::default(), OnlineConfig::default());
+        let report = cal.ingest(&telemetry(&truth, 4));
+        assert_eq!(report.rejected, 0, "notes: {:?}", report.notes);
+        assert_eq!(report.accepted, 12);
+        let pubd = report.published.expect("20% drift must publish");
+        assert_eq!(pubd.epoch, 1);
+        assert_eq!(cal.epoch(), 1);
+        assert_ne!(pubd.old_fingerprint, pubd.new_fingerprint);
+        assert_eq!(cal.fingerprint(), pubd.new_fingerprint);
+        // Identical repeated samples: the EW fold is a fixed point, so the
+        // published constants equal the truth's values exactly-ish.
+        for f in &pubd.fields {
+            let want = f.constant.get(&truth);
+            assert!(
+                (f.new - want).abs() / want < 1e-6,
+                "{}: published {} vs truth {want}",
+                f.constant.name(),
+                f.new
+            );
+            assert_eq!(f.old, f.constant.get(&Calibration::default()));
+        }
+        assert!(
+            pubd.fields.iter().any(|f| f.constant == FitConstant::RingEffBps),
+            "ring telemetry refit the ring rate too"
+        );
+        // Post-publish drift is ~0: replaying the same telemetry must not
+        // publish again.
+        let again = cal.ingest(&telemetry(&truth, 4));
+        assert!(again.published.is_none(), "drift: {:?}", again.drift);
+        assert_eq!(cal.epoch(), 1);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let truth = drifted_truth();
+        let batch = telemetry(&truth, 4);
+        let run = |batch: &[Observation]| {
+            let mut cal = OnlineCalibrator::new(Calibration::default(), OnlineConfig::default());
+            cal.ingest(batch);
+            cal.snapshot().to_json().render()
+        };
+        assert_eq!(run(&batch), run(&batch), "byte-identical snapshots");
+    }
+
+    #[test]
+    fn sub_threshold_drift_publishes_nothing() {
+        let mut truth = Calibration::default();
+        truth.fa3_fwd_flops *= 1.01; // 1% << the 5% threshold
+        let mut cal = OnlineCalibrator::new(Calibration::default(), OnlineConfig::default());
+        let report = cal.ingest(&telemetry(&truth, 4));
+        assert!(report.accepted > 0);
+        assert!(report.published.is_none());
+        assert_eq!(cal.epoch(), 0);
+        assert_eq!(cal.fingerprint(), Calibration::default().fingerprint());
+        for d in &report.drift {
+            assert!(d.rel_drift < 0.05, "{}: {}", d.constant.name(), d.rel_drift);
+        }
+    }
+
+    #[test]
+    fn min_count_gates_publishing() {
+        let truth = drifted_truth();
+        let mut cal = OnlineCalibrator::new(Calibration::default(), OnlineConfig::default());
+        // One record per method: every constant has < min_count samples.
+        let report = cal.ingest(&telemetry(&truth, 1));
+        assert!(report.published.is_none());
+        assert!(report.drift.iter().all(|d| d.observations < 4));
+    }
+
+    #[test]
+    fn buffers_respect_capacity() {
+        let truth = drifted_truth();
+        let config = OnlineConfig {
+            buffer_capacity: 3,
+            drift_threshold: f64::INFINITY, // ingest-only, no publishes
+            ..OnlineConfig::default()
+        };
+        let mut cal = OnlineCalibrator::new(Calibration::default(), config);
+        cal.ingest(&telemetry(&truth, 5));
+        for &c in &FitConstant::ALL {
+            for m in ["ulysses", "upipe", "ring"] {
+                assert!(cal.store().len(m, c) <= 3, "{m}/{}", c.name());
+            }
+        }
+    }
+
+    #[test]
+    fn second_epoch_chains_provenance() {
+        let mut cal = OnlineCalibrator::new(Calibration::default(), OnlineConfig::default());
+        let first = cal.ingest(&telemetry(&drifted_truth(), 4)).published.unwrap();
+        // Fresh drift relative to the *new* active calibration. The EW
+        // estimate trails (alpha 0.25 folds toward a moved target), so
+        // drive enough repeats for the estimate to cross 5% again.
+        let mut truth2 = drifted_truth();
+        truth2.fa3_fwd_flops *= 0.5;
+        let mut second = None;
+        for _ in 0..6 {
+            if let Some(p) = cal.ingest(&telemetry(&truth2, 4)).published {
+                second = Some(p);
+                break;
+            }
+        }
+        let second = second.expect("50% drift must eventually publish");
+        assert_eq!(second.epoch, 2);
+        assert_eq!(second.old_fingerprint, first.new_fingerprint, "chain links");
+        let snap = cal.snapshot();
+        assert_eq!(snap.epoch, 2);
+        assert_eq!(snap.history.len(), 2);
+        assert_eq!(snap.history[0].epoch, 1);
+        assert_eq!(snap.history[1].epoch, 2);
+    }
+}

@@ -1,0 +1,399 @@
+//! Telemetry ingestion: strict per-method measurement records, bounded
+//! per-method ring buffers and a MAD outlier gate.
+//!
+//! A record is one measured training step of one method, reporting the
+//! paper's Table-5 component times (seconds). Field whitelist and
+//! unknown-field rejection follow the `service/wire.rs` contract: a
+//! misspelled field is an error, never silently ignored.
+//!
+//! ```json
+//! {"method": "upipe", "model": "llama3-8b", "gpus": 8, "seq": "1M",
+//!  "all_to_all": 4.93, "attn_fwd": 103.0, "attn_bwd": 150.9, "other": 70.1}
+//! ```
+//!
+//! - `method`: `ulysses` | `upipe` | `ring` | `fpdt`. UPipe takes an
+//!   optional `u` (head-chunk size, default 8); FPDT an optional `pi`
+//!   (sequence chunks, default 16). For `ring`, `all_to_all` carries the
+//!   ring-exchange time (the same Table-5 comm column).
+//! - `seq`: token count or label (`"1M"`), per-device measurement at
+//!   CP = `gpus` on one NVLink node (`gpus` ≤ 8, dividing the model's
+//!   heads — the same constraint `--refit` enforces).
+//! - `headroom_gib` (optional): HBM headroom the step ran under; when
+//!   present, comm/compute components are de-penalized with the active
+//!   pressure model before rate inversion.
+//!
+//! Component times are each optional (a record reporting nothing simply
+//! contributes no rate samples), but every time present must be a finite
+//! positive number.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use super::invert::FitConstant;
+use crate::config::cluster::ClusterConfig;
+use crate::config::presets::RunPreset;
+use crate::config::{CpMethod, ParallelConfig};
+use crate::model::ModelDims;
+use crate::util::json::Json;
+
+/// Whitelisted observation fields (anything else is an error).
+pub const OBSERVATION_FIELDS: [&str; 11] = [
+    "method",
+    "model",
+    "gpus",
+    "seq",
+    "all_to_all",
+    "attn_fwd",
+    "attn_bwd",
+    "other",
+    "headroom_gib",
+    "u",
+    "pi",
+];
+
+/// One parsed, validated measurement record.
+#[derive(Debug, Clone)]
+pub struct Observation {
+    pub method: CpMethod,
+    /// Ring-buffer key: the method family, ignoring its parameters.
+    pub label: &'static str,
+    pub model: ModelDims,
+    pub gpus: u64,
+    pub seq: u64,
+    pub all_to_all: Option<f64>,
+    pub attn_fwd: Option<f64>,
+    pub attn_bwd: Option<f64>,
+    pub other: Option<f64>,
+    pub headroom_gib: Option<f64>,
+}
+
+fn opt_time(j: &Json, key: &str) -> Result<Option<f64>, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let t = v
+                .as_f64()
+                .ok_or_else(|| format!("field `{key}` must be a number (seconds)"))?;
+            if !t.is_finite() || t <= 0.0 {
+                return Err(format!("field `{key}` must be a positive finite time, got {t}"));
+            }
+            Ok(Some(t))
+        }
+    }
+}
+
+fn opt_u32(j: &Json, key: &str, default: u32) -> Result<u32, String> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(default),
+        Some(v) => {
+            let n = v
+                .as_u64()
+                .filter(|&n| n >= 1 && n <= u32::MAX as u64)
+                .ok_or_else(|| format!("field `{key}` must be a whole number >= 1"))?;
+            Ok(n as u32)
+        }
+    }
+}
+
+impl Observation {
+    /// Strict parse of one record (see the module docs for the format).
+    pub fn from_json(j: &Json) -> Result<Observation, String> {
+        let Json::Obj(pairs) = j else {
+            return Err("observation must be an object".into());
+        };
+        for (k, _) in pairs {
+            if !OBSERVATION_FIELDS.contains(&k.as_str()) {
+                return Err(format!("unknown observation field `{k}`"));
+            }
+        }
+        let label = j
+            .get("method")
+            .and_then(Json::as_str)
+            .ok_or("observation needs a `method` string")?;
+        let method = match label {
+            "ulysses" => CpMethod::Ulysses,
+            "upipe" => CpMethod::Upipe { u: opt_u32(j, "u", 8)?, gqa_schedule: true },
+            "ring" => CpMethod::Ring,
+            "fpdt" => CpMethod::Fpdt { pi: opt_u32(j, "pi", 16)? },
+            other => {
+                return Err(format!(
+                    "unknown method `{other}` (expected ulysses, upipe, ring or fpdt)"
+                ))
+            }
+        };
+        if !matches!(method, CpMethod::Upipe { .. }) && j.get("u").is_some() {
+            return Err("field `u` only applies to method `upipe`".into());
+        }
+        if !matches!(method, CpMethod::Fpdt { .. }) && j.get("pi").is_some() {
+            return Err("field `pi` only applies to method `fpdt`".into());
+        }
+        let model_name = j
+            .get("model")
+            .and_then(Json::as_str)
+            .ok_or("observation needs a `model` string")?;
+        let model = ModelDims::by_name(model_name)
+            .ok_or_else(|| format!("unknown model `{model_name}`"))?;
+        let gpus = j
+            .get("gpus")
+            .and_then(Json::as_u64)
+            .filter(|&g| g >= 1)
+            .ok_or("observation needs a whole `gpus` >= 1")?;
+        if gpus > 8 {
+            return Err(format!(
+                "telemetry records are single-node: gpus = {gpus} exceeds one NVLink node (8)"
+            ));
+        }
+        let seq = match j.get("seq") {
+            Some(Json::Str(s)) => crate::util::fmt::parse_tokens(s)
+                .ok_or_else(|| format!("bad `seq` label `{s}`"))?,
+            Some(v) => v.as_u64().ok_or("field `seq` must be a token count or label")?,
+            None => return Err("observation needs a `seq`".into()),
+        };
+        if seq == 0 {
+            return Err("field `seq` must be >= 1 token".into());
+        }
+        let headroom_gib = match j.get("headroom_gib") {
+            None | Some(Json::Null) => None,
+            Some(v) => {
+                let h = v
+                    .as_f64()
+                    .filter(|h| h.is_finite() && *h >= 0.0)
+                    .ok_or("field `headroom_gib` must be a non-negative number")?;
+                Some(h)
+            }
+        };
+        let obs = Observation {
+            method,
+            label: canonical_label(method),
+            model,
+            gpus,
+            seq,
+            all_to_all: opt_time(j, "all_to_all")?,
+            attn_fwd: opt_time(j, "attn_fwd")?,
+            attn_bwd: opt_time(j, "attn_bwd")?,
+            other: opt_time(j, "other")?,
+            headroom_gib,
+        };
+        if obs.model.n_heads % obs.gpus != 0 {
+            return Err(format!(
+                "invalid layout for {} telemetry: C={} must divide H={} (heads shard across ranks)",
+                obs.label, obs.gpus, obs.model.n_heads
+            ));
+        }
+        obs.preset()
+            .parallel
+            .validate_model(&obs.model)
+            .map_err(|e| format!("invalid layout for {} telemetry: {e}", obs.label))?;
+        Ok(obs)
+    }
+
+    /// The run shape this record measured: CP = `gpus` on one NVLink node,
+    /// paper-default AC/offload knobs — the same shape `--refit` inverts
+    /// its anchor under.
+    pub fn preset(&self) -> RunPreset {
+        RunPreset {
+            model: self.model.clone(),
+            cluster: ClusterConfig::h100_gpus(self.gpus).expect("gpus validated <= 8"),
+            parallel: ParallelConfig::new(self.method, self.gpus),
+            seq_len: self.seq,
+        }
+    }
+
+    /// Profile cache key: everything the structural profile depends on.
+    pub fn profile_key(&self) -> (&'static str, u32, &'static str, u64, u64) {
+        let param = match self.method {
+            CpMethod::Upipe { u, .. } => u,
+            CpMethod::Fpdt { pi } => pi,
+            _ => 0,
+        };
+        (self.label, param, self.model.name, self.gpus, self.seq)
+    }
+}
+
+fn canonical_label(method: CpMethod) -> &'static str {
+    match method {
+        CpMethod::Ulysses => "ulysses",
+        CpMethod::Upipe { .. } => "upipe",
+        CpMethod::Ring => "ring",
+        CpMethod::Fpdt { .. } => "fpdt",
+        // Unreachable from the wire (parse only admits the four above).
+        other => other.label(),
+    }
+}
+
+/// Buffers fill to this depth before the MAD gate arms — gating against
+/// fewer samples would reject on noise.
+pub const MAD_WARMUP: usize = 8;
+
+/// MAD floor as a fraction of the median: with a degenerate spread
+/// (identical repeated samples, MAD = 0) a genuinely drifted rate must
+/// still be admittable, so the gate never cuts tighter than
+/// `mad_k × 5%` of the median.
+const MAD_FLOOR_REL: f64 = 0.05;
+
+/// Bounded per-method ring buffers of accepted rate samples, keyed by
+/// `(method family, fitted constant)`, plus the MAD admission gate.
+/// `BTreeMap` keeps iteration (and therefore every derived report)
+/// deterministic.
+#[derive(Debug, Clone)]
+pub struct TelemetryStore {
+    capacity: usize,
+    mad_k: f64,
+    buffers: BTreeMap<(&'static str, FitConstant), VecDeque<f64>>,
+}
+
+impl TelemetryStore {
+    pub fn new(capacity: usize, mad_k: f64) -> Self {
+        TelemetryStore { capacity: capacity.max(1), mad_k, buffers: BTreeMap::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Admit one inverted rate sample. `Err` names the gate that rejected
+    /// it; `Ok` means the sample entered the ring buffer (evicting the
+    /// oldest entry once the buffer is at capacity).
+    pub fn admit(
+        &mut self,
+        method: &'static str,
+        constant: FitConstant,
+        rate: f64,
+    ) -> Result<(), String> {
+        let buf = self.buffers.entry((method, constant)).or_default();
+        if buf.len() >= MAD_WARMUP {
+            let mut v: Vec<f64> = buf.iter().copied().collect();
+            v.sort_by(f64::total_cmp);
+            let med = median_sorted(&v);
+            let mut dev: Vec<f64> = v.iter().map(|x| (x - med).abs()).collect();
+            dev.sort_by(f64::total_cmp);
+            let mad = median_sorted(&dev);
+            let scale = (1.4826 * mad).max(MAD_FLOOR_REL * med.abs());
+            if (rate - med).abs() > self.mad_k * scale {
+                return Err(format!(
+                    "MAD outlier for {method}/{}: {rate:.4e} vs median {med:.4e}",
+                    constant.name()
+                ));
+            }
+        }
+        if buf.len() == self.capacity {
+            buf.pop_front();
+        }
+        buf.push_back(rate);
+        Ok(())
+    }
+
+    /// Buffered sample count for one `(method, constant)` stream.
+    pub fn len(&self, method: &'static str, constant: FitConstant) -> usize {
+        self.buffers.get(&(method, constant)).map_or(0, VecDeque::len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buffers.values().all(VecDeque::is_empty)
+    }
+
+    /// Total buffered samples per method family, deterministic order.
+    pub fn method_counts(&self) -> Vec<(&'static str, u64)> {
+        let mut out: Vec<(&'static str, u64)> = Vec::new();
+        for ((method, _), buf) in &self.buffers {
+            match out.last_mut() {
+                Some((m, n)) if *m == *method => *n += buf.len() as u64,
+                _ => out.push((method, buf.len() as u64)),
+            }
+        }
+        out
+    }
+}
+
+fn median_sorted(v: &[f64]) -> f64 {
+    let n = v.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Result<Observation, String> {
+        Observation::from_json(&Json::parse(text).unwrap())
+    }
+
+    #[test]
+    fn parses_a_full_record() {
+        let o = parse(
+            r#"{"method": "upipe", "model": "llama3-8b", "gpus": 8, "seq": "1M",
+                "all_to_all": 4.93, "attn_fwd": 103.0, "attn_bwd": 150.9, "other": 70.1}"#,
+        )
+        .unwrap();
+        assert_eq!(o.label, "upipe");
+        assert_eq!(o.method, CpMethod::Upipe { u: 8, gqa_schedule: true });
+        assert_eq!(o.seq, 1 << 20);
+        assert_eq!(o.all_to_all, Some(4.93));
+        assert_eq!(o.headroom_gib, None);
+        assert_eq!(o.preset().parallel.cp_degree, 8);
+    }
+
+    #[test]
+    fn rejects_unknown_fields_and_bad_values() {
+        for (bad, needle) in [
+            (r#"{"method": "upipe", "model": "llama3-8b", "gpus": 8, "seq": "1M", "oops": 1, "other": 1.0}"#, "unknown observation field"),
+            (r#"{"method": "warp", "model": "llama3-8b", "gpus": 8, "seq": "1M", "other": 1.0}"#, "unknown method"),
+            (r#"{"method": "ulysses", "model": "gpt-9", "gpus": 8, "seq": "1M", "other": 1.0}"#, "unknown model"),
+            (r#"{"method": "ulysses", "model": "llama3-8b", "gpus": 16, "seq": "1M", "other": 1.0}"#, "single-node"),
+            (r#"{"method": "ulysses", "model": "llama3-8b", "gpus": 3, "seq": "1M", "other": 1.0}"#, "invalid layout"),
+            (r#"{"method": "ulysses", "model": "llama3-8b", "gpus": 8, "seq": "1M", "other": -2.0}"#, "positive finite"),
+            (r#"{"method": "ulysses", "model": "llama3-8b", "gpus": 8, "seq": "huge", "other": 1.0}"#, "bad `seq`"),
+            (r#"{"method": "ulysses", "model": "llama3-8b", "gpus": 8, "seq": "1M", "u": 4, "other": 1.0}"#, "only applies to method `upipe`"),
+            (r#"{"method": "ring", "model": "llama3-8b", "gpus": 8, "seq": "1M", "pi": 4, "other": 1.0}"#, "only applies to method `fpdt`"),
+        ] {
+            let err = parse(bad).unwrap_err();
+            assert!(err.contains(needle), "`{needle}` not in `{err}`");
+        }
+    }
+
+    #[test]
+    fn upipe_chunk_size_is_validated() {
+        // u = 6 does not satisfy U % C == 0 for C = 8.
+        let err = parse(
+            r#"{"method": "upipe", "model": "llama3-8b", "gpus": 8, "seq": "1M", "u": 6, "other": 1.0}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("invalid layout"), "{err}");
+    }
+
+    #[test]
+    fn ring_buffer_is_bounded() {
+        let mut store = TelemetryStore::new(4, 4.0);
+        for i in 0..100 {
+            // Slow ramp: every sample within the gate of its neighbours.
+            store.admit("ulysses", FitConstant::OtherRate, 1.0 + i as f64 * 1e-3).unwrap();
+            assert!(store.len("ulysses", FitConstant::OtherRate) <= 4);
+        }
+        assert_eq!(store.len("ulysses", FitConstant::OtherRate), 4);
+        assert_eq!(store.method_counts(), vec![("ulysses", 4)]);
+    }
+
+    #[test]
+    fn mad_gate_rejects_outliers_after_warmup() {
+        let mut store = TelemetryStore::new(64, 4.0);
+        // Warmup: everything admits, even a wild value.
+        store.admit("upipe", FitConstant::A2aEff0Bps, 500.0).unwrap();
+        for _ in 0..MAD_WARMUP {
+            store.admit("upipe", FitConstant::A2aEff0Bps, 50.0).unwrap();
+        }
+        // Armed: a 10x outlier rejects…
+        let err = store.admit("upipe", FitConstant::A2aEff0Bps, 500.0).unwrap_err();
+        assert!(err.contains("MAD outlier"), "{err}");
+        // …an identical repeat and a modest drift both admit (MAD floor).
+        store.admit("upipe", FitConstant::A2aEff0Bps, 50.0).unwrap();
+        store.admit("upipe", FitConstant::A2aEff0Bps, 55.0).unwrap();
+        // Streams are independent per (method, constant).
+        store.admit("upipe", FitConstant::OtherRate, 500.0).unwrap();
+    }
+}

@@ -239,6 +239,72 @@ impl Calibration {
         c
     }
 
+    /// Every constant as `(field name, value)` in declaration order, for
+    /// provenance rendering (`/v1/calibration` lists the full active
+    /// fit, not just the online-refitted subset). Exhaustive
+    /// destructuring keeps this in lockstep with the struct the same way
+    /// [`Calibration::fingerprint`] is.
+    pub fn fields(&self) -> [(&'static str, f64); 27] {
+        let Calibration {
+            fa3_fwd_flops,
+            fa3_bwd_flops,
+            compute_pressure_k,
+            pressure_h0_gib,
+            a2a_eff0_bps,
+            a2a_msg_slope,
+            a2a_eff_inter_bps,
+            comm_pressure_k,
+            a2a_call_overhead,
+            ring_eff_bps,
+            ring_eff_inter_bps,
+            other_fixed_per_layer,
+            other_rate,
+            pcie_eff_bps,
+            fpdt_stall_per_token,
+            fpdt_stall_amortization,
+            native_attn_eff_factor,
+            native_other_factor,
+            native_unmodeled_units,
+            native_slowpath_per_token,
+            native_slowpath_attn_factor,
+            hybrid_layer_fixed,
+            bytes_per_param_fsdp,
+            base_framework_1node,
+            base_framework_2node,
+            fpdt_extra_base,
+            attn_transient_factor,
+        } = self;
+        [
+            ("fa3_fwd_flops", *fa3_fwd_flops),
+            ("fa3_bwd_flops", *fa3_bwd_flops),
+            ("compute_pressure_k", *compute_pressure_k),
+            ("pressure_h0_gib", *pressure_h0_gib),
+            ("a2a_eff0_bps", *a2a_eff0_bps),
+            ("a2a_msg_slope", *a2a_msg_slope),
+            ("a2a_eff_inter_bps", *a2a_eff_inter_bps),
+            ("comm_pressure_k", *comm_pressure_k),
+            ("a2a_call_overhead", *a2a_call_overhead),
+            ("ring_eff_bps", *ring_eff_bps),
+            ("ring_eff_inter_bps", *ring_eff_inter_bps),
+            ("other_fixed_per_layer", *other_fixed_per_layer),
+            ("other_rate", *other_rate),
+            ("pcie_eff_bps", *pcie_eff_bps),
+            ("fpdt_stall_per_token", *fpdt_stall_per_token),
+            ("fpdt_stall_amortization", *fpdt_stall_amortization),
+            ("native_attn_eff_factor", *native_attn_eff_factor),
+            ("native_other_factor", *native_other_factor),
+            ("native_unmodeled_units", *native_unmodeled_units),
+            ("native_slowpath_per_token", *native_slowpath_per_token),
+            ("native_slowpath_attn_factor", *native_slowpath_attn_factor),
+            ("hybrid_layer_fixed", *hybrid_layer_fixed),
+            ("bytes_per_param_fsdp", *bytes_per_param_fsdp),
+            ("base_framework_1node", *base_framework_1node),
+            ("base_framework_2node", *base_framework_2node),
+            ("fpdt_extra_base", *fpdt_extra_base),
+            ("attn_transient_factor", *attn_transient_factor),
+        ]
+    }
+
     fn pressure_x(&self, headroom_bytes: f64) -> f64 {
         let h = headroom_bytes / GIB;
         ((self.pressure_h0_gib - h) / self.pressure_h0_gib).clamp(0.0, 1.0)

@@ -17,6 +17,7 @@
 //!   kernels, lowered once to HLO text in `artifacts/` by `make artifacts`.
 //!   Python never runs on the request path.
 
+pub mod calib;
 pub mod cluster;
 pub mod collectives;
 pub mod config;

@@ -21,14 +21,20 @@
 //!       sweep a heterogeneous fleet's cluster shapes as one more planner
 //!       dimension: dominated shapes skipped before any probe, model fits
 //!       shared across identical hardware, shapes ranked by context wall
+//!   repro observe telemetry.jsonl [--drift-threshold 0.05] [--json]
+//!       stream measured step telemetry through the online calibrator:
+//!       MAD-gated ingestion, per-constant drift, epochs published
+//!       mid-stream when drift crosses the threshold
 //!   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
 //!       [--cache-budget 1G] [--keep-alive-timeout 5] [--request-timeout 0]
 //!       [--drain-timeout 30] [--access-log access.jsonl]
 //!       planner-service daemon: POST /v1/plan | /v1/walls | /v1/frontier
-//!       | /v1/refit | /v1/placement, GET /v1/health | /metrics —
-//!       persistent cross-request caches under a tiered-LRU byte budget,
-//!       HTTP/1.1 keep-alive, request deadlines (504, nothing partial
-//!       published), SIGTERM graceful drain, JSONL access logs
+//!       | /v1/refit | /v1/placement | /v1/observe, GET /v1/calibration
+//!       | /v1/health | /metrics — persistent cross-request caches under
+//!       a tiered-LRU byte budget, online calibration with surgical
+//!       epoch invalidation, HTTP/1.1 keep-alive, request deadlines
+//!       (504, nothing partial published), SIGTERM graceful drain, JSONL
+//!       access logs
 //! Functional runtime (needs `make artifacts`):
 //!   repro parity        distributed UPipe vs monolithic logits check
 //!   repro train N       N training steps of the SMALL model (AOT step)
@@ -113,6 +119,7 @@ fn run(cmd: &str, rest: &[String]) -> anyhow::Result<()> {
         "plan" => cmd_plan(rest, false)?,
         "frontier" => cmd_plan(rest, true)?,
         "place" => cmd_place(rest)?,
+        "observe" => cmd_observe(rest)?,
         "serve-plan" => cmd_serve_plan(rest)?,
         "simulate" => cmd_simulate(rest)?,
         "parity" => cmd_parity()?,
@@ -167,6 +174,19 @@ repro — Untied Ulysses (UPipe) reproduction
       {\"pools\": [{\"name\", \"device\"|per-device fields, \"nodes\",
       \"gpus_per_node\"}]} JSON document (devices: h100, h200, b200);
       see examples/fleet_h100_h200.json
+  repro observe telemetry.jsonl [--drift-threshold 0.05] [--json]
+      stream measured step telemetry (one JSON record per line: method,
+      model, gpus, seq + measured component seconds — see
+      examples/telemetry_upipe.jsonl) through the online calibrator.
+      Each record is inverted against the schedule's structural op
+      counts into fitted-constant samples, MAD-gated against its
+      method's recent window, and folded into exponentially-weighted
+      estimates; when any constant's relative drift crosses
+      --drift-threshold a new calibration epoch publishes mid-stream
+      (old -> new per constant, with observation counts). Prints the
+      final drift table, or --json the `/v1/calibration` document.
+      Deterministic: replaying the same file yields byte-identical
+      output
   repro serve-plan [--port 8077] [--bind 127.0.0.1] [--threads N]
                    [--cache-budget 1G] [--keep-alive-timeout 5]
                    [--request-timeout 0] [--drain-timeout 30]
@@ -174,9 +194,16 @@ repro — Untied Ulysses (UPipe) reproduction
       planner-as-a-service daemon over one warm session: POST /v1/plan,
       /v1/walls (add \"at\" for a point query, or \"at\": [s1, s2, ...]
       for a whole capacity curve), /v1/frontier, /v1/refit, /v1/placement
-      (a fleet placement sweep — same dialect, `fleet` instead of `gpus`);
-      GET /v1/health, /metrics (Prometheus text exposition of the health
-      counters). Persistent cross-request caches under a byte
+      (a fleet placement sweep — same dialect, `fleet` instead of `gpus`),
+      /v1/observe (a telemetry batch: accept/reject counts, the drift
+      vector, and any published epoch with its per-tier invalidation
+      counts); GET /v1/calibration (active epoch, constants, drift,
+      provenance chain), /v1/health, /metrics (Prometheus text exposition
+      of the health counters). Epoch publishes drop exactly the cache
+      entries priced under the stale calibration — measurements-pinned
+      requests and other fingerprints survive untouched; restart the
+      daemon to roll back to the boot calibration (epoch 0). Persistent
+      cross-request caches under a byte
       budget (tiered LRU: bulky trace/report tiers evict first, verified
       walls and fitted models last; 0 = unbounded): a repeated request
       is served from memos byte-for-byte, and a warm walls query streams
@@ -424,6 +451,98 @@ fn cmd_place(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Stream a telemetry JSONL file through the online calibrator, one
+/// record at a time — the same [`untied_ulysses::calib::Observation`]
+/// dialect a client POSTs to `/v1/observe`, so the CLI and the daemon
+/// cannot drift. Epochs publish mid-stream as drift crosses the
+/// threshold; the final snapshot prints as a drift table or (`--json`)
+/// the `/v1/calibration` document.
+fn cmd_observe(rest: &[String]) -> anyhow::Result<()> {
+    use untied_ulysses::calib::epoch::fingerprint_hex;
+    use untied_ulysses::calib::{Observation, OnlineCalibrator, OnlineConfig};
+    use untied_ulysses::engine::Calibration;
+    use untied_ulysses::util::json::Json;
+    use untied_ulysses::util::table::Table;
+
+    let args = Args::new(rest);
+    let path = rest.first().filter(|a| !a.starts_with("--")).cloned().ok_or_else(|| {
+        anyhow::anyhow!("usage: repro observe telemetry.jsonl [--drift-threshold 0.05] [--json]")
+    })?;
+    let mut config = OnlineConfig::default();
+    if let Some(t) = args.str("--drift-threshold") {
+        config.drift_threshold =
+            t.parse().map_err(|_| anyhow::anyhow!("bad --drift-threshold {t}"))?;
+    }
+    let threshold = config.drift_threshold;
+    let text =
+        std::fs::read_to_string(&path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let mut cal = OnlineCalibrator::new(Calibration::default(), config);
+    let (mut accepted, mut rejected) = (0u64, 0u64);
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let obs = Json::parse(line)
+            .and_then(|j| Observation::from_json(&j))
+            .map_err(|e| anyhow::anyhow!("{path}:{}: {e}", i + 1))?;
+        let report = cal.ingest(std::slice::from_ref(&obs));
+        accepted += report.accepted;
+        rejected += report.rejected;
+        for note in &report.notes {
+            eprintln!("{path}:{}: {note}", i + 1);
+        }
+        if let Some(p) = &report.published {
+            println!(
+                "epoch {} published at {path}:{} (fingerprint {} -> {})",
+                p.epoch,
+                i + 1,
+                fingerprint_hex(p.old_fingerprint),
+                fingerprint_hex(p.new_fingerprint)
+            );
+            for f in &p.fields {
+                println!(
+                    "  {:<20} {:>12.5e} -> {:>12.5e}  ({} observations)",
+                    f.constant.name(),
+                    f.old,
+                    f.new,
+                    f.observations
+                );
+            }
+        }
+    }
+    if args.has("--json") {
+        println!("{}", cal.snapshot().to_json().pretty());
+        return Ok(());
+    }
+    let snap = cal.snapshot();
+    let mut t = Table::new(
+        &format!(
+            "online calibration — epoch {} (fingerprint {})",
+            snap.epoch,
+            fingerprint_hex(snap.fingerprint)
+        ),
+        &["constant", "active", "estimate", "rel drift", "obs"],
+    );
+    for d in &snap.drift {
+        t.row(vec![
+            d.constant.name().to_string(),
+            format!("{:.5e}", d.active),
+            format!("{:.5e}", d.estimate),
+            format!("{:.2}%", 100.0 * d.rel_drift),
+            d.observations.to_string(),
+        ]);
+    }
+    t.note(&format!("{accepted} records accepted, {rejected} rejected (MAD gate / floor skips)"));
+    t.note(&format!(
+        "publish threshold: {:.1}% relative drift; {} epoch(s) in provenance history",
+        100.0 * threshold,
+        snap.history.len()
+    ));
+    t.print();
+    Ok(())
+}
+
 /// Set by the C signal handler on SIGTERM; the serve-plan poll loop
 /// notices and starts a graceful drain. A relaxed atomic store is
 /// async-signal-safe.
@@ -477,8 +596,8 @@ fn cmd_serve_plan(rest: &[String]) -> anyhow::Result<()> {
     let handle = http::serve(std::sync::Arc::clone(&service), &format!("{bind}:{port}"), opts)?;
     println!("repro planner service listening on http://{}", handle.addr());
     println!(
-        "  POST /v1/plan | /v1/walls | /v1/frontier | /v1/refit | /v1/placement   \
-         GET /v1/health | /metrics   (api_version {})",
+        "  POST /v1/plan | /v1/walls | /v1/frontier | /v1/refit | /v1/placement \
+         | /v1/observe   GET /v1/calibration | /v1/health | /metrics   (api_version {})",
         untied_ulysses::service::API_VERSION
     );
     if budget == usize::MAX {

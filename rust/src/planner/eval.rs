@@ -291,6 +291,10 @@ pub struct PlannerCaches {
     time_models: StripedMap<TimeKey, Option<TimeModel>>,
     /// Verified context walls (`None` = infeasible at one quantum).
     walls: StripedMap<WallKey, Option<u64>>,
+    /// Lifetime counts of entries dropped by calibration-epoch
+    /// invalidation, per tier in [`PlannerCaches::sizes`] order (distinct
+    /// from LRU `evictions`: invalidations are correctness drops).
+    invalidations: [AtomicU64; 7],
 }
 
 impl PlannerCaches {
@@ -303,7 +307,37 @@ impl PlannerCaches {
             models: StripedMap::default(),
             time_models: StripedMap::default(),
             walls: StripedMap::default(),
+            invalidations: Default::default(),
         }
+    }
+
+    /// Surgical calibration-epoch invalidation: drop exactly the entries
+    /// keyed on the stale calibration fingerprint `fp` in **every** tier
+    /// — including the precious fitted-model and verified-walls tiers,
+    /// whose entries are exact only for the calibration they were fitted
+    /// under — and leave entries under every other fingerprint (other
+    /// fleet hardware pools, pinned-measurement requests) warm. Returns
+    /// the dropped count per tier in [`PlannerCaches::sizes`] order.
+    pub fn invalidate_fingerprint(&self, fp: u64) -> [(&'static str, u64); 7] {
+        let dropped = [
+            ("traces", self.trace.invalidate_fingerprint(fp)),
+            ("peak_probes", self.probe_memo.remove_if(|k| k.cal_fp() == fp)),
+            ("budgeted_probes", self.feas_memo.remove_if(|k| k.0.cal_fp() == fp)),
+            ("priced_reports", self.report_memo.remove_if(|k| k.0.cal_fp() == fp)),
+            ("models", self.models.remove_if(|k| k.cal_fp() == fp)),
+            ("time_models", self.time_models.remove_if(|k| k.0.cal_fp() == fp)),
+            ("walls", self.walls.remove_if(|k| k.0.cal_fp() == fp)),
+        ];
+        for (i, (_, n)) in dropped.iter().enumerate() {
+            self.invalidations[i].fetch_add(*n, Ordering::Relaxed);
+        }
+        dropped
+    }
+
+    /// Lifetime entries dropped by [`PlannerCaches::invalidate_fingerprint`]
+    /// across every tier.
+    pub fn total_invalidated(&self) -> u64 {
+        self.invalidations.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
     /// Entry counts for observability (`/v1/health`): traces, peak
@@ -332,51 +366,60 @@ impl PlannerCaches {
             + self.walls.bytes()
     }
 
-    /// Per-tier observability snapshot (`/v1/health`'s byte sizes and
-    /// eviction counts), in [`PlannerCaches::sizes`] order.
+    /// Per-tier observability snapshot (`/v1/health`'s byte sizes,
+    /// eviction and invalidation counts), in [`PlannerCaches::sizes`]
+    /// order.
     pub fn tiers(&self) -> [CacheTier; 7] {
+        let inv = |i: usize| self.invalidations[i].load(Ordering::Relaxed);
         [
             CacheTier {
                 name: "traces",
                 entries: self.trace.len(),
                 bytes: self.trace.bytes(),
                 evictions: self.trace.evictions(),
+                invalidations: inv(0),
             },
             CacheTier {
                 name: "peak_probes",
                 entries: self.probe_memo.len(),
                 bytes: self.probe_memo.bytes(),
                 evictions: self.probe_memo.evicted(),
+                invalidations: inv(1),
             },
             CacheTier {
                 name: "budgeted_probes",
                 entries: self.feas_memo.len(),
                 bytes: self.feas_memo.bytes(),
                 evictions: self.feas_memo.evicted(),
+                invalidations: inv(2),
             },
             CacheTier {
                 name: "priced_reports",
                 entries: self.report_memo.len(),
                 bytes: self.report_memo.bytes(),
                 evictions: self.report_memo.evicted(),
+                invalidations: inv(3),
             },
             CacheTier {
                 name: "models",
                 entries: self.models.len(),
                 bytes: self.models.bytes(),
                 evictions: self.models.evicted(),
+                invalidations: inv(4),
             },
             CacheTier {
                 name: "time_models",
                 entries: self.time_models.len(),
                 bytes: self.time_models.bytes(),
                 evictions: self.time_models.evicted(),
+                invalidations: inv(5),
             },
             CacheTier {
                 name: "walls",
                 entries: self.walls.len(),
                 bytes: self.walls.bytes(),
                 evictions: self.walls.evicted(),
+                invalidations: inv(6),
             },
         ]
     }
@@ -459,7 +502,11 @@ pub struct CacheTier {
     pub name: &'static str,
     pub entries: usize,
     pub bytes: usize,
+    /// Entries dropped under memory pressure (LRU).
     pub evictions: u64,
+    /// Entries dropped because their calibration fingerprint went stale
+    /// when an online-calibration epoch published.
+    pub invalidations: u64,
 }
 
 impl Default for PlannerCaches {
@@ -1717,6 +1764,74 @@ mod tests {
         let refilled = plan_with(&req, &caches);
         assert!(refilled.feasibility_probes > 0);
         assert_configs_bitwise_equal(&refilled, &cold);
+    }
+
+    #[test]
+    fn epoch_invalidation_is_surgical_across_fingerprints() {
+        // The online-calibration acceptance gate at the evaluator layer:
+        // invalidating one calibration fingerprint drops *exactly* that
+        // fingerprint's entries in every tier — including the precious
+        // fitted-model and verified-walls tiers — while a second
+        // fingerprint's warm state (another fleet pool, or requests
+        // pinned to a measurements file) survives untouched and keeps
+        // answering probe-free, bitwise-identically.
+        let caches = PlannerCaches::new();
+        let mut req_a = PlanRequest::new(ModelDims::llama3_8b(), ClusterConfig::h100_node());
+        req_a.quantum = 1 << 20;
+        req_a.cap_s = 8 << 20;
+        req_a.threads = 1; // deterministic per-tier entry counts
+        let mut req_b = req_a.clone();
+        req_b.calibration.fa3_fwd_flops *= 1.1; // a second pool's fitted rates
+        let fp_a = req_a.calibration.fingerprint();
+        let fp_b = req_b.calibration.fingerprint();
+        assert_ne!(fp_a, fp_b);
+
+        let out_a = plan_with(&req_a, &caches);
+        let sizes_a = caches.sizes();
+        let out_b = plan_with(&req_b, &caches);
+        let sizes_ab = caches.sizes();
+        // The sweeps are identical modulo calibration, so every tier
+        // holds one key-set per fingerprint.
+        for i in 0..7 {
+            assert_eq!(sizes_ab[i], 2 * sizes_a[i], "tier {i} keys must not collide");
+        }
+
+        let dropped = caches.invalidate_fingerprint(fp_a);
+        for (i, (name, n)) in dropped.iter().enumerate() {
+            assert_eq!(*n as usize, sizes_a[i], "tier {name} dropped the wrong count");
+        }
+        assert!(dropped.iter().any(|(_, n)| *n > 0), "nothing invalidated");
+        let sizes_after = caches.sizes();
+        for i in 0..7 {
+            assert_eq!(sizes_after[i], sizes_a[i], "tier {i} must keep exactly B's entries");
+        }
+        // Counters ride the observability surface, separate from LRU
+        // evictions, and a replayed invalidation is a no-op.
+        for (tier, (name, n)) in caches.tiers().iter().zip(dropped.iter()) {
+            assert_eq!(tier.name, *name);
+            assert_eq!(tier.invalidations, *n, "tier {name} counter");
+            assert_eq!(tier.evictions, 0, "invalidations must not count as evictions");
+        }
+        let total: u64 = dropped.iter().map(|(_, n)| n).sum();
+        assert_eq!(caches.total_invalidated(), total);
+        let again = caches.invalidate_fingerprint(fp_a);
+        assert!(again.iter().all(|(_, n)| *n == 0), "second invalidation must drop nothing");
+        assert_eq!(caches.total_invalidated(), total);
+
+        // B's warm state answers the replay with zero probes, zero priced
+        // sims, zero trace builds — bitwise equal to its cold pass.
+        let warm_b = plan_with(&req_b, &caches);
+        assert_eq!(warm_b.feasibility_probes, 0, "B's verified walls must survive");
+        assert_eq!(warm_b.priced_sims, 0, "B's priced reports must survive");
+        assert_eq!(warm_b.modeled_prices, 0, "B's fitted time models must survive");
+        assert_eq!(warm_b.cache_misses, 0, "B's traces must survive");
+        assert_configs_bitwise_equal(&warm_b, &out_b);
+
+        // A re-evaluates from scratch under its (re-published) calibration
+        // and lands exactly where the cold pass did.
+        let refilled_a = plan_with(&req_a, &caches);
+        assert!(refilled_a.feasibility_probes > 0, "A's entries must be gone");
+        assert_configs_bitwise_equal(&refilled_a, &out_a);
     }
 
     #[test]

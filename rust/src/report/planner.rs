@@ -421,6 +421,29 @@ pub fn placement_table(out: &PlacementOutcome) -> Table {
     if out.feasibility_only {
         t.note("feasibility-only placement: per-shape pricing skipped (walls only)");
     }
+    // Refit provenance, mirroring `add_notes`: a placement ranked under a
+    // refitted calibration must say so (and warn about the constants the
+    // refit could not use) just like the per-cluster plan tables do.
+    if let Some(r) = &out.refit {
+        t.note(&format!(
+            "calibration refit from {} ({} cells, anchored at {})",
+            r.source,
+            r.cells,
+            tokens(r.anchor_seq)
+        ));
+        if !r.skipped.is_empty() {
+            t.note(&format!(
+                "WARNING: refit kept defaults for {} (unusable measurements)",
+                r.skipped.join(", ")
+            ));
+        }
+        if r.pressured_anchor {
+            t.note(
+                "WARNING: refit anchor ran under memory pressure; fitted rates absorb \
+                 the penalty",
+            );
+        }
+    }
     t
 }
 
@@ -771,6 +794,15 @@ mod tests {
         req.cap_s = 4 << 20;
         req.threads = 1;
         req.dims = SweepDims::paper();
+        req.refit = Some(crate::engine::RefitInfo {
+            source: "bench.json".into(),
+            model: "llama3-8b".into(),
+            cells: 4,
+            anchor_seq: 1 << 20,
+            fields: vec![RefitField { name: "fa3_fwd_flops", old: 696e12, new: 700e12 }],
+            skipped: vec!["ring_eff_bps"],
+            pressured_anchor: false,
+        });
         let out = place(&req);
 
         let t = placement_table(&out).render();
@@ -778,6 +810,10 @@ mod tests {
         assert!(t.contains("Pruned by"), "{t}");
         assert!(t.contains("skipped before any probe"), "{t}");
         assert!(t.contains("pricing families"), "{t}");
+        // Refit provenance rides the placement table exactly like the
+        // plan tables: source line plus the skipped-fields warning.
+        assert!(t.contains("calibration refit from bench.json"), "{t}");
+        assert!(t.contains("WARNING: refit kept defaults for ring_eff_bps"), "{t}");
 
         // The CLI artifact: hardware fields for the dominance gate,
         // dominance provenance, plan cores, and reuse accounting.

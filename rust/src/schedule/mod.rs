@@ -280,6 +280,12 @@ impl CellKey {
         }
     }
 
+    /// The calibration fingerprint this cell was keyed under — the handle
+    /// calibration-epoch invalidation matches on.
+    pub fn cal_fp(&self) -> u64 {
+        self.cal_fp
+    }
+
     /// The cell's *family*: every dimension except the sequence length,
     /// the micro-batch count and (as in `CellKey` itself) pinning. One
     /// fitted [`crate::engine::PeakModel`] serves the whole family — the
@@ -319,6 +325,14 @@ pub struct FamilyKey {
     model_fp: u64,
     cal_fp: u64,
     hw_fp: u64,
+}
+
+impl FamilyKey {
+    /// The calibration fingerprint this family was keyed under (see
+    /// [`CellKey::cal_fp`]).
+    pub fn cal_fp(&self) -> u64 {
+        self.cal_fp
+    }
 }
 
 /// Thread-safe memo of built op traces, keyed by hashed [`CellKey`]s in a
@@ -392,6 +406,13 @@ impl TraceCache {
     /// lost — an evicted cell rebuilds on its next miss.
     pub fn evict_lru(&self, target_bytes: usize) -> u64 {
         self.traces.evict_lru(target_bytes)
+    }
+
+    /// Drop exactly the traces built under calibration fingerprint `fp`
+    /// (a stale epoch); traces under every other fingerprint stay warm.
+    /// Returns how many were dropped.
+    pub fn invalidate_fingerprint(&self, fp: u64) -> u64 {
+        self.traces.remove_if(|k| k.cal_fp == fp)
     }
 
     /// Drop every memoized trace (hit/miss counters keep running — they

@@ -34,6 +34,8 @@
 //! | `POST /v1/frontier`| plan params                   | Pareto frontier (+ envelope `accounting`: zeros when memo-warm) |
 //! | `POST /v1/refit`   | `{"measurements": {...}}`     | refit provenance  |
 //! | `POST /v1/placement`| placement params (`fleet` + plan fields) | ranked fleet placements (+ envelope `accounting`: zeros when memo-warm) |
+//! | `POST /v1/observe` | `{"observations": [...]}`     | accept/reject counts, drift vector, published epoch + invalidations |
+//! | `GET  /v1/calibration` | —                         | active epoch, constants, drift, provenance chain |
 //! | `GET  /v1/health`  | —                             | status, per-endpoint p50/p95, per-tier cache bytes + evictions |
 //! | `GET  /metrics`    | —                             | the health counters as Prometheus text exposition (`text/plain`) |
 //!
@@ -57,7 +59,8 @@ use crate::util::json::Json;
 use crate::util::pool::{default_threads, JobQueue};
 
 use super::wire::{
-    self, AtQuery, PlacementParams, PlanParams, RefitParams, WallsParams, API_VERSION,
+    self, AtQuery, ObserveParams, PlacementParams, PlanParams, RefitParams, WallsParams,
+    API_VERSION,
 };
 use super::{PlannerService, ServiceError};
 
@@ -121,16 +124,28 @@ impl Default for ServeOptions {
 }
 
 /// Endpoint identities for the latency/hit-rate stats (index = slot).
-const ENDPOINTS: [&str; 8] =
-    ["plan", "walls", "frontier", "refit", "placement", "health", "metrics", "other"];
+const ENDPOINTS: [&str; 10] = [
+    "plan",
+    "walls",
+    "frontier",
+    "refit",
+    "placement",
+    "observe",
+    "calibration",
+    "health",
+    "metrics",
+    "other",
+];
 const EP_PLAN: usize = 0;
 const EP_WALLS: usize = 1;
 const EP_FRONTIER: usize = 2;
 const EP_REFIT: usize = 3;
 const EP_PLACEMENT: usize = 4;
-const EP_HEALTH: usize = 5;
-const EP_METRICS: usize = 6;
-const EP_OTHER: usize = 7;
+const EP_OBSERVE: usize = 5;
+const EP_CALIBRATION: usize = 6;
+const EP_HEALTH: usize = 7;
+const EP_METRICS: usize = 8;
+const EP_OTHER: usize = 9;
 
 /// Per-endpoint request accounting, `coordinator::server::ServerStats`
 /// style: served/error counts plus latency percentiles.
@@ -153,7 +168,7 @@ impl EndpointAgg {
 }
 
 struct HttpStats {
-    endpoints: [Mutex<EndpointAgg>; 8],
+    endpoints: [Mutex<EndpointAgg>; 10],
     /// Connections accepted and handed to a worker.
     connections: AtomicU64,
     /// Requests served on an already-used connection — the keep-alive
@@ -557,6 +572,8 @@ fn known_path(path: &str) -> bool {
         "/v1/frontier",
         "/v1/refit",
         "/v1/placement",
+        "/v1/observe",
+        "/v1/calibration",
         "/v1/health",
         "/metrics",
     ]
@@ -586,6 +603,12 @@ fn route(
             Payload::Text(metrics_text(service, stats)),
             ReqFlags::default(),
         ),
+        ("GET", "/v1/calibration") => (
+            EP_CALIBRATION,
+            200,
+            Payload::Json(calibration_json(service)),
+            ReqFlags::default(),
+        ),
         ("POST", "/v1/plan") => with((EP_PLAN, guarded(|| plan_endpoint(service, body, false)))),
         ("POST", "/v1/frontier") => {
             with((EP_FRONTIER, guarded(|| plan_endpoint(service, body, true))))
@@ -594,6 +617,9 @@ fn route(
         ("POST", "/v1/refit") => with((EP_REFIT, guarded(|| refit_endpoint(service, body)))),
         ("POST", "/v1/placement") => {
             with((EP_PLACEMENT, guarded(|| placement_endpoint(service, body))))
+        }
+        ("POST", "/v1/observe") => {
+            with((EP_OBSERVE, guarded(|| observe_endpoint(service, body))))
         }
         (_, p) if known_path(p) => {
             let msg = format!("{method} not supported on {p}");
@@ -690,6 +716,7 @@ fn plan_endpoint(service: &PlannerService, body: &[u8], frontier: bool) -> (u16,
                 ("plan", planner_report::plan_result_json(&reply.outcome))
             };
             let mut resp = wire::envelope(kind, params.canonical(), &reply.warnings, result);
+            push_calibration(&mut resp, reply.epoch, reply.calibration_fingerprint);
             if frontier {
                 // Additive envelope field (api_version 1): what this
                 // request actually ran. The deterministic `result` never
@@ -745,11 +772,10 @@ fn walls_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json, ReqFlags
                 Ok(reply) => {
                     flags.memo_hit = Some(reply.memo_hit);
                     let result = planner_report::plan_result_json(&reply.outcome);
-                    (
-                        200,
-                        wire::envelope("walls", params.canonical(), &reply.warnings, result),
-                        flags,
-                    )
+                    let mut resp =
+                        wire::envelope("walls", params.canonical(), &reply.warnings, result);
+                    push_calibration(&mut resp, reply.epoch, reply.calibration_fingerprint);
+                    (200, resp, flags)
                 }
                 Err(e) => service_error(&e, flags),
             }
@@ -790,6 +816,7 @@ fn placement_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json, ReqF
             let result = planner_report::placement_result_json(&reply.outcome);
             let mut resp =
                 wire::envelope("placement", params.canonical(), &reply.warnings, result);
+            push_calibration(&mut resp, reply.epoch, reply.calibration_fingerprint);
             // Additive envelope field (api_version 1), mirroring the
             // frontier endpoint: what this request actually ran. A memo
             // hit reports zeros while the ranked placements stay
@@ -809,6 +836,77 @@ fn placement_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json, ReqF
             (200, resp, flags)
         }
         Err(e) => service_error(&e, flags),
+    }
+}
+
+/// Append the additive `calibration` envelope field (api_version 1):
+/// the epoch and fingerprint this reply was priced under. Memoized with
+/// the outcome, so a warm replay's provenance is byte-identical to the
+/// cold reply.
+fn push_calibration(resp: &mut Json, epoch: u64, fingerprint: u64) {
+    if let Json::Obj(pairs) = resp {
+        pairs.push((
+            "calibration".to_string(),
+            Json::obj(vec![
+                ("epoch", Json::int(epoch)),
+                ("fingerprint", Json::string(&crate::calib::epoch::fingerprint_hex(fingerprint))),
+            ]),
+        ));
+    }
+}
+
+/// `POST /v1/observe`: fold a telemetry batch into the online
+/// calibrator. A parseable batch always answers 200 with its
+/// accept/reject accounting — an all-rejected batch is signal (the MAD
+/// gate working), not a request failure.
+fn observe_endpoint(service: &PlannerService, body: &[u8]) -> (u16, Json, ReqFlags) {
+    let flags = ReqFlags::default();
+    let params = match parse_body(body).and_then(|j| ObserveParams::from_json(&j)) {
+        Ok(p) => p,
+        Err(e) => return (400, wire::error_envelope("bad_request", &e), flags),
+    };
+    let reply = service.observe(&params.observations);
+    let hex = crate::calib::epoch::fingerprint_hex;
+    let published = match &reply.published {
+        None => Json::Null,
+        Some(p) => Json::obj(vec![
+            ("epoch", Json::int(p.epoch)),
+            ("old_fingerprint", Json::string(&hex(p.old_fingerprint))),
+            ("new_fingerprint", Json::string(&hex(p.new_fingerprint))),
+            ("fields", Json::Arr(p.fields.iter().map(|f| f.to_json()).collect())),
+        ]),
+    };
+    let invalidated = Json::Obj(
+        reply
+            .invalidated
+            .iter()
+            .map(|(tier, n)| (tier.to_string(), Json::int(*n)))
+            .collect(),
+    );
+    let result = Json::obj(vec![
+        ("accepted", Json::int(reply.accepted)),
+        ("rejected", Json::int(reply.rejected)),
+        ("epoch", Json::int(reply.epoch)),
+        ("fingerprint", Json::string(&hex(reply.fingerprint))),
+        ("drift", Json::Arr(reply.drift.iter().map(|d| d.to_json()).collect())),
+        ("published", published),
+        ("invalidated", invalidated),
+        ("plans_invalidated", Json::int(reply.plans_invalidated)),
+        ("placements_invalidated", Json::int(reply.placements_invalidated)),
+    ]);
+    (200, wire::envelope("observe", params.canonical(), &reply.notes, result), flags)
+}
+
+/// `GET /v1/calibration`: the active calibration document, health-style
+/// (a bare object rather than a request/result envelope — there is no
+/// request to echo).
+fn calibration_json(service: &PlannerService) -> Json {
+    match service.calibration_snapshot().to_json() {
+        Json::Obj(mut pairs) => {
+            pairs.insert(0, ("api_version".to_string(), Json::int(API_VERSION)));
+            Json::Obj(pairs)
+        }
+        other => other,
     }
 }
 
@@ -832,6 +930,16 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
     for t in &tiers {
         tier_evictions.push((t.name, Json::int(t.evictions)));
     }
+    // Epoch invalidations are correctness drops, reported separately
+    // from the capacity-driven LRU evictions above.
+    let mut tier_invalidations = vec![
+        ("plans", Json::int(st.plans_invalidated)),
+        ("placements", Json::int(st.placements_invalidated)),
+    ];
+    for t in &tiers {
+        tier_invalidations.push((t.name, Json::int(t.invalidations)));
+    }
+    let (cal_epoch, cal_fp) = service.calibration_epoch();
     Json::obj(vec![
         ("api_version", Json::int(API_VERSION)),
         ("status", Json::string("ok")),
@@ -865,6 +973,21 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
                 ("cache_evictions", Json::int(st.cache_evictions)),
                 ("entries_evicted", Json::int(st.entries_evicted)),
                 ("cells_quarantined", Json::int(st.cells_quarantined)),
+                ("observations_accepted", Json::int(st.observations_accepted)),
+                ("observations_rejected", Json::int(st.observations_rejected)),
+                ("epochs_published", Json::int(st.epochs_published)),
+                ("entries_invalidated", Json::int(st.entries_invalidated)),
+            ]),
+        ),
+        (
+            "calibration",
+            Json::obj(vec![
+                ("epoch", Json::int(cal_epoch)),
+                (
+                    "fingerprint",
+                    Json::string(&crate::calib::epoch::fingerprint_hex(cal_fp)),
+                ),
+                ("epochs_published", Json::int(st.epochs_published)),
             ]),
         ),
         (
@@ -883,6 +1006,7 @@ fn health_json(service: &PlannerService, stats: &HttpStats) -> Json {
         ),
         ("cache_bytes", Json::obj(tier_bytes)),
         ("evictions", Json::obj(tier_evictions)),
+        ("invalidations", Json::obj(tier_invalidations)),
     ])
 }
 
@@ -988,9 +1112,34 @@ fn metrics_text(service: &PlannerService, stats: &HttpStats) -> String {
             "Entries dropped by the pressure valve.",
             st.entries_evicted,
         ),
+        (
+            "repro_epochs_published_total",
+            "Calibration epochs published by drift crossing the threshold.",
+            st.epochs_published,
+        ),
+        (
+            "repro_cache_entries_invalidated_total",
+            "Entries dropped by calibration-epoch invalidation, all tiers.",
+            st.entries_invalidated,
+        ),
     ] {
         family(name, "counter", help, &scalar(v));
     }
+    family(
+        "repro_observations_total",
+        "counter",
+        "Telemetry records ingested via /v1/observe, by gate outcome.",
+        &[
+            ("{status=\"accepted\"}".to_string(), st.observations_accepted.to_string()),
+            ("{status=\"rejected\"}".to_string(), st.observations_rejected.to_string()),
+        ],
+    );
+    family(
+        "repro_calibration_epoch",
+        "gauge",
+        "The active calibration epoch (0 = the boot calibration).",
+        &scalar(st.calibration_epoch),
+    );
     family(
         "repro_cells_quarantined",
         "gauge",
@@ -1023,6 +1172,19 @@ fn metrics_text(service: &PlannerService, stats: &HttpStats) -> String {
         "counter",
         "Entries evicted, by cache tier.",
         &evictions,
+    );
+    let mut invalidations = vec![
+        tier_row("plans", st.plans_invalidated),
+        tier_row("placements", st.placements_invalidated),
+    ];
+    for t in &tiers {
+        invalidations.push(tier_row(t.name, t.invalidations));
+    }
+    family(
+        "repro_cache_tier_invalidations_total",
+        "counter",
+        "Entries dropped by calibration-epoch invalidation, by cache tier.",
+        &invalidations,
     );
     family(
         "repro_cache_budget_bytes",
@@ -1601,6 +1763,58 @@ mod tests {
         let (sm, em) = post(addr, "/metrics", "{}");
         assert_eq!(sm, 405);
         assert!(em.contains("method_not_allowed"), "{em}");
+        handle.stop();
+    }
+
+    #[test]
+    fn observe_and_calibration_endpoints_round_trip() {
+        let service = Arc::new(PlannerService::new());
+        let handle = serve(Arc::clone(&service), "127.0.0.1:0", ServeOptions::default()).unwrap();
+        let addr = handle.addr();
+        // A component-less record parses and routes, but contributes no
+        // invertible sample: the batch counts it rejected and publishes
+        // nothing.
+        let body =
+            r#"{"observations":[{"method":"ulysses","model":"llama3-8b","gpus":8,"seq":"1M"}]}"#;
+        let (st, resp) = post(addr, "/v1/observe", body);
+        assert_eq!(st, 200, "{resp}");
+        assert!(resp.contains("\"kind\": \"observe\""), "{resp}");
+        assert!(resp.contains("\"accepted\": 0"), "{resp}");
+        assert!(resp.contains("\"rejected\": 1"), "{resp}");
+        assert!(resp.contains("\"epoch\": 0"), "{resp}");
+        assert!(resp.contains("\"published\": null"), "{resp}");
+        // The calibration document: boot epoch, every constant visible.
+        let (st2, cal) =
+            request(addr, "GET /v1/calibration HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert_eq!(st2, 200, "{cal}");
+        assert!(cal.contains("\"epoch\": 0"), "{cal}");
+        assert!(cal.contains("\"fa3_fwd_flops\""), "{cal}");
+        assert!(cal.contains("\"history\""), "{cal}");
+        // Structured errors: a bad record names its index; the document
+        // path is GET-only.
+        let (se, ee) = post(addr, "/v1/observe", r#"{"observations":[{"method":"warp"}]}"#);
+        assert_eq!(se, 400);
+        assert!(ee.contains("observations[0]"), "{ee}");
+        let (sm, em) = post(addr, "/v1/calibration", "{}");
+        assert_eq!(sm, 405);
+        assert!(em.contains("method_not_allowed"), "{em}");
+        // Health and metrics surface the new counters.
+        let (_, health) =
+            request(addr, "GET /v1/health HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert!(health.contains("\"observations_rejected\": 1"), "{health}");
+        assert!(health.contains("\"invalidations\""), "{health}");
+        assert!(health.contains("\"calibration\""), "{health}");
+        let (_, metrics) =
+            request(addr, "GET /metrics HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n");
+        assert!(
+            metrics.contains("repro_observations_total{status=\"rejected\"} 1"),
+            "{metrics}"
+        );
+        assert!(metrics.contains("repro_calibration_epoch 0"), "{metrics}");
+        assert!(
+            metrics.contains("repro_cache_tier_invalidations_total{tier=\"walls\"} 0"),
+            "{metrics}"
+        );
         handle.stop();
     }
 

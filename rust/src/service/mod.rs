@@ -31,6 +31,9 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::calib::{
+    CalibrationSnapshot, DriftEntry, Observation, OnlineCalibrator, OnlineConfig, PublishedEpoch,
+};
 use crate::engine::{Calibration, Measurements, RefitInfo};
 use crate::model::ModelDims;
 use crate::planner::{
@@ -41,7 +44,8 @@ use crate::util::failpoint;
 use crate::util::stripe::StripedMap;
 
 pub use wire::{
-    MeasurementsSource, PlacementParams, PlanParams, RefitParams, WallsParams, API_VERSION,
+    MeasurementsSource, ObserveParams, PlacementParams, PlanParams, RefitParams, WallsParams,
+    API_VERSION,
 };
 
 /// Typed service failure: what went wrong, in a shape the HTTP layer can
@@ -112,6 +116,13 @@ pub struct PlanReply {
     pub outcome: Arc<PlanOutcome>,
     pub memo_hit: bool,
     pub warnings: Vec<String>,
+    /// Calibration epoch the sweep was priced under: 0 for the boot
+    /// calibration and measurements-pinned requests, the active online
+    /// epoch otherwise. Memoized with the outcome, so a warm replay's
+    /// accounting is byte-identical.
+    pub epoch: u64,
+    /// Fingerprint of the calibration the sweep was priced under.
+    pub calibration_fingerprint: u64,
 }
 
 /// A placement request's answer: the (possibly memoized) fleet-wide
@@ -120,6 +131,10 @@ pub struct PlacementReply {
     pub outcome: Arc<PlacementOutcome>,
     pub memo_hit: bool,
     pub warnings: Vec<String>,
+    /// See [`PlanReply::epoch`] — the *base* calibration's provenance
+    /// (each shape prices under its hardware-scaled variant).
+    pub epoch: u64,
+    pub calibration_fingerprint: u64,
 }
 
 /// A refit request's answer: the provenance, the fitted calibration's
@@ -128,6 +143,38 @@ pub struct RefitReply {
     pub info: RefitInfo,
     pub calibration_fingerprint: u64,
     pub warnings: Vec<String>,
+}
+
+/// One observe batch's answer (`POST /v1/observe`): ingestion accounting,
+/// the post-batch drift vector, and — when the batch pushed drift over
+/// the publish threshold — the published epoch plus exactly what it
+/// invalidated.
+pub struct ObserveReply {
+    /// Records with at least one sample admitted past the MAD gate.
+    pub accepted: u64,
+    /// Records rejected whole (every inverted sample was an outlier, or
+    /// nothing was invertible).
+    pub rejected: u64,
+    /// Per-constant drift of the running estimates vs the *now-active*
+    /// calibration (all ~0 right after a publish).
+    pub drift: Vec<DriftEntry>,
+    /// The epoch this batch published, if any.
+    pub published: Option<PublishedEpoch>,
+    /// Active calibration epoch after the batch.
+    pub epoch: u64,
+    /// Active calibration fingerprint after the batch.
+    pub fingerprint: u64,
+    /// Deterministic skip/reject notes (bounded; see
+    /// [`crate::calib::IngestReport`]).
+    pub notes: Vec<String>,
+    /// Per-tier evaluator-cache entries dropped by this batch's epoch
+    /// publish, in [`PlannerCaches::sizes`] order; empty when nothing
+    /// published.
+    pub invalidated: Vec<(&'static str, u64)>,
+    /// Whole-plan memo entries dropped by this batch's epoch publish.
+    pub plans_invalidated: u64,
+    /// Whole-placement memo entries dropped by this batch's epoch publish.
+    pub placements_invalidated: u64,
 }
 
 /// Snapshot of the session's lifetime counters (surfaced by
@@ -157,6 +204,21 @@ pub struct ServiceStats {
     /// Canonical request cells currently tombstoned after an evaluation
     /// panic (active quarantine entries at snapshot time).
     pub cells_quarantined: u64,
+    /// Telemetry records accepted by `/v1/observe` (≥1 sample admitted).
+    pub observations_accepted: u64,
+    /// Telemetry records rejected whole by `/v1/observe`.
+    pub observations_rejected: u64,
+    /// Calibration epochs published by drift crossing the threshold.
+    pub epochs_published: u64,
+    /// The active calibration epoch (0 = the boot calibration).
+    pub calibration_epoch: u64,
+    /// Evaluator-cache entries dropped by epoch publishes, summed across
+    /// every tier (distinct from `entries_evicted`, the LRU valve).
+    pub entries_invalidated: u64,
+    /// Whole-plan memo entries dropped by epoch publishes.
+    pub plans_invalidated: u64,
+    /// Whole-placement memo entries dropped by epoch publishes.
+    pub placements_invalidated: u64,
 }
 
 /// A long-lived planner session: persistent cross-request caches behind
@@ -170,12 +232,18 @@ pub struct ServiceStats {
 struct PlanMemoEntry {
     outcome: Arc<PlanOutcome>,
     warnings: Vec<String>,
+    /// Calibration provenance the request was priced under, memoized so
+    /// a warm replay's accounting is byte-identical to the cold reply.
+    epoch: u64,
+    calibration_fingerprint: u64,
 }
 
 /// One memoized placement, mirroring [`PlanMemoEntry`].
 struct PlacementMemoEntry {
     outcome: Arc<PlacementOutcome>,
     warnings: Vec<String>,
+    epoch: u64,
+    calibration_fingerprint: u64,
 }
 
 pub struct PlannerService {
@@ -199,6 +267,13 @@ pub struct PlannerService {
     /// evaluation panicked answers `Quarantined` (bounded retry-after)
     /// instead of poisoning another worker, until its tombstone lapses.
     quarantine: Mutex<HashMap<String, Tombstone>>,
+    /// The live calibration object behind `/v1/observe` and
+    /// `/v1/calibration`: ingests telemetry, tracks drift, and publishes
+    /// a new calibration epoch when drift crosses the threshold. Requests
+    /// without pinned measurements plan under its *active* calibration;
+    /// their memo keys carry the epoch, so a publish makes exactly the
+    /// stale entries unreachable (and `observe` drops them eagerly).
+    calibrator: Mutex<OnlineCalibrator>,
     plan_requests: AtomicU64,
     plan_memo_hits: AtomicU64,
     placement_requests: AtomicU64,
@@ -211,6 +286,12 @@ pub struct PlannerService {
     prices_modeled: AtomicU64,
     cache_evictions: AtomicU64,
     entries_evicted: AtomicU64,
+    observations_accepted: AtomicU64,
+    observations_rejected: AtomicU64,
+    epochs_published: AtomicU64,
+    entries_invalidated: AtomicU64,
+    plans_invalidated: AtomicU64,
+    placements_invalidated: AtomicU64,
 }
 
 /// Default byte budget for the session caches (all tiers plus the plan
@@ -238,6 +319,10 @@ impl PlannerService {
             cache_budget,
             request_timeout: None,
             quarantine: Mutex::new(HashMap::new()),
+            calibrator: Mutex::new(OnlineCalibrator::new(
+                Calibration::default(),
+                OnlineConfig::default(),
+            )),
             plan_requests: AtomicU64::new(0),
             plan_memo_hits: AtomicU64::new(0),
             placement_requests: AtomicU64::new(0),
@@ -250,6 +335,12 @@ impl PlannerService {
             prices_modeled: AtomicU64::new(0),
             cache_evictions: AtomicU64::new(0),
             entries_evicted: AtomicU64::new(0),
+            observations_accepted: AtomicU64::new(0),
+            observations_rejected: AtomicU64::new(0),
+            epochs_published: AtomicU64::new(0),
+            entries_invalidated: AtomicU64::new(0),
+            plans_invalidated: AtomicU64::new(0),
+            placements_invalidated: AtomicU64::new(0),
         }
     }
 
@@ -352,6 +443,107 @@ impl PlannerService {
         }
     }
 
+    /// The calibration context one request plans under. Requests that pin
+    /// a measurements file are epoch-independent (their refit calibration
+    /// keys every cache by its own fingerprint): `(0, None)`. Requests
+    /// without measurements plan under the *active* online calibration;
+    /// at epoch 0 that is bitwise the boot default, so the pre-observe
+    /// paths (keys and bytes) are exactly the historical ones.
+    fn epoch_context(&self, measurements_pinned: bool) -> (u64, Option<Calibration>) {
+        if measurements_pinned {
+            return (0, None);
+        }
+        let cal = self.calibrator.lock().unwrap();
+        if cal.epoch() == 0 {
+            (0, None)
+        } else {
+            (cal.epoch(), Some(cal.active().clone()))
+        }
+    }
+
+    /// The memo key for a request under `epoch`: epoch 0 keys are the
+    /// bare canonical bytes (unchanged from every earlier release), later
+    /// epochs append `#e{epoch}` — so entries priced under a stale epoch
+    /// are never *hit* even before `observe` drops them.
+    fn epoch_key(canonical: String, epoch: u64) -> String {
+        if epoch == 0 {
+            canonical
+        } else {
+            format!("{canonical}#e{epoch}")
+        }
+    }
+
+    /// Is this memo key stale when the active epoch moves past
+    /// `old_epoch`? Epoch-suffixed keys match exactly; bare keys are
+    /// stale only if they planned under the boot calibration (epoch 0)
+    /// *without* pinned measurements — a measurements fingerprint in the
+    /// canonical bytes keeps the entry valid forever.
+    fn memo_key_stale(key: &str, old_epoch: u64) -> bool {
+        if old_epoch == 0 {
+            !key.contains("#e") && key.contains("\"measurements\":null")
+        } else {
+            key.ends_with(&format!("#e{old_epoch}"))
+        }
+    }
+
+    /// Ingest a telemetry batch (`POST /v1/observe`, and the CLI's
+    /// `repro observe`): per-method records are structurally inverted to
+    /// per-constant rate samples, MAD-gated, and folded into running
+    /// estimates; when any sufficiently-observed constant drifts past the
+    /// threshold, a new calibration epoch publishes and this method
+    /// *surgically* invalidates exactly the stale fingerprint's entries —
+    /// every evaluator tier plus the whole-plan/placement memos — while
+    /// other fingerprints' warm state (measurements-pinned requests,
+    /// other epochs) survives untouched. The calibrator lock is held
+    /// across the invalidation, so a concurrent plan either keys under
+    /// the old epoch (and its entry is dropped or unreachable) or the
+    /// new one.
+    pub fn observe(&self, observations: &[Observation]) -> ObserveReply {
+        let mut cal = self.calibrator.lock().unwrap();
+        let old_epoch = cal.epoch();
+        let report = cal.ingest(observations);
+        self.observations_accepted.fetch_add(report.accepted, Ordering::Relaxed);
+        self.observations_rejected.fetch_add(report.rejected, Ordering::Relaxed);
+        let mut invalidated = Vec::new();
+        let (mut plans_dropped, mut placements_dropped) = (0u64, 0u64);
+        if let Some(published) = &report.published {
+            self.epochs_published.fetch_add(1, Ordering::Relaxed);
+            invalidated = self.caches.invalidate_fingerprint(published.old_fingerprint).to_vec();
+            plans_dropped = self.plans.remove_if(|k| Self::memo_key_stale(k, old_epoch));
+            placements_dropped =
+                self.placements.remove_if(|k| Self::memo_key_stale(k, old_epoch));
+            let tier_total: u64 = invalidated.iter().map(|(_, n)| n).sum();
+            self.entries_invalidated.fetch_add(tier_total, Ordering::Relaxed);
+            self.plans_invalidated.fetch_add(plans_dropped, Ordering::Relaxed);
+            self.placements_invalidated.fetch_add(placements_dropped, Ordering::Relaxed);
+        }
+        ObserveReply {
+            accepted: report.accepted,
+            rejected: report.rejected,
+            drift: report.drift,
+            published: report.published,
+            epoch: cal.epoch(),
+            fingerprint: cal.fingerprint(),
+            notes: report.notes,
+            invalidated,
+            plans_invalidated: plans_dropped,
+            placements_invalidated: placements_dropped,
+        }
+    }
+
+    /// The active calibration's full snapshot (`GET /v1/calibration`):
+    /// epoch, fingerprint, every constant, the current drift vector, and
+    /// the bounded provenance chain of published epochs.
+    pub fn calibration_snapshot(&self) -> CalibrationSnapshot {
+        self.calibrator.lock().unwrap().snapshot()
+    }
+
+    /// The active calibration epoch and fingerprint (`/v1/health`).
+    pub fn calibration_epoch(&self) -> (u64, u64) {
+        let cal = self.calibrator.lock().unwrap();
+        (cal.epoch(), cal.fingerprint())
+    }
+
     /// Full sweep (`POST /v1/plan`, and the CLI's `repro plan`). Warm
     /// path: the canonical request bytes hit the plan memo and *nothing*
     /// is re-run — not the sweep, not a refit, not the anchor simulation
@@ -369,17 +561,24 @@ impl PlannerService {
     /// [`ServiceError::Quarantined`] until the tombstone lapses.
     pub fn plan(&self, params: &PlanParams) -> Result<PlanReply, ServiceError> {
         self.plan_requests.fetch_add(1, Ordering::Relaxed);
-        let key = params.canonical().render();
+        let (epoch, active) = self.epoch_context(params.measurements.is_some());
+        let key = Self::epoch_key(params.canonical().render(), epoch);
         if let Some(hit) = self.plans.get(&key) {
             self.plan_memo_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(PlanReply {
                 outcome: Arc::clone(&hit.outcome),
                 memo_hit: true,
                 warnings: hit.warnings.clone(),
+                epoch: hit.epoch,
+                calibration_fingerprint: hit.calibration_fingerprint,
             });
         }
         self.quarantine_check(&key)?;
         let (mut req, warnings) = params.to_request()?;
+        if let Some(cal) = active {
+            req.calibration = cal;
+        }
+        let calibration_fingerprint = req.calibration.fingerprint();
         req.cancel = self.token_for(params.deadline_ms);
         let out = match catch_unwind(AssertUnwindSafe(|| plan_with(&req, &self.caches))) {
             Ok(out) => out,
@@ -429,13 +628,20 @@ impl PlannerService {
             + warnings.iter().map(String::len).sum::<usize>();
         let entry = self.plans.insert_weighed(
             key,
-            Arc::new(PlanMemoEntry { outcome: Arc::new(out), warnings }),
+            Arc::new(PlanMemoEntry {
+                outcome: Arc::new(out),
+                warnings,
+                epoch,
+                calibration_fingerprint,
+            }),
             payload,
         );
         let reply = PlanReply {
             outcome: Arc::clone(&entry.outcome),
             memo_hit: false,
             warnings: entry.warnings.clone(),
+            epoch: entry.epoch,
+            calibration_fingerprint: entry.calibration_fingerprint,
         };
         self.enforce_budget();
         Ok(reply)
@@ -450,17 +656,24 @@ impl PlannerService {
     /// are reused across requests, not just across shapes.
     pub fn place(&self, params: &PlacementParams) -> Result<PlacementReply, ServiceError> {
         self.placement_requests.fetch_add(1, Ordering::Relaxed);
-        let key = params.canonical().render();
+        let (epoch, active) = self.epoch_context(params.plan.measurements.is_some());
+        let key = Self::epoch_key(params.canonical().render(), epoch);
         if let Some(hit) = self.placements.get(&key) {
             self.placement_memo_hits.fetch_add(1, Ordering::Relaxed);
             return Ok(PlacementReply {
                 outcome: Arc::clone(&hit.outcome),
                 memo_hit: true,
                 warnings: hit.warnings.clone(),
+                epoch: hit.epoch,
+                calibration_fingerprint: hit.calibration_fingerprint,
             });
         }
         self.quarantine_check(&key)?;
         let (mut req, warnings) = params.to_request()?;
+        if let Some(cal) = active {
+            req.calibration = cal;
+        }
+        let calibration_fingerprint = req.calibration.fingerprint();
         req.cancel = self.token_for(params.plan.deadline_ms);
         let out = match catch_unwind(AssertUnwindSafe(|| place_with(&req, &self.caches))) {
             Ok(out) => out,
@@ -507,13 +720,20 @@ impl PlannerService {
         }
         let entry = self.placements.insert_weighed(
             key,
-            Arc::new(PlacementMemoEntry { outcome: Arc::new(out), warnings }),
+            Arc::new(PlacementMemoEntry {
+                outcome: Arc::new(out),
+                warnings,
+                epoch,
+                calibration_fingerprint,
+            }),
             payload,
         );
         let reply = PlacementReply {
             outcome: Arc::clone(&entry.outcome),
             memo_hit: false,
             warnings: entry.warnings.clone(),
+            epoch: entry.epoch,
+            calibration_fingerprint: entry.calibration_fingerprint,
         };
         self.enforce_budget();
         Ok(reply)
@@ -550,9 +770,13 @@ impl PlannerService {
         params: &PlanParams,
         ats: &[u64],
     ) -> Result<(Vec<WallsAtOutcome>, Vec<String>), ServiceError> {
+        let (epoch, active) = self.epoch_context(params.measurements.is_some());
         let (mut req, warnings) = params.to_request()?;
+        if let Some(cal) = active {
+            req.calibration = cal;
+        }
         req.cancel = self.token_for(params.deadline_ms);
-        let plan_key = params.canonical().render();
+        let plan_key = Self::epoch_key(params.canonical().render(), epoch);
         let mut outs = Vec::with_capacity(ats.len());
         let mut probes_before_expiry = 0u64;
         for &at in ats {
@@ -613,6 +837,13 @@ impl PlannerService {
             cache_evictions: self.cache_evictions.load(Ordering::Relaxed),
             entries_evicted: self.entries_evicted.load(Ordering::Relaxed),
             cells_quarantined: self.cells_quarantined(),
+            observations_accepted: self.observations_accepted.load(Ordering::Relaxed),
+            observations_rejected: self.observations_rejected.load(Ordering::Relaxed),
+            epochs_published: self.epochs_published.load(Ordering::Relaxed),
+            calibration_epoch: self.calibration_epoch().0,
+            entries_invalidated: self.entries_invalidated.load(Ordering::Relaxed),
+            plans_invalidated: self.plans_invalidated.load(Ordering::Relaxed),
+            placements_invalidated: self.placements_invalidated.load(Ordering::Relaxed),
         }
     }
 
@@ -883,6 +1114,108 @@ mod tests {
         let (points, _) = service.walls_batch(&p, &[2 << 20, 4 << 20, 6 << 20]).unwrap();
         assert_eq!(points.len(), 3);
         assert!(points.iter().all(|q| q.probes == 0), "warm batch streams nothing");
+    }
+
+    /// Telemetry whose component times are what a `truth` calibration
+    /// actually prices for each run shape (so inversion recovers `truth`
+    /// exactly — same construction as the `calib::online` tests).
+    fn telemetry(truth: &Calibration) -> Vec<Observation> {
+        use crate::engine::TimingKernel;
+        use crate::schedule::stream_trace_with;
+        use crate::util::json::Json;
+        let lines = [
+            r#"{"method":"ulysses","model":"llama3-8b","gpus":8,"seq":1048576}"#,
+            r#"{"method":"upipe","model":"llama3-8b","gpus":8,"seq":1048576}"#,
+            r#"{"method":"ring","model":"llama3-8b","gpus":8,"seq":1048576}"#,
+        ];
+        let mut out = Vec::new();
+        for _ in 0..4 {
+            for line in lines {
+                let mut o = Observation::from_json(&Json::parse(line).unwrap()).unwrap();
+                let mut kernel = TimingKernel::new(truth.clone(), 1e18, 0.0, f64::INFINITY);
+                stream_trace_with(&o.preset(), truth, &mut kernel);
+                let r = kernel.finish();
+                assert!(r.failed.is_none() && !r.oom);
+                o.attn_fwd = Some(r.components.fa3_fwd);
+                o.attn_bwd = Some(r.components.fa3_bwd);
+                o.all_to_all = Some(r.components.all_to_all);
+                o.other = Some(r.components.other);
+                out.push(o);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn observe_publishes_epoch_and_invalidates_surgically() {
+        let service = PlannerService::new();
+        let p = small_params();
+        let cold = service.plan(&p).unwrap();
+        assert_eq!(cold.epoch, 0);
+        assert_eq!(cold.calibration_fingerprint, Calibration::default().fingerprint());
+        // A measurements-pinned request warms its own fingerprint's state.
+        let text = std::fs::read_to_string(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/../examples/table5_measurements.json"
+        ))
+        .unwrap();
+        let mut pinned = small_params();
+        pinned.measurements = Some(MeasurementsSource { source: "inline".into(), text });
+        let pinned_cold = service.plan(&pinned).unwrap();
+        assert_ne!(pinned_cold.calibration_fingerprint, cold.calibration_fingerprint);
+
+        // Sub-threshold drift: samples ingest, nothing publishes, every
+        // memo stays warm.
+        let mut mild = Calibration::default();
+        mild.fa3_fwd_flops *= 1.01;
+        let r = service.observe(&telemetry(&mild));
+        assert!(r.accepted > 0 && r.published.is_none());
+        assert_eq!(r.epoch, 0);
+        assert!(r.invalidated.is_empty());
+        assert_eq!(service.stats().epochs_published, 0);
+        assert!(service.plan(&p).unwrap().memo_hit, "no epoch, memo stays warm");
+
+        // Real drift publishes epoch 1 and invalidates exactly the boot
+        // fingerprint's state.
+        let mut drifted = Calibration::default();
+        drifted.fa3_fwd_flops *= 0.9;
+        drifted.fa3_bwd_flops *= 1.1;
+        drifted.a2a_eff0_bps *= 0.85;
+        drifted.other_rate *= 1.2;
+        let r = service.observe(&telemetry(&drifted));
+        let published = r.published.expect("drift must cross the publish threshold");
+        assert_eq!(r.epoch, 1);
+        assert_eq!(published.old_fingerprint, Calibration::default().fingerprint());
+        assert_eq!(r.fingerprint, published.new_fingerprint);
+        assert!(
+            r.invalidated.iter().any(|(name, n)| *name == "walls" && *n > 0),
+            "the boot epoch's verified walls must drop: {:?}",
+            r.invalidated
+        );
+        assert_eq!(r.plans_invalidated, 1, "exactly the boot-epoch default plan");
+        let st = service.stats();
+        assert_eq!(st.epochs_published, 1);
+        assert_eq!(st.calibration_epoch, 1);
+        assert!(st.entries_invalidated > 0);
+        assert!(st.observations_accepted >= r.accepted);
+
+        // The pinned request's state survived: replay is a memo hit on
+        // the very same outcome.
+        let pinned_again = service.plan(&pinned).unwrap();
+        assert!(pinned_again.memo_hit, "pinned measurements are epoch-independent");
+        assert!(Arc::ptr_eq(&pinned_again.outcome, &pinned_cold.outcome));
+        // The default request recomputes under the new epoch, then warms.
+        let fresh = service.plan(&p).unwrap();
+        assert!(!fresh.memo_hit, "stale boot-epoch entry must not answer");
+        assert_eq!(fresh.epoch, 1);
+        assert_eq!(fresh.calibration_fingerprint, r.fingerprint);
+        assert!(service.plan(&p).unwrap().memo_hit, "epoch-1 entry memoizes");
+
+        // Provenance chains through the snapshot.
+        let snap = service.calibration_snapshot();
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.history.len(), 1);
+        assert_eq!(snap.fingerprint, r.fingerprint);
     }
 
     #[test]

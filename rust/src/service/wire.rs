@@ -478,6 +478,62 @@ impl PlacementParams {
     }
 }
 
+/// Most telemetry records one `/v1/observe` batch may carry — bounds a
+/// single request's inversion work and response body.
+pub const MAX_OBSERVATIONS: usize = 1024;
+
+/// `/v1/observe` parameters: a batch of per-method telemetry records for
+/// the online calibrator. Each record is parsed strictly (unknown fields,
+/// bad layouts, and non-finite times are errors naming the offending
+/// record) before any ingestion happens — a bad batch changes nothing.
+#[derive(Debug, Clone)]
+pub struct ObserveParams {
+    pub observations: Vec<crate::calib::Observation>,
+}
+
+impl ObserveParams {
+    pub fn from_json(j: &Json) -> Result<ObserveParams, String> {
+        let Json::Obj(pairs) = j else {
+            return Err("request body must be a JSON object".to_string());
+        };
+        for (k, _) in pairs {
+            if !["api_version", "observations"].contains(&k.as_str()) {
+                return Err(format!("unknown field `{k}` (this server speaks api_version {API_VERSION})"));
+            }
+        }
+        check_api_version(j)?;
+        let Some(Json::Arr(items)) = j.get("observations") else {
+            return Err("missing `observations` (an array of telemetry records)".to_string());
+        };
+        if items.is_empty() {
+            return Err("`observations` must carry at least one record".to_string());
+        }
+        if items.len() > MAX_OBSERVATIONS {
+            return Err(format!(
+                "`observations` carries {} records (at most {MAX_OBSERVATIONS} per request)",
+                items.len()
+            ));
+        }
+        let observations = items
+            .iter()
+            .enumerate()
+            .map(|(i, v)| {
+                crate::calib::Observation::from_json(v).map_err(|e| format!("observations[{i}]: {e}"))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(ObserveParams { observations })
+    }
+
+    /// Canonical echo: observe is not memoized (ingestion is stateful by
+    /// design), so the echo carries the batch size, not the payload.
+    pub fn canonical(&self) -> Json {
+        Json::obj(vec![
+            ("api_version", Json::int(API_VERSION)),
+            ("observations", Json::int(self.observations.len() as u64)),
+        ])
+    }
+}
+
 /// `/v1/refit` parameters: fit a calibration from measurements without
 /// planning. The model comes from the measurements file itself.
 #[derive(Debug, Clone)]
@@ -949,6 +1005,37 @@ mod tests {
         let parsed = Json::parse(&resp.render()).unwrap();
         assert_eq!(parsed.get("api_version").and_then(Json::as_u64), Some(1));
         assert_eq!(parsed.render(), want);
+    }
+
+    #[test]
+    fn parse_observe_batches_strictly() {
+        let body = r#"{"api_version":1,"observations":[
+            {"method":"ulysses","model":"llama3-8b","gpus":8,"seq":"1M","attn_fwd":2.5},
+            {"method":"upipe","model":"llama3-8b","gpus":8,"seq":1048576,"u":8}
+        ]}"#;
+        let p = ObserveParams::from_json(&Json::parse(body).unwrap()).unwrap();
+        assert_eq!(p.observations.len(), 2);
+        assert_eq!(p.observations[0].seq, 1 << 20);
+        assert_eq!(p.canonical().render(), r#"{"api_version":1,"observations":2}"#);
+
+        for (bad, want) in [
+            (r#"{"observation":[]}"#, "unknown field `observation`"),
+            (r#"{"observations":{}}"#, "missing `observations`"),
+            (r#"{"observations":[]}"#, "at least one record"),
+            (
+                r#"{"observations":[{"method":"warp","model":"llama3-8b","gpus":8,"seq":"1M"}]}"#,
+                "observations[0]",
+            ),
+        ] {
+            let err = ObserveParams::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+            assert!(err.contains(want), "`{bad}` -> {err}");
+        }
+        let over: Vec<String> = (0..=MAX_OBSERVATIONS)
+            .map(|_| r#"{"method":"ring","model":"llama3-8b","gpus":8,"seq":"1M"}"#.to_string())
+            .collect();
+        let big = format!("{{\"observations\":[{}]}}", over.join(","));
+        let err = ObserveParams::from_json(&Json::parse(&big).unwrap()).unwrap_err();
+        assert!(err.contains("at most 1024"), "{err}");
     }
 
     #[test]

@@ -245,6 +245,32 @@ impl<K: Hash + Eq + Clone, V: Clone> StripedMap<K, V> {
         dropped
     }
 
+    /// Drop exactly the entries whose key matches `pred`; returns how many
+    /// were dropped. This is the surgical backend of calibration-epoch
+    /// invalidation: a published epoch retires one fingerprint's entries
+    /// while every other fingerprint's stay warm. Deliberately *not*
+    /// counted in [`StripedMap::evicted`] — that counter means "shed for
+    /// capacity", and invalidations are correctness drops the caller
+    /// accounts separately.
+    pub fn remove_if(&self, mut pred: impl FnMut(&K) -> bool) -> u64 {
+        let mut dropped = 0u64;
+        for s in &self.stripes {
+            let mut g = s.lock().unwrap();
+            let mut freed = 0usize;
+            g.retain(|k, slot| {
+                if pred(k) {
+                    freed += slot.weight;
+                    dropped += 1;
+                    false
+                } else {
+                    true
+                }
+            });
+            self.bytes.fetch_sub(freed, Ordering::Relaxed);
+        }
+        dropped
+    }
+
     /// Drop every entry (stripe by stripe — not an atomic snapshot under
     /// concurrent writers). The planner-service session API uses this to
     /// evict its cross-request memos without tearing down the session.
@@ -398,6 +424,27 @@ mod tests {
         // The map stays usable after eviction.
         m.insert(100, 1);
         assert_eq!(m.get(&100), Some(1));
+    }
+
+    #[test]
+    fn remove_if_is_surgical() {
+        let m: StripedMap<(u64, u64), u64> = StripedMap::new(4);
+        for fp in [1u64, 2] {
+            for k in 0..16 {
+                m.insert_weighed((fp, k), k, 84);
+            }
+        }
+        let total = m.bytes();
+        let dropped = m.remove_if(|&(fp, _)| fp == 1);
+        assert_eq!(dropped, 16);
+        assert_eq!(m.len(), 16);
+        assert_eq!(m.bytes(), total / 2, "freed weight is returned to the budget");
+        assert_eq!(m.evicted(), 0, "invalidation is not a capacity eviction");
+        for k in 0..16 {
+            assert_eq!(m.get(&(1, k)), None);
+            assert_eq!(m.get(&(2, k)), Some(k), "other fingerprint survives");
+        }
+        assert_eq!(m.remove_if(|&(fp, _)| fp == 1), 0, "idempotent");
     }
 
     #[test]
